@@ -1,0 +1,95 @@
+//! Domain example: design-space exploration — given an application
+//! accuracy budget (minimum SNR or maximum MSE), find the cheapest
+//! approximate multiplier configuration across all families.
+//!
+//! This is how a downstream user would actually consume the library:
+//! sweep (family, WL, knob), evaluate exhaustive MSE and synthesized
+//! PDP, and pick the Pareto-optimal points.
+//!
+//! Run with: `cargo run --release --example design_space`
+
+use bbm::arith::MultKind;
+use bbm::error::{sweep_mse, SweepConfig};
+use bbm::gate::builders::build_multiplier;
+use bbm::gate::{average_power, find_tmin, run_random};
+use bbm::util::report::Table;
+
+struct Point {
+    kind: MultKind,
+    level: u32,
+    mse: f64,
+    pdp_pj: f64,
+    area_um2: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let wl = 8u32;
+    let mse_budget = 1.0e4; // application accuracy budget
+    println!("design-space exploration: WL={wl}, MSE budget {mse_budget:.1e}\n");
+
+    let mut points = Vec::new();
+    for kind in [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni] {
+        for level in bbm::repro::pdp::levels_for(kind, wl) {
+            let m = kind.build(wl, level);
+            let mse = sweep_mse(m.as_ref(), SweepConfig::default());
+            let Some(mut nl) = build_multiplier(kind, wl, level) else { continue };
+            let t = find_tmin(&mut nl);
+            let act = run_random(&nl, 32_000, 5);
+            let p = average_power(&nl, &act, t.delay_ps);
+            points.push(Point {
+                kind,
+                level,
+                mse,
+                pdp_pj: p.total_mw() * t.delay_ps * 1e-3,
+                area_um2: nl.area(),
+            });
+        }
+    }
+
+    // All measured points.
+    let mut t = Table::new("measured design points", &["family", "knob", "MSE", "PDP_pJ", "area_um2"]);
+    for p in &points {
+        t.row(vec![
+            p.kind.to_string(),
+            p.level.to_string(),
+            format!("{:.3e}", p.mse),
+            format!("{:.3}", p.pdp_pj),
+            format!("{:.0}", p.area_um2),
+        ]);
+    }
+    t.print();
+
+    // Pareto frontier under the budget.
+    let mut feasible: Vec<&Point> = points.iter().filter(|p| p.mse <= mse_budget).collect();
+    feasible.sort_by(|a, b| a.pdp_pj.partial_cmp(&b.pdp_pj).unwrap());
+    let best = feasible.first().expect("some feasible point");
+    println!(
+        "\ncheapest config within budget: {}(knob={}) at {:.3} pJ, MSE {:.3e}",
+        best.kind, best.level, best.pdp_pj, best.mse
+    );
+
+    // Pareto set across the full MSE range (no budget).
+    let mut sorted: Vec<&Point> = points.iter().collect();
+    sorted.sort_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap());
+    let mut frontier: Vec<&Point> = Vec::new();
+    let mut best_pdp = f64::INFINITY;
+    for p in sorted {
+        if p.pdp_pj < best_pdp {
+            best_pdp = p.pdp_pj;
+            frontier.push(p);
+        }
+    }
+    let mut t = Table::new("Pareto frontier (MSE vs PDP)", &["family", "knob", "MSE", "PDP_pJ"]);
+    for p in &frontier {
+        t.row(vec![
+            p.kind.to_string(),
+            p.level.to_string(),
+            format!("{:.3e}", p.mse),
+            format!("{:.3}", p.pdp_pj),
+        ]);
+    }
+    t.print();
+    assert!(!frontier.is_empty());
+    println!("design_space OK");
+    Ok(())
+}

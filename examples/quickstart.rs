@@ -1,0 +1,70 @@
+//! Quickstart: the 60-second tour of the library.
+//!
+//! 1. Build a Broken-Booth multiplier model and inspect its error.
+//! 2. Cross-check the gate-level netlist against the arithmetic model.
+//! 3. Run a batch through the AOT-compiled PJRT artifact (L1 Pallas →
+//!    L2 JAX → HLO → rust), proving the three layers agree.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (build `make artifacts` first for step 3; it is skipped otherwise).
+
+use bbm::arith::{BbmType, BrokenBooth, Multiplier};
+use bbm::error::{exhaustive_stats, SweepConfig};
+use bbm::gate::builders::{build_broken_booth, decode_signed, encode_operands};
+use bbm::gate::eval_once;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. arithmetic model -------------------------------------------
+    let m = BrokenBooth::new(12, 9, BbmType::Type0);
+    println!("multiplier: {}", m.name());
+    println!("  100 × -77  = {} (exact {})", m.multiply(100, -77), 100 * -77);
+    let sweep = exhaustive_stats(&m, SweepConfig::default());
+    println!(
+        "  exhaustive over {} pairs: mean err {:.1}, MSE {:.3e}, P(err) {:.4}",
+        sweep.pairs,
+        sweep.stats.mean(),
+        sweep.stats.mse(),
+        sweep.stats.error_prob()
+    );
+
+    // --- 2. gate-level twin --------------------------------------------
+    let nl = build_broken_booth(12, 9, BbmType::Type0);
+    println!(
+        "gate netlist: {} cells, {:.0} µm², critical {:.0} ps",
+        nl.cells.len(),
+        nl.area(),
+        bbm::gate::analyze(&nl).critical
+    );
+    let mut ok = true;
+    let mut rng = bbm::util::Pcg64::seeded(42);
+    for _ in 0..200 {
+        let (x, y) = (rng.operand(12), rng.operand(12));
+        let bits = eval_once(&nl, &encode_operands(x, y, 12));
+        ok &= decode_signed(&bits) == m.multiply(x, y);
+    }
+    println!("  gate == arith on 200 random operands: {}", if ok { "OK" } else { "FAIL" });
+    assert!(ok);
+
+    // --- 3. PJRT artifact (three-layer path) ----------------------------
+    match bbm::runtime::try_load_default() {
+        None => println!("artifacts not built; run `make artifacts` to exercise the PJRT path"),
+        Some(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let n = bbm::runtime::SWEEP_BATCH;
+            let mut x = vec![0i32; n];
+            let mut y = vec![0i32; n];
+            for i in 0..n {
+                x[i] = rng.operand(12) as i32;
+                y[i] = rng.operand(12) as i32;
+            }
+            let out = rt.bbm_multiply(12, 0, &x, &y, 9)?;
+            let mism = (0..n)
+                .filter(|&i| out[i] as i64 != m.multiply(x[i] as i64, y[i] as i64))
+                .count();
+            println!("  pallas/XLA vs arith over {n} lanes: {mism} mismatches");
+            assert_eq!(mism, 0);
+        }
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""AOT compile path: lower every Layer-2 model to **HLO text** under
+``artifacts/`` and write ``manifest.txt`` for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --outdir ../artifacts`` (the Makefile's
+``artifacts`` target; incremental via make prerequisites).
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Streaming block sizes (must match rust/src/runtime/mod.rs constants).
+SWEEP_BATCH = 65536
+FIR_BLOCK = 4096
+FIR_TAPS = 30
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def artifact_specs():
+    """Every artifact: name → (model fn, example args)."""
+    specs = {}
+    # Batched multiplies: request-path unit for the multiply service and
+    # the python-vs-rust cross-validation tests.
+    for wl in (12, 16):
+        for ty in (0, 1):
+            specs[f"bbm_wl{wl}_type{ty}"] = (
+                model.bbm_batch_model(wl, ty),
+                (i32(SWEEP_BATCH), i32(SWEEP_BATCH), i32(1)),
+            )
+    # Exhaustive-sweep moment reducers (Table I: WL=12; Fig. 2: WL=10).
+    for wl, ty in ((12, 0), (12, 1), (10, 0)):
+        specs[f"moments_wl{wl}_type{ty}"] = (
+            model.error_sweep_model(wl, ty),
+            (i32(SWEEP_BATCH), i32(SWEEP_BATCH), i32(1)),
+        )
+    # FIR filter blocks (Table IV cases: WL=16 approximate/accurate via
+    # the vbl input; WL=14 accurate).
+    for wl in (16, 14):
+        specs[f"fir_wl{wl}_type0"] = (
+            model.fir_model(wl, 0, taps=FIR_TAPS),
+            (i32(FIR_BLOCK + FIR_TAPS - 1), i32(FIR_TAPS), i32(1)),
+        )
+    # SNR power accumulator.
+    specs["snr_acc"] = (model.snr_accumulator_model(), (f64(FIR_BLOCK), f64(FIR_BLOCK)))
+    return specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for name, (fn, example) in artifact_specs().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append((name, fname))
+        print(f"aot: {name} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        for name, fname in manifest:
+            f.write(f"{name}\t{fname}\n")
+    print(f"aot: wrote {len(manifest)} artifacts to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+* :mod:`.broken_booth` — batched Broken-Booth multiply (the paper's unit);
+* :mod:`.fir` — blocked 30-tap FIR with approximate tap products;
+* :mod:`.error_moments` — exhaustive-sweep moment reduction;
+* :mod:`.ref` — pure-numpy oracles for all of the above.
+"""

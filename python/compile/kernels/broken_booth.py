@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: batched Broken-Booth approximate multiply.
+
+The paper's compute hot-spot is millions of independent approximate
+multiplies (exhaustive error sweeps; FIR tap products). The kernel
+evaluates the dot-diagram identity of the Broken-Booth multiplier
+(see DESIGN.md §4 and ``rust/src/arith/bbm.rs``) on int32 lanes:
+
+* Type0 row ``i``:  ``((d_i·x) << 2i) & vbl_mask``  (two's complement
+  folded before the breakage);
+* Type1 negative row: one's-complement dots ``(~((m_i) << 2i)) & hi(2i)
+  & vbl_mask`` plus the surviving ``+1`` dot ``[2i ≥ VBL] << 2i``.
+
+All arithmetic runs in uint32 modulo ``2^P`` (``P = 2·WL ≤ 32``) and the
+result is sign-extended back to int32. ``vbl`` is a runtime scalar, so
+one compiled artifact serves every breaking level; ``wl`` and the type
+are trace-time constants (the Booth digit loop is fully unrolled).
+
+TPU mapping (DESIGN.md §8): this is integer bit-twiddling — VPU lanes,
+not MXU. The batch is tiled by ``BlockSpec`` over a 1-D grid so the
+HBM→VMEM streaming pipelines; ``interpret=True`` everywhere on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile: 8 KiB of int32 per operand — comfortably inside
+# one TPU core's VMEM alongside the output tile.
+BLOCK = 2048
+
+
+def _u32(v):
+    return v.astype(jnp.uint32)
+
+
+def booth_digit(y, i):
+    """Radix-4 Booth digit i of int32 ``y`` (values in -2..=2)."""
+    b_m1 = jnp.where(i == 0, 0, (y >> jnp.int32(max(2 * i - 1, 0))) & 1)
+    b_0 = (y >> jnp.int32(2 * i)) & 1
+    b_1 = (y >> jnp.int32(2 * i + 1)) & 1
+    return b_m1 + b_0 - 2 * b_1
+
+
+def bbm_product(x, y, vbl, *, wl, ty):
+    """Broken-Booth product of int32 arrays ``x``, ``y``.
+
+    ``vbl`` is a traced int32 scalar; ``wl`` (even, ≤16) and
+    ``ty`` (0 or 1) are static.
+    """
+    assert wl % 2 == 0 and 2 <= wl <= 16
+    assert ty in (0, 1)
+    p = 2 * wl
+    pmask = jnp.uint32(0xFFFFFFFF >> (32 - p))
+    vbl = vbl.astype(jnp.uint32)
+    vmask = (pmask >> vbl) << vbl
+    acc = jnp.zeros_like(x, dtype=jnp.uint32)
+    for i in range(wl // 2):
+        shift = 2 * i
+        d = booth_digit(y, i)
+        if ty == 0:
+            row = (_u32(d * x) << shift) & vmask
+        else:
+            pos = (_u32(d * x) << shift) & vmask
+            m = _u32((-d) * x)
+            hi = jnp.uint32((0xFFFFFFFF << shift) & 0xFFFFFFFF) & pmask
+            dots = (~(m << shift)) & hi & vmask
+            s = jnp.where(jnp.uint32(shift) >= vbl, jnp.uint32(1) << shift, jnp.uint32(0))
+            neg = dots + s
+            row = jnp.where(d >= 0, pos, neg)
+        acc = acc + row
+    acc = acc & pmask
+    # Sign-extend the P-bit field.
+    ext = 32 - p
+    return ((acc.astype(jnp.int32)) << ext) >> ext
+
+
+def _bbm_kernel(x_ref, y_ref, vbl_ref, o_ref, *, wl, ty):
+    o_ref[...] = bbm_product(x_ref[...], y_ref[...], vbl_ref[0], wl=wl, ty=ty)
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "ty", "block"))
+def bbm_multiply(x, y, vbl, *, wl, ty, block=BLOCK):
+    """Batched Broken-Booth multiply via a Pallas grid over the batch.
+
+    ``x``, ``y``: int32 ``[n]`` with ``n % block == 0``; ``vbl``: int32
+    ``[1]``. Returns int32 ``[n]`` products.
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"batch {n} must be a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_bbm_kernel, wl=wl, ty=ty),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x, y, vbl)

@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: per-block error-moment reduction for the
+exhaustive sweeps (Table I / Fig. 2 hot path).
+
+For a batch of operand pairs the kernel computes the Broken-Booth
+product, the exact product, and reduces the error to the four streaming
+moments the rust coordinator merges across chunks:
+``(Σ err, Σ err², min err, #err≠0)``."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .broken_booth import bbm_product
+
+
+def _moments_kernel(x_ref, y_ref, vbl_ref, sum_ref, sq_ref, min_ref, cnt_ref, *, wl, ty):
+    x = x_ref[...]
+    y = y_ref[...]
+    approx = bbm_product(x, y, vbl_ref[0], wl=wl, ty=ty).astype(jnp.int64)
+    exact = x.astype(jnp.int64) * y.astype(jnp.int64)
+    err = approx - exact
+    sum_ref[0] = jnp.sum(err)
+    sq_ref[0] = jnp.sum(err.astype(jnp.float64) ** 2)
+    min_ref[0] = jnp.min(err)
+    cnt_ref[0] = jnp.sum((err != 0).astype(jnp.int64))
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "ty"))
+def error_moments(x, y, vbl, *, wl, ty):
+    """Error moments of one operand batch.
+
+    ``x``, ``y``: int32 ``[n]``; ``vbl``: int32 ``[1]``. Returns
+    ``(sum i64[1], sum_sq f64[1], min i64[1], nonzero i64[1])``."""
+    return pl.pallas_call(
+        functools.partial(_moments_kernel, wl=wl, ty=ty),
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+            jax.ShapeDtypeStruct((1,), jnp.float64),
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+        ),
+        interpret=True,
+    )(x, y, vbl)

@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: blocked FIR convolution with Broken-Booth tap
+products and exact int64 accumulation — the filter datapath of the
+paper's application study, in the form the rust coordinator streams
+signal blocks through.
+
+The input block carries ``T − 1`` history samples so consecutive blocks
+compose exactly (overlap-save); the tap loop is fully unrolled at trace
+time. VMEM footprint per grid step is ``(B + T − 1 + B)·4..8`` bytes —
+a few KiB, so the HBM↔VMEM pipeline depth is limited by the grid only
+(DESIGN.md §8)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .broken_booth import bbm_product
+
+# Output samples per block (the coordinator's streaming unit).
+FIR_BLOCK = 4096
+# The paper's tap count.
+TAPS = 30
+
+
+def _fir_kernel(x_ref, h_ref, vbl_ref, o_ref, *, wl, ty, taps):
+    vbl = vbl_ref[0]
+    b = o_ref.shape[0]
+    acc = jnp.zeros((b,), dtype=jnp.int64)
+    for k in range(taps):
+        seg = x_ref[pl.ds(taps - 1 - k, b)]
+        hk = jnp.broadcast_to(h_ref[k], (b,))
+        prod = bbm_product(seg, hk, vbl, wl=wl, ty=ty)
+        acc = acc + prod.astype(jnp.int64)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("wl", "ty", "taps"))
+def fir_block(x, h, vbl, *, wl, ty, taps=TAPS):
+    """One FIR block: ``x`` int32 ``[B + taps − 1]`` (history-prefixed),
+    ``h`` int32 ``[taps]``, ``vbl`` int32 ``[1]`` → int64 ``[B]``."""
+    b = x.shape[0] - taps + 1
+    assert b >= 1
+    return pl.pallas_call(
+        functools.partial(_fir_kernel, wl=wl, ty=ty, taps=taps),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int64),
+        interpret=True,
+    )(x, h, vbl)

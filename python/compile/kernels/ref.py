@@ -1,0 +1,82 @@
+"""Pure-numpy oracles for every kernel — the correctness reference the
+pytest suite checks the Pallas kernels against, written from the
+dot-diagram definition with int64 arithmetic (independent of the uint32
+modular tricks the kernels use)."""
+
+import numpy as np
+
+
+def booth_digits(y, wl):
+    """Radix-4 Booth digits of int64 array ``y`` (LSB digit first)."""
+    y = np.asarray(y, dtype=np.int64)
+    out = []
+    for i in range(wl // 2):
+        b_m1 = (y >> (2 * i - 1)) & 1 if i > 0 else np.zeros_like(y)
+        b_0 = (y >> (2 * i)) & 1
+        b_1 = (y >> (2 * i + 1)) & 1
+        out.append(b_m1 + b_0 - 2 * b_1)
+    return out
+
+
+def bbm_ref(x, y, vbl, wl, ty):
+    """Reference Broken-Booth product (int64 in, int64 out).
+
+    Mirrors ``rust/src/arith/bbm.rs`` exactly: Type0 masks the folded
+    two's-complement row; Type1 masks the one's-complement dots and keeps
+    the +1 correction only when its column survives.
+    """
+    x = np.asarray(x, dtype=np.int64)
+    y = np.asarray(y, dtype=np.int64)
+    p = 2 * wl
+    pmask = np.int64((1 << p) - 1)
+    vmask = np.int64((((1 << p) - 1) >> vbl) << vbl)
+    acc = np.zeros_like(x)
+    for i, d in enumerate(booth_digits(y, wl)):
+        shift = 2 * i
+        if ty == 0:
+            row = ((d * x) << shift) & vmask
+        else:
+            pos = ((d * x) << shift) & vmask
+            m = (-d) * x
+            hi = (pmask >> shift) << shift
+            dots = (~(m << shift)) & hi & vmask
+            s = np.int64(1 << shift) if shift >= vbl else np.int64(0)
+            neg = dots + s
+            row = np.where(d >= 0, pos, neg)
+        acc = (acc + row) & pmask
+    # Sign extend.
+    sign = np.int64(1 << (p - 1))
+    return ((acc ^ sign) - sign).astype(np.int64)
+
+
+def exact_ref(x, y):
+    """Exact signed product."""
+    return np.asarray(x, dtype=np.int64) * np.asarray(y, dtype=np.int64)
+
+
+def fir_ref(x, h, vbl, wl, ty):
+    """Reference FIR block: ``y[n] = Σ_k bbm(x[n + T − 1 − k], h[k])``.
+
+    ``x`` has ``T − 1`` history samples prepended (length ``B + T − 1``);
+    output length is ``B``. Accumulation is exact (int64).
+    """
+    x = np.asarray(x, dtype=np.int64)
+    h = np.asarray(h, dtype=np.int64)
+    taps = len(h)
+    b = len(x) - taps + 1
+    y = np.zeros(b, dtype=np.int64)
+    for k in range(taps):
+        seg = x[taps - 1 - k : taps - 1 - k + b]
+        y += bbm_ref(seg, np.full_like(seg, h[k]), vbl, wl, ty)
+    return y
+
+
+def error_moments_ref(x, y, vbl, wl, ty):
+    """Reference error moments of a batch: (sum, sum_sq, min, nonzero)."""
+    err = bbm_ref(x, y, vbl, wl, ty) - exact_ref(x, y)
+    return (
+        np.int64(err.sum()),
+        np.float64((err.astype(np.float64) ** 2).sum()),
+        np.int64(err.min() if err.size else 0),
+        np.int64((err != 0).sum()),
+    )

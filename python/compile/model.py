@@ -1,0 +1,67 @@
+"""Layer-2 JAX models: the compute graphs that get AOT-lowered to HLO
+text and executed from the rust coordinator via PJRT.
+
+Python never runs on the request path — these functions exist only to be
+traced by :mod:`compile.aot`. Each model composes the Layer-1 Pallas
+kernels with whatever surrounding computation the experiment needs, so
+XLA fuses the whole request into one executable."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.broken_booth import bbm_multiply
+from .kernels.error_moments import error_moments
+from .kernels.fir import fir_block
+
+
+def bbm_batch_model(wl, ty, block=2048):
+    """Batched multiply: ``(x i32[n], y i32[n], vbl i32[1]) → i32[n]``."""
+
+    @functools.partial(jax.jit, static_argnums=())
+    def model(x, y, vbl):
+        return (bbm_multiply(x, y, vbl, wl=wl, ty=ty, block=block),)
+
+    return model
+
+
+def error_sweep_model(wl, ty):
+    """Error-moment reduction over one operand chunk.
+
+    Returns ``(sum i64[1], sum_sq f64[1], min i64[1], nonzero i64[1])`` —
+    the rust coordinator merges these across chunks into Table I rows.
+    """
+
+    @jax.jit
+    def model(x, y, vbl):
+        return error_moments(x, y, vbl, wl=wl, ty=ty)
+
+    return model
+
+
+def fir_model(wl, ty, taps=30):
+    """Streaming FIR block with Broken-Booth tap products.
+
+    ``(x i32[B+taps−1], h i32[taps], vbl i32[1]) → i64[B]``; feeding
+    ``vbl = 0`` runs the accurate filter, so one artifact serves both the
+    baseline and every approximation level of Fig. 8b / Table IV.
+    """
+
+    @jax.jit
+    def model(x, h, vbl):
+        return (fir_block(x, h, vbl, wl=wl, ty=ty, taps=taps),)
+
+    return model
+
+
+def snr_accumulator_model():
+    """Running-power accumulator used by the SNR evaluation service:
+    ``(ref f64[n], sig f64[n]) → (Σ ref², Σ (ref−sig)²)``."""
+
+    @jax.jit
+    def model(ref, sig):
+        err = ref - sig
+        return (jnp.sum(ref * ref, keepdims=True), jnp.sum(err * err, keepdims=True))
+
+    return model

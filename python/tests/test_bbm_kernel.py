@@ -1,0 +1,136 @@
+"""Pallas Broken-Booth kernel vs the pure-numpy oracle — the core L1
+correctness signal, including hypothesis sweeps over shapes, word
+lengths, breaking levels and operand corner values."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.broken_booth import bbm_multiply, bbm_product
+from compile.kernels import ref
+
+
+def run_kernel(x, y, vbl, wl, ty, block=None):
+    n = len(x)
+    block = block or n
+    xs = jnp.asarray(x, dtype=jnp.int32)
+    ys = jnp.asarray(y, dtype=jnp.int32)
+    v = jnp.asarray([vbl], dtype=jnp.int32)
+    return np.asarray(bbm_multiply(xs, ys, v, wl=wl, ty=ty, block=block))
+
+
+def rand_ops(rng, wl, n):
+    half = 1 << (wl - 1)
+    return (
+        rng.integers(-half, half, n).astype(np.int64),
+        rng.integers(-half, half, n).astype(np.int64),
+    )
+
+
+@pytest.mark.parametrize("ty", [0, 1])
+@pytest.mark.parametrize("vbl", [0, 1, 4, 7, 11, 12])
+def test_exhaustive_wl6(ty, vbl):
+    xs, ys = np.meshgrid(np.arange(-32, 32), np.arange(-32, 32))
+    x = xs.ravel().astype(np.int64)
+    y = ys.ravel().astype(np.int64)
+    got = run_kernel(x, y, vbl, 6, ty)
+    want = ref.bbm_ref(x, y, vbl, 6, ty)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("ty", [0, 1])
+def test_vbl0_is_exact_wl16(ty):
+    rng = np.random.default_rng(1)
+    x, y = rand_ops(rng, 16, 4096)
+    got = run_kernel(x, y, 0, 16, ty)
+    np.testing.assert_array_equal(got, x * y)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    wl=st.sampled_from([4, 8, 12, 16]),
+    ty=st.sampled_from([0, 1]),
+    vbl=st.integers(0, 32),
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 128, 256]),
+)
+def test_hypothesis_matches_ref(wl, ty, vbl, seed, n):
+    vbl = min(vbl, 2 * wl)
+    rng = np.random.default_rng(seed)
+    x, y = rand_ops(rng, wl, n)
+    got = run_kernel(x, y, vbl, wl, ty)
+    want = ref.bbm_ref(x, y, vbl, wl, ty)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("wl", [8, 16])
+def test_corner_operands(wl):
+    half = 1 << (wl - 1)
+    corners = np.array([-half, -half + 1, -1, 0, 1, half - 2, half - 1], dtype=np.int64)
+    xs, ys = np.meshgrid(corners, corners)
+    x, y = xs.ravel(), ys.ravel()
+    # Pad to a power-of-two batch for blocking.
+    pad = 64 - len(x)
+    x = np.concatenate([x, np.zeros(pad, np.int64)])
+    y = np.concatenate([y, np.zeros(pad, np.int64)])
+    for ty in (0, 1):
+        for vbl in (0, wl - 1, 2 * wl):
+            got = run_kernel(x, y, vbl, wl, ty)
+            want = ref.bbm_ref(x, y, vbl, wl, ty)
+            np.testing.assert_array_equal(got, want)
+
+
+def test_blocked_grid_equals_single_block():
+    rng = np.random.default_rng(7)
+    x, y = rand_ops(rng, 12, 8192)
+    a = run_kernel(x, y, 7, 12, 0, block=8192)
+    b = run_kernel(x, y, 7, 12, 0, block=1024)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_runtime_vbl_is_dynamic():
+    """One jitted kernel instance must serve every VBL (the artifact
+    contract: vbl is an input, not a constant)."""
+    rng = np.random.default_rng(9)
+    x, y = rand_ops(rng, 12, 256)
+    outs = {v: run_kernel(x, y, v, 12, 0) for v in (0, 3, 9, 24)}
+    assert not np.array_equal(outs[0], outs[9])
+    for v, got in outs.items():
+        np.testing.assert_array_equal(got, ref.bbm_ref(x, y, v, 12, 0))
+
+
+def test_type0_error_never_positive():
+    rng = np.random.default_rng(3)
+    x, y = rand_ops(rng, 12, 4096)
+    got = run_kernel(x, y, 9, 12, 0)
+    assert np.all(got - x * y <= 0)
+
+
+def test_mse_monotone_in_vbl():
+    rng = np.random.default_rng(4)
+    x, y = rand_ops(rng, 12, 8192)
+    prev = -1.0
+    for vbl in (0, 3, 6, 9, 12):
+        err = (run_kernel(x, y, vbl, 12, 0) - x * y).astype(np.float64)
+        mse = float((err**2).mean())
+        assert mse >= prev
+        prev = mse
+
+
+def test_bbm_product_traces_inside_jit():
+    """The formula itself must stay jittable (it is inlined into L2)."""
+
+    @jax.jit
+    def f(x, y, v):
+        return bbm_product(x, y, v, wl=8, ty=1)
+
+    x = jnp.arange(-8, 8, dtype=jnp.int32)
+    y = jnp.arange(16, dtype=jnp.int32) - 8
+    out = np.asarray(f(x, y, jnp.int32(5)))
+    want = ref.bbm_ref(np.arange(-8, 8), np.arange(16) - 8, 5, 8, 1)
+    np.testing.assert_array_equal(out, want)

@@ -1,0 +1,63 @@
+"""Error-moment reduction kernel vs the numpy oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.error_moments import error_moments
+from compile.kernels import ref
+
+
+def run_moments(x, y, vbl, wl, ty):
+    xs = jnp.asarray(x, dtype=jnp.int32)
+    ys = jnp.asarray(y, dtype=jnp.int32)
+    v = jnp.asarray([vbl], dtype=jnp.int32)
+    s, sq, mn, cnt = error_moments(xs, ys, v, wl=wl, ty=ty)
+    return int(s[0]), float(sq[0]), int(mn[0]), int(cnt[0])
+
+
+def test_exact_has_zero_moments():
+    rng = np.random.default_rng(2)
+    x = rng.integers(-2048, 2048, 1024)
+    y = rng.integers(-2048, 2048, 1024)
+    s, sq, mn, cnt = run_moments(x, y, 0, 12, 0)
+    assert (s, sq, cnt) == (0, 0.0, 0)
+    assert mn == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vbl=st.integers(0, 24),
+    seed=st.integers(0, 2**31 - 1),
+    ty=st.sampled_from([0, 1]),
+)
+def test_hypothesis_matches_ref(vbl, seed, ty):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-2048, 2048, 512)
+    y = rng.integers(-2048, 2048, 512)
+    got = run_moments(x, y, vbl, 12, ty)
+    want = ref.error_moments_ref(x, y, vbl, 12, ty)
+    assert got[0] == int(want[0])
+    np.testing.assert_allclose(got[1], float(want[1]), rtol=1e-12)
+    assert got[2] == int(want[2])
+    assert got[3] == int(want[3])
+
+
+def test_table1_row_sampled():
+    """Sampled check against the paper's Table I (WL=12, VBL=6):
+    mean ≈ −61.5, MSE ≈ 5.05e3, P(err) ≈ 0.9375."""
+    rng = np.random.default_rng(42)
+    n = 1 << 18
+    x = rng.integers(-2048, 2048, n)
+    y = rng.integers(-2048, 2048, n)
+    s, sq, _mn, cnt = run_moments(x, y, 6, 12, 0)
+    mean = s / n
+    mse = sq / n
+    prob = cnt / n
+    assert abs(mean - (-61.5)) < 1.5, mean
+    assert abs(mse / 5.05e3 - 1.0) < 0.05, mse
+    assert abs(prob - 0.9375) < 0.01, prob

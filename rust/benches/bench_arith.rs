@@ -1,0 +1,41 @@
+//! Arithmetic-model throughput: the hot inner function of every
+//! exhaustive sweep (also the L3-native baseline the PJRT path is
+//! compared against in EXPERIMENTS.md §Perf).
+
+include!("harness.rs");
+
+use bbm::arith::{BbmType, BrokenBooth, Multiplier, MultKind};
+use bbm::util::Pcg64;
+
+fn main() {
+    let n = 1_000_000usize;
+    let mut rng = Pcg64::seeded(1);
+    let xs: Vec<i64> = (0..n).map(|_| rng.operand(16)).collect();
+    let ys: Vec<i64> = (0..n).map(|_| rng.operand(16)).collect();
+
+    for (label, m) in [
+        ("bbm-type0(wl16,vbl13)", BrokenBooth::new(16, 13, BbmType::Type0)),
+        ("bbm-type1(wl16,vbl13)", BrokenBooth::new(16, 13, BbmType::Type1)),
+        ("bbm-type0(wl12,vbl9)", BrokenBooth::new(12, 9, BbmType::Type0)),
+    ] {
+        let mut acc = 0i64;
+        report(label, 10, n as f64, || {
+            for i in 0..n {
+                acc = acc.wrapping_add(m.multiply(xs[i], ys[i]));
+            }
+        });
+        std::hint::black_box(acc);
+    }
+    for kind in [MultKind::Bam, MultKind::Kulkarni, MultKind::Etm] {
+        let m = kind.build(16, 9);
+        let xs: Vec<i64> = (0..n).map(|_| rng.operand_unsigned(16) as i64).collect();
+        let ys: Vec<i64> = (0..n).map(|_| rng.operand_unsigned(16) as i64).collect();
+        let mut acc = 0i64;
+        report(&format!("{kind}(wl16,level9)"), 10, n as f64, || {
+            for i in 0..n {
+                acc = acc.wrapping_add(m.multiply(xs[i], ys[i]));
+            }
+        });
+        std::hint::black_box(acc);
+    }
+}

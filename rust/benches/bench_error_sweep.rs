@@ -1,0 +1,36 @@
+//! Table I / Fig. 2 regeneration cost: exhaustive error sweeps, native
+//! engine (sharded) and per-thread scaling.
+
+include!("harness.rs");
+
+use bbm::arith::{BbmType, BrokenBooth};
+use bbm::error::{exhaustive_histogram, exhaustive_stats, SweepConfig};
+
+fn main() {
+    // Table I row (WL=12 => 2^24 pairs) at several thread counts.
+    let m12 = BrokenBooth::new(12, 6, BbmType::Type0);
+    for threads in [1usize, 2, 4, 8, 0] {
+        let label = format!(
+            "table1-row wl12 vbl6 ({} threads)",
+            if threads == 0 { "all".to_string() } else { threads.to_string() }
+        );
+        report(&label, 3, (1u64 << 24) as f64, || {
+            let r = exhaustive_stats(&m12, SweepConfig { threads, chunk: 64 });
+            std::hint::black_box(r.stats.mse());
+        });
+    }
+    // Fig. 2 (WL=10 histogram, 2^20 pairs).
+    let m10 = BrokenBooth::new(10, 9, BbmType::Type0);
+    report("fig2-hist wl10 vbl9", 5, (1u64 << 20) as f64, || {
+        let h = exhaustive_histogram(&m10, 41, (1u64 << 19) as f64, SweepConfig::default());
+        std::hint::black_box(h.n);
+    });
+    // The full Table I (all four rows).
+    report("table1-full (4 rows, wl12)", 1, 4.0 * (1u64 << 24) as f64, || {
+        for vbl in [3, 6, 9, 12] {
+            let m = BrokenBooth::new(12, vbl, BbmType::Type0);
+            let r = exhaustive_stats(&m, SweepConfig::default());
+            std::hint::black_box(r.stats.mean());
+        }
+    });
+}

@@ -1,0 +1,31 @@
+//! §III.C costs: Remez design, testbed generation, behavioural filtering
+//! (Fig. 8 sweep unit) and the Table-IV gate-level FIR case.
+
+include!("harness.rs");
+
+use bbm::arith::{BbmType, BrokenBooth};
+use bbm::dsp::{evaluate, paper_lowpass, Testbed};
+
+fn main() {
+    report("remez design 30-tap", 5, 1.0, || {
+        std::hint::black_box(paper_lowpass(30).unwrap().delta);
+    });
+    report("testbed generate 2^14", 3, (1 << 14) as f64, || {
+        std::hint::black_box(Testbed::generate(1 << 14, 1).x.len());
+    });
+    let tb = Testbed::generate(1 << 13, 42);
+    let d = paper_lowpass(30).unwrap();
+    report("fig8b point (behavioural SNR, 2^13 samples)", 3, (1 << 13) as f64, || {
+        let m = BrokenBooth::new(16, 13, BbmType::Type0);
+        std::hint::black_box(evaluate(&tb, &d.taps, Some((&m, 16))));
+    });
+    report("tableIV case (wl8 scale-down)", 1, 1.0, || {
+        let clock = {
+            use bbm::gate::builders::{build_fir, FirSpec};
+            let mut nl = build_fir(FirSpec { taps: 30, wl: 8, vbl: 0, ty: BbmType::Type0 });
+            bbm::gate::find_tmin(&mut nl).delay_ps * 1.1
+        };
+        let c = bbm::repro::filter_app::run_fir_case(8, 0, clock, &tb, &d.taps, 1024).unwrap();
+        std::hint::black_box(c.power_mw);
+    });
+}

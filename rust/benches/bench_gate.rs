@@ -1,0 +1,42 @@
+//! Gate-substrate costs: netlist generation, event simulation (the
+//! 5×10⁵-vector power run of §II.C), STA, and constraint synthesis.
+
+include!("harness.rs");
+
+use bbm::arith::BbmType;
+use bbm::gate::builders::{build_broken_booth, build_fir, FirSpec};
+use bbm::gate::{analyze, find_tmin, run_random, synthesize};
+
+fn main() {
+    report("build netlist wl16 (accurate)", 20, 1.0, || {
+        std::hint::black_box(build_broken_booth(16, 0, BbmType::Type0).cells.len());
+    });
+    let nl = build_broken_booth(16, 0, BbmType::Type0);
+    report("STA wl16", 50, nl.cells.len() as f64, || {
+        std::hint::black_box(analyze(&nl).critical);
+    });
+    report("sim 5e5 vectors wl16 (paper's power run)", 3, 500_000.0, || {
+        std::hint::black_box(run_random(&nl, 500_000, 1).total_toggles());
+    });
+    report("find_tmin wl16", 3, 1.0, || {
+        let mut nl = build_broken_booth(16, 0, BbmType::Type0);
+        std::hint::black_box(find_tmin(&mut nl).delay_ps);
+    });
+    report("synthesize wl16 @1.5xTmin", 3, 1.0, || {
+        let mut nl = build_broken_booth(16, 0, BbmType::Type0);
+        std::hint::black_box(synthesize(&mut nl, 5000.0).moves);
+    });
+    // Table IV scale: the 30-tap WL=16 FIR datapath.
+    report("build FIR datapath 30tap wl16", 2, 1.0, || {
+        let nl = build_fir(FirSpec { taps: 30, wl: 16, vbl: 0, ty: BbmType::Type0 });
+        std::hint::black_box(nl.cells.len());
+    });
+    let fir = build_fir(FirSpec { taps: 30, wl: 16, vbl: 0, ty: BbmType::Type0 });
+    println!("  (FIR datapath: {} cells, {} DFFs)", fir.cells.len(), fir.num_dffs());
+    report("FIR STA", 5, fir.cells.len() as f64, || {
+        std::hint::black_box(analyze(&fir).critical);
+    });
+    report("FIR sim 4096 cycles (Table IV power run)", 2, 4096.0, || {
+        std::hint::black_box(run_random(&fir, 4096 * 64, 2).total_toggles());
+    });
+}

@@ -1,0 +1,45 @@
+//! Three-layer hot-path benches: PJRT executions from the rust
+//! coordinator (batched multiply, moments reduction, FIR blocks) vs the
+//! native rust engine — the §Perf comparison in EXPERIMENTS.md.
+
+include!("harness.rs");
+
+use bbm::arith::{BbmType, BrokenBooth, Multiplier};
+use bbm::runtime::{self, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH};
+use bbm::util::Pcg64;
+
+fn main() {
+    let Some(rt) = runtime::try_load_default() else {
+        println!("bench_runtime SKIPPED: run `make artifacts` first");
+        return;
+    };
+    let mut rng = Pcg64::seeded(1);
+    let x: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
+    let y: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
+
+    report("pjrt bbm_multiply 64k lanes (wl16 type0)", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(rt.bbm_multiply(16, 0, &x, &y, 13).unwrap().len());
+    });
+    report("pjrt error_moments 64k lanes (wl12)", 10, SWEEP_BATCH as f64, || {
+        let xs: &Vec<i32> = &x;
+        std::hint::black_box(rt.error_moments(12, 0, xs, &y, 6).unwrap().0);
+    });
+    let m = BrokenBooth::new(16, 13, BbmType::Type0);
+    report("native rust same 64k multiplies", 10, SWEEP_BATCH as f64, || {
+        let mut acc = 0i64;
+        for i in 0..SWEEP_BATCH {
+            acc = acc.wrapping_add(m.multiply(x[i] as i64, y[i] as i64));
+        }
+        std::hint::black_box(acc);
+    });
+    let xb: Vec<i32> = (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| rng.operand(16) as i32).collect();
+    let h: Vec<i32> = (0..FIR_TAPS).map(|_| rng.operand(16) as i32).collect();
+    report("pjrt fir_block 4096 samples (wl16)", 5, FIR_BLOCK as f64, || {
+        std::hint::black_box(rt.fir_block(16, &xb, &h, 13).unwrap().len());
+    });
+    report("pjrt snr_acc 4096", 10, FIR_BLOCK as f64, || {
+        let a = vec![1.0f64; FIR_BLOCK];
+        let b = vec![0.5f64; FIR_BLOCK];
+        std::hint::black_box(rt.snr_acc(&a, &b).unwrap().0);
+    });
+}

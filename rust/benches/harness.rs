@@ -1,0 +1,33 @@
+// Shared micro-bench harness (criterion is unavailable offline): warm-up
+// plus N timed iterations, reporting min/mean/throughput.
+//
+// Each `[[bench]]` target is `harness = false` and uses this module via
+// `include!`; `cargo bench` runs them all.
+
+use std::time::Instant;
+
+/// Time `iters` runs of `f` after one warm-up; returns (min, mean) seconds.
+pub fn time_it<F: FnMut()>(iters: u32, mut f: F) -> (f64, f64) {
+    f(); // warm-up
+    let mut min = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        min = min.min(dt);
+        total += dt;
+    }
+    (min, total / iters as f64)
+}
+
+/// Report one benchmark line.
+pub fn report(name: &str, iters: u32, items_per_iter: f64, f: impl FnMut()) {
+    let (min, mean) = time_it(iters, f);
+    println!(
+        "bench {name:<44} min {:>9.3} ms  mean {:>9.3} ms  {:>12.1} items/s",
+        min * 1e3,
+        mean * 1e3,
+        items_per_iter / min
+    );
+}

@@ -1,0 +1,195 @@
+//! Broken-Array Multiplier (BAM), Mahdiani et al. [1] — the prior work the
+//! paper adopts its breaking idea from and compares against in Fig. 5/6.
+//!
+//! BAM starts from the unsigned carry-save array multiplier whose dot
+//! diagram has a dot `x_i·y_j` at column `i + j` of row `j`. Two knobs
+//! remove hardware:
+//!
+//! * **VBL** (vertical breaking level): drop every dot in columns
+//!   `< VBL`.
+//! * **HBL** (horizontal breaking level): drop the first `HBL` rows
+//!   entirely.
+//!
+//! The paper's comparison fixes `HBL = 0` and sweeps VBL; we implement
+//! both knobs (HBL is exercised by tests and the design-space example).
+//! Per the paper, the signed counterpart has identical MSE, so the
+//! unsigned model is the one used for Fig. 5/6.
+
+use super::Multiplier;
+
+/// Broken-Array (unsigned) approximate multiplier.
+#[derive(Clone, Copy, Debug)]
+pub struct Bam {
+    wl: u32,
+    vbl: u32,
+    hbl: u32,
+}
+
+impl Bam {
+    /// New WL-bit BAM with vertical level `vbl` (≤ 2·wl) and horizontal
+    /// level `hbl` (≤ wl). `vbl = hbl = 0` is exact.
+    pub fn new(wl: u32, vbl: u32, hbl: u32) -> Self {
+        assert!(wl >= 1 && wl <= 31, "wl must be 1..=31");
+        assert!(vbl <= 2 * wl, "vbl must be <= 2*wl");
+        assert!(hbl <= wl, "hbl must be <= wl");
+        Bam { wl, vbl, hbl }
+    }
+
+    /// Vertical breaking level.
+    pub fn vbl(&self) -> u32 {
+        self.vbl
+    }
+
+    /// Horizontal breaking level.
+    pub fn hbl(&self) -> u32 {
+        self.hbl
+    }
+
+    /// Approximate unsigned product.
+    pub fn approx_product(&self, x: u64, y: u64) -> u64 {
+        debug_assert!(x < (1u64 << self.wl) && y < (1u64 << self.wl));
+        let mut acc = 0u64;
+        for j in self.hbl..self.wl {
+            if (y >> j) & 1 == 0 {
+                continue;
+            }
+            // Keep dots with column i + j >= vbl, i.e. bits i >= vbl - j.
+            let min_i = self.vbl.saturating_sub(j);
+            if min_i >= self.wl {
+                continue;
+            }
+            let row = x & (!0u64 << min_i);
+            acc += row << j;
+        }
+        acc
+    }
+
+    /// Number of AND-dots kept (hardware proxy used by tests and the
+    /// design-space explorer; the real cost model lives in `crate::gate`).
+    pub fn dots_kept(&self) -> u32 {
+        let mut kept = 0;
+        for j in self.hbl..self.wl {
+            for i in 0..self.wl {
+                if i + j >= self.vbl {
+                    kept += 1;
+                }
+            }
+        }
+        kept
+    }
+}
+
+impl Multiplier for Bam {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        false
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        debug_assert!(x >= 0 && y >= 0);
+        self.approx_product(x as u64, y as u64) as i64
+    }
+
+    fn name(&self) -> String {
+        format!("bam(wl={},vbl={},hbl={})", self.wl, self.vbl, self.hbl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn exact_when_unbroken_exhaustive_wl6() {
+        let m = Bam::new(6, 0, 0);
+        for x in 0i64..64 {
+            for y in 0i64..64 {
+                assert_eq!(m.multiply(x, y), x * y);
+            }
+        }
+    }
+
+    /// Independent dot-level reference.
+    fn dot_reference(x: u64, y: u64, wl: u32, vbl: u32, hbl: u32) -> u64 {
+        let mut acc = 0u64;
+        for j in 0..wl {
+            for i in 0..wl {
+                if j >= hbl && i + j >= vbl && (x >> i) & 1 == 1 && (y >> j) & 1 == 1 {
+                    acc += 1u64 << (i + j);
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn matches_dot_reference_exhaustive_wl5() {
+        for vbl in 0..=10 {
+            for hbl in 0..=2 {
+                let m = Bam::new(5, vbl, hbl);
+                for x in 0u64..32 {
+                    for y in 0u64..32 {
+                        assert_eq!(
+                            m.approx_product(x, y),
+                            dot_reference(x, y, 5, vbl, hbl),
+                            "vbl={vbl} hbl={hbl} x={x} y={y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dot_reference_sampled_wl12() {
+        let mut rng = Pcg64::seeded(6);
+        for vbl in [3u32, 7, 11, 15] {
+            let m = Bam::new(12, vbl, 0);
+            for _ in 0..5_000 {
+                let x = rng.operand_unsigned(12);
+                let y = rng.operand_unsigned(12);
+                assert_eq!(m.approx_product(x, y), dot_reference(x, y, 12, vbl, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn error_never_positive() {
+        // BAM only deletes non-negative dots, so it under-estimates.
+        let mut rng = Pcg64::seeded(7);
+        let m = Bam::new(10, 8, 2);
+        for _ in 0..10_000 {
+            let x = rng.operand_unsigned(10) as i64;
+            let y = rng.operand_unsigned(10) as i64;
+            assert!(m.error(x, y) <= 0);
+        }
+    }
+
+    #[test]
+    fn dots_kept_counts() {
+        // WL=2 full diagram has 4 dots.
+        assert_eq!(Bam::new(2, 0, 0).dots_kept(), 4);
+        // vbl=1 removes only the (0,0) dot.
+        assert_eq!(Bam::new(2, 1, 0).dots_kept(), 3);
+        // hbl=1 removes row 0 (2 dots).
+        assert_eq!(Bam::new(2, 0, 1).dots_kept(), 2);
+    }
+
+    #[test]
+    fn commutative_in_x_only_structurally() {
+        // BAM truncation is not symmetric under operand swap in general
+        // when hbl > 0; with hbl = 0 the kept-dot set {i+j>=vbl} is
+        // symmetric so products agree.
+        let m = Bam::new(8, 5, 0);
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..5_000 {
+            let x = rng.operand_unsigned(8);
+            let y = rng.operand_unsigned(8);
+            assert_eq!(m.approx_product(x, y), m.approx_product(y, x));
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! The Broken-Booth Multiplier (the paper's contribution), Type0 and
+//! Type1, modeled bit-exactly at the dot-diagram level.
+//!
+//! The product of a WL-bit modified Booth multiplier is accumulated over
+//! `WL/2` partial-product rows in a `P = 2·WL`-column dot diagram. The
+//! Broken-Booth approximation zeroes every dot strictly to the right of
+//! the Vertical Breaking Level (columns `0 .. VBL-1`).
+//!
+//! For a Booth digit `d_i` applied to multiplicand `x`, the hardware row
+//! is: the bits of `|d_i|·x` (selector output), one's-complemented when
+//! `d_i < 0`, sign-extended through column `P−1`, positioned at column
+//! `2i`, plus a correction dot `S = [d_i < 0]` at column `2i` (the `+1`
+//! completing the two's complement).
+//!
+//! * **Type0** folds `S` into the row *before* breaking, so each masked
+//!   row equals `((d_i·x·4^i) mod 2^P) & mask`.
+//! * **Type1** breaks the raw complemented dots, and keeps `S` only if
+//!   its column survives (`2i ≥ VBL`). A negative row therefore
+//!   contributes `((¬(m_i·4^i) & hi(2i)) & mask) + [2i ≥ VBL]·4^i`
+//!   (mod `2^P`), where `m_i = |d_i|·x` sign-extended and `hi(c)` clears
+//!   the columns below `c` where the row has no dots.
+//!
+//! Setting `VBL = 0` recovers the exact multiplier for both types — that
+//! is also how the paper obtains its accurate baseline.
+
+use super::booth::{booth_digits, MAX_WL};
+use super::Multiplier;
+
+/// Which breaking discipline a [`BrokenBooth`] instance uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BbmType {
+    /// Complement-and-increment before breaking (more accurate).
+    Type0,
+    /// Break before the `+1` correction (cheaper, less accurate).
+    Type1,
+}
+
+impl std::fmt::Display for BbmType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BbmType::Type0 => f.write_str("type0"),
+            BbmType::Type1 => f.write_str("type1"),
+        }
+    }
+}
+
+/// Broken-Booth approximate signed multiplier.
+#[derive(Clone, Copy, Debug)]
+pub struct BrokenBooth {
+    wl: u32,
+    vbl: u32,
+    ty: BbmType,
+}
+
+impl BrokenBooth {
+    /// New WL-bit Broken-Booth multiplier with breaking level `vbl`
+    /// (`0 ≤ vbl ≤ 2·wl`; `vbl = 0` is exact).
+    pub fn new(wl: u32, vbl: u32, ty: BbmType) -> Self {
+        assert!(wl >= 2 && wl <= MAX_WL && wl % 2 == 0, "wl must be even, 2..={MAX_WL}");
+        assert!(vbl <= 2 * wl, "vbl must be <= 2*wl");
+        BrokenBooth { wl, vbl, ty }
+    }
+
+    /// The breaking level.
+    pub fn vbl(&self) -> u32 {
+        self.vbl
+    }
+
+    /// The breaking discipline.
+    pub fn ty(&self) -> BbmType {
+        self.ty
+    }
+
+    /// Product-field width in bits (`2·WL`).
+    pub fn product_bits(&self) -> u32 {
+        2 * self.wl
+    }
+
+    #[inline]
+    fn pmask(&self) -> u64 {
+        field_mask(self.product_bits())
+    }
+
+    /// Columns `>= vbl` of the product field.
+    #[inline]
+    fn vbl_mask(&self) -> u64 {
+        (self.pmask() >> self.vbl) << self.vbl
+    }
+
+    /// Interpret a P-bit field as a signed value.
+    #[inline]
+    fn sign_extend(&self, v: u64) -> i64 {
+        let p = self.product_bits();
+        ((v << (64 - p)) as i64) >> (64 - p)
+    }
+
+    /// The approximate product.
+    ///
+    /// Hot path of every exhaustive sweep: the Booth digits are derived
+    /// inline (no allocation — see EXPERIMENTS.md §Perf) and the row loop
+    /// stays branch-light so it vectorizes when monomorphized.
+    #[inline]
+    pub fn approx_product(&self, x: i64, y: i64) -> i64 {
+        let p = self.product_bits();
+        let pmask = self.pmask();
+        let vmask = self.vbl_mask();
+        debug_assert!(p <= 63);
+        let mut acc: u64 = 0;
+        for i in 0..(self.wl / 2) as usize {
+            // Booth digit from the overlapping bit triple (allocation-free
+            // twin of `booth_digits`, kept in sync by unit tests).
+            let b_m1 = if i == 0 { 0 } else { (y >> (2 * i - 1)) & 1 };
+            let b_0 = (y >> (2 * i)) & 1;
+            let b_1 = (y >> (2 * i + 1)) & 1;
+            let d = (b_m1 + b_0 - 2 * b_1) as i8;
+            let shift = 2 * i as u32;
+            let row = match self.ty {
+                BbmType::Type0 => {
+                    // Two's complement folded in first: the row *value* is
+                    // d·x·4^i; mask its field representation.
+                    let v = ((d as i64) * x) as u64; // wraps correctly mod 2^64
+                    (v << shift) & vmask
+                }
+                BbmType::Type1 => {
+                    if d >= 0 {
+                        let v = ((d as i64) * x) as u64;
+                        (v << shift) & vmask
+                    } else {
+                        // One's-complement dots at columns >= 2i ...
+                        let m = ((-(d as i64)) * x) as u64;
+                        let hi = (pmask >> shift) << shift;
+                        let dots = !(m << shift) & hi & vmask;
+                        // ... plus the +1 correction dot iff it survives.
+                        let s = if shift >= self.vbl { 1u64 << shift } else { 0 };
+                        dots.wrapping_add(s)
+                    }
+                }
+            };
+            acc = acc.wrapping_add(row);
+        }
+        self.sign_extend(acc & pmask)
+    }
+}
+
+/// All-ones mask of the low `bits` bits.
+#[inline]
+fn field_mask(bits: u32) -> u64 {
+    debug_assert!(bits >= 1 && bits <= 63);
+    (1u64 << bits) - 1
+}
+
+impl Multiplier for BrokenBooth {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        true
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        self.approx_product(x, y)
+    }
+
+    fn name(&self) -> String {
+        format!("bbm-{}(wl={},vbl={})", self.ty, self.wl, self.vbl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn exhaustive_check<F: Fn(i64, i64)>(wl: u32, f: F) {
+        let half = 1i64 << (wl - 1);
+        for x in -half..half {
+            for y in -half..half {
+                f(x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn vbl0_is_exact_exhaustive_wl6_both_types() {
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            let m = BrokenBooth::new(6, 0, ty);
+            exhaustive_check(6, |x, y| {
+                assert_eq!(m.multiply(x, y), x * y, "{ty} x={x} y={y}");
+            });
+        }
+    }
+
+    #[test]
+    fn vbl0_is_exact_sampled_wl16() {
+        let mut rng = Pcg64::seeded(2);
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            let m = BrokenBooth::new(16, 0, ty);
+            for _ in 0..20_000 {
+                let (x, y) = (rng.operand(16), rng.operand(16));
+                assert_eq!(m.multiply(x, y), x * y);
+            }
+        }
+    }
+
+    /// Dot-level reference: build the diagram dot by dot and mask columns,
+    /// independently of the u64 shortcut in `approx_product`.
+    fn dot_reference(x: i64, y: i64, wl: u32, vbl: u32, ty: BbmType) -> i64 {
+        let p = 2 * wl;
+        let pm: u64 = (1u64 << p) - 1;
+        let digits = booth_digits(y, wl);
+        let mut cols = vec![0u64; p as usize]; // dot-count per column
+        for (i, &d) in digits.iter().enumerate() {
+            let base = 2 * i as u32;
+            // Selector output m = |d| * x, sign-extended, one's-complement
+            // dots if d < 0.
+            let m = (d as i64).unsigned_abs() as i64 * x;
+            let neg = d < 0;
+            match ty {
+                BbmType::Type0 => {
+                    // Row value with +1 folded: v = d*x (two's complement).
+                    let v = ((d as i64) * x) as u64 & (pm >> base);
+                    for c in base..p {
+                        if (v >> (c - base)) & 1 == 1 && c >= vbl {
+                            cols[c as usize] += 1;
+                        }
+                    }
+                }
+                BbmType::Type1 => {
+                    for c in base..p {
+                        let bit = ((m as u64) >> (c - base)) & 1;
+                        let dot = if neg { bit ^ 1 } else { bit };
+                        if dot == 1 && c >= vbl {
+                            cols[c as usize] += 1;
+                        }
+                    }
+                    if neg && base >= vbl {
+                        cols[base as usize] += 1; // the S dot
+                    }
+                }
+            }
+        }
+        let mut acc: u64 = 0;
+        for (c, &n) in cols.iter().enumerate() {
+            acc = acc.wrapping_add((n as u64) << c);
+        }
+        let v = acc & pm;
+        ((v << (64 - p)) as i64) >> (64 - p)
+    }
+
+    #[test]
+    fn matches_dot_reference_exhaustive_wl6() {
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            for vbl in 0..=12 {
+                let m = BrokenBooth::new(6, vbl, ty);
+                exhaustive_check(6, |x, y| {
+                    assert_eq!(
+                        m.multiply(x, y),
+                        dot_reference(x, y, 6, vbl, ty),
+                        "{ty} vbl={vbl} x={x} y={y}"
+                    );
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dot_reference_sampled_wl12() {
+        let mut rng = Pcg64::seeded(3);
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            for vbl in [1, 5, 9, 16, 24] {
+                let m = BrokenBooth::new(12, vbl, ty);
+                for _ in 0..2_000 {
+                    let (x, y) = (rng.operand(12), rng.operand(12));
+                    assert_eq!(m.multiply(x, y), dot_reference(x, y, 12, vbl, ty));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn type0_error_is_never_positive() {
+        // Masking the two's-complement row value only removes weight from
+        // each row, so Type0 always under-estimates (error <= 0).
+        let mut rng = Pcg64::seeded(4);
+        for vbl in [3, 7, 13] {
+            let m = BrokenBooth::new(12, vbl, BbmType::Type0);
+            for _ in 0..10_000 {
+                let (x, y) = (rng.operand(12), rng.operand(12));
+                assert!(m.error(x, y) <= 0, "vbl={vbl} x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mse_monotone_in_vbl_wl8_type0() {
+        let mut prev = -1.0f64;
+        for vbl in [0u32, 2, 4, 6, 8] {
+            let m = BrokenBooth::new(8, vbl, BbmType::Type0);
+            let mut se = 0f64;
+            for x in -128i64..128 {
+                for y in -128i64..128 {
+                    let e = m.error(x, y) as f64;
+                    se += e * e;
+                }
+            }
+            let mse = se / (256.0 * 256.0);
+            assert!(mse >= prev, "vbl={vbl} mse={mse} prev={prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn type1_mse_at_least_type0_wl8() {
+        // The paper: Type1 trades accuracy for fewer increments.
+        for vbl in [3u32, 5, 7, 9] {
+            let t0 = BrokenBooth::new(8, vbl, BbmType::Type0);
+            let t1 = BrokenBooth::new(8, vbl, BbmType::Type1);
+            let (mut s0, mut s1) = (0f64, 0f64);
+            for x in -128i64..128 {
+                for y in -128i64..128 {
+                    let e0 = t0.error(x, y) as f64;
+                    let e1 = t1.error(x, y) as f64;
+                    s0 += e0 * e0;
+                    s1 += e1 * e1;
+                }
+            }
+            assert!(s1 >= s0, "vbl={vbl}: type1 MSE {s1} < type0 MSE {s0}");
+        }
+    }
+
+    #[test]
+    fn full_break_zeroes_everything_type0() {
+        let m = BrokenBooth::new(8, 16, BbmType::Type0);
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..1000 {
+            let (x, y) = (rng.operand(8), rng.operand(8));
+            assert_eq!(m.multiply(x, y), 0);
+        }
+    }
+
+    #[test]
+    fn name_reflects_parameters() {
+        let m = BrokenBooth::new(12, 7, BbmType::Type1);
+        assert_eq!(m.name(), "bbm-type1(wl=12,vbl=7)");
+    }
+}

@@ -1,0 +1,145 @@
+//! Radix-4 modified-Booth recoding and the exact Booth multiplier.
+//!
+//! The modified Booth algorithm recodes the WL-bit two's-complement
+//! multiplier `y` into `WL/2` signed digits `d_i ∈ {-2,-1,0,1,2}` such
+//! that `y = Σ d_i 4^i`, halving the number of partial products. Each
+//! digit is a function of the overlapping bit triple
+//! `(y_{2i+1}, y_{2i}, y_{2i-1})` with `y_{-1} = 0`:
+//!
+//! `d_i = y_{2i-1} + y_{2i} − 2·y_{2i+1}`.
+
+use super::Multiplier;
+
+/// Maximum supported word length (product must fit a 2·WL ≤ 63-bit field
+/// inside the u64 dot-diagram arithmetic of [`super::bbm`]).
+pub const MAX_WL: u32 = 24;
+
+/// Radix-4 Booth digits of a WL-bit signed `y`, least significant first.
+///
+/// `wl` must be even and `2 ≤ wl ≤ MAX_WL`. The invariant
+/// `y == Σ digits[i]·4^i` holds for every `y` in the signed WL-bit range.
+pub fn booth_digits(y: i64, wl: u32) -> Vec<i8> {
+    assert!(wl >= 2 && wl <= MAX_WL && wl % 2 == 0, "wl must be even, 2..={MAX_WL}");
+    let n = (wl / 2) as usize;
+    let mut digits = Vec::with_capacity(n);
+    // Work on the sign-extended value directly; bit 2i+1 of the top digit
+    // is the sign bit, so plain arithmetic shifts give correct triples.
+    for i in 0..n {
+        let b_m1 = if i == 0 { 0 } else { ((y >> (2 * i - 1)) & 1) as i8 };
+        let b_0 = ((y >> (2 * i)) & 1) as i8;
+        let b_1 = ((y >> (2 * i + 1)) & 1) as i8;
+        digits.push(b_m1 + b_0 - 2 * b_1);
+    }
+    digits
+}
+
+/// Number of partial-product rows for a WL-bit modified Booth multiplier.
+pub fn num_rows(wl: u32) -> u32 {
+    wl / 2
+}
+
+/// Exact product via Booth recoding — used both as a self-check of the
+/// recoder and as the VBL = 0 reference for the Broken-Booth models.
+pub fn exact_booth(x: i64, y: i64, wl: u32) -> i64 {
+    booth_digits(y, wl)
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (d as i64) * x * (1i64 << (2 * i)))
+        .sum()
+}
+
+/// Exact modified-Booth multiplier as a [`Multiplier`] model.
+#[derive(Clone, Copy, Debug)]
+pub struct ExactBooth {
+    wl: u32,
+}
+
+impl ExactBooth {
+    /// New exact WL-bit Booth multiplier (wl even).
+    pub fn new(wl: u32) -> Self {
+        assert!(wl >= 2 && wl <= MAX_WL && wl % 2 == 0);
+        ExactBooth { wl }
+    }
+}
+
+impl Multiplier for ExactBooth {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        true
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        exact_booth(x, y, self.wl)
+    }
+
+    fn name(&self) -> String {
+        format!("booth-exact(wl={})", self.wl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_reconstruct_y_exhaustive_wl8() {
+        for y in -128i64..128 {
+            let d = booth_digits(y, 8);
+            assert_eq!(d.len(), 4);
+            let back: i64 = d.iter().enumerate().map(|(i, &di)| di as i64 * (1 << (2 * i))).sum();
+            assert_eq!(back, y, "y={y} digits={d:?}");
+            assert!(d.iter().all(|&di| (-2..=2).contains(&di)));
+        }
+    }
+
+    #[test]
+    fn digits_reconstruct_y_wl12_sampled() {
+        let mut rng = crate::util::Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let y = rng.operand(12);
+            let back: i64 =
+                booth_digits(y, 12).iter().enumerate().map(|(i, &d)| d as i64 * (1 << (2 * i))).sum();
+            assert_eq!(back, y);
+        }
+    }
+
+    #[test]
+    fn exact_booth_matches_native_exhaustive_wl6() {
+        for x in -32i64..32 {
+            for y in -32i64..32 {
+                assert_eq!(exact_booth(x, y, 6), x * y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_booth_extremes_wl16() {
+        let m = ExactBooth::new(16);
+        let (lo, hi) = m.operand_range();
+        for &x in &[lo, -1, 0, 1, hi] {
+            for &y in &[lo, -1, 0, 1, hi] {
+                assert_eq!(m.multiply(x, y), x * y);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_wl_rejected() {
+        booth_digits(0, 7);
+    }
+
+    #[test]
+    fn known_digit_patterns() {
+        // y = 6 = 0b0110 -> digits (i=0): bits (y1,y0,y-1)=(1,0,0) => -2
+        //                        (i=1): bits (y3,y2,y1)=(0,1,1) => 2
+        // 6 = -2*1 + 2*4. ✓
+        assert_eq!(booth_digits(6, 4), vec![-2, 2]);
+        // y = -1 = 0b1111 -> i0: (1,1,0) => -1; i1: (1,1,1) => 0
+        assert_eq!(booth_digits(-1, 4), vec![-1, 0]);
+        assert_eq!(booth_digits(0, 4), vec![0, 0]);
+    }
+}

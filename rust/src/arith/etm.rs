@@ -1,0 +1,146 @@
+//! Error-Tolerant Multiplier (ETM), Kyaw, Goh and Yeo [5] — implemented
+//! as a survey extension used by the design-space explorer and ablation
+//! bench (the paper discusses it in related work but does not re-measure
+//! it; we include it so the comparison harness covers the whole survey).
+//!
+//! ETM splits each WL-bit unsigned operand at `s` bits into a
+//! *multiplication* (high) part and a *non-multiplication* (low) part:
+//!
+//! * If both high parts are zero, the low parts are multiplied exactly —
+//!   small operands lose no accuracy.
+//! * Otherwise the high parts are multiplied exactly and shifted into
+//!   place, and the low `2·s` product bits are *estimated* by the
+//!   constant pattern `011…1` (the expected-value compensation the
+//!   original paper applies to the non-multiplication part); the
+//!   low×high cross terms are dropped — that is where ETM's large power
+//!   saving and large error both come from.
+
+use super::Multiplier;
+
+/// Error-Tolerant unsigned multiplier with split point `s`.
+#[derive(Clone, Copy, Debug)]
+pub struct Etm {
+    wl: u32,
+    split: u32,
+}
+
+impl Etm {
+    /// New WL-bit ETM splitting off the low `split` bits
+    /// (`0 ≤ split ≤ wl`; `split = 0` is exact).
+    pub fn new(wl: u32, split: u32) -> Self {
+        assert!(wl >= 1 && wl <= 31, "wl must be 1..=31");
+        assert!(split <= wl, "split must be <= wl");
+        Etm { wl, split }
+    }
+
+    /// The split point.
+    pub fn split(&self) -> u32 {
+        self.split
+    }
+
+    /// Approximate unsigned product.
+    pub fn approx_product(&self, x: u64, y: u64) -> u64 {
+        debug_assert!(x < (1u64 << self.wl) && y < (1u64 << self.wl));
+        let s = self.split;
+        if s == 0 {
+            return x * y;
+        }
+        let (xh, xl) = (x >> s, x & ((1 << s) - 1));
+        let (yh, yl) = (y >> s, y & ((1 << s) - 1));
+        if xh == 0 && yh == 0 {
+            // Accurate mode: small operands multiply exactly.
+            xl * yl
+        } else {
+            // Approximate mode: exact high product; low 2s bits filled
+            // with the 011…1 compensation pattern.
+            let hi = (xh * yh) << (2 * s);
+            let fill = (1u64 << (2 * s - 1)) - 1;
+            hi | fill
+        }
+    }
+}
+
+impl Multiplier for Etm {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        false
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        debug_assert!(x >= 0 && y >= 0);
+        self.approx_product(x as u64, y as u64) as i64
+    }
+
+    fn name(&self) -> String {
+        format!("etm(wl={},split={})", self.wl, self.split)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn split0_is_exact() {
+        let m = Etm::new(8, 0);
+        let mut rng = Pcg64::seeded(10);
+        for _ in 0..5_000 {
+            let x = rng.operand_unsigned(8) as i64;
+            let y = rng.operand_unsigned(8) as i64;
+            assert_eq!(m.multiply(x, y), x * y);
+        }
+    }
+
+    #[test]
+    fn small_operands_are_exact() {
+        // Both high parts zero => accurate mode.
+        let m = Etm::new(8, 4);
+        for x in 0i64..16 {
+            for y in 0i64..16 {
+                assert_eq!(m.multiply(x, y), x * y);
+            }
+        }
+    }
+
+    #[test]
+    fn approximate_mode_structure() {
+        let m = Etm::new(8, 4);
+        // x = 0x35, y = 0x21: xh=3, yh=2, fill = 0b0111_1111.
+        let p = m.approx_product(0x35, 0x21);
+        assert_eq!(p, (3 * 2) << 8 | 0x7f);
+    }
+
+    #[test]
+    fn error_bounded_by_low_field_plus_cross_terms() {
+        // |error| < 2^{2s} + 2·2^{wl+s} (dropped cross terms bound).
+        let m = Etm::new(10, 4);
+        let bound = (1i64 << 8) + 2 * (1i64 << 14);
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..20_000 {
+            let x = rng.operand_unsigned(10) as i64;
+            let y = rng.operand_unsigned(10) as i64;
+            assert!(m.error(x, y).abs() < bound);
+        }
+    }
+
+    #[test]
+    fn mse_monotone_in_split_wl8() {
+        let mut prev = -1.0;
+        for s in 0..=6u32 {
+            let m = Etm::new(8, s);
+            let mut se = 0.0;
+            for x in 0i64..256 {
+                for y in 0i64..256 {
+                    let e = m.error(x, y) as f64;
+                    se += e * e;
+                }
+            }
+            assert!(se >= prev, "split={s}");
+            prev = se;
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! The underdesigned 2×2-block multiplier of Kulkarni, Gupta and
+//! Ercegovac [3], extended with the paper's **K** parameter (Fig. 4).
+//!
+//! The building block is an inaccurate 2×2 multiplier that outputs 3 bits
+//! instead of 4 by mapping `3 × 3 → 7` (instead of 9) and computing every
+//! other input pair exactly. A WL-bit multiplier decomposes the operands
+//! into 2-bit digits, `x = Σ_c x_c·4^c`, `y = Σ_r y_r·4^r`, and sums
+//! `m(x_c, y_r)·4^{c+r}` over all digit pairs with an adder tree.
+//!
+//! [3] has no precision knob; the paper introduces **K**: an imaginary
+//! vertical line at column `K` of the PP diagram — blocks lying *entirely*
+//! to the right of the line (top column `2(c+r)+3 < K`) use the
+//! inaccurate block, the rest use exact 2×2 blocks. `K = 0` is exact and
+//! `K = 2·WL + 2` makes every block approximate.
+
+use super::Multiplier;
+
+/// The inaccurate 2×2 building block: exact except `3×3 → 7`.
+#[inline]
+pub fn mul2x2_approx(a: u64, b: u64) -> u64 {
+    debug_assert!(a < 4 && b < 4);
+    if a == 3 && b == 3 {
+        7
+    } else {
+        a * b
+    }
+}
+
+/// Exact 2×2 block.
+#[inline]
+pub fn mul2x2_exact(a: u64, b: u64) -> u64 {
+    debug_assert!(a < 4 && b < 4);
+    a * b
+}
+
+/// Kulkarni-style unsigned block multiplier with the K precision knob.
+#[derive(Clone, Copy, Debug)]
+pub struct Kulkarni {
+    wl: u32,
+    k: u32,
+}
+
+impl Kulkarni {
+    /// New WL-bit (wl even) block multiplier; `k` is the vertical line
+    /// position (`0 ≤ k ≤ 2·wl + 2`).
+    pub fn new(wl: u32, k: u32) -> Self {
+        assert!(wl >= 2 && wl <= 31 && wl % 2 == 0, "wl must be even, 2..=31");
+        assert!(k <= 2 * wl + 2, "k must be <= 2*wl + 2");
+        Kulkarni { wl, k }
+    }
+
+    /// The K parameter.
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// Is block (c, r) — digit columns of x and y — approximate?
+    #[inline]
+    pub fn block_is_approx(&self, c: u32, r: u32) -> bool {
+        // Block (c, r) spans product columns 2(c+r) .. 2(c+r)+3; it is
+        // replaced when it lies entirely right of the line at column K.
+        2 * (c + r) + 3 < self.k
+    }
+
+    /// Number of approximate blocks in the diagram (hardware proxy).
+    pub fn approx_blocks(&self) -> u32 {
+        let d = self.wl / 2;
+        let mut n = 0;
+        for c in 0..d {
+            for r in 0..d {
+                if self.block_is_approx(c, r) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Approximate unsigned product.
+    pub fn approx_product(&self, x: u64, y: u64) -> u64 {
+        debug_assert!(x < (1u64 << self.wl) && y < (1u64 << self.wl));
+        let d = self.wl / 2;
+        let mut acc = 0u64;
+        for c in 0..d {
+            let xc = (x >> (2 * c)) & 3;
+            for r in 0..d {
+                let yr = (y >> (2 * r)) & 3;
+                let m = if self.block_is_approx(c, r) {
+                    mul2x2_approx(xc, yr)
+                } else {
+                    mul2x2_exact(xc, yr)
+                };
+                acc += m << (2 * (c + r));
+            }
+        }
+        acc
+    }
+}
+
+impl Multiplier for Kulkarni {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        false
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        debug_assert!(x >= 0 && y >= 0);
+        self.approx_product(x as u64, y as u64) as i64
+    }
+
+    fn name(&self) -> String {
+        format!("kulkarni(wl={},k={})", self.wl, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn block_truth_table() {
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                if a == 3 && b == 3 {
+                    assert_eq!(mul2x2_approx(a, b), 7);
+                } else {
+                    assert_eq!(mul2x2_approx(a, b), a * b);
+                }
+                assert_eq!(mul2x2_exact(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn k0_is_exact_exhaustive_wl6() {
+        let m = Kulkarni::new(6, 0);
+        for x in 0i64..64 {
+            for y in 0i64..64 {
+                assert_eq!(m.multiply(x, y), x * y);
+            }
+        }
+    }
+
+    #[test]
+    fn all_approx_matches_full_kulkarni_wl4() {
+        // K at maximum makes every block inaccurate — this is exactly the
+        // original [3] design. Error occurs iff some digit pair is (3,3).
+        let m = Kulkarni::new(4, 10);
+        assert_eq!(m.approx_blocks(), 4);
+        for x in 0u64..16 {
+            for y in 0u64..16 {
+                let mut expect = 0u64;
+                for c in 0..2 {
+                    for r in 0..2 {
+                        let xc = (x >> (2 * c)) & 3;
+                        let yr = (y >> (2 * r)) & 3;
+                        expect += mul2x2_approx(xc, yr) << (2 * (c + r));
+                    }
+                }
+                assert_eq!(m.approx_product(x, y), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn error_only_from_right_of_line() {
+        // With K = 4 on WL=6, only block (0,0) (columns 0..3) is
+        // approximate, so error requires x%4 == 3 && y%4 == 3.
+        let m = Kulkarni::new(6, 4);
+        assert_eq!(m.approx_blocks(), 1);
+        for x in 0i64..64 {
+            for y in 0i64..64 {
+                let e = m.error(x, y);
+                if x % 4 == 3 && y % 4 == 3 {
+                    assert_eq!(e, -2, "3*3=7 under-counts by 2 at weight 1");
+                } else {
+                    assert_eq!(e, 0, "x={x} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_never_positive_sampled() {
+        let m = Kulkarni::new(12, 14);
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..20_000 {
+            let x = rng.operand_unsigned(12) as i64;
+            let y = rng.operand_unsigned(12) as i64;
+            assert!(m.error(x, y) <= 0);
+        }
+    }
+
+    #[test]
+    fn approx_block_count_monotone_in_k() {
+        let mut prev = 0;
+        for k in 0..=18 {
+            let n = Kulkarni::new(8, k).approx_blocks();
+            assert!(n >= prev, "k={k}");
+            prev = n;
+        }
+        assert_eq!(Kulkarni::new(8, 18).approx_blocks(), 16);
+    }
+}

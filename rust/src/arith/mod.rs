@@ -1,0 +1,176 @@
+//! Bit-accurate arithmetic models of every multiplier in the paper.
+//!
+//! These are the *oracles* of the whole reproduction: the gate-level
+//! netlists (`crate::gate`), the Pallas kernels (`python/compile/kernels`)
+//! and the PJRT artifacts are all cross-validated against the functions in
+//! this module, and the exhaustive error sweeps (Table I, Fig 2, Fig 5/6)
+//! evaluate them directly.
+//!
+//! Conventions:
+//! * `WL` — operand word length in bits (the paper uses 4..16, even).
+//! * Signed multipliers (modified Booth and the Broken-Booth Type0/Type1)
+//!   take two's-complement operands in `[-2^(WL-1), 2^(WL-1))`.
+//! * Unsigned multipliers (BAM, Kulkarni, ETM) take operands in
+//!   `[0, 2^WL)`.
+//! * Every product is an exact integer in an `i64`, so all error
+//!   arithmetic is exact.
+
+pub mod adders;
+pub mod bam;
+pub mod bbm;
+pub mod booth;
+pub mod etm;
+pub mod kulkarni;
+
+pub use adders::{adder_mse, Adder, EtaI, ExactAdder, ImpactAdder, ImpactVariant, Loa};
+pub use bam::Bam;
+pub use bbm::{BrokenBooth, BbmType};
+pub use booth::{booth_digits, exact_booth, ExactBooth};
+pub use etm::Etm;
+pub use kulkarni::Kulkarni;
+
+/// A WL-bit combinational multiplier model.
+///
+/// `multiply` must be a pure function of its operands. Operands and
+/// results use `i64` carriers; for unsigned multipliers the operands are
+/// the unsigned values (non-negative) and the product is non-negative.
+pub trait Multiplier: Send + Sync {
+    /// Operand word length in bits.
+    fn wl(&self) -> u32;
+
+    /// `true` if operands are two's-complement signed.
+    fn signed(&self) -> bool;
+
+    /// Compute the (possibly approximate) product.
+    fn multiply(&self, x: i64, y: i64) -> i64;
+
+    /// Human-readable identifier, e.g. `bbm-type0(wl=12,vbl=7)`.
+    fn name(&self) -> String;
+
+    /// The exact product for the same operand interpretation, used as the
+    /// error reference.
+    fn exact(&self, x: i64, y: i64) -> i64 {
+        x * y
+    }
+
+    /// Error per the paper's Eq. (1): approximate − accurate.
+    fn error(&self, x: i64, y: i64) -> i64 {
+        self.multiply(x, y) - self.exact(x, y)
+    }
+
+    /// Inclusive operand range for exhaustive sweeps.
+    fn operand_range(&self) -> (i64, i64) {
+        if self.signed() {
+            (-(1i64 << (self.wl() - 1)), (1i64 << (self.wl() - 1)) - 1)
+        } else {
+            (0, (1i64 << self.wl()) - 1)
+        }
+    }
+}
+
+/// Enumeration of every multiplier family in the study, used by CLI
+/// drivers and the design-space explorer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MultKind {
+    /// Exact modified-Booth (equals BBM with VBL = 0).
+    ExactBooth,
+    /// Broken-Booth Type0 (two's complement folded before breaking).
+    BbmType0,
+    /// Broken-Booth Type1 (the `+1` correction dot is breakable).
+    BbmType1,
+    /// Broken-Array Multiplier, Mahdiani et al. [1] (HBL fixed to 0).
+    Bam,
+    /// Kulkarni 2×2-block multiplier [3] with the paper's added K knob.
+    Kulkarni,
+    /// Error-Tolerant Multiplier [5] (survey extension).
+    Etm,
+}
+
+impl MultKind {
+    /// All kinds in presentation order.
+    pub const ALL: [MultKind; 6] = [
+        MultKind::ExactBooth,
+        MultKind::BbmType0,
+        MultKind::BbmType1,
+        MultKind::Bam,
+        MultKind::Kulkarni,
+        MultKind::Etm,
+    ];
+
+    /// Instantiate a model with word length `wl` and breaking/precision
+    /// parameter `level` (VBL for Booth/BAM, K for Kulkarni, split for
+    /// ETM; ignored for the exact multiplier).
+    pub fn build(self, wl: u32, level: u32) -> Box<dyn Multiplier> {
+        match self {
+            MultKind::ExactBooth => Box::new(ExactBooth::new(wl)),
+            MultKind::BbmType0 => Box::new(BrokenBooth::new(wl, level, BbmType::Type0)),
+            MultKind::BbmType1 => Box::new(BrokenBooth::new(wl, level, BbmType::Type1)),
+            MultKind::Bam => Box::new(Bam::new(wl, level, 0)),
+            MultKind::Kulkarni => Box::new(Kulkarni::new(wl, level)),
+            MultKind::Etm => Box::new(Etm::new(wl, level)),
+        }
+    }
+
+    /// Parse from the CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "exact" | "booth" => MultKind::ExactBooth,
+            "type0" | "bbm0" => MultKind::BbmType0,
+            "type1" | "bbm1" => MultKind::BbmType1,
+            "bam" => MultKind::Bam,
+            "kulkarni" | "k2x2" => MultKind::Kulkarni,
+            "etm" => MultKind::Etm,
+            other => anyhow::bail!("unknown multiplier kind: {other}"),
+        })
+    }
+}
+
+impl std::fmt::Display for MultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            MultKind::ExactBooth => "exact",
+            MultKind::BbmType0 => "type0",
+            MultKind::BbmType1 => "type1",
+            MultKind::Bam => "bam",
+            MultKind::Kulkarni => "kulkarni",
+            MultKind::Etm => "etm",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in MultKind::ALL {
+            assert_eq!(MultKind::parse(&k.to_string()).unwrap(), k);
+        }
+        assert!(MultKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_produces_expected_ranges() {
+        let m = MultKind::BbmType0.build(8, 0);
+        assert_eq!(m.operand_range(), (-128, 127));
+        let m = MultKind::Bam.build(8, 0);
+        assert_eq!(m.operand_range(), (0, 255));
+    }
+
+    #[test]
+    fn error_is_approx_minus_exact() {
+        let m = MultKind::BbmType0.build(8, 5);
+        let (lo, hi) = m.operand_range();
+        let mut any_nonzero = false;
+        for x in [lo, -3, 0, 7, hi] {
+            for y in [lo, -1, 0, 5, hi] {
+                let e = m.error(x, y);
+                assert_eq!(e, m.multiply(x, y) - x * y);
+                any_nonzero |= e != 0;
+            }
+        }
+        assert!(any_nonzero, "vbl=5 must introduce some error");
+    }
+}

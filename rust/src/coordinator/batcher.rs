@@ -1,0 +1,202 @@
+//! Dynamic micro-batcher: packs variable-size requests into the fixed
+//! operand batches the PJRT artifacts expect (`SWEEP_BATCH` lanes),
+//! flushing on capacity or linger timeout — the vLLM-router-style
+//! batching policy scaled down to this paper's request shapes.
+
+use std::time::{Duration, Instant};
+
+/// One pending request: caller-tagged id plus its operand pairs.
+#[derive(Clone, Debug)]
+pub struct MultiplyRequest {
+    /// Caller tag for demultiplexing results.
+    pub id: u64,
+    /// Left operands.
+    pub x: Vec<i32>,
+    /// Right operands (same length).
+    pub y: Vec<i32>,
+}
+
+/// A packed batch: concatenated lanes plus per-request extents.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    /// Lane-filled operands (padded with zeros to the batch size).
+    pub x: Vec<i32>,
+    /// Right operands.
+    pub y: Vec<i32>,
+    /// `(request id, offset, len)` per packed request.
+    pub extents: Vec<(u64, usize, usize)>,
+}
+
+/// Capacity/linger batching policy.
+#[derive(Debug)]
+pub struct Batcher {
+    capacity: usize,
+    linger: Duration,
+    pending: Vec<MultiplyRequest>,
+    pending_lanes: usize,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    /// New batcher for `capacity`-lane artifacts with a linger window.
+    pub fn new(capacity: usize, linger: Duration) -> Self {
+        Batcher { capacity, linger, pending: Vec::new(), pending_lanes: 0, oldest: None }
+    }
+
+    /// Lanes currently waiting.
+    pub fn pending_lanes(&self) -> usize {
+        self.pending_lanes
+    }
+
+    /// Offer a request. Returns every batch the addition completes —
+    /// up to two: the previous batch flushed on overflow, plus the new
+    /// one if the request exactly fills it. Requests larger than the
+    /// capacity are rejected.
+    pub fn offer(&mut self, req: MultiplyRequest) -> anyhow::Result<Vec<PackedBatch>> {
+        anyhow::ensure!(req.x.len() == req.y.len(), "operand length mismatch");
+        anyhow::ensure!(req.x.len() <= self.capacity, "request exceeds batch capacity");
+        let mut out = Vec::new();
+        if self.pending_lanes + req.x.len() > self.capacity {
+            out.push(self.flush().expect("pending non-empty"));
+        }
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending_lanes += req.x.len();
+        self.pending.push(req);
+        // Exactly full: emit immediately (no point lingering).
+        if self.pending_lanes == self.capacity {
+            out.push(self.flush().expect("pending non-empty"));
+        }
+        Ok(out)
+    }
+
+    /// Flush if the linger window expired.
+    pub fn poll(&mut self) -> Option<PackedBatch> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.linger && !self.pending.is_empty() => self.flush(),
+            _ => None,
+        }
+    }
+
+    /// Force-flush whatever is pending.
+    pub fn flush(&mut self) -> Option<PackedBatch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let mut x = Vec::with_capacity(self.capacity);
+        let mut y = Vec::with_capacity(self.capacity);
+        let mut extents = Vec::with_capacity(self.pending.len());
+        for req in self.pending.drain(..) {
+            extents.push((req.id, x.len(), req.x.len()));
+            x.extend_from_slice(&req.x);
+            y.extend_from_slice(&req.y);
+        }
+        x.resize(self.capacity, 0);
+        y.resize(self.capacity, 0);
+        self.pending_lanes = 0;
+        self.oldest = None;
+        Some(PackedBatch { x, y, extents })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, IntRange, VecGen};
+
+    fn req(id: u64, n: usize) -> MultiplyRequest {
+        MultiplyRequest { id, x: vec![id as i32; n], y: vec![-(id as i32); n] }
+    }
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        assert!(b.offer(req(1, 3)).unwrap().is_empty());
+        assert!(b.offer(req(2, 3)).unwrap().is_empty());
+        let batches = b.offer(req(3, 2)).unwrap();
+        assert_eq!(batches.len(), 1, "exactly full");
+        assert_eq!(batches[0].extents, vec![(1, 0, 3), (2, 3, 3), (3, 6, 2)]);
+        assert_eq!(batches[0].x.len(), 8);
+        assert_eq!(b.pending_lanes(), 0);
+    }
+
+    #[test]
+    fn overflow_emits_previous_batch() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        assert!(b.offer(req(1, 6)).unwrap().is_empty());
+        let batches = b.offer(req(2, 4)).unwrap();
+        assert_eq!(batches.len(), 1, "flush on overflow");
+        assert_eq!(batches[0].extents, vec![(1, 0, 6)]);
+        assert_eq!(b.pending_lanes(), 4);
+        let rest = b.flush().unwrap();
+        assert_eq!(rest.extents, vec![(2, 0, 4)]);
+    }
+
+    #[test]
+    fn overflow_plus_exact_fill_emits_two_batches() {
+        // Regression: found by the packing property — an offer that both
+        // overflows the pending batch and exactly fills a fresh one must
+        // emit BOTH batches, not drop the first.
+        let mut b = Batcher::new(64, Duration::from_secs(60));
+        assert!(b.offer(req(1, 45)).unwrap().is_empty());
+        let batches = b.offer(req(2, 64)).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].extents, vec![(1, 0, 45)]);
+        assert_eq!(batches[1].extents, vec![(2, 0, 64)]);
+        assert_eq!(b.pending_lanes(), 0);
+    }
+
+    #[test]
+    fn oversize_request_rejected() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        assert!(b.offer(req(1, 9)).is_err());
+    }
+
+    #[test]
+    fn linger_flushes_via_poll() {
+        let mut b = Batcher::new(1024, Duration::from_millis(1));
+        b.offer(req(7, 10)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let batch = b.poll().expect("linger expired");
+        assert_eq!(batch.extents.len(), 1);
+        assert!(b.poll().is_none());
+    }
+
+    #[test]
+    fn property_packing_preserves_lanes() {
+        // For any sequence of request sizes, every request's data appears
+        // exactly once at its recorded extent across the emitted batches.
+        let gen = VecGen { elem: IntRange { lo: 1, hi: 64 }, max_len: 40 };
+        check("batcher-extents", &gen, 200, 17, |sizes| {
+            let mut b = Batcher::new(64, Duration::from_secs(60));
+            let mut batches = Vec::new();
+            for (i, &s) in sizes.iter().enumerate() {
+                match b.offer(req(i as u64, s as usize)) {
+                    Ok(done) => batches.extend(done),
+                    Err(_) => return false,
+                }
+                if b.pending_lanes() > 64 {
+                    return false;
+                }
+            }
+            if let Some(rest) = b.flush() {
+                batches.push(rest);
+            }
+            let mut seen = vec![false; sizes.len()];
+            for batch in &batches {
+                for &(id, off, len) in &batch.extents {
+                    let idx = id as usize;
+                    if seen[idx] || len != sizes[idx] as usize {
+                        return false;
+                    }
+                    seen[idx] = true;
+                    if batch.x[off..off + len].iter().any(|&v| v != id as i32) {
+                        return false;
+                    }
+                }
+            }
+            seen.into_iter().all(|s| s)
+        });
+    }
+}

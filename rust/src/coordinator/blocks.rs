@@ -1,0 +1,128 @@
+//! Overlap-save block planning for the streaming FIR pipeline: split a
+//! long signal into fixed-size output blocks whose inputs carry
+//! `taps − 1` history samples, so PJRT-executed blocks compose exactly.
+
+/// One planned block: indices into the padded input signal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPlan {
+    /// Sequence number (reassembly order).
+    pub seq: usize,
+    /// Start of the history-prefixed input window in the padded signal.
+    pub in_start: usize,
+    /// Start of the produced output samples in the output signal.
+    pub out_start: usize,
+    /// Valid output samples in this block (≤ block length; the final
+    /// block may be partial).
+    pub out_len: usize,
+}
+
+/// Plan the blocks for a signal of `n` samples with `block` outputs per
+/// step and `taps`-tap history. The input signal must be left-padded
+/// with `taps − 1` zeros (the planner's `in_start` indexes that padded
+/// array); every block's input window is `block + taps − 1` long, the
+/// last block zero-padded on the right by the caller.
+pub fn plan_blocks(n: usize, block: usize, taps: usize) -> Vec<BlockPlan> {
+    assert!(block >= 1 && taps >= 1);
+    let mut plans = Vec::new();
+    let mut out = 0usize;
+    let mut seq = 0usize;
+    while out < n {
+        let len = block.min(n - out);
+        plans.push(BlockPlan { seq, in_start: out, out_start: out, out_len: len });
+        out += len;
+        seq += 1;
+    }
+    plans
+}
+
+/// Build the padded input for one block: `block + taps − 1` samples
+/// starting at `plan.in_start` of the zero-prefixed signal, right-padded
+/// with zeros past the end.
+pub fn block_input(x_padded: &[i32], plan: &BlockPlan, block: usize, taps: usize) -> Vec<i32> {
+    let want = block + taps - 1;
+    let mut out = Vec::with_capacity(want);
+    for i in 0..want {
+        out.push(x_padded.get(plan.in_start + i).copied().unwrap_or(0));
+    }
+    out
+}
+
+/// Zero-prefix a quantized signal with `taps − 1` history samples.
+pub fn pad_signal(x: &[i32], taps: usize) -> Vec<i32> {
+    let mut padded = vec![0i32; taps - 1];
+    padded.extend_from_slice(x);
+    padded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, IntRange, PairGen};
+
+    #[test]
+    fn plans_cover_signal_exactly() {
+        let plans = plan_blocks(10_000, 4096, 30);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].out_len, 4096);
+        assert_eq!(plans[2].out_len, 10_000 - 2 * 4096);
+        let total: usize = plans.iter().map(|p| p.out_len).sum();
+        assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn property_plans_partition_output() {
+        let gen = PairGen(IntRange { lo: 1, hi: 50_000 }, IntRange { lo: 1, hi: 5000 });
+        check("plan-partitions", &gen, 300, 11, |&(n, block)| {
+            let plans = plan_blocks(n as usize, block as usize, 30);
+            let mut expect = 0usize;
+            for (i, p) in plans.iter().enumerate() {
+                if p.seq != i || p.out_start != expect {
+                    return false;
+                }
+                expect += p.out_len;
+            }
+            expect == n as usize
+        });
+    }
+
+    #[test]
+    fn block_input_windows_are_consistent() {
+        let taps = 4;
+        let block = 8;
+        let x: Vec<i32> = (1..=20).collect();
+        let padded = pad_signal(&x, taps);
+        let plans = plan_blocks(x.len(), block, taps);
+        // First window starts with the zero history.
+        let w0 = block_input(&padded, &plans[0], block, taps);
+        assert_eq!(&w0[..3], &[0, 0, 0]);
+        assert_eq!(w0[3], 1);
+        // Consecutive windows overlap by taps-1 samples.
+        let w1 = block_input(&padded, &plans[1], block, taps);
+        assert_eq!(&w0[block..], &w1[..taps - 1]);
+        // Final block right-padded with zeros.
+        let last = plans.last().unwrap();
+        let wl = block_input(&padded, last, block, taps);
+        assert_eq!(wl.len(), block + taps - 1);
+        assert_eq!(*wl.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn property_windows_overlap_by_history() {
+        let gen = IntRange { lo: 2, hi: 400 };
+        check("window-overlap", &gen, 200, 13, |&n| {
+            let taps = 7usize;
+            let block = 32usize;
+            let x: Vec<i32> = (0..n as i32).collect();
+            let padded = pad_signal(&x, taps);
+            let plans = plan_blocks(x.len(), block, taps);
+            for w in plans.windows(2) {
+                let a = block_input(&padded, &w[0], block, taps);
+                let b = block_input(&padded, &w[1], block, taps);
+                if a[block..] != b[..taps - 1] {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

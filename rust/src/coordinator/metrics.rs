@@ -1,0 +1,137 @@
+//! Lightweight coordinator metrics: atomic counters plus a latency
+//! accumulator, snapshotted into reports by the server and examples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared metrics hub (cheap to clone via `Arc`).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Jobs completed by the executor.
+    pub completed: AtomicU64,
+    /// PJRT executions issued.
+    pub executions: AtomicU64,
+    /// Input samples / operand pairs processed.
+    pub items: AtomicU64,
+    /// Total executor busy time, nanoseconds.
+    pub busy_ns: AtomicU64,
+    /// Maximum single-job latency, nanoseconds.
+    pub max_latency_ns: AtomicU64,
+    /// Times a producer blocked on the bounded queue (backpressure).
+    pub backpressure_events: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh metrics hub.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed job.
+    pub fn record_job(&self, latency: Duration, items: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.items.fetch_add(items, Ordering::Relaxed);
+        let ns = latency.as_nanos() as u64;
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_latency_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            executions: self.executions.load(Ordering::Relaxed),
+            items: self.items.load(Ordering::Relaxed),
+            busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
+            max_latency: Duration::from_nanos(self.max_latency_ns.load(Ordering::Relaxed)),
+            backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    /// Jobs accepted.
+    pub submitted: u64,
+    /// Jobs completed.
+    pub completed: u64,
+    /// PJRT executions issued.
+    pub executions: u64,
+    /// Items processed.
+    pub items: u64,
+    /// Total executor busy time.
+    pub busy: Duration,
+    /// Worst single-job latency.
+    pub max_latency: Duration,
+    /// Producer stalls on the bounded queue.
+    pub backpressure_events: u64,
+}
+
+impl MetricsSnapshot {
+    /// Items per second of executor busy time.
+    pub fn throughput(&self) -> f64 {
+        let s = self.busy.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / s
+        }
+    }
+
+    /// Mean job latency.
+    pub fn mean_latency(&self) -> Duration {
+        if self.completed == 0 {
+            Duration::ZERO
+        } else {
+            self.busy / self.completed as u32
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "jobs {}/{} | execs {} | items {} | {:.1} items/s | mean {:?} max {:?} | stalls {}",
+            self.completed,
+            self.submitted,
+            self.executions,
+            self.items,
+            self.throughput(),
+            self.mean_latency(),
+            self.max_latency,
+            self.backpressure_events,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_job(Duration::from_millis(4), 100);
+        m.record_job(Duration::from_millis(2), 50);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.items, 150);
+        assert_eq!(s.max_latency, Duration::from_millis(4));
+        assert_eq!(s.mean_latency(), Duration::from_millis(3));
+        assert!(s.throughput() > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_latency(), Duration::ZERO);
+        assert_eq!(s.throughput(), 0.0);
+    }
+}

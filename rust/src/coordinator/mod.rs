@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: the streaming DSP pipeline server.
+//!
+//! The paper's contribution is an arithmetic unit, so (per the
+//! architecture rules) L3 is a lean but real serving layer: a bounded
+//! job queue in front of a dedicated PJRT executor thread, an
+//! overlap-save block planner for streaming FIR requests, a dynamic
+//! micro-batcher for multiply traffic, and metrics. See
+//! [`server::DspServer`] for the public API; `examples/serve_pipeline.rs`
+//! drives the full loop.
+
+pub mod batcher;
+pub mod blocks;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, MultiplyRequest, PackedBatch};
+pub use blocks::{block_input, pad_signal, plan_blocks, BlockPlan};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{DspServer, Job};

@@ -1,0 +1,296 @@
+//! The L3 coordinator server: a dedicated PJRT executor thread behind a
+//! bounded job queue, with streaming FIR filtering, exhaustive error
+//! sweeps and SNR accumulation as the request types.
+//!
+//! Topology (one box = one thread):
+//!
+//! ```text
+//!  callers ──▶ [bounded sync_channel]  ──▶ executor (owns Runtime)
+//!     ▲            backpressure               │ PJRT execute
+//!     └──────────── per-job reply channels ◀──┘
+//! ```
+//!
+//! The PJRT CPU client parallelizes inside an execution, so a single
+//! executor thread keeps the device saturated while the bounded queue
+//! provides backpressure to producers — the same shape a vLLM-style
+//! router uses with one engine per device.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::dsp::fixed;
+use crate::runtime::{Runtime, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH};
+use crate::util::stats::ErrorStats;
+
+use super::blocks::{block_input, pad_signal, plan_blocks};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// One queued job for the executor.
+pub enum Job {
+    /// Error-moment reduction over one operand chunk.
+    Moments {
+        /// Word length (selects the artifact).
+        wl: u32,
+        /// Breaking discipline (0/1).
+        ty: u32,
+        /// Left operands (SWEEP_BATCH).
+        x: Vec<i32>,
+        /// Right operands.
+        y: Vec<i32>,
+        /// Breaking level.
+        vbl: i32,
+        /// Reply channel.
+        reply: Sender<Result<(i64, f64, i64, i64)>>,
+    },
+    /// One FIR block.
+    Fir {
+        /// Word length (16 or 14).
+        wl: u32,
+        /// History-prefixed input block.
+        x: Vec<i32>,
+        /// Quantized taps.
+        h: Vec<i32>,
+        /// Breaking level (0 = accurate).
+        vbl: i32,
+        /// Reply channel.
+        reply: Sender<Result<Vec<i64>>>,
+    },
+    /// Batched multiply.
+    Multiply {
+        /// Word length.
+        wl: u32,
+        /// Type.
+        ty: u32,
+        /// Left operands (SWEEP_BATCH).
+        x: Vec<i32>,
+        /// Right operands.
+        y: Vec<i32>,
+        /// Breaking level.
+        vbl: i32,
+        /// Reply channel.
+        reply: Sender<Result<Vec<i32>>>,
+    },
+    /// SNR power accumulation over one block pair.
+    Snr {
+        /// Reference block (FIR_BLOCK).
+        reference: Vec<f64>,
+        /// Signal block.
+        signal: Vec<f64>,
+        /// Reply channel.
+        reply: Sender<Result<(f64, f64)>>,
+    },
+    /// Stop the executor.
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct DspServer {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DspServer {
+    /// Start the executor over the artifact directory with a bounded
+    /// queue of `depth` jobs (the backpressure window).
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>, depth: usize) -> Result<DspServer> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = sync_channel::<Job>(depth.max(1));
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let (init_tx, init_rx) = sync_channel::<Result<()>>(1);
+        // The PJRT client is constructed *inside* the executor thread
+        // (its handles are not Send); jobs and replies are plain data.
+        let join = std::thread::Builder::new()
+            .name("bbm-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(rt, rx, m2);
+            })
+            .expect("spawn executor");
+        init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
+        Ok(DspServer { tx, metrics, join: Some(join) })
+    }
+
+    /// Start against the repository's default artifact directory.
+    pub fn start_default(depth: usize) -> Result<DspServer> {
+        let dir = crate::runtime::default_artifact_dir()
+            .ok_or_else(|| anyhow!("artifacts/manifest.txt not found; run `make artifacts`"))?;
+        Self::start(dir, depth)
+    }
+
+    /// Submit a job (blocks when the queue is full — backpressure).
+    pub fn submit(&self, job: Job) {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => {
+                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                let _ = self.tx.send(job);
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("executor gone"),
+        }
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    // -- high-level request APIs -----------------------------------------
+
+    /// Stream a real-valued signal through the AOT FIR datapath:
+    /// quantize (Q1.WL−1), overlap-save blocks through PJRT, dequantize.
+    /// `vbl = 0` is the accurate filter.
+    pub fn filter_signal(&self, x: &[f64], taps: &[f64], wl: u32, vbl: u32) -> Result<Vec<f64>> {
+        anyhow::ensure!(taps.len() == FIR_TAPS, "expected {FIR_TAPS} taps");
+        let taps_q = fixed::quantize_taps(taps, wl);
+        let h: Vec<i32> = taps_q.iter().map(|&t| t as i32).collect();
+        let x_scale = fixed::pick_scale(x, 0.5);
+        let xq: Vec<i32> =
+            fixed::quantize_signal(x, wl, x_scale).iter().map(|&v| v as i32).collect();
+        let padded = pad_signal(&xq, FIR_TAPS);
+        let plans = plan_blocks(xq.len(), FIR_BLOCK, FIR_TAPS);
+        // Pipeline: submit every block, then collect in order.
+        let mut replies = Vec::with_capacity(plans.len());
+        for plan in &plans {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            let xin = block_input(&padded, plan, FIR_BLOCK, FIR_TAPS);
+            self.submit(Job::Fir { wl, x: xin, h: h.clone(), vbl: vbl as i32, reply: rtx });
+            replies.push((plan.out_len, rrx));
+        }
+        let frac = wl - 1;
+        let denom = (1i64 << frac) as f64 * (1i64 << frac) as f64 * x_scale;
+        let mut y = Vec::with_capacity(x.len());
+        for (out_len, rrx) in replies {
+            let block = rrx.recv().map_err(|_| anyhow!("executor dropped reply"))??;
+            for &acc in block.iter().take(out_len) {
+                y.push(acc as f64 / denom);
+            }
+        }
+        Ok(y)
+    }
+
+    /// Exhaustive error sweep over all `2^(2wl)` operand pairs through
+    /// the PJRT moments artifact (chunked at SWEEP_BATCH).
+    pub fn exhaustive_sweep(&self, wl: u32, ty: u32, vbl: u32) -> Result<ErrorStats> {
+        anyhow::ensure!(2 * wl <= 32 && (1usize << (2 * wl)) % SWEEP_BATCH == 0);
+        let total: u64 = 1u64 << (2 * wl);
+        let chunks = total / SWEEP_BATCH as u64;
+        let half = 1i64 << (wl - 1);
+        let mut replies = Vec::with_capacity(chunks as usize);
+        for c in 0..chunks {
+            let mut x = Vec::with_capacity(SWEEP_BATCH);
+            let mut y = Vec::with_capacity(SWEEP_BATCH);
+            let base = c * SWEEP_BATCH as u64;
+            for k in 0..SWEEP_BATCH as u64 {
+                let g = base + k;
+                x.push(((g >> wl) as i64 - half) as i32);
+                y.push(((g & ((1 << wl) - 1)) as i64 - half) as i32);
+            }
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            self.submit(Job::Moments { wl, ty, x, y, vbl: vbl as i32, reply: rtx });
+            replies.push(rrx);
+        }
+        let mut stats = ErrorStats::new();
+        for rrx in replies {
+            let (sum, sq, mn, cnt) = rrx.recv().map_err(|_| anyhow!("reply lost"))??;
+            stats.n += SWEEP_BATCH as u64;
+            stats.sum += sum as i128;
+            stats.sum_sq += sq as u128; // exact: err² sums are < 2^53 per chunk
+            stats.nonzero += cnt as u64;
+            stats.min = stats.min.min(mn);
+            stats.max = stats.max.max(0); // moments kernel does not track max
+        }
+        Ok(stats)
+    }
+
+    /// SNR between two real signals via blocked PJRT accumulation.
+    pub fn snr_db(&self, reference: &[f64], signal: &[f64]) -> Result<f64> {
+        let n = reference.len().min(signal.len());
+        let mut pr = 0.0f64;
+        let mut pe = 0.0f64;
+        let mut idx = 0;
+        while idx < n {
+            let len = FIR_BLOCK.min(n - idx);
+            let mut rblk = reference[idx..idx + len].to_vec();
+            let mut sblk = signal[idx..idx + len].to_vec();
+            rblk.resize(FIR_BLOCK, 0.0);
+            sblk.resize(FIR_BLOCK, 0.0);
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            self.submit(Job::Snr { reference: rblk, signal: sblk, reply: rtx });
+            let (a, b) = rrx.recv().map_err(|_| anyhow!("reply lost"))??;
+            pr += a;
+            pe += b;
+            idx += len;
+        }
+        Ok(crate::util::stats::db(pr / pe.max(1e-300)))
+    }
+
+    /// Graceful shutdown (drains outstanding jobs first).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for DspServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor_loop(rt: Runtime, rx: Receiver<Job>, metrics: Arc<Metrics>) {
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        match job {
+            Job::Shutdown => break,
+            Job::Moments { wl, ty, x, y, vbl, reply } => {
+                let n = x.len() as u64;
+                let res = rt.error_moments(wl, ty, &x, &y, vbl);
+                metrics.executions.fetch_add(1, Ordering::Relaxed);
+                metrics.record_job(t0.elapsed(), n);
+                let _ = reply.send(res);
+            }
+            Job::Fir { wl, x, h, vbl, reply } => {
+                let n = x.len() as u64;
+                let res = rt.fir_block(wl, &x, &h, vbl);
+                metrics.executions.fetch_add(1, Ordering::Relaxed);
+                metrics.record_job(t0.elapsed(), n);
+                let _ = reply.send(res);
+            }
+            Job::Multiply { wl, ty, x, y, vbl, reply } => {
+                let n = x.len() as u64;
+                let res = rt.bbm_multiply(wl, ty, &x, &y, vbl);
+                metrics.executions.fetch_add(1, Ordering::Relaxed);
+                metrics.record_job(t0.elapsed(), n);
+                let _ = reply.send(res);
+            }
+            Job::Snr { reference, signal, reply } => {
+                let n = reference.len() as u64;
+                let res = rt.snr_acc(&reference, &signal);
+                metrics.executions.fetch_add(1, Ordering::Relaxed);
+                metrics.record_job(t0.elapsed(), n);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}

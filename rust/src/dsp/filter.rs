@@ -1,0 +1,225 @@
+//! FIR evaluation: double-precision reference, fixed-point datapath with
+//! a pluggable (approximate) multiplier, fractional-delay alignment, and
+//! the SNR_out measurement of the paper's testbed.
+
+use crate::arith::Multiplier;
+use crate::util::stats::Moments;
+
+use super::signal::Testbed;
+
+/// Causal FIR with zero initial history; output length = input length.
+pub fn fir_f64(x: &[f64], h: &[f64]) -> Vec<f64> {
+    let mut y = Vec::with_capacity(x.len());
+    for n in 0..x.len() {
+        let mut acc = 0.0;
+        for (k, &hk) in h.iter().enumerate() {
+            if n >= k {
+                acc += hk * x[n - k];
+            }
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// Delay `x` by a possibly fractional number of samples using a
+/// windowed-sinc interpolator (used to align the half-sample group delay
+/// of even-length filters when computing `σ²_{d1 − y}`).
+pub fn fractional_delay(x: &[f64], delay: f64) -> Vec<f64> {
+    let int_part = delay.floor() as usize;
+    let frac = delay - delay.floor();
+    if frac.abs() < 1e-12 {
+        // Pure integer delay.
+        let mut y = vec![0.0; x.len()];
+        for n in int_part..x.len() {
+            y[n] = x[n - int_part];
+        }
+        return y;
+    }
+    // 65-tap Blackman-windowed fractional-delay sinc centred at 32+frac.
+    const HALF: i64 = 32;
+    let len = (2 * HALF + 1) as usize;
+    let mut h = Vec::with_capacity(len);
+    for i in 0..len {
+        let t = i as i64 - HALF;
+        let arg = t as f64 - frac;
+        let sinc = if arg.abs() < 1e-12 {
+            1.0
+        } else {
+            (std::f64::consts::PI * arg).sin() / (std::f64::consts::PI * arg)
+        };
+        let xw = i as f64 / (len - 1) as f64;
+        let w = 0.42 - 0.5 * (2.0 * std::f64::consts::PI * xw).cos()
+            + 0.08 * (4.0 * std::f64::consts::PI * xw).cos();
+        h.push(sinc * w);
+    }
+    // Total delay = int_part + HALF + frac; compensate the HALF later.
+    let mut y = vec![0.0; x.len()];
+    for n in 0..x.len() {
+        let mut acc = 0.0;
+        for (i, &hi) in h.iter().enumerate() {
+            let idx = n as i64 - i as i64 + HALF - int_part as i64;
+            if idx >= 0 && (idx as usize) < x.len() {
+                acc += hi * x[idx as usize];
+            }
+        }
+        y[n] = acc;
+    }
+    y
+}
+
+/// Fixed-point FIR datapath: Q1.(WL−1) samples and taps, exact
+/// accumulation, tap products through a caller-supplied multiplier model.
+#[derive(Clone, Debug)]
+pub struct FixedFilter {
+    /// Word length.
+    pub wl: u32,
+    /// Quantized taps.
+    pub taps_q: Vec<i64>,
+    /// Input scaling applied before quantization.
+    pub x_scale: f64,
+}
+
+impl FixedFilter {
+    /// Quantize `taps` at WL bits and pick an input scale with 0.5×
+    /// headroom against `x`'s peak (the sum of three unit-ish signals
+    /// needs margin; saturation would corrupt the SNR comparison).
+    pub fn new(taps: &[f64], wl: u32, x: &[f64]) -> FixedFilter {
+        let taps_q = super::fixed::quantize_taps(taps, wl);
+        let x_scale = super::fixed::pick_scale(x, 0.5);
+        FixedFilter { wl, taps_q, x_scale }
+    }
+
+    /// Run the datapath over `x` (real-valued input; quantization happens
+    /// inside) with tap products computed by `mult`. Returns the
+    /// dequantized, rescaled output.
+    pub fn run(&self, x: &[f64], mult: &dyn Multiplier) -> Vec<f64> {
+        assert_eq!(mult.wl(), self.wl, "multiplier width must match datapath");
+        let frac = self.wl - 1;
+        let xq = super::fixed::quantize_signal(x, self.wl, self.x_scale);
+        let denom = (1i64 << frac) as f64 * (1i64 << frac) as f64 * self.x_scale;
+        let mut y = Vec::with_capacity(x.len());
+        for n in 0..xq.len() {
+            let mut acc: i64 = 0;
+            for (k, &hk) in self.taps_q.iter().enumerate() {
+                if n >= k {
+                    acc += mult.multiply(xq[n - k], hk);
+                }
+            }
+            y.push(acc as f64 / denom);
+        }
+        y
+    }
+}
+
+/// SNR_out of a filter output against the delayed desired signal,
+/// skipping the initial transient.
+pub fn snr_out_db(tb: &Testbed, y: &[f64], group_delay: f64) -> f64 {
+    let d1d = fractional_delay(&tb.d1, group_delay);
+    let skip = 256.max(2 * group_delay.ceil() as usize);
+    let n = y.len().min(d1d.len());
+    let mut pr = Moments::new();
+    let mut pe = Moments::new();
+    for i in skip..n {
+        pr.push(d1d[i]);
+        pe.push(d1d[i] - y[i]);
+    }
+    crate::util::stats::db(pr.power() / pe.power().max(1e-300))
+}
+
+/// End-to-end testbed evaluation of a tap set with an optional
+/// fixed-point multiplier model (None = double-precision filter).
+pub fn evaluate(tb: &Testbed, taps: &[f64], datapath: Option<(&dyn Multiplier, u32)>) -> f64 {
+    let gd = (taps.len() as f64 - 1.0) / 2.0;
+    let y = match datapath {
+        None => fir_f64(&tb.x, taps),
+        Some((mult, wl)) => FixedFilter::new(taps, wl, &tb.x).run(&tb.x, mult),
+    };
+    snr_out_db(tb, &y, gd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{BbmType, BrokenBooth, ExactBooth};
+    use crate::dsp::remez::paper_lowpass;
+    use crate::dsp::signal::Testbed;
+
+    #[test]
+    fn identity_filter_passes_signal() {
+        let x = vec![1.0, -2.0, 3.0];
+        assert_eq!(fir_f64(&x, &[1.0]), x);
+    }
+
+    #[test]
+    fn integer_fractional_delay_matches_shift() {
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let y = fractional_delay(&x, 3.0);
+        for n in 3..64 {
+            assert!((y[n] - x[n - 3]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn half_sample_delay_interpolates_sine() {
+        let w = 0.2 * std::f64::consts::PI;
+        let x: Vec<f64> = (0..512).map(|i| (w * i as f64).sin()).collect();
+        let y = fractional_delay(&x, 10.5);
+        for n in 100..400 {
+            let expect = (w * (n as f64 - 10.5)).sin();
+            assert!((y[n] - expect).abs() < 1e-3, "n={n}: {} vs {expect}", y[n]);
+        }
+    }
+
+    #[test]
+    fn double_precision_snr_matches_paper_ballpark() {
+        // Paper: SNR_out = 25.7 dB, SNR_in = −3.47 dB for the ideal
+        // double-precision 30-tap filter.
+        let tb = Testbed::generate(1 << 14, 42);
+        let d = paper_lowpass(30).unwrap();
+        let snr = evaluate(&tb, &d.taps, None);
+        assert!(snr > 20.0 && snr < 32.0, "SNR_out = {snr} dB");
+    }
+
+    #[test]
+    fn fixed_point_wl16_close_to_double() {
+        let tb = Testbed::generate(1 << 13, 42);
+        let d = paper_lowpass(30).unwrap();
+        let dbl = evaluate(&tb, &d.taps, None);
+        let m = ExactBooth::new(16);
+        let fx = evaluate(&tb, &d.taps, Some((&m, 16)));
+        assert!((dbl - fx).abs() < 1.5, "double {dbl} vs WL16 {fx}");
+    }
+
+    #[test]
+    fn lower_wl_degrades_snr() {
+        let tb = Testbed::generate(1 << 13, 42);
+        let d = paper_lowpass(30).unwrap();
+        let m6 = ExactBooth::new(6);
+        let m8 = ExactBooth::new(8);
+        let m16 = ExactBooth::new(16);
+        let s6 = evaluate(&tb, &d.taps, Some((&m6, 6)));
+        let s8 = evaluate(&tb, &d.taps, Some((&m8, 8)));
+        let s16 = evaluate(&tb, &d.taps, Some((&m16, 16)));
+        // Paper Fig. 8a: short word lengths cost significant SNR; the
+        // knee position depends on the quantization scheme, so assert
+        // monotonicity plus a hard drop at WL=6.
+        assert!(s8 <= s16 + 0.5, "WL8 {s8} vs WL16 {s16}");
+        assert!(s6 < s16 - 6.0, "WL6 {s6} vs WL16 {s16}");
+    }
+
+    #[test]
+    fn approximate_multiplier_degrades_gracefully() {
+        let tb = Testbed::generate(1 << 13, 42);
+        let d = paper_lowpass(30).unwrap();
+        let exact = ExactBooth::new(16);
+        let approx = BrokenBooth::new(16, 13, BbmType::Type0);
+        let very = BrokenBooth::new(16, 22, BbmType::Type0);
+        let s0 = evaluate(&tb, &d.taps, Some((&exact, 16)));
+        let s13 = evaluate(&tb, &d.taps, Some((&approx, 16)));
+        let s22 = evaluate(&tb, &d.taps, Some((&very, 16)));
+        assert!(s13 <= s0 + 0.1, "vbl13 {s13} vs exact {s0}");
+        assert!(s13 - s0 > -3.0, "paper: VBL=13 costs only ~0.4 dB, got {}", s13 - s0);
+        assert!(s22 < s13 - 2.0, "deep breaking must hurt: {s22} vs {s13}");
+    }
+}

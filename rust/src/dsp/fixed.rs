@@ -1,0 +1,77 @@
+//! Fixed-point quantization for the WL-sweep study (paper Fig. 8a):
+//! Q1.(WL−1) two's-complement samples and coefficients.
+
+/// Quantize a real value to a WL-bit two's-complement integer with
+/// `frac` fractional bits, saturating at the rails.
+pub fn quantize(v: f64, wl: u32, frac: u32) -> i64 {
+    let scaled = (v * (1i64 << frac) as f64).round();
+    let hi = ((1i64 << (wl - 1)) - 1) as f64;
+    let lo = -((1i64 << (wl - 1)) as f64);
+    scaled.clamp(lo, hi) as i64
+}
+
+/// Back to real.
+pub fn dequantize(q: i64, frac: u32) -> f64 {
+    q as f64 / (1i64 << frac) as f64
+}
+
+/// Quantize a whole signal at Q1.(WL−1) after scaling by `scale`
+/// (callers pick `scale` so peaks stay inside the rails).
+pub fn quantize_signal(x: &[f64], wl: u32, scale: f64) -> Vec<i64> {
+    let frac = wl - 1;
+    x.iter().map(|&v| quantize(v * scale, wl, frac)).collect()
+}
+
+/// Quantize filter taps at Q1.(WL−1).
+pub fn quantize_taps(h: &[f64], wl: u32) -> Vec<i64> {
+    let frac = wl - 1;
+    h.iter().map(|&v| quantize(v, wl, frac)).collect()
+}
+
+/// A scaling that keeps `x` within ±`headroom` of full scale.
+pub fn pick_scale(x: &[f64], headroom: f64) -> f64 {
+    let peak = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if peak == 0.0 {
+        1.0
+    } else {
+        headroom / peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_lsb() {
+        for wl in [8u32, 12, 16] {
+            let frac = wl - 1;
+            let lsb = 1.0 / (1i64 << frac) as f64;
+            for v in [-0.9, -0.123, 0.0, 0.456, 0.95] {
+                let q = quantize(v, wl, frac);
+                assert!((dequantize(q, frac) - v).abs() <= lsb / 2.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_at_rails() {
+        assert_eq!(quantize(2.0, 8, 7), 127);
+        assert_eq!(quantize(-2.0, 8, 7), -128);
+    }
+
+    #[test]
+    fn pick_scale_respects_headroom() {
+        let x = vec![0.1, -4.0, 2.0];
+        let s = pick_scale(&x, 0.9);
+        let peak = x.iter().fold(0.0f64, |m, &v| m.max((v * s).abs()));
+        assert!((peak - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_signal_matches_elementwise() {
+        let x = vec![0.5, -0.25];
+        let q = quantize_signal(&x, 8, 1.0);
+        assert_eq!(q, vec![64, -32]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny dense linear-algebra kernel: Gaussian elimination with partial
+//! pivoting, plus least-squares via normal equations. Only small systems
+//! appear in the filter designer (≤ ~40 unknowns), so simplicity and
+//! numerical hygiene beat asymptotics.
+
+/// Solve `A x = b` in place (A is row-major `n × n`). Returns `None` for
+/// (numerically) singular systems.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    for col in 0..n {
+        // Partial pivot.
+        let (piv, maxval) = (col..n)
+            .map(|r| (r, a[r][col].abs()))
+            .fold((col, 0.0f64), |acc, (r, v)| if v > acc.1 { (r, v) } else { acc });
+        if maxval < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // Eliminate below.
+        for r in (col + 1)..n {
+            let f = a[r][col] / a[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for c in (row + 1)..n {
+            s -= a[row][c] * x[c];
+        }
+        x[row] = s / a[row][row];
+    }
+    Some(x)
+}
+
+/// Least squares `min ‖M x − y‖₂` via normal equations
+/// (`MᵀM x = Mᵀy`). `m` is row-major with `rows ≥ cols`.
+pub fn lstsq(m: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let rows = m.len();
+    assert_eq!(rows, y.len());
+    let cols = m[0].len();
+    assert!(rows >= cols);
+    let mut ata = vec![vec![0.0f64; cols]; cols];
+    let mut aty = vec![0.0f64; cols];
+    for r in 0..rows {
+        for i in 0..cols {
+            aty[i] += m[r][i] * y[r];
+            for j in i..cols {
+                ata[i][j] += m[r][i] * m[r][j];
+            }
+        }
+    }
+    for i in 0..cols {
+        for j in 0..i {
+            ata[i][j] = ata[j][i];
+        }
+    }
+    solve(ata, aty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve(a, vec![3.0, -4.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solves_requiring_pivot() {
+        // First pivot is zero -> must row-swap.
+        let a = vec![vec![0.0, 1.0], vec![2.0, 1.0]];
+        let x = solve(a, vec![1.0, 4.0]).unwrap();
+        // 2x + y = 4, y = 1 -> x = 1.5
+        assert!((x[0] - 1.5).abs() < 1e-12 && (x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(a, vec![1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = crate::util::Pcg64::seeded(12);
+        for _ in 0..50 {
+            let n = 8;
+            let a: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..n).map(|_| rng.gaussian()).collect()).collect();
+            let xt: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let b: Vec<f64> =
+                (0..n).map(|r| (0..n).map(|c| a[r][c] * xt[c]).sum()).collect();
+            let x = solve(a.clone(), b).expect("well-conditioned random");
+            for i in 0..n {
+                assert!((x[i] - xt[i]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn lstsq_fits_line() {
+        // y = 2t + 1 with no noise.
+        let m: Vec<Vec<f64>> = (0..10).map(|t| vec![t as f64, 1.0]).collect();
+        let y: Vec<f64> = (0..10).map(|t| 2.0 * t as f64 + 1.0).collect();
+        let x = lstsq(&m, &y).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-10 && (x[1] - 1.0).abs() < 1e-10);
+    }
+}

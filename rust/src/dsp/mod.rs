@@ -1,0 +1,14 @@
+//! DSP substrate: everything the paper's FIR application study needs —
+//! a from-scratch Parks-McClellan designer ([`remez`]), the Fig.-7
+//! testbed signals ([`signal`]), fixed-point quantization ([`fixed`]),
+//! and filter evaluation + SNR measurement ([`filter`]).
+
+pub mod filter;
+pub mod fixed;
+pub mod linalg;
+pub mod remez;
+pub mod signal;
+
+pub use filter::{evaluate, fir_f64, fractional_delay, snr_out_db, FixedFilter};
+pub use remez::{amplitude_of, paper_lowpass, remez, Band, FirDesign};
+pub use signal::{snr_db, Testbed};

@@ -1,0 +1,349 @@
+//! Parks-McClellan equiripple FIR design (Remez exchange), built from
+//! scratch — the paper's 30-tap low-pass filter designer.
+//!
+//! Supports linear-phase Type I (odd length) and Type II (even length,
+//! the paper's 30 taps) low-pass/multiband designs. Type II uses the
+//! standard reduction `A(ω) = cos(ω/2)·B(ω)` with the desired response
+//! and weights divided/multiplied by `cos(ω/2)` on the design grid.
+//!
+//! The exchange iterates barycentric-Lagrange interpolation over `r+1`
+//! trial extrema (`r` = number of cosine basis functions), recomputing
+//! the levelled error δ and re-selecting alternating extrema of the
+//! weighted error until δ stops growing — the classic McClellan–Parks–
+//! Rabiner structure. Final taps are recovered by least-squares fit of
+//! the symmetric impulse response to the converged `A(ω)` (equivalent to
+//! the usual IDFT step, but reusing the crate's linalg kernel).
+
+use super::linalg::lstsq;
+
+/// One constant-desired band of the tolerance scheme, edges in rad/sample
+/// within `[0, π]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Band {
+    /// Lower edge ω₁.
+    pub lo: f64,
+    /// Upper edge ω₂ (> ω₁).
+    pub hi: f64,
+    /// Desired amplitude on the band (e.g. 1 pass, 0 stop).
+    pub desired: f64,
+    /// Chebyshev weight (bigger = tighter).
+    pub weight: f64,
+}
+
+/// A designed linear-phase FIR.
+#[derive(Clone, Debug)]
+pub struct FirDesign {
+    /// Impulse response, length = the requested tap count, symmetric.
+    pub taps: Vec<f64>,
+    /// Final levelled ripple δ (weighted).
+    pub delta: f64,
+    /// Exchange iterations used.
+    pub iterations: usize,
+}
+
+impl FirDesign {
+    /// Amplitude response A(ω) of the (symmetric) design.
+    pub fn amplitude(&self, w: f64) -> f64 {
+        amplitude_of(&self.taps, w)
+    }
+}
+
+/// Zero-phase amplitude of a symmetric FIR at ω.
+pub fn amplitude_of(taps: &[f64], w: f64) -> f64 {
+    let n = taps.len();
+    let center = (n as f64 - 1.0) / 2.0;
+    taps.iter()
+        .enumerate()
+        .map(|(i, &h)| h * ((i as f64 - center) * w).cos())
+        .sum()
+}
+
+/// Design an `n_taps` linear-phase FIR against the band scheme with the
+/// Remez exchange. `grid_density` ≈ grid points per basis function per
+/// band (16 is plenty).
+pub fn remez(n_taps: usize, bands: &[Band], grid_density: usize) -> anyhow::Result<FirDesign> {
+    anyhow::ensure!(n_taps >= 4, "need at least 4 taps");
+    anyhow::ensure!(!bands.is_empty(), "need at least one band");
+    for b in bands {
+        anyhow::ensure!(b.lo < b.hi && b.lo >= 0.0 && b.hi <= std::f64::consts::PI);
+        anyhow::ensure!(b.weight > 0.0);
+    }
+    let even = n_taps % 2 == 0;
+    // Number of cosine basis functions in the reduced problem.
+    let r = if even { n_taps / 2 } else { n_taps / 2 + 1 };
+
+    // --- design grid ---------------------------------------------------
+    let mut gw: Vec<f64> = Vec::new(); // grid ω
+    let mut gd: Vec<f64> = Vec::new(); // desired (reduced)
+    let mut gv: Vec<f64> = Vec::new(); // weight (reduced)
+    let per_band = (grid_density * r).max(32);
+    let eps_pi = 1e-4;
+    for b in bands {
+        let hi = if even { b.hi.min(std::f64::consts::PI - eps_pi) } else { b.hi };
+        let steps = per_band;
+        for s in 0..=steps {
+            let w = b.lo + (hi - b.lo) * s as f64 / steps as f64;
+            let (d, v) = if even {
+                let c = (w / 2.0).cos();
+                (b.desired / c, b.weight * c)
+            } else {
+                (b.desired, b.weight)
+            };
+            gw.push(w);
+            gd.push(d);
+            gv.push(v);
+        }
+    }
+    let ng = gw.len();
+    anyhow::ensure!(ng > r + 1, "grid too coarse");
+
+    // --- exchange loop --------------------------------------------------
+    // Band-edge grid indices (always candidate extrema).
+    let mut band_edges: Vec<usize> = Vec::new();
+    {
+        let mut idx = 0usize;
+        for _ in bands {
+            band_edges.push(idx);
+            idx += per_band + 1;
+            band_edges.push(idx - 1);
+        }
+    }
+    // r+1 trial extrema, initially uniform over the grid.
+    let mut ext: Vec<usize> = (0..=r).map(|i| i * (ng - 1) / r).collect();
+    let mut coeffs = vec![0.0f64; r];
+    let mut delta = 0.0f64;
+    let mut iterations = 0;
+    let mut err: Vec<f64> = vec![0.0; ng];
+    for it in 0..64 {
+        iterations = it + 1;
+        // Solve the levelled-error system at the trial extrema:
+        //   Σ_k a_k cos(k ω_i) + (−1)^i δ / W_i = D_i,  i = 0..r.
+        let mut mat: Vec<Vec<f64>> = Vec::with_capacity(r + 1);
+        let mut rhs: Vec<f64> = Vec::with_capacity(r + 1);
+        for (i, &e) in ext.iter().enumerate() {
+            let w = gw[e];
+            let mut row: Vec<f64> = (0..r).map(|k| (k as f64 * w).cos()).collect();
+            row.push(if i % 2 == 0 { 1.0 } else { -1.0 } / gv[e]);
+            mat.push(row);
+            rhs.push(gd[e]);
+        }
+        let sol = match crate::dsp::linalg::solve(mat, rhs) {
+            Some(x) => x,
+            None => break, // degenerate extremal set: keep previous state
+        };
+        delta = sol[r];
+        coeffs.copy_from_slice(&sol[..r]);
+        // Weighted error over the whole grid.
+        for g in 0..ng {
+            let w = gw[g];
+            let a: f64 = coeffs.iter().enumerate().map(|(k, &c)| c * (k as f64 * w).cos()).sum();
+            err[g] = (a - gd[g]) * gv[g];
+        }
+        // New extrema: local maxima of |err| plus the band edges, with
+        // the alternation rule enforced.
+        let cand = pick_extrema(&err, r + 1, &band_edges);
+        if cand.len() < r + 1 {
+            break; // numerically degenerate; keep previous set
+        }
+        let changed = cand != ext;
+        ext = cand;
+        let emax = ext.iter().map(|&i| err[i].abs()).fold(0.0f64, f64::max);
+        if !changed || emax <= delta.abs() * (1.0 + 1e-5) {
+            break;
+        }
+    }
+
+    // --- recover taps ---------------------------------------------------
+    // Amplitude from the converged cosine coefficients; least-squares fit
+    // of the symmetric impulse response (the usual IDFT step, expressed
+    // through the crate's linalg kernel).
+    let interp = |w: f64| -> f64 {
+        coeffs.iter().enumerate().map(|(k, &c)| c * (k as f64 * w).cos()).sum()
+    };
+    // Reduced B(ω) -> full amplitude A(ω).
+    let full_amp = |w: f64| -> f64 {
+        if even {
+            (w / 2.0).cos() * interp(w)
+        } else {
+            interp(w)
+        }
+    };
+    // Fit the n_taps/2 (or +1) free coefficients of the symmetric h.
+    let half = n_taps / 2;
+    let free = if even { half } else { half + 1 };
+    let nsamp = free * 8;
+    let wmax = std::f64::consts::PI - if even { eps_pi } else { 0.0 };
+    let mut m: Vec<Vec<f64>> = Vec::with_capacity(nsamp);
+    let mut yv: Vec<f64> = Vec::with_capacity(nsamp);
+    let center = (n_taps as f64 - 1.0) / 2.0;
+    for s in 0..nsamp {
+        let w = wmax * s as f64 / (nsamp - 1) as f64;
+        let mut row = Vec::with_capacity(free);
+        for k in 0..free {
+            // Tap pair (k, n-1-k) contributes 2 cos((center-k) ω)
+            // except the middle tap of odd filters contributes 1.
+            let coef = if !even && k == half { 1.0 } else { 2.0 };
+            row.push(coef * ((center - k as f64) * w).cos());
+        }
+        m.push(row);
+        yv.push(full_amp(w));
+    }
+    let hfree = lstsq(&m, &yv).ok_or_else(|| anyhow::anyhow!("tap fit failed"))?;
+    let mut taps = vec![0.0f64; n_taps];
+    for k in 0..free {
+        taps[k] = hfree[k];
+        taps[n_taps - 1 - k] = hfree[k];
+    }
+    Ok(FirDesign { taps, delta: delta.abs(), iterations })
+}
+
+/// Select `want` alternating-sign extremal candidates of the weighted
+/// error: all local maxima of |err| plus the band edges, same-sign runs
+/// collapsed to their largest member, then trimmed at the ends — the
+/// classic Remez exchange rule.
+fn pick_extrema(err: &[f64], want: usize, band_edges: &[usize]) -> Vec<usize> {
+    let ng = err.len();
+    let mut cand: Vec<usize> = Vec::new();
+    for i in 0..ng {
+        let a = err[i].abs();
+        let left = if i == 0 { -1.0 } else { err[i - 1].abs() };
+        let right = if i + 1 == ng { -1.0 } else { err[i + 1].abs() };
+        if (a >= left && a > right && a > 0.0) || band_edges.contains(&i) {
+            cand.push(i);
+        }
+    }
+    // Enforce alternation: collapse runs of same-sign candidates to the
+    // largest one.
+    let mut alt: Vec<usize> = Vec::new();
+    for &c in &cand {
+        match alt.last() {
+            Some(&p) if (err[p] >= 0.0) == (err[c] >= 0.0) => {
+                if err[c].abs() > err[p].abs() {
+                    *alt.last_mut().unwrap() = c;
+                }
+            }
+            _ => alt.push(c),
+        }
+    }
+    // Trim to exactly `want`, dropping the smaller of the two end
+    // extrema while too long (classic rule).
+    while alt.len() > want {
+        let (first, last) = (alt[0], *alt.last().unwrap());
+        if err[first].abs() < err[last].abs() {
+            alt.remove(0);
+        } else {
+            alt.pop();
+        }
+    }
+    alt
+}
+
+/// The paper's filter: 30-tap low-pass, passband `[0, 0.25π]`, stopband
+/// `[0.35π, π]`, equal weights.
+pub fn paper_lowpass(n_taps: usize) -> anyhow::Result<FirDesign> {
+    use std::f64::consts::PI;
+    remez(
+        n_taps,
+        &[
+            Band { lo: 0.0, hi: 0.25 * PI, desired: 1.0, weight: 1.0 },
+            Band { lo: 0.35 * PI, hi: PI, desired: 0.0, weight: 1.0 },
+        ],
+        16,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn paper_filter_meets_spec_shape() {
+        let d = paper_lowpass(30).unwrap();
+        assert_eq!(d.taps.len(), 30);
+        // Symmetry.
+        for k in 0..15 {
+            assert!((d.taps[k] - d.taps[29 - k]).abs() < 1e-9, "tap {k}");
+        }
+        // Passband ~1, stopband small.
+        for s in 0..=50 {
+            let w = 0.25 * PI * s as f64 / 50.0;
+            let a = d.amplitude(w);
+            assert!((a - 1.0).abs() < 0.12, "passband at {w}: {a}");
+        }
+        for s in 0..=50 {
+            let w = 0.35 * PI + (PI - 0.02 - 0.35 * PI) * s as f64 / 50.0;
+            let a = d.amplitude(w);
+            assert!(a.abs() < 0.12, "stopband at {w}: {a}");
+        }
+        // Equiripple delta should be well below 0.1 (~ -25 dB or better).
+        assert!(d.delta < 0.1, "delta={}", d.delta);
+    }
+
+    #[test]
+    fn odd_length_type1_designs_too() {
+        let d = remez(
+            31,
+            &[
+                Band { lo: 0.0, hi: 0.2 * PI, desired: 1.0, weight: 1.0 },
+                Band { lo: 0.3 * PI, hi: PI, desired: 0.0, weight: 1.0 },
+            ],
+            16,
+        )
+        .unwrap();
+        assert_eq!(d.taps.len(), 31);
+        assert!((d.amplitude(0.05 * PI) - 1.0).abs() < 0.05);
+        assert!(d.amplitude(0.8 * PI).abs() < 0.05);
+    }
+
+    #[test]
+    fn type2_forces_null_at_pi() {
+        let d = paper_lowpass(30).unwrap();
+        assert!(d.amplitude(PI).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighting_trades_ripple() {
+        let heavy_stop = remez(
+            24,
+            &[
+                Band { lo: 0.0, hi: 0.25 * PI, desired: 1.0, weight: 1.0 },
+                Band { lo: 0.4 * PI, hi: PI, desired: 0.0, weight: 10.0 },
+            ],
+            16,
+        )
+        .unwrap();
+        let flat = remez(
+            24,
+            &[
+                Band { lo: 0.0, hi: 0.25 * PI, desired: 1.0, weight: 1.0 },
+                Band { lo: 0.4 * PI, hi: PI, desired: 0.0, weight: 1.0 },
+            ],
+            16,
+        )
+        .unwrap();
+        // Heavier stop weight => smaller stopband ripple than flat design.
+        let stop_amp = |d: &FirDesign| {
+            (0..=40)
+                .map(|s| d.amplitude(0.4 * PI + (PI - 0.41 * PI) * s as f64 / 40.0).abs())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(stop_amp(&heavy_stop) < stop_amp(&flat));
+    }
+
+    #[test]
+    fn more_taps_less_ripple() {
+        let d20 = paper_lowpass(20).unwrap();
+        let d30 = paper_lowpass(30).unwrap();
+        let d40 = paper_lowpass(40).unwrap();
+        assert!(d30.delta < d20.delta);
+        assert!(d40.delta < d30.delta);
+    }
+
+    #[test]
+    fn dc_gain_is_one() {
+        let d = paper_lowpass(30).unwrap();
+        let sum: f64 = d.taps.iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "DC gain {sum}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Testbed signal generation (paper Fig. 7): three band-limited random
+//! signals plus white Gaussian noise.
+//!
+//! * `d1` — desired signal, passband `[0, 0.25π]`, unit power;
+//! * `d2` — interferer at the transition-band side of the stop band,
+//!   `[0.35π, 0.6π]`;
+//! * `d3` — interferer deep in the stop band, `[0.7π, 0.95π]`;
+//! * `η`  — AWGN with −30 dB power (σ² = 10⁻³).
+//!
+//! Interferer powers are set so the testbed reproduces the paper's
+//! `SNR_in = −3.47 dB`: with `σ²_{d1} = 1`,
+//! `σ²_{d2} + σ²_{d3} + σ²_η = 10^{0.347} = 2.2233` split equally between
+//! the interferers. Each dᵢ is white Gaussian noise shaped by a long
+//! windowed-sinc band-pass (81 dB-class Blackman design), then scaled to
+//! its target power.
+
+use crate::util::stats::Moments;
+use crate::util::Pcg64;
+
+/// Shaping-filter length for the band-limiters (odd).
+const SHAPER_LEN: usize = 257;
+
+/// Band-limited Gaussian noise: white noise through a windowed-sinc
+/// band-pass `[lo, hi]` (rad/sample), normalized to `power`.
+pub fn bandlimited_noise(
+    n: usize,
+    lo: f64,
+    hi: f64,
+    power: f64,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    let h = bandpass_sinc(SHAPER_LEN, lo, hi);
+    // Generate extra samples so edge transients can be discarded.
+    let pad = SHAPER_LEN;
+    let mut white = vec![0.0f64; n + 2 * pad];
+    rng.fill_gaussian(&mut white);
+    let shaped = convolve_valid(&white, &h);
+    let mut out = shaped[..n].to_vec();
+    // Normalize measured power.
+    let mut m = Moments::new();
+    for &v in &out {
+        m.push(v);
+    }
+    let scale = (power / m.power().max(1e-30)).sqrt();
+    for v in out.iter_mut() {
+        *v *= scale;
+    }
+    out
+}
+
+/// White Gaussian noise at a given power.
+pub fn awgn(n: usize, power: f64, rng: &mut Pcg64) -> Vec<f64> {
+    let s = power.sqrt();
+    (0..n).map(|_| s * rng.gaussian()).collect()
+}
+
+/// Windowed-sinc (Blackman) linear-phase band-pass prototype.
+pub fn bandpass_sinc(len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    assert!(len % 2 == 1, "odd length keeps integer group delay");
+    assert!((0.0..=std::f64::consts::PI).contains(&lo) && lo < hi);
+    let hi = hi.min(std::f64::consts::PI);
+    let mid = (len / 2) as f64;
+    (0..len)
+        .map(|i| {
+            let t = i as f64 - mid;
+            let ideal = if t == 0.0 {
+                (hi - lo) / std::f64::consts::PI
+            } else {
+                ((hi * t).sin() - (lo * t).sin()) / (std::f64::consts::PI * t)
+            };
+            let x = i as f64 / (len - 1) as f64;
+            let w = 0.42 - 0.5 * (2.0 * std::f64::consts::PI * x).cos()
+                + 0.08 * (4.0 * std::f64::consts::PI * x).cos();
+            ideal * w
+        })
+        .collect()
+}
+
+/// `valid`-mode convolution: output length `x.len() − h.len() + 1`.
+pub fn convolve_valid(x: &[f64], h: &[f64]) -> Vec<f64> {
+    assert!(x.len() >= h.len());
+    let n = x.len() - h.len() + 1;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut acc = 0.0;
+        for (k, &hk) in h.iter().enumerate() {
+            acc += hk * x[i + h.len() - 1 - k];
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// The assembled testbed stimulus.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    /// Desired signal d1 (unit power, passband).
+    pub d1: Vec<f64>,
+    /// Interferer d2 (transition-side stop band).
+    pub d2: Vec<f64>,
+    /// Interferer d3 (deep stop band).
+    pub d3: Vec<f64>,
+    /// Noise η.
+    pub noise: Vec<f64>,
+    /// Filter input x = d1 + d2 + d3 + η.
+    pub x: Vec<f64>,
+}
+
+/// Interferer power that reproduces the paper's SNR_in = −3.47 dB:
+/// `SNR_in = σ²_{d1} / σ²_{d1−x}` with `d1 − x = −(d2 + d3 + η)`, so the
+/// total interference power must be `10^{0.347} = 2.2233`.
+pub fn interferer_power() -> f64 {
+    // σ²_{d2} = σ²_{d3} = (10^{0.347} − σ²_η) / 2.
+    (10f64.powf(0.347) - 1e-3) / 2.0
+}
+
+impl Testbed {
+    /// Generate `n` samples of the paper's Fig.-7 stimulus.
+    pub fn generate(n: usize, seed: u64) -> Testbed {
+        use std::f64::consts::PI;
+        let p_i = interferer_power();
+        let mut r1 = Pcg64::new(seed, 1);
+        let mut r2 = Pcg64::new(seed, 2);
+        let mut r3 = Pcg64::new(seed, 3);
+        let mut rn = Pcg64::new(seed, 4);
+        let d1 = bandlimited_noise(n, 0.0, 0.25 * PI, 1.0, &mut r1);
+        let d2 = bandlimited_noise(n, 0.35 * PI, 0.60 * PI, p_i, &mut r2);
+        let d3 = bandlimited_noise(n, 0.70 * PI, 0.95 * PI, p_i, &mut r3);
+        let noise = awgn(n, 1e-3, &mut rn);
+        let x: Vec<f64> = (0..n).map(|i| d1[i] + d2[i] + d3[i] + noise[i]).collect();
+        Testbed { d1, d2, d3, noise, x }
+    }
+
+    /// SNR at the filter input, dB: `10·log10(σ²_{d1} / σ²_{d1−x})`.
+    pub fn snr_in_db(&self) -> f64 {
+        snr_db(&self.d1, &self.x)
+    }
+}
+
+/// `10·log10(P_ref / P_{ref−sig})` over the overlapping region.
+pub fn snr_db(reference: &[f64], signal: &[f64]) -> f64 {
+    let n = reference.len().min(signal.len());
+    let mut pr = Moments::new();
+    let mut pe = Moments::new();
+    for i in 0..n {
+        pr.push(reference[i]);
+        pe.push(reference[i] - signal[i]);
+    }
+    crate::util::stats::db(pr.power() / pe.power().max(1e-300))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    /// Power of `x` in `[lo, hi]` estimated by Goertzel probes.
+    fn band_power(x: &[f64], lo: f64, hi: f64, probes: usize) -> f64 {
+        // DFT-magnitude probe: E[|Σ x e^{-jωn}|²]/N per frequency.
+        let n = x.len() as f64;
+        (0..probes)
+            .map(|p| {
+                let w = lo + (hi - lo) * (p as f64 + 0.5) / probes as f64;
+                let (mut re, mut im) = (0.0f64, 0.0f64);
+                for (i, &v) in x.iter().enumerate() {
+                    let ph = w * i as f64;
+                    re += v * ph.cos();
+                    im -= v * ph.sin();
+                }
+                (re * re + im * im) / n
+            })
+            .sum::<f64>()
+            / probes as f64
+    }
+
+    #[test]
+    fn bandlimited_noise_is_in_band() {
+        let mut rng = Pcg64::seeded(77);
+        let x = bandlimited_noise(16384, 0.35 * PI, 0.6 * PI, 1.0, &mut rng);
+        let inband = band_power(&x, 0.4 * PI, 0.55 * PI, 8);
+        let below = band_power(&x, 0.05 * PI, 0.2 * PI, 8);
+        let above = band_power(&x, 0.75 * PI, 0.95 * PI, 8);
+        assert!(inband > 100.0 * below, "in={inband} below={below}");
+        assert!(inband > 100.0 * above, "in={inband} above={above}");
+    }
+
+    #[test]
+    fn powers_are_normalized() {
+        let mut rng = Pcg64::seeded(5);
+        let x = bandlimited_noise(32768, 0.0, 0.25 * PI, 1.0, &mut rng);
+        let mut m = Moments::new();
+        for &v in &x {
+            m.push(v);
+        }
+        assert!((m.power() - 1.0).abs() < 0.02, "power {}", m.power());
+    }
+
+    #[test]
+    fn testbed_snr_in_matches_paper() {
+        let tb = Testbed::generate(1 << 15, 42);
+        let snr = tb.snr_in_db();
+        assert!((snr - (-3.47)).abs() < 0.25, "SNR_in = {snr} dB (paper −3.47)");
+    }
+
+    #[test]
+    fn testbed_components_sum() {
+        let tb = Testbed::generate(1024, 1);
+        for i in 0..1024 {
+            let s = tb.d1[i] + tb.d2[i] + tb.d3[i] + tb.noise[i];
+            assert!((s - tb.x[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn testbed_deterministic_per_seed() {
+        let a = Testbed::generate(512, 9);
+        let b = Testbed::generate(512, 9);
+        assert_eq!(a.x, b.x);
+        let c = Testbed::generate(512, 10);
+        assert!(a.x.iter().zip(&c.x).any(|(p, q)| p != q));
+    }
+
+    #[test]
+    fn snr_db_of_identical_signals_is_huge() {
+        let x = vec![1.0, -1.0, 0.5];
+        assert!(snr_db(&x, &x) > 200.0);
+    }
+}

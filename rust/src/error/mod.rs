@@ -1,0 +1,43 @@
+//! Error-analysis engine: exhaustive and randomized sweeps producing the
+//! paper's error statistics (Table I), the normalized error histogram
+//! (Fig. 2), and the MSE points for the PDP-vs-MSE study (Fig. 5/6).
+//!
+//! Exhaustive sweeps enumerate every input pair — `2^(2·WL)` products
+//! (16.7 M for WL = 12). The engine shards the operand space across
+//! threads and merges the streaming accumulators; results are exactly
+//! deterministic regardless of shard count (integer accumulators only).
+
+mod sweep;
+
+pub use sweep::{
+    exhaustive_histogram, exhaustive_stats, random_stats, sweep_mse, SweepConfig,
+};
+
+use crate::util::stats::ErrorStats;
+
+/// Outcome of an error sweep, paired with the multiplier identity.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Multiplier display name.
+    pub name: String,
+    /// Word length swept.
+    pub wl: u32,
+    /// Number of input pairs applied.
+    pub pairs: u64,
+    /// The accumulated metrics.
+    pub stats: ErrorStats,
+}
+
+impl SweepResult {
+    /// Render the Table-I row: mean, MSE, error probability, min error.
+    pub fn table_row(&self) -> Vec<String> {
+        use crate::util::report::sci;
+        vec![
+            self.name.clone(),
+            sci(self.stats.mean()),
+            sci(self.stats.mse()),
+            format!("{:.4}", self.stats.error_prob()),
+            sci(self.stats.min_error() as f64),
+        ]
+    }
+}

@@ -1,0 +1,223 @@
+//! Sharded exhaustive / randomized error sweeps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::arith::Multiplier;
+use crate::util::stats::{ErrorStats, Histogram};
+use crate::util::Pcg64;
+
+use super::SweepResult;
+
+/// Sweep controls.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+    /// Chunk of x-values handed to a worker at a time.
+    pub chunk: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { threads: 0, chunk: 64 }
+    }
+}
+
+impl SweepConfig {
+    fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// Exhaustively apply all `2^(2·WL)` input pairs and accumulate the
+/// paper's error statistics. Deterministic; sharded over x-values.
+pub fn exhaustive_stats<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> SweepResult {
+    let (lo, hi) = mult.operand_range();
+    let span = (hi - lo + 1) as u64;
+    let next = Arc::new(AtomicU64::new(0));
+    let nthreads = cfg.resolved_threads();
+    let chunk = cfg.chunk.max(1);
+
+    let stats = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..nthreads {
+            let next = Arc::clone(&next);
+            handles.push(scope.spawn(move || {
+                let mut local = ErrorStats::new();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= span {
+                        break;
+                    }
+                    let end = (start + chunk).min(span);
+                    for xi in start..end {
+                        let x = lo + xi as i64;
+                        for y in lo..=hi {
+                            local.push(mult.multiply(x, y) - x * y);
+                        }
+                    }
+                }
+                local
+            }));
+        }
+        let mut total = ErrorStats::new();
+        for h in handles {
+            total.merge(&h.join().expect("sweep worker panicked"));
+        }
+        total
+    });
+
+    SweepResult {
+        name: mult.name(),
+        wl: mult.wl(),
+        pairs: span * span,
+        stats,
+    }
+}
+
+/// Exhaustive sweep retaining only the MSE (the Fig. 5/6 x-axis).
+pub fn sweep_mse<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> f64 {
+    exhaustive_stats(mult, cfg).stats.mse()
+}
+
+/// Exhaustive sweep producing the normalized error histogram of Fig. 2.
+///
+/// `bins` buckets span normalized error `[-1, 1]`; `scale` is the
+/// normalizer (the paper uses the maximum output magnitude, `2^(2WL−1)`).
+pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
+    mult: &M,
+    bins: usize,
+    scale: f64,
+    cfg: SweepConfig,
+) -> Histogram {
+    let (lo, hi) = mult.operand_range();
+    let span = (hi - lo + 1) as u64;
+    let next = Arc::new(AtomicU64::new(0));
+    let nthreads = cfg.resolved_threads();
+    let chunk = cfg.chunk.max(1);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..nthreads {
+            let next = Arc::clone(&next);
+            handles.push(scope.spawn(move || {
+                let mut local = Histogram::new(bins, scale);
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= span {
+                        break;
+                    }
+                    let end = (start + chunk).min(span);
+                    for xi in start..end {
+                        let x = lo + xi as i64;
+                        for y in lo..=hi {
+                            local.push(mult.multiply(x, y) - x * y);
+                        }
+                    }
+                }
+                local
+            }));
+        }
+        let mut total = Histogram::new(bins, scale);
+        for h in handles {
+            total.merge(&h.join().expect("histogram worker panicked"));
+        }
+        total
+    })
+}
+
+/// Randomized sweep with `n` uniform input pairs (used where the paper
+/// samples rather than enumerates, and for quick CI-sized checks).
+pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> SweepResult {
+    let mut rng = Pcg64::seeded(seed);
+    let mut stats = ErrorStats::new();
+    let (lo, hi) = mult.operand_range();
+    for _ in 0..n {
+        let x = rng.range_i64(lo, hi);
+        let y = rng.range_i64(lo, hi);
+        stats.push(mult.multiply(x, y) - x * y);
+    }
+    SweepResult { name: mult.name(), wl: mult.wl(), pairs: n, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{BbmType, BrokenBooth, ExactBooth, MultKind};
+
+    #[test]
+    fn exact_multiplier_has_zero_error() {
+        let m = ExactBooth::new(8);
+        let r = exhaustive_stats(&m, SweepConfig::default());
+        assert_eq!(r.pairs, 65536);
+        assert_eq!(r.stats.nonzero, 0);
+        assert_eq!(r.stats.mse(), 0.0);
+        assert_eq!(r.stats.min_error(), 0);
+    }
+
+    #[test]
+    fn sharding_is_deterministic() {
+        let m = BrokenBooth::new(8, 5, BbmType::Type0);
+        let a = exhaustive_stats(&m, SweepConfig { threads: 1, chunk: 7 });
+        let b = exhaustive_stats(&m, SweepConfig { threads: 4, chunk: 3 });
+        assert_eq!(a.stats.sum, b.stats.sum);
+        assert_eq!(a.stats.sum_sq, b.stats.sum_sq);
+        assert_eq!(a.stats.nonzero, b.stats.nonzero);
+        assert_eq!(a.stats.min, b.stats.min);
+    }
+
+    #[test]
+    fn exhaustive_matches_naive_loop_wl6() {
+        let m = BrokenBooth::new(6, 4, BbmType::Type1);
+        let r = exhaustive_stats(&m, SweepConfig::default());
+        let mut naive = crate::util::stats::ErrorStats::new();
+        for x in -32i64..32 {
+            for y in -32i64..32 {
+                naive.push(m.multiply(x, y) - x * y);
+            }
+        }
+        assert_eq!(r.stats.sum, naive.sum);
+        assert_eq!(r.stats.sum_sq, naive.sum_sq);
+        assert_eq!(r.stats.min, naive.min);
+        assert_eq!(r.stats.nonzero, naive.nonzero);
+    }
+
+    #[test]
+    fn histogram_total_equals_pairs() {
+        let m = BrokenBooth::new(8, 7, BbmType::Type0);
+        let h = exhaustive_histogram(&m, 25, (1u64 << 15) as f64, SweepConfig::default());
+        assert_eq!(h.n, 65536);
+        let pct: f64 = h.percentages().iter().sum();
+        assert!((pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_stats_reproducible() {
+        let m = MultKind::Bam.build(10, 6);
+        let a = random_stats(m.as_ref(), 10_000, 42);
+        let b = random_stats(m.as_ref(), 10_000, 42);
+        assert_eq!(a.stats.sum, b.stats.sum);
+        assert_eq!(a.stats.sum_sq, b.stats.sum_sq);
+    }
+
+    #[test]
+    fn mse_increases_with_vbl_exhaustive_wl8() {
+        let mses: Vec<f64> = [0u32, 3, 6, 8]
+            .iter()
+            .map(|&vbl| {
+                sweep_mse(
+                    &BrokenBooth::new(8, vbl, BbmType::Type0),
+                    SweepConfig::default(),
+                )
+            })
+            .collect();
+        for w in mses.windows(2) {
+            assert!(w[1] >= w[0], "{mses:?}");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Standard-cell library model — the stand-in for the paper's 90 nm CMOS
+//! library (Synopsys Design Compiler + PrimeTime PX flow).
+//!
+//! Every combinational primitive is a single-output cell available in
+//! three drive strengths (X1/X2/X4). The numbers below are calibrated to
+//! a generic 90 nm educational library (1.0 V, typical corner):
+//!
+//! * area — µm² of placed cell,
+//! * `cin` — capacitance per input pin (fF),
+//! * `cpar` — intrinsic (parasitic/internal) output capacitance (fF),
+//!   which also folds in the cell's internal switching energy,
+//! * `tau` — intrinsic delay (ps),
+//! * `drive` — output drive resistance expressed as ps/fF at X1,
+//! * `leak` — leakage power (nW).
+//!
+//! Upsizing by `s` multiplies area/cin/cpar/leak by `s` and divides the
+//! drive resistance by `s` — the classic logical-effort scaling.
+//! Absolute accuracy against the authors' foundry kit is *not* claimed
+//! (see DESIGN.md §1); relative comparisons are the reproduction target.
+
+/// Combinational / sequential cell types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// Constant-0 driver (tie cell; zero power).
+    Tie0,
+    /// Constant-1 driver (tie cell; zero power).
+    Tie1,
+    /// Buffer.
+    Buf,
+    /// Inverter.
+    Inv,
+    /// 2-input NAND.
+    Nand2,
+    /// 2-input NOR.
+    Nor2,
+    /// 2-input AND.
+    And2,
+    /// 2-input OR.
+    Or2,
+    /// 2-input XOR.
+    Xor2,
+    /// 2-input XNOR.
+    Xnor2,
+    /// 2:1 mux — inputs `(sel, a, b)`, output `sel ? b : a`.
+    Mux2,
+    /// 3-input AND (used by Booth encoders and Type0 carry trees).
+    And3,
+    /// 3-input OR.
+    Or3,
+    /// AND-OR-invert 21: `!(a&b | c)` (dense PP merge cell).
+    Aoi21,
+    /// D flip-flop (FIR delay lines / pipeline registers).
+    Dff,
+}
+
+/// Discrete drive strengths. The sub-X1 strengths model the weak /
+/// high-Vt cells a synthesis tool swaps in during power recovery on
+/// relaxed timing constraints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Size {
+    /// 0.25× drive (weakest power-recovery cell).
+    X025,
+    /// 0.5× drive.
+    X05,
+    /// 1× drive (synthesis default).
+    X1,
+    /// 2× drive.
+    X2,
+    /// 4× drive (strongest).
+    X4,
+}
+
+impl Size {
+    /// Numeric scale factor.
+    pub fn factor(self) -> f64 {
+        match self {
+            Size::X025 => 0.25,
+            Size::X05 => 0.5,
+            Size::X1 => 1.0,
+            Size::X2 => 2.0,
+            Size::X4 => 4.0,
+        }
+    }
+
+    /// Next size up, if any.
+    pub fn up(self) -> Option<Size> {
+        match self {
+            Size::X025 => Some(Size::X05),
+            Size::X05 => Some(Size::X1),
+            Size::X1 => Some(Size::X2),
+            Size::X2 => Some(Size::X4),
+            Size::X4 => None,
+        }
+    }
+
+    /// Next size down, if any.
+    pub fn down(self) -> Option<Size> {
+        match self {
+            Size::X025 => None,
+            Size::X05 => Some(Size::X025),
+            Size::X1 => Some(Size::X05),
+            Size::X2 => Some(Size::X1),
+            Size::X4 => Some(Size::X2),
+        }
+    }
+}
+
+/// X1 electrical/physical parameters of a cell kind.
+#[derive(Clone, Copy, Debug)]
+pub struct CellParams {
+    /// Placed area, µm².
+    pub area: f64,
+    /// Input pin capacitance, fF (per pin).
+    pub cin: f64,
+    /// Intrinsic output capacitance (parasitic + internal-energy
+    /// equivalent), fF.
+    pub cpar: f64,
+    /// Intrinsic delay, ps.
+    pub tau: f64,
+    /// Drive resistance, ps per fF of load at X1.
+    pub drive: f64,
+    /// Leakage, nW.
+    pub leak: f64,
+}
+
+/// Supply voltage (V) of the modeled corner.
+pub const VDD: f64 = 1.0;
+/// Wire load per fanout pin, fF (statistical wire-load model).
+pub const WIRE_CAP_PER_FANOUT: f64 = 0.35;
+
+impl CellKind {
+    /// Number of input pins.
+    pub fn arity(self) -> usize {
+        match self {
+            CellKind::Tie0 | CellKind::Tie1 => 0,
+            CellKind::Buf | CellKind::Inv => 1,
+            CellKind::Nand2
+            | CellKind::Nor2
+            | CellKind::And2
+            | CellKind::Or2
+            | CellKind::Xor2
+            | CellKind::Xnor2
+            | CellKind::Dff => match self {
+                CellKind::Dff => 1, // data pin; clock handled implicitly
+                _ => 2,
+            },
+            CellKind::Mux2 | CellKind::And3 | CellKind::Or3 | CellKind::Aoi21 => 3,
+        }
+    }
+
+    /// X1 library parameters.
+    pub fn params(self) -> CellParams {
+        // area(µm²), cin(fF), cpar(fF), tau(ps), drive(ps/fF), leak(nW)
+        let (area, cin, cpar, tau, drive, leak) = match self {
+            CellKind::Tie0 => (1.8, 0.0, 0.0, 0.0, 0.0, 0.4),
+            CellKind::Tie1 => (1.8, 0.0, 0.0, 0.0, 0.0, 0.4),
+            CellKind::Buf => (3.2, 1.3, 1.0, 28.0, 9.0, 1.4),
+            CellKind::Inv => (2.1, 1.4, 0.8, 14.0, 8.0, 1.0),
+            CellKind::Nand2 => (2.8, 1.5, 1.0, 18.0, 10.0, 1.6),
+            CellKind::Nor2 => (2.8, 1.5, 1.1, 22.0, 12.0, 1.6),
+            CellKind::And2 => (3.7, 1.4, 1.3, 30.0, 10.0, 2.0),
+            CellKind::Or2 => (3.7, 1.4, 1.4, 33.0, 11.0, 2.0),
+            CellKind::Xor2 => (6.5, 2.4, 1.9, 42.0, 13.0, 3.1),
+            CellKind::Xnor2 => (6.5, 2.4, 1.9, 42.0, 13.0, 3.1),
+            CellKind::Mux2 => (6.0, 1.8, 1.7, 36.0, 12.0, 2.8),
+            CellKind::And3 => (4.6, 1.4, 1.5, 38.0, 11.0, 2.5),
+            CellKind::Or3 => (4.6, 1.4, 1.6, 41.0, 12.0, 2.5),
+            CellKind::Aoi21 => (3.7, 1.6, 1.2, 26.0, 11.0, 1.9),
+            CellKind::Dff => (15.0, 1.9, 2.4, 95.0, 11.0, 6.5),
+        };
+        CellParams { area, cin, cpar, tau, drive, leak }
+    }
+
+    /// Area at a drive strength, µm².
+    pub fn area(self, size: Size) -> f64 {
+        self.params().area * size.factor()
+    }
+
+    /// Input pin capacitance at a drive strength, fF.
+    pub fn cin(self, size: Size) -> f64 {
+        self.params().cin * size.factor()
+    }
+
+    /// Intrinsic output capacitance at a drive strength, fF.
+    pub fn cpar(self, size: Size) -> f64 {
+        self.params().cpar * size.factor()
+    }
+
+    /// Leakage at a drive strength, nW.
+    pub fn leak(self, size: Size) -> f64 {
+        self.params().leak * size.factor()
+    }
+
+    /// Propagation delay (ps) driving `cload` fF at a drive strength.
+    pub fn delay(self, size: Size, cload: f64) -> f64 {
+        let p = self.params();
+        p.tau + p.drive * cload / size.factor()
+    }
+
+    /// Switching energy (fJ) of one output transition with `cload` fF of
+    /// external load: `½·V²·(cpar + cload)`.
+    pub fn switch_energy(self, size: Size, cload: f64) -> f64 {
+        0.5 * VDD * VDD * (self.cpar(size) + cload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_scale_monotonically() {
+        for k in [CellKind::Inv, CellKind::Xor2, CellKind::Dff] {
+            assert!(k.area(Size::X1) < k.area(Size::X2));
+            assert!(k.area(Size::X2) < k.area(Size::X4));
+            assert!(k.cin(Size::X4) > k.cin(Size::X1));
+            assert!(k.leak(Size::X4) > k.leak(Size::X1));
+            // Bigger drive => smaller delay at same load.
+            assert!(k.delay(Size::X4, 10.0) < k.delay(Size::X1, 10.0));
+        }
+    }
+
+    #[test]
+    fn delay_grows_with_load() {
+        let k = CellKind::Nand2;
+        assert!(k.delay(Size::X1, 20.0) > k.delay(Size::X1, 2.0));
+    }
+
+    #[test]
+    fn xor_more_expensive_than_nand() {
+        assert!(CellKind::Xor2.area(Size::X1) > CellKind::Nand2.area(Size::X1));
+        assert!(CellKind::Xor2.params().tau > CellKind::Nand2.params().tau);
+    }
+
+    #[test]
+    fn arity_is_consistent() {
+        assert_eq!(CellKind::Inv.arity(), 1);
+        assert_eq!(CellKind::Nand2.arity(), 2);
+        assert_eq!(CellKind::Mux2.arity(), 3);
+        assert_eq!(CellKind::Dff.arity(), 1);
+        assert_eq!(CellKind::Tie0.arity(), 0);
+    }
+
+    #[test]
+    fn size_ladder() {
+        assert_eq!(Size::X1.up(), Some(Size::X2));
+        assert_eq!(Size::X4.up(), None);
+        assert_eq!(Size::X025.down(), None);
+        assert_eq!(Size::X4.down(), Some(Size::X2));
+        // Ladder is an order-embedding into the factors.
+        let mut s = Size::X025;
+        let mut prev = s.factor();
+        while let Some(n) = s.up() {
+            assert!(n.factor() > prev);
+            prev = n.factor();
+            s = n;
+        }
+    }
+
+    #[test]
+    fn switch_energy_positive_and_load_dependent() {
+        let k = CellKind::And2;
+        let e1 = k.switch_energy(Size::X1, 1.0);
+        let e2 = k.switch_energy(Size::X1, 5.0);
+        assert!(e1 > 0.0 && e2 > e1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Gate-level substrate: the stand-in for the paper's synthesis +
+//! power-analysis flow (Design Compiler @ 90 nm + PrimeTime PX).
+//!
+//! Pipeline (mirroring §II.C of the paper):
+//!
+//! 1. [`builders`] generate a structural netlist for a multiplier (or
+//!    the whole FIR datapath) at given `(WL, VBL/K)`;
+//! 2. [`size`] "synthesizes" it under a delay constraint (critical-path
+//!    upsizing + slack-driven power recovery);
+//! 3. [`sim`] measures switching activity under random vectors (the
+//!    paper: 5×10⁵) or a real signal workload;
+//! 4. [`power`] turns activity into average total power; [`timing`]
+//!    reports the achieved critical delay.
+//!
+//! [`characterize`] bundles 2–4 into the per-design-point measurement
+//! every table/figure driver consumes.
+
+pub mod builders;
+pub mod cell;
+pub mod netlist;
+pub mod power;
+pub mod sim;
+pub mod size;
+pub mod timing;
+
+pub use cell::{CellKind, Size};
+pub use netlist::{Cell, NetId, Netlist};
+pub use power::{average_power, pdp_pj, PowerReport};
+pub use sim::{eval_once, run_random, run_stream, Activity, Simulator};
+pub use size::{find_tmin, meet_constraint, recover_power, synthesize, SynthResult};
+pub use timing::{analyze, critical_path, Timing};
+
+/// One synthesized-and-measured design point.
+#[derive(Clone, Debug)]
+pub struct Characterization {
+    /// Netlist name.
+    pub name: String,
+    /// Delay constraint requested, ps.
+    pub constraint_ps: f64,
+    /// Achieved critical delay, ps.
+    pub delay_ps: f64,
+    /// Whether the constraint was met.
+    pub met: bool,
+    /// Total cell area, µm².
+    pub area_um2: f64,
+    /// Average power at the constraint period, mW.
+    pub power: PowerReport,
+    /// Cell count.
+    pub cells: usize,
+}
+
+impl Characterization {
+    /// PDP (pJ) at the *constraint* period, as in the paper's step 3.
+    pub fn pdp_at_constraint_pj(&self) -> f64 {
+        self.power.total_mw() * self.constraint_ps * 1e-3
+    }
+
+    /// PDP (pJ) at the *achieved* delay, as in the paper's step 2.
+    pub fn pdp_at_delay_pj(&self) -> f64 {
+        self.power.total_mw() * self.delay_ps * 1e-3
+    }
+}
+
+/// Synthesize `nl` at `constraint_ps`, measure activity with `nvec`
+/// random vectors, and report area/delay/power — one full design point.
+pub fn characterize(nl: &mut Netlist, constraint_ps: f64, nvec: u64, seed: u64) -> Characterization {
+    let synth = synthesize(nl, constraint_ps);
+    let act = run_random(nl, nvec, seed);
+    let power = average_power(nl, &act, constraint_ps);
+    Characterization {
+        name: nl.name.clone(),
+        constraint_ps,
+        delay_ps: synth.delay_ps,
+        met: synth.met,
+        area_um2: nl.area(),
+        power,
+        cells: nl.cells.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::BbmType;
+
+    #[test]
+    fn characterize_accurate_vs_broken_wl8() {
+        // The paper's headline: the Broken-Booth multiplier costs roughly
+        // half the power/area of the accurate one at the same constraint.
+        let mut acc = builders::build_broken_booth(8, 0, BbmType::Type0);
+        let mut brk = builders::build_broken_booth(8, 7, BbmType::Type0);
+        let t = analyze(&acc).critical * 1.5;
+        let ca = characterize(&mut acc, t, 64 * 64, 7);
+        let cb = characterize(&mut brk, t, 64 * 64, 7);
+        assert!(ca.met && cb.met);
+        assert!(cb.area_um2 < ca.area_um2 * 0.85, "area {} vs {}", cb.area_um2, ca.area_um2);
+        assert!(
+            cb.power.total_mw() < ca.power.total_mw() * 0.85,
+            "power {} vs {}",
+            cb.power.total_mw(),
+            ca.power.total_mw()
+        );
+    }
+
+    #[test]
+    fn tighter_constraint_costs_more_power() {
+        let base = {
+            let nl = builders::build_broken_booth(8, 0, BbmType::Type0);
+            analyze(&nl).critical
+        };
+        let mut tight_nl = builders::build_broken_booth(8, 0, BbmType::Type0);
+        let tight = characterize(&mut tight_nl, base, 64 * 64, 3);
+        let mut loose_nl = builders::build_broken_booth(8, 0, BbmType::Type0);
+        let loose = characterize(&mut loose_nl, base * 2.0, 64 * 64, 3);
+        assert!(tight.met && loose.met);
+        // Same switching energy over twice the period, plus recovery:
+        // loose must be well under half the tight power... modulo leakage.
+        assert!(loose.power.total_mw() < tight.power.total_mw() * 0.7);
+    }
+}

@@ -1,0 +1,380 @@
+//! Structural netlist IR: nets, cells, ports, and the builder API the
+//! multiplier/FIR generators use.
+//!
+//! A [`Netlist`] is a DAG of single-output cells over nets. Primary
+//! inputs and flip-flop outputs are sources; every other net is driven by
+//! exactly one cell. Combinational cells are stored in topological order
+//! by construction (a cell can only reference already-existing nets),
+//! which the simulator and the STA rely on.
+
+use super::cell::{CellKind, Size};
+
+/// Net handle (index into the net table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+/// One instantiated cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Cell type.
+    pub kind: CellKind,
+    /// Input nets (arity checked at construction).
+    pub inputs: Vec<NetId>,
+    /// Output net (unique driver).
+    pub output: NetId,
+    /// Drive strength (mutated by the sizing optimizer).
+    pub size: Size,
+}
+
+/// A gate-level design.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    /// Module name (reports only).
+    pub name: String,
+    /// Total number of nets.
+    pub num_nets: u32,
+    /// Primary inputs in declaration order.
+    pub inputs: Vec<NetId>,
+    /// Primary outputs in declaration order.
+    pub outputs: Vec<NetId>,
+    /// Cells in topological order.
+    pub cells: Vec<Cell>,
+    /// The constant-0 net, if materialized.
+    zero: Option<NetId>,
+    /// The constant-1 net, if materialized.
+    one: Option<NetId>,
+}
+
+impl Netlist {
+    /// Empty design.
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    fn fresh(&mut self) -> NetId {
+        let id = NetId(self.num_nets);
+        self.num_nets += 1;
+        id
+    }
+
+    /// Declare one primary input.
+    pub fn input(&mut self) -> NetId {
+        let id = self.fresh();
+        self.inputs.push(id);
+        id
+    }
+
+    /// Declare `n` primary inputs (LSB first for buses).
+    pub fn input_bus(&mut self, n: u32) -> Vec<NetId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    /// Mark a net as a primary output.
+    pub fn output(&mut self, net: NetId) {
+        self.outputs.push(net);
+    }
+
+    /// The constant-0 net (materialized once as a tie cell).
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.zero {
+            return z;
+        }
+        let out = self.fresh();
+        self.cells.push(Cell { kind: CellKind::Tie0, inputs: vec![], output: out, size: Size::X1 });
+        self.zero = Some(out);
+        out
+    }
+
+    /// The constant-1 net (materialized once as a tie cell).
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.one {
+            return o;
+        }
+        let out = self.fresh();
+        self.cells.push(Cell { kind: CellKind::Tie1, inputs: vec![], output: out, size: Size::X1 });
+        self.one = Some(out);
+        out
+    }
+
+    /// Instantiate a cell; returns its output net.
+    pub fn add(&mut self, kind: CellKind, inputs: &[NetId]) -> NetId {
+        assert_eq!(inputs.len(), kind.arity(), "{kind:?} arity mismatch");
+        for &n in inputs {
+            assert!(n.0 < self.num_nets, "dangling input net");
+        }
+        let out = self.fresh();
+        self.cells.push(Cell { kind, inputs: inputs.to_vec(), output: out, size: Size::X1 });
+        out
+    }
+
+    // -- convenience logic builders ------------------------------------
+
+    /// NOT.
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.add(CellKind::Inv, &[a])
+    }
+
+    /// AND.
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        self.add(CellKind::And2, &[a, b])
+    }
+
+    /// OR.
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        self.add(CellKind::Or2, &[a, b])
+    }
+
+    /// XOR.
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.add(CellKind::Xor2, &[a, b])
+    }
+
+    /// XNOR.
+    pub fn xnor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.add(CellKind::Xnor2, &[a, b])
+    }
+
+    /// 2:1 mux: `sel ? b : a`.
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        self.add(CellKind::Mux2, &[sel, a, b])
+    }
+
+    /// Balanced AND over a slice (AND3/AND2 tree); empty slice is invalid.
+    pub fn and_tree(&mut self, nets: &[NetId]) -> NetId {
+        assert!(!nets.is_empty());
+        let mut level: Vec<NetId> = nets.to_vec();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity((level.len() + 2) / 3);
+            let mut it = level.chunks(3);
+            for ch in &mut it {
+                next.push(match ch.len() {
+                    3 => self.add(CellKind::And3, ch),
+                    2 => self.and(ch[0], ch[1]),
+                    _ => ch[0],
+                });
+            }
+            level = next;
+        }
+        level[0]
+    }
+
+    /// Balanced OR over a slice (OR3/OR2 tree); empty slice is invalid.
+    pub fn or_tree(&mut self, nets: &[NetId]) -> NetId {
+        assert!(!nets.is_empty());
+        let mut level: Vec<NetId> = nets.to_vec();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity((level.len() + 2) / 3);
+            for ch in level.chunks(3) {
+                next.push(match ch.len() {
+                    3 => self.add(CellKind::Or3, ch),
+                    2 => self.or(ch[0], ch[1]),
+                    _ => ch[0],
+                });
+            }
+            level = next;
+        }
+        level[0]
+    }
+
+    /// Half adder: returns `(sum, carry)`.
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Full adder (two HA + OR mapping): returns `(sum, carry)`.
+    pub fn full_adder(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let axb = self.xor(a, b);
+        let sum = self.xor(axb, c);
+        let t1 = self.and(axb, c);
+        let t2 = self.and(a, b);
+        let carry = self.or(t1, t2);
+        (sum, carry)
+    }
+
+    /// D flip-flop; returns the Q net.
+    pub fn dff(&mut self, d: NetId) -> NetId {
+        self.add(CellKind::Dff, &[d])
+    }
+
+    // -- structural queries ---------------------------------------------
+
+    /// Fanout count per net (primary outputs add one pin each).
+    pub fn fanout(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.num_nets as usize];
+        for c in &self.cells {
+            for &i in &c.inputs {
+                fo[i.0 as usize] += 1;
+            }
+        }
+        for &o in &self.outputs {
+            fo[o.0 as usize] += 1;
+        }
+        fo
+    }
+
+    /// Index of the driving cell per net (`u32::MAX` for primary inputs).
+    pub fn driver(&self) -> Vec<u32> {
+        let mut d = vec![u32::MAX; self.num_nets as usize];
+        for (ci, c) in self.cells.iter().enumerate() {
+            debug_assert_eq!(d[c.output.0 as usize], u32::MAX, "multiple drivers");
+            d[c.output.0 as usize] = ci as u32;
+        }
+        d
+    }
+
+    /// Capacitive load on each net (fF): fanin pin caps at current sizes
+    /// plus the statistical wire load.
+    pub fn net_loads(&self) -> Vec<f64> {
+        use super::cell::WIRE_CAP_PER_FANOUT;
+        let mut load = vec![0.0f64; self.num_nets as usize];
+        for c in &self.cells {
+            for &i in &c.inputs {
+                load[i.0 as usize] += c.kind.cin(c.size) + WIRE_CAP_PER_FANOUT;
+            }
+        }
+        // Primary outputs see a fixed external load (one standard pin).
+        for &o in &self.outputs {
+            load[o.0 as usize] += 2.0;
+        }
+        load
+    }
+
+    /// Total placed area (µm²).
+    pub fn area(&self) -> f64 {
+        self.cells.iter().map(|c| c.kind.area(c.size)).sum()
+    }
+
+    /// Total leakage (nW).
+    pub fn leakage(&self) -> f64 {
+        self.cells.iter().map(|c| c.kind.leak(c.size)).sum()
+    }
+
+    /// Cell-count histogram, for reports.
+    pub fn cell_census(&self) -> Vec<(CellKind, usize)> {
+        let mut counts: std::collections::BTreeMap<String, (CellKind, usize)> = Default::default();
+        for c in &self.cells {
+            let e = counts.entry(format!("{:?}", c.kind)).or_insert((c.kind, 0));
+            e.1 += 1;
+        }
+        counts.into_values().collect()
+    }
+
+    /// Number of sequential cells.
+    pub fn num_dffs(&self) -> usize {
+        self.cells.iter().filter(|c| c.kind == CellKind::Dff).count()
+    }
+
+    /// Sanity: every cell only reads nets defined earlier (inputs, or
+    /// outputs of earlier cells / DFFs). DFF outputs count as sources.
+    pub fn check_topological(&self) -> bool {
+        let mut defined = vec![false; self.num_nets as usize];
+        for &i in &self.inputs {
+            defined[i.0 as usize] = true;
+        }
+        // DFF outputs are state: available from time zero.
+        for c in &self.cells {
+            if c.kind == CellKind::Dff {
+                defined[c.output.0 as usize] = true;
+            }
+        }
+        for c in &self.cells {
+            if c.kind == CellKind::Dff {
+                continue; // its input is checked as a comb sink below
+            }
+            for &i in &c.inputs {
+                if !defined[i.0 as usize] {
+                    return false;
+                }
+            }
+            defined[c.output.0 as usize] = true;
+        }
+        // DFF D-pins must be defined somewhere.
+        self.cells
+            .iter()
+            .filter(|c| c.kind == CellKind::Dff)
+            .all(|c| c.inputs.iter().all(|&i| defined[i.0 as usize]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_topological_netlist() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let y = nl.and(x, a);
+        nl.output(y);
+        assert!(nl.check_topological());
+        assert_eq!(nl.cells.len(), 2);
+        assert_eq!(nl.inputs.len(), 2);
+    }
+
+    #[test]
+    fn zero_is_memoized() {
+        let mut nl = Netlist::new("t");
+        let z1 = nl.zero();
+        let z2 = nl.zero();
+        assert_eq!(z1, z2);
+        assert_eq!(nl.cells.len(), 1);
+    }
+
+    #[test]
+    fn full_adder_truth_table_structure() {
+        let mut nl = Netlist::new("fa");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let (s, co) = nl.full_adder(a, b, c);
+        nl.output(s);
+        nl.output(co);
+        // 2 XOR + 2 AND + 1 OR
+        assert_eq!(nl.cells.len(), 5);
+        assert!(nl.check_topological());
+    }
+
+    #[test]
+    fn and_tree_shapes() {
+        let mut nl = Netlist::new("t");
+        let ins = nl.input_bus(7);
+        let out = nl.and_tree(&ins);
+        nl.output(out);
+        assert!(nl.check_topological());
+        // 7 -> 3 (3,3,1) -> 1: 2×AND3 at L1, then AND3 over (a,b,carryover)
+        assert!(nl.cells.len() <= 4);
+    }
+
+    #[test]
+    fn fanout_counts_pins() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let x = nl.not(a);
+        let _ = nl.and(x, x);
+        nl.output(x);
+        let fo = nl.fanout();
+        assert_eq!(fo[x.0 as usize], 3); // two AND pins + PO
+        assert_eq!(fo[a.0 as usize], 1);
+    }
+
+    #[test]
+    fn area_and_leakage_positive() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let b = nl.input();
+        let y = nl.and(a, b);
+        nl.output(y);
+        assert!(nl.area() > 0.0);
+        assert!(nl.leakage() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn arity_checked() {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        nl.add(CellKind::And2, &[a]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Average-power model from measured switching activity — the stand-in
+//! for PrimeTime PX over a post-synthesis VCD.
+//!
+//! Total power = dynamic + leakage, with
+//!
+//! `P_dyn = (Σ_nets toggles_n · ½V²(C_par(driver) + C_load(net))) / T_sim`
+//!
+//! where `T_sim = vectors × period`. Sequential designs add the clock
+//! tree: every DFF clock pin sees two transitions per cycle.
+//!
+//! Units: energy fJ, time ps ⇒ power in fJ/ps = **mW**.
+
+use super::cell::{CellKind, VDD};
+use super::netlist::Netlist;
+use super::sim::Activity;
+
+/// Power report for one synthesized configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    /// Dynamic (switching) power, mW.
+    pub dynamic_mw: f64,
+    /// Leakage power, mW.
+    pub leakage_mw: f64,
+    /// Clock-tree power (DFF clock pins), mW.
+    pub clock_mw: f64,
+    /// Clock/vector period used, ps.
+    pub period_ps: f64,
+}
+
+impl PowerReport {
+    /// Total average power, mW.
+    pub fn total_mw(&self) -> f64 {
+        self.dynamic_mw + self.leakage_mw + self.clock_mw
+    }
+}
+
+/// DFF clock-pin capacitance, fF (per flop).
+const CLK_PIN_CAP: f64 = 1.6;
+
+/// Compute average power at a vector/clock period (ps) from a measured
+/// [`Activity`].
+pub fn average_power(nl: &Netlist, act: &Activity, period_ps: f64) -> PowerReport {
+    assert!(period_ps > 0.0);
+    assert_eq!(act.toggles.len(), nl.num_nets as usize, "activity/netlist mismatch");
+    let loads = nl.net_loads();
+    // Switching energy: attribute each net's toggles to its driver's
+    // parasitic plus the net load. Primary-input nets have no driver cell;
+    // their switching is charged to the external agent but their load is
+    // still driven through the design's pins, so count load-only energy.
+    let mut driver_cpar = vec![0.0f64; nl.num_nets as usize];
+    for c in &nl.cells {
+        driver_cpar[c.output.0 as usize] = c.kind.cpar(c.size);
+    }
+    let mut energy_fj = 0.0f64;
+    for (n, &t) in act.toggles.iter().enumerate() {
+        if t == 0 {
+            continue;
+        }
+        let c_total = driver_cpar[n] + loads[n];
+        energy_fj += t as f64 * 0.5 * VDD * VDD * c_total;
+    }
+    let sim_time_ps = act.vectors as f64 * period_ps;
+    let dynamic_mw = if sim_time_ps > 0.0 { energy_fj / sim_time_ps } else { 0.0 };
+
+    // Clock tree: 2 transitions per cycle per flop on the clock pin.
+    let ndff = nl.num_dffs() as f64;
+    let clk_energy_per_cycle = ndff * 2.0 * 0.5 * VDD * VDD * CLK_PIN_CAP;
+    let clock_mw = if period_ps > 0.0 { clk_energy_per_cycle / period_ps } else { 0.0 };
+
+    // Leakage: nW -> mW.
+    let leakage_mw = nl.leakage() * 1e-6;
+
+    PowerReport { dynamic_mw, leakage_mw, clock_mw, period_ps }
+}
+
+/// Power-delay product in the paper's sense: average total power (mW)
+/// times the delay/constraint (ns) ⇒ **pJ**.
+pub fn pdp_pj(report: &PowerReport, delay_ns: f64) -> f64 {
+    report.total_mw() * delay_ns
+}
+
+/// Census row used by synthesis reports: (kind, count, area µm²).
+pub fn area_breakdown(nl: &Netlist) -> Vec<(CellKind, usize, f64)> {
+    nl.cell_census()
+        .into_iter()
+        .map(|(k, n)| {
+            let a: f64 = nl
+                .cells
+                .iter()
+                .filter(|c| c.kind == k)
+                .map(|c| c.kind.area(c.size))
+                .sum();
+            (k, n, a)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gate::netlist::Netlist;
+    use crate::gate::sim::run_random;
+
+    fn adder4() -> Netlist {
+        let mut nl = Netlist::new("add4");
+        let a = nl.input_bus(4);
+        let b = nl.input_bus(4);
+        let mut carry = None;
+        for i in 0..4 {
+            let (s, c) = match carry {
+                None => nl.half_adder(a[i], b[i]),
+                Some(ci) => nl.full_adder(a[i], b[i], ci),
+            };
+            nl.output(s);
+            carry = Some(c);
+        }
+        nl.output(carry.unwrap());
+        nl
+    }
+
+    #[test]
+    fn power_scales_inverse_with_period() {
+        let nl = adder4();
+        let act = run_random(&nl, 6400, 3);
+        let p1 = average_power(&nl, &act, 1000.0);
+        let p2 = average_power(&nl, &act, 2000.0);
+        assert!(p1.dynamic_mw > 0.0);
+        assert!((p1.dynamic_mw / p2.dynamic_mw - 2.0).abs() < 1e-9);
+        // Leakage is period-independent.
+        assert_eq!(p1.leakage_mw, p2.leakage_mw);
+    }
+
+    #[test]
+    fn idle_circuit_burns_only_leakage() {
+        let nl = adder4();
+        // Constant stimulus: no toggles after priming.
+        let act = crate::gate::sim::run_stream(&nl, 100, |_, w| w.fill(0));
+        let p = average_power(&nl, &act, 1000.0);
+        assert_eq!(p.dynamic_mw, 0.0);
+        assert!(p.leakage_mw > 0.0);
+    }
+
+    #[test]
+    fn bigger_circuit_more_power() {
+        let small = adder4();
+        let mut big = Netlist::new("big");
+        let a = big.input_bus(16);
+        let b = big.input_bus(16);
+        let mut carry = None;
+        for i in 0..16 {
+            let (s, c) = match carry {
+                None => big.half_adder(a[i], b[i]),
+                Some(ci) => big.full_adder(a[i], b[i], ci),
+            };
+            big.output(s);
+            carry = Some(c);
+        }
+        big.output(carry.unwrap());
+        let pa = average_power(&small, &run_random(&small, 64_000, 1), 1000.0);
+        let pb = average_power(&big, &run_random(&big, 64_000, 1), 1000.0);
+        assert!(pb.total_mw() > pa.total_mw() * 2.0);
+    }
+
+    #[test]
+    fn pdp_units() {
+        let nl = adder4();
+        let act = run_random(&nl, 6400, 3);
+        let p = average_power(&nl, &act, 1750.0);
+        let pdp = pdp_pj(&p, 1.75);
+        assert!((pdp - p.total_mw() * 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_power_counts_dffs() {
+        let mut nl = Netlist::new("seq");
+        let a = nl.input();
+        let q = nl.dff(a);
+        nl.output(q);
+        let act = crate::gate::sim::run_stream(&nl, 10, |_, w| w.fill(0));
+        let p = average_power(&nl, &act, 1000.0);
+        assert!(p.clock_mw > 0.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Bit-parallel event simulation with per-net toggle counting — the
+//! stand-in for the paper's post-synthesis VCD extraction.
+//!
+//! The simulator evaluates 64 independent stimulus lanes at once (one per
+//! bit of a `u64` word), exactly like a 64-seat Monte-Carlo of the
+//! paper's `5 × 10^5`-random-vector power run. Toggle counts accumulate
+//! `popcount(new ^ old)` per net per step, which is the zero-delay
+//! switching activity `α` the power model consumes (glitch activity is
+//! not modeled — noted in DESIGN.md §1; it affects both the accurate and
+//! approximate designs alike, preserving the paper's relative claims).
+//!
+//! Sequential designs (DFFs) are supported: DFF output nets hold state
+//! that updates at the end of each step, i.e. one step = one clock cycle.
+
+use super::cell::CellKind;
+use super::netlist::Netlist;
+use crate::util::Pcg64;
+
+/// Switching-activity record from a simulation run.
+#[derive(Clone, Debug)]
+pub struct Activity {
+    /// Transition count per net (summed over all 64 lanes).
+    pub toggles: Vec<u64>,
+    /// Number of time steps executed.
+    pub steps: u64,
+    /// Stimulus lanes (always 64 here).
+    pub lanes: u32,
+    /// Clock-cycle count per lane (equals `steps` for sequential designs).
+    pub vectors: u64,
+}
+
+impl Activity {
+    /// Average toggle rate of a net per applied vector (0..=1 per edge
+    /// pair; a net toggling every vector has rate 1).
+    pub fn rate(&self, net: u32) -> f64 {
+        if self.vectors == 0 {
+            return 0.0;
+        }
+        self.toggles[net as usize] as f64 / self.vectors as f64
+    }
+
+    /// Total transitions across all nets.
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+}
+
+/// 64-lane bit-parallel simulator over a [`Netlist`].
+///
+/// The netlist is "compiled" once at construction into a flat opcode
+/// program (kind + three input indices + output index per combinational
+/// cell) so the per-step loop is a linear scan over dense arrays instead
+/// of chasing per-cell `Vec`s — see EXPERIMENTS.md §Perf.
+pub struct Simulator<'a> {
+    nl: &'a Netlist,
+    /// Current value word per net.
+    pub words: Vec<u64>,
+    prev: Vec<u64>,
+    /// Flat combinational program: (kind, in0, in1, in2, out).
+    ops: Vec<(CellKind, u32, u32, u32, u32)>,
+    /// (D-net, Q-net) per flip-flop.
+    dffs: Vec<(u32, u32)>,
+    /// Scratch for the two-phase DFF latch.
+    dff_next: Vec<u64>,
+    toggles: Vec<u64>,
+    steps: u64,
+    first: bool,
+}
+
+impl<'a> Simulator<'a> {
+    /// New simulator with all nets at 0.
+    pub fn new(nl: &'a Netlist) -> Self {
+        let n = nl.num_nets as usize;
+        let mut ops = Vec::with_capacity(nl.cells.len());
+        let mut dffs = Vec::new();
+        for c in &nl.cells {
+            if c.kind == CellKind::Dff {
+                dffs.push((c.inputs[0].0, c.output.0));
+                continue;
+            }
+            let pin = |i: usize| c.inputs.get(i).map(|n| n.0).unwrap_or(0);
+            ops.push((c.kind, pin(0), pin(1), pin(2), c.output.0));
+        }
+        let ndff = dffs.len();
+        Simulator {
+            nl,
+            words: vec![0; n],
+            prev: vec![0; n],
+            ops,
+            dffs,
+            dff_next: vec![0; ndff],
+            toggles: vec![0; n],
+            steps: 0,
+            first: true,
+        }
+    }
+
+    /// Apply one step: set primary-input words, propagate, latch DFFs,
+    /// accumulate toggles.
+    pub fn step(&mut self, input_words: &[u64]) {
+        assert_eq!(input_words.len(), self.nl.inputs.len(), "input arity");
+        for (&net, &w) in self.nl.inputs.iter().zip(input_words) {
+            self.words[net.0 as usize] = w;
+        }
+        // Combinational propagation in topological order (DFF outputs
+        // already carry the current state values).
+        let w = &mut self.words;
+        for &(kind, i0, i1, i2, out) in &self.ops {
+            let a = w[i0 as usize];
+            let v = match kind {
+                CellKind::Tie0 => 0,
+                CellKind::Tie1 => !0u64,
+                CellKind::Buf => a,
+                CellKind::Inv => !a,
+                CellKind::Nand2 => !(a & w[i1 as usize]),
+                CellKind::Nor2 => !(a | w[i1 as usize]),
+                CellKind::And2 => a & w[i1 as usize],
+                CellKind::Or2 => a | w[i1 as usize],
+                CellKind::Xor2 => a ^ w[i1 as usize],
+                CellKind::Xnor2 => !(a ^ w[i1 as usize]),
+                CellKind::Mux2 => (a & w[i2 as usize]) | (!a & w[i1 as usize]),
+                CellKind::And3 => a & w[i1 as usize] & w[i2 as usize],
+                CellKind::Or3 => a | w[i1 as usize] | w[i2 as usize],
+                CellKind::Aoi21 => !((a & w[i1 as usize]) | w[i2 as usize]),
+                CellKind::Dff => unreachable!("DFFs latch at step boundaries"),
+            };
+            w[out as usize] = v;
+        }
+        // Toggle accounting (skip the priming step: the all-zero initial
+        // state is not a real applied vector).
+        if !self.first {
+            for (i, (&cur, &old)) in self.words.iter().zip(&self.prev).enumerate() {
+                self.toggles[i] += (cur ^ old).count_ones() as u64;
+            }
+            self.steps += 1;
+        }
+        self.first = false;
+        self.prev.copy_from_slice(&self.words);
+        // Latch DFF next-state for the following cycle — two-phase
+        // (read all D pins, then write all Q pins) so flop chains shift
+        // one stage per cycle instead of shooting through.
+        for (k, &(d, _q)) in self.dffs.iter().enumerate() {
+            self.dff_next[k] = self.words[d as usize];
+        }
+        for (k, &(_d, q)) in self.dffs.iter().enumerate() {
+            self.words[q as usize] = self.dff_next[k];
+        }
+    }
+
+    /// Current output-port words.
+    pub fn output_words(&self) -> Vec<u64> {
+        self.nl.outputs.iter().map(|&n| self.prev[n.0 as usize]).collect()
+    }
+
+    /// Finish and return the activity record.
+    pub fn finish(self) -> Activity {
+        Activity {
+            toggles: self.toggles,
+            steps: self.steps,
+            lanes: 64,
+            vectors: self.steps * 64,
+        }
+    }
+}
+
+/// Evaluate the netlist functionally on a single boolean vector
+/// (lane 0 only) and return the output bits — the correctness interface
+/// used for gate-vs-arith cross-validation.
+pub fn eval_once(nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
+    let mut sim = Simulator::new(nl);
+    let words: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
+    sim.step(&words);
+    sim.output_words().iter().map(|&w| w & 1 == 1).collect()
+}
+
+/// Drive the design with `nvec` uniform random vectors (rounded up to a
+/// multiple of 64) and return the measured switching activity — the
+/// paper's power-characterization stimulus.
+pub fn run_random(nl: &Netlist, nvec: u64, seed: u64) -> Activity {
+    let mut rng = Pcg64::seeded(seed);
+    let mut sim = Simulator::new(nl);
+    let steps = nvec.div_ceil(64).max(2);
+    let nin = nl.inputs.len();
+    let mut words = vec![0u64; nin];
+    // One extra priming step: the first applied vector only establishes
+    // state and is not counted as a transition pair.
+    for _ in 0..=steps {
+        for w in words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        sim.step(&words);
+    }
+    sim.finish()
+}
+
+/// Drive a *sequential* design with per-cycle input words supplied by a
+/// closure (`cycle -> input words`), e.g. streaming signal samples into
+/// the FIR datapath.
+pub fn run_stream<F: FnMut(u64, &mut [u64])>(nl: &Netlist, cycles: u64, mut f: F) -> Activity {
+    let mut sim = Simulator::new(nl);
+    let mut words = vec![0u64; nl.inputs.len()];
+    for cyc in 0..cycles {
+        f(cyc, &mut words);
+        sim.step(&words);
+    }
+    sim.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gate::netlist::Netlist;
+
+    fn xor_design() -> Netlist {
+        let mut nl = Netlist::new("x");
+        let a = nl.input();
+        let b = nl.input();
+        let y = nl.xor(a, b);
+        nl.output(y);
+        nl
+    }
+
+    #[test]
+    fn eval_once_truth_table() {
+        let nl = xor_design();
+        assert_eq!(eval_once(&nl, &[false, false]), vec![false]);
+        assert_eq!(eval_once(&nl, &[true, false]), vec![true]);
+        assert_eq!(eval_once(&nl, &[false, true]), vec![true]);
+        assert_eq!(eval_once(&nl, &[true, true]), vec![false]);
+    }
+
+    #[test]
+    fn all_cell_kinds_evaluate() {
+        let mut nl = Netlist::new("k");
+        let a = nl.input();
+        let b = nl.input();
+        let c = nl.input();
+        let z = nl.zero();
+        let nand = nl.add(CellKind::Nand2, &[a, b]);
+        let nor = nl.add(CellKind::Nor2, &[a, b]);
+        let aoi = nl.add(CellKind::Aoi21, &[a, b, c]);
+        let mx = nl.mux(c, nand, nor);
+        let o3 = nl.add(CellKind::Or3, &[mx, aoi, z]);
+        nl.output(o3);
+        // a=1 b=1 c=0: nand=0 nor=0 aoi=!(1|0)=0 mux(c=0)->nand=0 or3=0
+        assert_eq!(eval_once(&nl, &[true, true, false]), vec![false]);
+        // a=0 b=0 c=1: nand=1 nor=1 aoi=!(0|1)=0 mux(c=1)->nor=1 or3=1
+        assert_eq!(eval_once(&nl, &[false, false, true]), vec![true]);
+    }
+
+    #[test]
+    fn toggle_counting_counts_transitions() {
+        let nl = xor_design();
+        let mut sim = Simulator::new(&nl);
+        // Lane 0: a toggles every step, b constant 0 -> y toggles.
+        sim.step(&[0, 0]);
+        sim.step(&[1, 0]);
+        sim.step(&[0, 0]);
+        sim.step(&[1, 0]);
+        let act = sim.finish();
+        assert_eq!(act.steps, 3);
+        // a net toggled 3 times (lane 0), y likewise, b never.
+        let a_net = nl.inputs[0].0 as usize;
+        let b_net = nl.inputs[1].0 as usize;
+        let y_net = nl.outputs[0].0 as usize;
+        assert_eq!(act.toggles[a_net], 3);
+        assert_eq!(act.toggles[b_net], 0);
+        assert_eq!(act.toggles[y_net], 3);
+    }
+
+    #[test]
+    fn dff_delays_by_one_cycle() {
+        let mut nl = Netlist::new("d");
+        let a = nl.input();
+        let q = nl.dff(a);
+        nl.output(q);
+        let mut sim = Simulator::new(&nl);
+        sim.step(&[1]); // q was 0 during this cycle
+        assert_eq!(sim.output_words()[0] & 1, 0);
+        sim.step(&[0]); // q now shows last cycle's 1
+        assert_eq!(sim.output_words()[0] & 1, 1);
+        sim.step(&[0]);
+        assert_eq!(sim.output_words()[0] & 1, 0);
+    }
+
+    #[test]
+    fn random_run_produces_activity() {
+        let nl = xor_design();
+        let act = run_random(&nl, 64 * 100, 1);
+        assert_eq!(act.steps, 100);
+        assert_eq!(act.vectors, 6400);
+        // Random inputs toggle roughly half the vectors.
+        let y_net = nl.outputs[0].0 as usize;
+        let rate = act.toggles[y_net] as f64 / act.vectors as f64;
+        assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn random_run_deterministic() {
+        let nl = xor_design();
+        let a = run_random(&nl, 6400, 9);
+        let b = run_random(&nl, 6400, 9);
+        assert_eq!(a.toggles, b.toggles);
+    }
+}

@@ -1,0 +1,194 @@
+//! Static timing analysis over a [`Netlist`] — the stand-in for the
+//! synthesis tool's timing engine.
+//!
+//! Arrival times propagate in topological order with the logical-effort
+//! delay model of [`super::cell`]: `d = tau + drive/size · C_load`.
+//! Sequential designs time the register-to-register / input-to-register
+//! paths: DFF outputs launch at `clk→q`, DFF D-pins and primary outputs
+//! are endpoints.
+
+use super::cell::CellKind;
+use super::netlist::Netlist;
+
+/// STA result.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Arrival time per net, ps.
+    pub arrival: Vec<f64>,
+    /// Critical (max) endpoint delay, ps.
+    pub critical: f64,
+    /// Cell index whose output is the critical endpoint driver
+    /// (`usize::MAX` when the design is empty).
+    pub critical_cell: usize,
+    /// For each cell, the input net that determined its arrival
+    /// (critical-path predecessor).
+    pub worst_input: Vec<u32>,
+}
+
+/// DFF setup time, ps.
+pub const T_SETUP: f64 = 35.0;
+
+/// Run STA at the current cell sizes.
+pub fn analyze(nl: &Netlist) -> Timing {
+    let loads = nl.net_loads();
+    let mut arrival = vec![0.0f64; nl.num_nets as usize];
+    let mut worst_input = vec![u32::MAX; nl.cells.len()];
+    let mut is_po = vec![false; nl.num_nets as usize];
+    for &o in &nl.outputs {
+        is_po[o.0 as usize] = true;
+    }
+    // DFF outputs launch at clk->q.
+    for c in &nl.cells {
+        if c.kind == CellKind::Dff {
+            arrival[c.output.0 as usize] =
+                c.kind.delay(c.size, loads[c.output.0 as usize]);
+        }
+    }
+    let mut critical = 0.0f64;
+    let mut critical_cell = usize::MAX;
+    for (ci, c) in nl.cells.iter().enumerate() {
+        if c.kind == CellKind::Dff {
+            // Endpoint: D-pin arrival + setup.
+            let t = arrival[c.inputs[0].0 as usize] + T_SETUP;
+            if t > critical {
+                critical = t;
+                critical_cell = ci;
+            }
+            continue;
+        }
+        let mut worst = 0.0f64;
+        let mut wi = u32::MAX;
+        for &i in &c.inputs {
+            let a = arrival[i.0 as usize];
+            if a >= worst {
+                worst = a;
+                wi = i.0;
+            }
+        }
+        worst_input[ci] = wi;
+        let out = c.output.0 as usize;
+        arrival[out] = worst + c.kind.delay(c.size, loads[out]);
+        if is_po[out] && arrival[out] > critical {
+            critical = arrival[out];
+            critical_cell = ci;
+        }
+    }
+    // Primary outputs driven directly by inputs (degenerate) are covered:
+    // their arrival is 0 and cannot be critical unless the design is empty.
+    Timing { arrival, critical, critical_cell, worst_input }
+}
+
+/// Extract the critical path as a list of cell indices from endpoint
+/// back to a source, front = source side.
+pub fn critical_path(nl: &Netlist, t: &Timing) -> Vec<usize> {
+    let mut path = Vec::new();
+    if t.critical_cell == usize::MAX {
+        return path;
+    }
+    let driver = nl.driver();
+    let mut ci = t.critical_cell;
+    loop {
+        path.push(ci);
+        let c = &nl.cells[ci];
+        let pred_net = if c.kind == CellKind::Dff {
+            c.inputs[0].0
+        } else {
+            t.worst_input[ci]
+        };
+        if pred_net == u32::MAX {
+            break;
+        }
+        let d = driver[pred_net as usize];
+        if d == u32::MAX {
+            break; // reached a primary input
+        }
+        let dc = d as usize;
+        if nl.cells[dc].kind == CellKind::Dff {
+            path.push(dc);
+            break; // launched from a register
+        }
+        ci = dc;
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gate::cell::Size;
+    use crate::gate::netlist::Netlist;
+
+    fn chain(n: usize) -> Netlist {
+        let mut nl = Netlist::new("chain");
+        let a = nl.input();
+        let mut x = a;
+        for _ in 0..n {
+            x = nl.not(x);
+        }
+        nl.output(x);
+        nl
+    }
+
+    #[test]
+    fn longer_chain_is_slower() {
+        let t2 = analyze(&chain(2)).critical;
+        let t8 = analyze(&chain(8)).critical;
+        assert!(t8 > t2 * 2.0, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn upsizing_last_gate_helps_when_loaded() {
+        let mut nl = Netlist::new("load");
+        let a = nl.input();
+        let x = nl.not(a);
+        // Heavy fanout on x.
+        for _ in 0..16 {
+            let y = nl.not(x);
+            nl.output(y);
+        }
+        let before = analyze(&nl).critical;
+        // Upsize x's driver (cell 0).
+        nl.cells[0].size = Size::X4;
+        let after = analyze(&nl).critical;
+        assert!(after < before, "before={before} after={after}");
+    }
+
+    #[test]
+    fn critical_path_is_connected_and_ends_at_endpoint() {
+        let nl = chain(5);
+        let t = analyze(&nl);
+        let p = critical_path(&nl, &t);
+        assert_eq!(p.len(), 5);
+        for w in p.windows(2) {
+            let out = nl.cells[w[0]].output;
+            assert!(nl.cells[w[1]].inputs.contains(&out));
+        }
+        assert_eq!(*p.last().unwrap(), t.critical_cell);
+    }
+
+    #[test]
+    fn dff_paths_include_setup_and_clk_to_q() {
+        // in -> DFF -> INV -> DFF : reg-to-reg path.
+        let mut nl = Netlist::new("seq");
+        let a = nl.input();
+        let q1 = nl.dff(a);
+        let x = nl.not(q1);
+        let _q2 = nl.dff(x);
+        let t = analyze(&nl);
+        // Path: clk->q of dff1 + inv + setup.
+        assert!(t.critical > T_SETUP);
+        let loads = nl.net_loads();
+        let expect = CellKind::Dff.delay(Size::X1, loads[q1.0 as usize])
+            + CellKind::Inv.delay(Size::X1, loads[x.0 as usize])
+            + T_SETUP;
+        assert!((t.critical - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn combinational_inputs_start_at_zero() {
+        let nl = chain(1);
+        let t = analyze(&nl);
+        assert_eq!(t.arrival[nl.inputs[0].0 as usize], 0.0);
+    }
+}

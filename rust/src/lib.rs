@@ -1,0 +1,43 @@
+//! # bbm — Broken-Booth Multiplier reproduction library
+//!
+//! Full reproduction of *"New Approximate Multiplier for Low Power Digital
+//! Signal Processing"* (Farshchi, Abrishami, Fakhraie): the Broken-Booth
+//! approximate multiplier (Type0/Type1), the prior-work baselines it is
+//! compared against (BAM, the Kulkarni 2×2-block multiplier, ETM), the
+//! evaluation substrates the paper's methodology needs (a gate-level
+//! netlist/power/timing/sizing "synthesizer" standing in for Design
+//! Compiler + PrimeTime, and a from-scratch Parks-McClellan DSP testbed),
+//! and a three-layer rust + JAX + Pallas runtime where exhaustive error
+//! sweeps and FIR filtering run through AOT-compiled XLA executables via
+//! PJRT.
+//!
+//! ## Layer map
+//!
+//! * [`arith`] — bit-accurate integer models of every multiplier (oracle
+//!   and fast path).
+//! * [`gate`] — structural netlists, event-driven toggle simulation,
+//!   power/area/timing models, constraint-driven sizing.
+//! * [`dsp`] — Remez exchange filter design, testbed signals, fixed-point
+//!   FIR, SNR measurement.
+//! * [`error`] — exhaustive/random error sweeps and statistics.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — streaming DSP pipeline server (router, batcher,
+//!   worker pool, backpressure, metrics).
+//! * [`repro`] — one driver per paper table/figure.
+//! * [`util`] — self-contained PRNG, CLI, stats and report helpers
+//!   (offline build: no external crates beyond `xla`/`anyhow`/`thiserror`).
+//! * [`testkit`] — minimal property-based testing engine used by the
+//!   test-suite (offline stand-in for proptest).
+
+pub mod arith;
+pub mod coordinator;
+pub mod dsp;
+pub mod error;
+pub mod gate;
+pub mod repro;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,7 @@
+//! `bbm` — CLI entry point for the Broken-Booth reproduction.
+fn main() {
+    if let Err(e) = bbm::repro::run_cli() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

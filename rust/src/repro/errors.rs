@@ -1,0 +1,107 @@
+//! Table I and Fig. 2 regenerators: exhaustive error statistics of the
+//! Broken-Booth multiplier.
+
+use crate::arith::{BbmType, BrokenBooth};
+use crate::error::{exhaustive_histogram, exhaustive_stats, SweepConfig};
+use crate::util::cli::Args;
+use crate::util::report::{sci, Series, Table};
+
+/// Table I: MSE, error mean/probability and minimum error of Type0 with
+/// WL = 12 over VBL ∈ {3, 6, 9, 12} — all 2^24 input pairs.
+///
+/// `--pjrt` routes the sweep through the AOT moments artifact via the
+/// coordinator instead of the native rust engine (same numbers, exercises
+/// the three-layer path).
+pub fn table1(args: &Args) -> anyhow::Result<()> {
+    let wl = args.get_or("wl", 12u32)?;
+    let vbls = args.list_or("vbls", &[3u32, 6, 9, 12])?;
+    let ty = match args.get_or("type", 0u32)? {
+        0 => BbmType::Type0,
+        _ => BbmType::Type1,
+    };
+    let use_pjrt = args.flag("pjrt");
+
+    let mut t = Table::new(
+        &format!("Table I — Broken-Booth {ty} WL={wl}, exhaustive 2^{} pairs", 2 * wl),
+        &["VBL", "Error Mean", "MSE", "Error Prob.", "Min-Error"],
+    );
+    let server = if use_pjrt {
+        Some(crate::coordinator::DspServer::start_default(8)?)
+    } else {
+        None
+    };
+    for &vbl in &vbls {
+        let stats = if let Some(srv) = &server {
+            let tyn = if ty == BbmType::Type0 { 0 } else { 1 };
+            srv.exhaustive_sweep(wl, tyn, vbl)?
+        } else {
+            let m = BrokenBooth::new(wl, vbl, ty);
+            exhaustive_stats(&m, SweepConfig::default()).stats
+        };
+        t.row(vec![
+            format!("VBL = {vbl}"),
+            sci(stats.mean()),
+            sci(stats.mse()),
+            format!("{:.4}", stats.error_prob()),
+            sci(stats.min_error() as f64),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper (WL=12, Type0): VBL=3: -3.50 / 2.22e1 / 0.6875 / -1.10e1 ; \
+         VBL=6: -61.5 / 5.05e3 / 0.9375 / -1.71e2 ; \
+         VBL=9: -7.89e2 / 7.52e5 / 0.9893 / -2.22e3 ; \
+         VBL=12: -8.53e3 / 8.33e7 / 0.9983 / -2.32e4"
+    );
+    Ok(())
+}
+
+/// Fig. 2: percentage distribution of the normalized error for WL = 10,
+/// VBL = 9 (error normalized to 2^19, the maximum 10×10 signed output).
+pub fn fig2(args: &Args) -> anyhow::Result<()> {
+    let wl = args.get_or("wl", 10u32)?;
+    let vbl = args.get_or("vbl", 9u32)?;
+    let bins = args.get_or("bins", 41usize)?;
+    let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
+    let scale = (1u64 << (2 * wl - 1)) as f64;
+    let h = exhaustive_histogram(&m, bins, scale, SweepConfig::default());
+    let mut s = Series::new(
+        &format!("Fig. 2 — error distribution, WL={wl} VBL={vbl} (normalized to 2^{})", 2 * wl - 1),
+        "norm_error",
+        &["percent"],
+    );
+    let pct = h.percentages();
+    for (i, &p) in pct.iter().enumerate() {
+        // Only the populated core of the distribution is interesting.
+        if p > 0.0 {
+            s.point(h.bin_center(i), &[p]);
+        }
+    }
+    s.print();
+    // Shape checks mirrored from the paper's figure: single-sided
+    // (non-positive) error concentrated near zero.
+    let left_mass: f64 =
+        pct.iter().take(bins / 2 + 1).sum();
+    println!("mass at error<=0: {left_mass:.2}% (paper: 100% — Type0 never overestimates)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_small_wl() {
+        // WL=8 keeps the exhaustive sweep fast in CI.
+        let args = Args::parse(&["--wl".into(), "8".into(), "--vbls".into(), "3,6".into()], &[])
+            .unwrap();
+        table1(&args).unwrap();
+    }
+
+    #[test]
+    fn fig2_smoke_small_wl() {
+        let args =
+            Args::parse(&["--wl".into(), "8".into(), "--vbl".into(), "7".into()], &[]).unwrap();
+        fig2(&args).unwrap();
+    }
+}

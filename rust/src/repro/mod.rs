@@ -1,0 +1,89 @@
+//! Paper table/figure regeneration drivers and the `bbm` CLI.
+//!
+//! Every table and figure of the paper's evaluation has a subcommand
+//! (see DESIGN.md §7 for the experiment index):
+//!
+//! ```text
+//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --pjrt]
+//! bbm fig2   [--wl 10 --vbl 9 --bins 41]
+//! bbm fig3   [--wl 16 --vbl 15 --nvec 100000]
+//! bbm table2 / table3 [--wls 4,8,12,16 --nvec 50000]
+//! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
+//! bbm fig7 / fig8a / fig8b [--samples N]
+//! bbm table4 [--samples 8192 --cycles 8192]
+//! bbm verify [--seed 1]
+//! bbm ablation [adders|dct|reducers]
+//! bbm all    (everything, paper-scale parameters)
+//! ```
+
+pub mod ablation;
+pub mod errors;
+pub mod filter_app;
+pub mod pdp;
+pub mod synth;
+pub mod verify;
+
+use crate::util::cli::Args;
+
+const FLAGS: [&str; 1] = ["pjrt"];
+
+/// CLI dispatcher for the `bbm` binary.
+pub fn run_cli() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..], &FLAGS)?;
+    dispatch(&cmd, &args)
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "table1" => errors::table1(args),
+        "fig2" => errors::fig2(args),
+        "fig3" => synth::fig3(args),
+        "table2" => synth::tables23(args, false),
+        "table3" => synth::tables23(args, true),
+        "fig5" => pdp::fig5(args),
+        "fig6" => pdp::fig6(args),
+        "fig7" => filter_app::fig7(args),
+        "fig8a" => filter_app::fig8a(args),
+        "fig8b" => filter_app::fig8b(args),
+        "table4" => filter_app::table4(args),
+        "verify" => verify::verify(args),
+        "ablation" => match args.positional.first().map(|s| s.as_str()) {
+            Some("adders") => ablation::adders(args),
+            Some("dct") => ablation::dct(args),
+            Some("reducers") => ablation::reducers(args),
+            _ => {
+                ablation::adders(args)?;
+                ablation::dct(args)?;
+                ablation::reducers(args)
+            }
+        },
+        "all" => {
+            for c in [
+                "verify", "table1", "fig2", "fig3", "table2", "table3", "fig5", "fig6",
+                "fig7", "fig8a", "fig8b", "table4",
+            ] {
+                println!("\n================ {c} ================");
+                dispatch(c, args)?;
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `bbm help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "bbm — Broken-Booth Multiplier reproduction\n\
+         commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 verify all\n\
+         see DESIGN.md §7 for the experiment index and options"
+    );
+}

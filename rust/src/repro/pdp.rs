@@ -1,0 +1,179 @@
+//! Fig. 5 and Fig. 6 regenerators: PDP vs MSE for the four studied
+//! multipliers (Broken-Booth Type0/Type1, BAM, Kulkarni+K), following
+//! the paper's §III.B four-step procedure:
+//!
+//! 1. exhaustive MSE at five precision settings each,
+//! 2. synthesize for minimum delay → PDP at the achieved delay,
+//! 3. synthesize at a fixed relaxed constraint (paper: 1.75 ns) → PDP at
+//!    that constraint,
+//! 4. average the two PDPs (Fig. 6).
+
+use crate::arith::MultKind;
+use crate::error::{sweep_mse, SweepConfig};
+use crate::gate::builders::build_multiplier;
+use crate::gate::{characterize, find_tmin, run_random, average_power};
+use crate::util::cli::Args;
+use crate::util::report::{Series, Table};
+
+/// One measured design point of the Fig. 5/6 study.
+#[derive(Clone, Debug)]
+pub struct PdpPoint {
+    /// Multiplier family.
+    pub kind: MultKind,
+    /// Precision knob value (VBL / K).
+    pub level: u32,
+    /// Exhaustive MSE.
+    pub mse: f64,
+    /// PDP at the achieved min delay, pJ (step 2).
+    pub pdp_min_pj: f64,
+    /// PDP at the relaxed constraint, pJ (step 3).
+    pub pdp_relaxed_pj: f64,
+}
+
+impl PdpPoint {
+    /// Step-4 average PDP.
+    pub fn pdp_avg_pj(&self) -> f64 {
+        0.5 * (self.pdp_min_pj + self.pdp_relaxed_pj)
+    }
+}
+
+/// The five precision settings per family used in our reproduction
+/// (the paper does not list its exact knob values).
+pub fn levels_for(kind: MultKind, wl: u32) -> Vec<u32> {
+    match kind {
+        MultKind::BbmType0 | MultKind::BbmType1 | MultKind::Bam => {
+            (1..=5).map(|i| i * (2 * wl - 1) / 6).collect()
+        }
+        MultKind::Kulkarni => (1..=5).map(|i| i * (2 * wl + 2) / 5).collect(),
+        MultKind::ExactBooth | MultKind::Etm => vec![0; 5],
+    }
+}
+
+/// Measure one family across its levels.
+pub fn measure_family(
+    kind: MultKind,
+    wl: u32,
+    relaxed_ps: f64,
+    nvec: u64,
+) -> anyhow::Result<Vec<PdpPoint>> {
+    let mut out = Vec::new();
+    for level in levels_for(kind, wl) {
+        let m = kind.build(wl, level);
+        let mse = sweep_mse(m.as_ref(), SweepConfig::default());
+        // Step 2: min-delay synthesis.
+        let mut nl = build_multiplier(kind, wl, level)
+            .ok_or_else(|| anyhow::anyhow!("{kind} has no gate model"))?;
+        let t = find_tmin(&mut nl);
+        let act = run_random(&nl, nvec, 11);
+        let p_min = average_power(&nl, &act, t.delay_ps);
+        let pdp_min = p_min.total_mw() * t.delay_ps * 1e-3;
+        // Step 3: relaxed-constraint synthesis on a fresh netlist.
+        let mut nl2 = build_multiplier(kind, wl, level).unwrap();
+        let c = characterize(&mut nl2, relaxed_ps, nvec, 11);
+        let pdp_relaxed = c.power.total_mw() * relaxed_ps * 1e-3;
+        out.push(PdpPoint { kind, level, mse, pdp_min_pj: pdp_min, pdp_relaxed_pj: pdp_relaxed });
+    }
+    Ok(out)
+}
+
+const FAMILIES: [MultKind; 4] =
+    [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni];
+
+/// Fig. 5: per-family PDP (min-delay and relaxed) vs log10 MSE.
+pub fn fig5(args: &Args) -> anyhow::Result<()> {
+    let wl = args.get_or("wl", 8u32)?;
+    let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
+    let nvec = args.get_or("nvec", 50_000u64)?;
+    for kind in FAMILIES {
+        let pts = measure_family(kind, wl, relaxed_ns * 1e3, nvec)?;
+        let mut t = Table::new(
+            &format!("Fig. 5 — {kind} (WL={wl}): PDP vs MSE"),
+            &["level", "log10(MSE)", "PDP@min_pJ", "PDP@relaxed_pJ", "PDP_avg_pJ"],
+        );
+        for p in &pts {
+            t.row(vec![
+                p.level.to_string(),
+                format!("{:.3}", p.mse.max(1e-12).log10()),
+                format!("{:.3}", p.pdp_min_pj),
+                format!("{:.3}", p.pdp_relaxed_pj),
+                format!("{:.3}", p.pdp_avg_pj()),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 6: the averaged PDP of all four families in one series.
+pub fn fig6(args: &Args) -> anyhow::Result<()> {
+    let wl = args.get_or("wl", 8u32)?;
+    let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
+    let nvec = args.get_or("nvec", 50_000u64)?;
+    let mut s = Series::new(
+        &format!("Fig. 6 — average PDP vs log10 MSE (WL={wl})"),
+        "log10_mse",
+        &["type0_pJ", "type1_pJ", "bam_pJ", "kulkarni_pJ"],
+    );
+    let mut all: Vec<Vec<PdpPoint>> = Vec::new();
+    for kind in FAMILIES {
+        all.push(measure_family(kind, wl, relaxed_ns * 1e3, nvec)?);
+    }
+    // Each family has its own MSE positions; emit one row per point with
+    // NaN for the other families (figure-style sparse series).
+    for (fi, pts) in all.iter().enumerate() {
+        for p in pts {
+            let mut ys = [f64::NAN; 4];
+            ys[fi] = p.pdp_avg_pj();
+            s.point(p.mse.max(1e-12).log10(), &ys);
+        }
+    }
+    s.print();
+    // Paper's qualitative claims, checked numerically where possible.
+    let k_pts = &all[3];
+    let t0_pts = &all[0];
+    let k_flat = k_pts.last().unwrap().pdp_avg_pj() / k_pts.first().unwrap().pdp_avg_pj();
+    let t0_drop = t0_pts.first().unwrap().pdp_avg_pj() / t0_pts.last().unwrap().pdp_avg_pj();
+    println!(
+        "kulkarni PDP(last)/PDP(first) = {k_flat:.2} (paper: ~flat, no improvement at high MSE)"
+    );
+    println!("type0 PDP(first)/PDP(last) = {t0_drop:.2} (paper: steady decrease as MSE grows)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_monotone_and_in_range() {
+        for kind in FAMILIES {
+            let lv = levels_for(kind, 8);
+            assert_eq!(lv.len(), 5);
+            for w in lv.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn family_mse_monotone_wl6() {
+        // Cheap smoke: MSE grows with the knob for every family.
+        for kind in FAMILIES {
+            let mut prev = -1.0;
+            for level in levels_for(kind, 6) {
+                let m = kind.build(6, level);
+                let mse = sweep_mse(m.as_ref(), SweepConfig::default());
+                assert!(mse >= prev, "{kind} level {level}");
+                prev = mse;
+            }
+        }
+    }
+
+    #[test]
+    fn pdp_decreases_with_breaking_bbm_wl6() {
+        let pts = measure_family(MultKind::BbmType1, 6, 2000.0, 6400).unwrap();
+        let first = pts.first().unwrap().pdp_avg_pj();
+        let last = pts.last().unwrap().pdp_avg_pj();
+        assert!(last < first, "PDP should fall as VBL rises: {first} -> {last}");
+    }
+}

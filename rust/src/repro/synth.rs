@@ -1,0 +1,177 @@
+//! Fig. 3 and Tables II/III regenerators: synthesized power/area of the
+//! Broken-Booth multiplier vs the accurate Booth multiplier across delay
+//! constraints (the paper's §III.A study).
+
+use crate::arith::BbmType;
+use crate::gate::builders::build_broken_booth;
+use crate::gate::{characterize, find_tmin};
+use crate::util::cli::Args;
+use crate::util::report::{Series, Table};
+
+/// The paper's relaxation grid.
+pub const RELAX: [f64; 5] = [1.0, 1.25, 1.5, 1.75, 2.0];
+
+/// One (accurate, approximate) comparison at a WL.
+pub struct WlComparison {
+    /// Word length.
+    pub wl: u32,
+    /// VBL used for the approximate design.
+    pub vbl: u32,
+    /// Tmin of the accurate design, ps.
+    pub tmin_acc_ps: f64,
+    /// Tmin of the approximate design, ps.
+    pub tmin_apx_ps: f64,
+    /// (constraint multiple, accurate char, approximate char).
+    pub points: Vec<(f64, crate::gate::Characterization, crate::gate::Characterization)>,
+}
+
+/// Run the paper's §III.A methodology for one WL:
+/// find `Tmin` of the accurate multiplier, then synthesize both designs
+/// at `{1, 1.25, 1.5, 1.75, 2}×Tmin` and measure power with `nvec`
+/// random vectors.
+pub fn compare_at_wl(wl: u32, vbl: u32, ty: BbmType, nvec: u64, seed: u64) -> WlComparison {
+    let tmin_acc = {
+        let mut nl = build_broken_booth(wl, 0, ty);
+        find_tmin(&mut nl).delay_ps
+    };
+    let tmin_apx = {
+        let mut nl = build_broken_booth(wl, vbl, ty);
+        find_tmin(&mut nl).delay_ps
+    };
+    let mut points = Vec::new();
+    for &mult in &RELAX {
+        let constraint = tmin_acc * mult;
+        let mut acc = build_broken_booth(wl, 0, ty);
+        let ca = characterize(&mut acc, constraint, nvec, seed);
+        let mut apx = build_broken_booth(wl, vbl, ty);
+        let cb = characterize(&mut apx, constraint, nvec, seed);
+        points.push((mult, ca, cb));
+    }
+    WlComparison { wl, vbl, tmin_acc_ps: tmin_acc, tmin_apx_ps: tmin_apx, points }
+}
+
+/// Fig. 3: total power vs delay for the accurate (VBL=0) and broken
+/// (VBL=15) WL=16 multipliers, plus the Tmin endpoints.
+pub fn fig3(args: &Args) -> anyhow::Result<()> {
+    let wl = args.get_or("wl", 16u32)?;
+    let vbl = args.get_or("vbl", wl - 1)?;
+    let nvec = args.get_or("nvec", 100_000u64)?;
+    let cmp = compare_at_wl(wl, vbl, BbmType::Type0, nvec, 42);
+    let mut s = Series::new(
+        &format!("Fig. 3 — total power vs delay, WL={wl} (VBL={vbl})"),
+        "delay_ns",
+        &["accurate_mW", "broken_mW"],
+    );
+    for (mult, ca, cb) in &cmp.points {
+        s.point(cmp.tmin_acc_ps * mult * 1e-3, &[ca.power.total_mw(), cb.power.total_mw()]);
+    }
+    s.print();
+    let speedup = (cmp.tmin_acc_ps - cmp.tmin_apx_ps) / cmp.tmin_acc_ps * 100.0;
+    println!(
+        "Tmin accurate = {:.3} ns, broken = {:.3} ns ({speedup:.1}% faster; paper: 1.21 vs 1.13 ns, 6.6%)",
+        cmp.tmin_acc_ps * 1e-3,
+        cmp.tmin_apx_ps * 1e-3,
+    );
+    Ok(())
+}
+
+/// Tables II (power) and III (area): percentage reductions over the
+/// relaxation grid for WL ∈ {4, 8, 12, 16} with VBL = WL − 1.
+pub fn tables23(args: &Args, area: bool) -> anyhow::Result<()> {
+    let wls = args.list_or("wls", &[4u32, 8, 12, 16])?;
+    let nvec = args.get_or("nvec", 50_000u64)?;
+    let ty = BbmType::Type0;
+    let what = if area { "AREA" } else { "POWER" };
+    let mut t = Table::new(
+        &format!("Table {} — % {what} reduction (Broken-Booth vs accurate)",
+                 if area { "III" } else { "II" }),
+        &["config", "1xTmin", "1.25x", "1.5x", "1.75x", "2x", "Mean"],
+    );
+    for &wl in &wls {
+        let vbl = wl - 1;
+        let cmp = compare_at_wl(wl, vbl, ty, nvec, 7);
+        let mut cells = vec![format!("WL={wl},VBL={vbl}")];
+        let mut sum = 0.0;
+        for (_, ca, cb) in &cmp.points {
+            let red = if area {
+                100.0 * (1.0 - cb.area_um2 / ca.area_um2)
+            } else {
+                100.0 * (1.0 - cb.power.total_mw() / ca.power.total_mw())
+            };
+            sum += red;
+            cells.push(format!("{red:.1}"));
+        }
+        cells.push(format!("{:.1}", sum / cmp.points.len() as f64));
+        t.row(cells);
+    }
+    t.print();
+    if area {
+        println!("paper means: WL4 19.7 | WL8 33.4 | WL12 41.8 | WL16 41.6");
+    } else {
+        println!("paper means: WL4 28.0 | WL8 56.3 | WL12 58.6 | WL16 57.4");
+    }
+    Ok(())
+}
+
+/// Structural sanity used by tests and the ablation bench: the dot-count
+/// ratio predicts the area ratio within a tolerance (paper §III.A's
+/// "36 of 77 bits nullified ⇒ ≈47% reduction expected" argument).
+pub fn area_tracks_dot_count(wl: u32, vbl: u32) -> (f64, f64) {
+    let full = build_broken_booth(wl, 0, BbmType::Type0);
+    let broken = build_broken_booth(wl, vbl, BbmType::Type0);
+    let area_ratio = 1.0 - broken.area() / full.area();
+    // Dot count of the Booth diagram: WL/2 rows × (WL+1 dots + sign ext).
+    let p = 2 * wl;
+    let mut total = 0u32;
+    let mut removed = 0u32;
+    for i in 0..wl / 2 {
+        let base = 2 * i;
+        for c in base..p {
+            total += 1;
+            if c < vbl {
+                removed += 1;
+            }
+        }
+    }
+    let dot_ratio = removed as f64 / total as f64;
+    (area_ratio, dot_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_shape_wl8() {
+        let cmp = compare_at_wl(8, 7, BbmType::Type0, 6400, 1);
+        assert!(cmp.tmin_apx_ps <= cmp.tmin_acc_ps * 1.02, "broken no slower at Tmin");
+        for (_, ca, cb) in &cmp.points {
+            assert!(cb.area_um2 < ca.area_um2);
+            assert!(cb.power.total_mw() < ca.power.total_mw());
+        }
+        // Power drops as the constraint relaxes (paper Fig. 3 shape).
+        let p_first = cmp.points.first().unwrap().1.power.total_mw();
+        let p_last = cmp.points.last().unwrap().1.power.total_mw();
+        assert!(p_last < p_first * 0.75, "relaxed {p_last} vs tight {p_first}");
+    }
+
+    #[test]
+    fn area_dot_tracking_wl12() {
+        let (area_ratio, dot_ratio) = area_tracks_dot_count(12, 11);
+        // Paper argues ~47% dots removed for WL=12/VBL=11; area reduction
+        // should be in the same ballpark.
+        assert!(dot_ratio > 0.3 && dot_ratio < 0.6, "dot ratio {dot_ratio}");
+        assert!(
+            (area_ratio - dot_ratio).abs() < 0.2,
+            "area {area_ratio} vs dots {dot_ratio}"
+        );
+    }
+
+    #[test]
+    fn tmin_improves_over_unsized() {
+        let nl = build_broken_booth(12, 0, BbmType::Type0);
+        let base = crate::gate::analyze(&nl).critical;
+        let cmp = compare_at_wl(12, 11, BbmType::Type0, 6400, 3);
+        assert!(cmp.tmin_acc_ps <= base);
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-layer verification driver: the PJRT artifacts (L1 Pallas → L2
+//! JAX → HLO) against the rust `arith` oracles — the end-to-end
+//! correctness proof that all three layers compute the same function.
+
+use crate::arith::{BbmType, BrokenBooth, Multiplier};
+use crate::runtime::{Runtime, SWEEP_BATCH};
+use crate::util::cli::Args;
+use crate::util::Pcg64;
+
+/// Verify one `(wl, ty)` artifact against the arith model on `n` random
+/// batches. Returns mismatch count (0 on success).
+pub fn verify_bbm(rt: &Runtime, wl: u32, ty: u32, vbl: u32, seed: u64) -> anyhow::Result<u64> {
+    let bty = if ty == 0 { BbmType::Type0 } else { BbmType::Type1 };
+    let m = BrokenBooth::new(wl, vbl, bty);
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = vec![0i32; SWEEP_BATCH];
+    let mut y = vec![0i32; SWEEP_BATCH];
+    for i in 0..SWEEP_BATCH {
+        x[i] = rng.operand(wl) as i32;
+        y[i] = rng.operand(wl) as i32;
+    }
+    let out = rt.bbm_multiply(wl, ty, &x, &y, vbl as i32)?;
+    let mut bad = 0;
+    for i in 0..SWEEP_BATCH {
+        if out[i] as i64 != m.multiply(x[i] as i64, y[i] as i64) {
+            bad += 1;
+        }
+    }
+    Ok(bad)
+}
+
+/// Verify the moments artifact against the rust sweep engine on a random
+/// chunk.
+pub fn verify_moments(rt: &Runtime, wl: u32, ty: u32, vbl: u32, seed: u64) -> anyhow::Result<u64> {
+    let bty = if ty == 0 { BbmType::Type0 } else { BbmType::Type1 };
+    let m = BrokenBooth::new(wl, vbl, bty);
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = vec![0i32; SWEEP_BATCH];
+    let mut y = vec![0i32; SWEEP_BATCH];
+    let mut stats = crate::util::stats::ErrorStats::new();
+    for i in 0..SWEEP_BATCH {
+        x[i] = rng.operand(wl) as i32;
+        y[i] = rng.operand(wl) as i32;
+        stats.push(m.error(x[i] as i64, y[i] as i64));
+    }
+    let (sum, sq, mn, cnt) = rt.error_moments(wl, ty, &x, &y, vbl as i32)?;
+    let ok = sum as i128 == stats.sum
+        && (sq - stats.sum_sq as f64).abs() <= 1e-6 * stats.sum_sq.max(1) as f64
+        && mn == stats.min_error()
+        && cnt as u64 == stats.nonzero;
+    Ok(if ok { 0 } else { 1 })
+}
+
+/// The `verify` subcommand: all artifacts vs oracles.
+pub fn verify(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_or("seed", 1u64)?;
+    let rt = crate::runtime::try_load_default()
+        .ok_or_else(|| anyhow::anyhow!("artifacts missing; run `make artifacts`"))?;
+    println!("platform: {}", rt.platform());
+    let mut failures = 0u64;
+    for (wl, ty) in [(12u32, 0u32), (12, 1), (16, 0), (16, 1)] {
+        for vbl in [0u32, 3, 9, 13] {
+            let bad = verify_bbm(&rt, wl, ty, vbl, seed + vbl as u64)?;
+            println!("bbm_wl{wl}_type{ty} vbl={vbl}: {bad} mismatches / {SWEEP_BATCH}");
+            failures += bad;
+        }
+    }
+    for (wl, ty) in [(12u32, 0u32), (12, 1), (10, 0)] {
+        for vbl in [0u32, 6, 9] {
+            let bad = verify_moments(&rt, wl, ty, vbl, seed + 100 + vbl as u64)?;
+            println!("moments_wl{wl}_type{ty} vbl={vbl}: {}", if bad == 0 { "OK" } else { "FAIL" });
+            failures += bad;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} cross-layer mismatches");
+    println!("verify: all artifacts match the rust oracles");
+    Ok(())
+}

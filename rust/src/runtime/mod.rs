@@ -1,0 +1,177 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the coordinator's hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire inference-side dependency: HLO text → `HloModuleProto` →
+//! `XlaComputation` → `PjRtLoadedExecutable` on the CPU PJRT client.
+//! One executable per model variant, compiled once and cached.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Block sizes baked into the artifacts (must match `python/compile/aot.py`).
+pub const SWEEP_BATCH: usize = 65536;
+/// FIR output block length.
+pub const FIR_BLOCK: usize = 4096;
+/// FIR tap count.
+pub const FIR_TAPS: usize = 30;
+
+/// A loaded, compiled artifact registry over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    names: Vec<String>,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifact directory (reads `manifest.txt`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let names = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.split('\t').next().expect("manifest line").to_string())
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, dir, names, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// PJRT platform string (reports).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compile-on-first-use) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        anyhow::ensure!(self.names.iter().any(|n| n == name), "unknown artifact {name}");
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(exe);
+        self.exes.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// of output literals (all artifacts lower with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Batched Broken-Booth multiply through the `bbm_wl{WL}_type{T}`
+    /// artifact. `x`/`y` length must equal [`SWEEP_BATCH`].
+    pub fn bbm_multiply(&self, wl: u32, ty: u32, x: &[i32], y: &[i32], vbl: i32) -> Result<Vec<i32>> {
+        anyhow::ensure!(x.len() == SWEEP_BATCH && y.len() == SWEEP_BATCH, "batch size");
+        let name = format!("bbm_wl{wl}_type{ty}");
+        let out = self.run(
+            &name,
+            &[xla::Literal::vec1(x), xla::Literal::vec1(y), xla::Literal::vec1(&[vbl])],
+        )?;
+        out[0].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Error-moment reduction through `moments_wl{WL}_type{T}`.
+    /// Returns `(sum, sum_sq, min, nonzero)`.
+    pub fn error_moments(
+        &self,
+        wl: u32,
+        ty: u32,
+        x: &[i32],
+        y: &[i32],
+        vbl: i32,
+    ) -> Result<(i64, f64, i64, i64)> {
+        anyhow::ensure!(x.len() == SWEEP_BATCH && y.len() == SWEEP_BATCH, "batch size");
+        let name = format!("moments_wl{wl}_type{ty}");
+        let out = self.run(
+            &name,
+            &[xla::Literal::vec1(x), xla::Literal::vec1(y), xla::Literal::vec1(&[vbl])],
+        )?;
+        let sum = out[0].to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let sq = out[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let mn = out[2].to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let cnt = out[3].to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((sum, sq, mn, cnt))
+    }
+
+    /// FIR block through `fir_wl{WL}_type0`: `x` is the history-prefixed
+    /// block (`FIR_BLOCK + FIR_TAPS − 1` samples), `h` the quantized taps.
+    pub fn fir_block(&self, wl: u32, x: &[i32], h: &[i32], vbl: i32) -> Result<Vec<i64>> {
+        anyhow::ensure!(x.len() == FIR_BLOCK + FIR_TAPS - 1, "fir block size");
+        anyhow::ensure!(h.len() == FIR_TAPS, "tap count");
+        let name = format!("fir_wl{wl}_type0");
+        let out = self.run(
+            &name,
+            &[xla::Literal::vec1(x), xla::Literal::vec1(h), xla::Literal::vec1(&[vbl])],
+        )?;
+        out[0].to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// SNR power accumulator: returns `(Σ ref², Σ (ref−sig)²)`.
+    pub fn snr_acc(&self, reference: &[f64], signal: &[f64]) -> Result<(f64, f64)> {
+        anyhow::ensure!(reference.len() == FIR_BLOCK && signal.len() == FIR_BLOCK);
+        let out = self.run(
+            "snr_acc",
+            &[xla::Literal::vec1(reference), xla::Literal::vec1(signal)],
+        )?;
+        let pr = out[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let pe = out[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((pr, pe))
+    }
+}
+
+/// Locate the repository's artifact directory (walks up from cwd) — lets
+/// tests/examples run from any working directory inside the repo.
+pub fn default_artifact_dir() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts").join("manifest.txt");
+        if cand.exists() {
+            return Some(dir.join("artifacts"));
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Shared runtime for tests/examples: `None` (with a notice) when the
+/// artifacts have not been built yet.
+pub fn try_load_default() -> Option<Runtime> {
+    let dir = default_artifact_dir()?;
+    match Runtime::load(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("runtime unavailable: {e:#}");
+            None
+        }
+    }
+}

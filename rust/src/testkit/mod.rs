@@ -1,0 +1,163 @@
+//! Minimal property-based testing engine — the offline stand-in for
+//! `proptest`, used by the coordinator/arith invariant suites.
+//!
+//! A property is a closure over generated inputs; the runner executes it
+//! on `cases` seeded-random inputs and, on failure, performs greedy
+//! shrinking via the generator's `shrink` hook before reporting the
+//! minimal counterexample.
+
+use crate::util::Pcg64;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+
+    /// Produce a random value.
+    fn gen(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate smaller values (default: none).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Inclusive integer range generator with halving shrinker.
+#[derive(Clone, Copy, Debug)]
+pub struct IntRange {
+    /// Low bound (inclusive).
+    pub lo: i64,
+    /// High bound (inclusive).
+    pub hi: i64,
+}
+
+impl Gen for IntRange {
+    type Value = i64;
+
+    fn gen(&self, rng: &mut Pcg64) -> i64 {
+        rng.range_i64(self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        // Shrink toward 0 (clamped into range).
+        for cand in [0, v / 2, v - v.signum()] {
+            let c = cand.clamp(self.lo, self.hi);
+            if c != *v && !out.contains(&c) {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+#[derive(Clone, Copy, Debug)]
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn gen(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Vector generator of random length `0..=max_len`.
+#[derive(Clone, Copy, Debug)]
+pub struct VecGen<G> {
+    /// Element generator.
+    pub elem: G,
+    /// Maximum length.
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+
+    fn gen(&self, rng: &mut Pcg64) -> Self::Value {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.elem.gen(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            let mut w = v.clone();
+            w.pop();
+            out.push(w);
+        }
+        out
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the (shrunk)
+/// counterexample on failure. `name` labels the failure message.
+pub fn check<G: Gen, F: Fn(&G::Value) -> bool>(name: &str, gen: &G, cases: u32, seed: u64, prop: F) {
+    let mut rng = Pcg64::new(seed, 0xbbf);
+    for case in 0..cases {
+        let v = gen.gen(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Shrink greedily.
+        let mut cur = v;
+        'outer: loop {
+            for cand in gen.shrink(&cur) {
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!("property '{name}' failed on case {case}; minimal counterexample: {cur:?}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs-nonneg", &IntRange { lo: -100, hi: 100 }, 500, 1, |v| v.abs() >= 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        // Fails for v >= 50; shrinker should find a small witness.
+        check("lt-50", &IntRange { lo: 0, hi: 1000 }, 500, 2, |v| *v < 50);
+    }
+
+    #[test]
+    fn pair_gen_shrinks_componentwise() {
+        let g = PairGen(IntRange { lo: 0, hi: 10 }, IntRange { lo: 0, hi: 10 });
+        let shr = g.shrink(&(10, 10));
+        assert!(shr.iter().any(|&(a, b)| a < 10 && b == 10));
+        assert!(shr.iter().any(|&(a, b)| a == 10 && b < 10));
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let g = VecGen { elem: IntRange { lo: 0, hi: 5 }, max_len: 7 };
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            assert!(g.gen(&mut rng).len() <= 7);
+        }
+    }
+}

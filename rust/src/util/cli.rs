@@ -1,0 +1,152 @@
+//! Minimal argv parser (offline stand-in for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Each repro/exec subcommand declares the options
+//! it accepts; unknown options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Free positional arguments in order.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (excluding the program/subcommand name).
+    ///
+    /// `known_flags` lists boolean options that do not consume a value.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        anyhow::anyhow!("option --{body} expects a value")
+                    })?;
+                    out.opts.insert(body.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .opts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))?;
+        v.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("invalid value for --{key}: {e}"))
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list of typed values, with default when absent.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> anyhow::Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("invalid list item for --{key}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = Args::parse(&sv(&["--wl", "12", "--vbl=7", "pos"]), &[]).unwrap();
+        assert_eq!(a.get("wl"), Some("12"));
+        assert_eq!(a.get("vbl"), Some("7"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn flags_do_not_consume_values() {
+        let a = Args::parse(&sv(&["--verbose", "x"]), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn typed_defaults_and_required() {
+        let a = Args::parse(&sv(&["--wl", "16"]), &[]).unwrap();
+        assert_eq!(a.get_or("wl", 8u32).unwrap(), 16);
+        assert_eq!(a.get_or("vbl", 3u32).unwrap(), 3);
+        assert_eq!(a.require::<u32>("wl").unwrap(), 16);
+        assert!(a.require::<u32>("missing").is_err());
+    }
+
+    #[test]
+    fn dangling_option_is_error() {
+        assert!(Args::parse(&sv(&["--wl"]), &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--vbls", "3, 6,9"]), &[]).unwrap();
+        assert_eq!(a.list_or::<u32>("vbls", &[]).unwrap(), vec![3, 6, 9]);
+        assert_eq!(a.list_or::<u32>("other", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let a = Args::parse(&sv(&["--wl", "twelve"]), &[]).unwrap();
+        assert!(a.get_or("wl", 8u32).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utilities: PRNG, CLI parsing, statistics, text reports.
+//!
+//! The build environment is offline (no `rand`, `clap`, `serde`,
+//! `criterion`), so this module provides the small, well-tested subset of
+//! those facilities the rest of the crate needs.
+
+pub mod cli;
+pub mod report;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

@@ -1,0 +1,178 @@
+//! Plain-text table / series rendering for the repro drivers, so every
+//! table and figure regenerator prints rows in the paper's own layout.
+
+/// A simple aligned-column text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a caption and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a data row (stringified by the caller).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = width[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.header, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// An (x, y) series printed as aligned two-column data — the textual form
+/// of a paper figure. Multiple named series can share one x column.
+#[derive(Debug)]
+pub struct Series {
+    title: String,
+    x_label: String,
+    names: Vec<String>,
+    xs: Vec<f64>,
+    ys: Vec<Vec<f64>>, // ys[series][point]
+}
+
+impl Series {
+    /// New figure with an x-axis label and one or more series names.
+    pub fn new(title: &str, x_label: &str, names: &[&str]) -> Self {
+        Series {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            names: names.iter().map(|s| s.to_string()).collect(),
+            xs: Vec::new(),
+            ys: vec![Vec::new(); names.len()],
+        }
+    }
+
+    /// Append one x position with a y value per series (NaN = missing).
+    pub fn point(&mut self, x: f64, ys: &[f64]) -> &mut Self {
+        assert_eq!(ys.len(), self.names.len());
+        self.xs.push(x);
+        for (col, &y) in self.ys.iter_mut().zip(ys) {
+            col.push(y);
+        }
+        self
+    }
+
+    /// Render as a column-aligned data block.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &self.title,
+            &std::iter::once(self.x_label.as_str())
+                .chain(self.names.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for (i, &x) in self.xs.iter().enumerate() {
+            let mut cells = vec![format!("{x:.6}")];
+            for col in &self.ys {
+                let y = col[i];
+                cells.push(if y.is_nan() { "-".into() } else { format!("{y:.6}") });
+            }
+            t.row(cells);
+        }
+        t.render()
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float like the paper's scientific-notation cells, e.g.
+/// `8.33e7` for 8.33 × 10⁷.
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    if (-2..2).contains(&exp) {
+        format!("{v:.3}")
+    } else {
+        let mant = v / 10f64.powi(exp);
+        format!("{mant:.2}e{exp}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "3".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("  a  bbb"));
+        assert!(r.contains("100"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn series_renders_missing_as_dash() {
+        let mut s = Series::new("fig", "x", &["y1", "y2"]);
+        s.point(1.0, &[2.0, f64::NAN]);
+        let r = s.render();
+        assert!(r.contains("fig"));
+        assert!(r.contains("-"));
+    }
+
+    #[test]
+    fn sci_formats() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(8.33e7), "8.33e7");
+        assert_eq!(sci(-1.71e2), "-1.71e2");
+        assert_eq!(sci(3.5), "3.500");
+    }
+}

@@ -1,0 +1,277 @@
+//! Streaming statistics accumulators used by the error-analysis engine and
+//! the DSP testbed (mean, MSE, min/max, probability of error, histogram).
+
+/// Streaming accumulator for the paper's error metrics (Table I):
+/// error mean, MSE, error probability, minimum (most negative) error.
+#[derive(Clone, Debug, Default)]
+pub struct ErrorStats {
+    /// Number of samples folded in.
+    pub n: u64,
+    /// Σ error.
+    pub sum: i128,
+    /// Σ error².
+    pub sum_sq: u128,
+    /// Count of samples with error ≠ 0.
+    pub nonzero: u64,
+    /// Most negative error seen.
+    pub min: i64,
+    /// Most positive error seen.
+    pub max: i64,
+}
+
+impl ErrorStats {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        ErrorStats { n: 0, sum: 0, sum_sq: 0, nonzero: 0, min: i64::MAX, max: i64::MIN }
+    }
+
+    /// Fold one error sample.
+    #[inline]
+    pub fn push(&mut self, err: i64) {
+        self.n += 1;
+        self.sum += err as i128;
+        self.sum_sq += (err as i128 * err as i128) as u128;
+        if err != 0 {
+            self.nonzero += 1;
+        }
+        if err < self.min {
+            self.min = err;
+        }
+        if err > self.max {
+            self.max = err;
+        }
+    }
+
+    /// Merge a partial accumulator (for sharded sweeps).
+    pub fn merge(&mut self, other: &ErrorStats) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.nonzero += other.nonzero;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Mean error (paper Eq. 1 averaged).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.n as f64
+    }
+
+    /// Mean squared error (paper Eq. 2).
+    pub fn mse(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum_sq as f64 / self.n as f64
+    }
+
+    /// Probability that the output is wrong.
+    pub fn error_prob(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.nonzero as f64 / self.n as f64
+    }
+
+    /// Minimum (most negative) error; 0 if no samples.
+    pub fn min_error(&self) -> i64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Maximum error; 0 if no samples.
+    pub fn max_error(&self) -> i64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Fixed-bin histogram over a symmetric normalized range `[-1, 1]`,
+/// used for Fig. 2 (error distribution normalized to the max output).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bin counts.
+    pub bins: Vec<u64>,
+    /// Normalization denominator (e.g. 2^19 for a 10×10 signed multiplier).
+    pub scale: f64,
+    /// Total samples.
+    pub n: u64,
+}
+
+impl Histogram {
+    /// `bins` buckets spanning normalized error in `[-1, 1]`.
+    pub fn new(bins: usize, scale: f64) -> Self {
+        Histogram { bins: vec![0; bins], scale, n: 0 }
+    }
+
+    /// Fold one raw error value.
+    #[inline]
+    pub fn push(&mut self, err: i64) {
+        let x = err as f64 / self.scale; // normalized to [-1, 1]
+        let b = ((x + 1.0) / 2.0 * self.bins.len() as f64) as isize;
+        let b = b.clamp(0, self.bins.len() as isize - 1) as usize;
+        self.bins[b] += 1;
+        self.n += 1;
+    }
+
+    /// Merge a partial histogram with identical geometry.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bins.len(), other.bins.len());
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.n += other.n;
+    }
+
+    /// Percentage share per bin.
+    pub fn percentages(&self) -> Vec<f64> {
+        self.bins
+            .iter()
+            .map(|&c| if self.n == 0 { 0.0 } else { 100.0 * c as f64 / self.n as f64 })
+            .collect()
+    }
+
+    /// Center of bin `i` in normalized units.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        -1.0 + (i as f64 + 0.5) * 2.0 / self.bins.len() as f64
+    }
+}
+
+/// Welford running mean/variance for f64 signals (SNR measurement).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    /// Sample count.
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Moments {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one sample.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Mean power (second raw moment) = var + mean².
+    pub fn power(&self) -> f64 {
+        self.variance() + self.mean * self.mean
+    }
+}
+
+/// 10·log10 ratio helper (dB).
+pub fn db(ratio: f64) -> f64 {
+    10.0 * ratio.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_stats_basic() {
+        let mut s = ErrorStats::new();
+        for e in [-2i64, 0, 3, -5] {
+            s.push(e);
+        }
+        assert_eq!(s.n, 4);
+        assert_eq!(s.sum, -4);
+        assert_eq!(s.sum_sq, (4 + 9 + 25) as u128);
+        assert_eq!(s.nonzero, 3);
+        assert_eq!(s.min_error(), -5);
+        assert_eq!(s.max_error(), 3);
+        assert!((s.mean() - (-1.0)).abs() < 1e-12);
+        assert!((s.mse() - 9.5).abs() < 1e-12);
+        assert!((s.error_prob() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_stats_merge_equals_sequential() {
+        let mut a = ErrorStats::new();
+        let mut b = ErrorStats::new();
+        let mut whole = ErrorStats::new();
+        for e in -100..0 {
+            a.push(e);
+            whole.push(e);
+        }
+        for e in 0..50 {
+            b.push(e);
+            whole.push(e);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, whole.n);
+        assert_eq!(a.sum, whole.sum);
+        assert_eq!(a.sum_sq, whole.sum_sq);
+        assert_eq!(a.nonzero, whole.nonzero);
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+    }
+
+    #[test]
+    fn histogram_bins_and_percentages() {
+        let mut h = Histogram::new(4, 100.0);
+        h.push(-100); // -1.0 -> bin 0
+        h.push(-30); // -0.3 -> bin 1
+        h.push(20); // 0.2 -> bin 2
+        h.push(99); // 0.99 -> bin 3
+        assert_eq!(h.bins, vec![1, 1, 1, 1]);
+        let p = h.percentages();
+        assert!(p.iter().all(|&x| (x - 25.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(4, 10.0);
+        h.push(1000);
+        h.push(-1000);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[3], 1);
+    }
+
+    #[test]
+    fn moments_match_closed_form() {
+        let mut m = Moments::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.push(x);
+        }
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.variance() - 1.25).abs() < 1e-12);
+        assert!((m.power() - (1.25 + 6.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn db_of_ten_is_ten() {
+        assert!((db(10.0) - 10.0).abs() < 1e-12);
+    }
+}

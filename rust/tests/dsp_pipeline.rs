@@ -1,0 +1,102 @@
+//! Integration: the DSP substrate end to end — filter design → testbed →
+//! fixed-point datapath with approximate multipliers → SNR, reproducing
+//! the paper's §III.C numbers in test form, plus failure-injection on the
+//! coordinator contracts.
+
+use bbm::arith::{BbmType, BrokenBooth, ExactBooth};
+use bbm::dsp::{evaluate, paper_lowpass, Testbed};
+
+#[test]
+fn application_story_holds() {
+    // The paper's full §III.C narrative as one assertion chain.
+    let tb = Testbed::generate(1 << 13, 42);
+    let d = paper_lowpass(30).unwrap();
+
+    // Testbed calibration.
+    let snr_in = tb.snr_in_db();
+    assert!((snr_in - (-3.47)).abs() < 0.3, "SNR_in {snr_in}");
+
+    // Double precision baseline and WL=16 fixed point.
+    let dbl = evaluate(&tb, &d.taps, None);
+    assert!(dbl > 22.0 && dbl < 33.0, "double {dbl}");
+    let m16 = ExactBooth::new(16);
+    let fx16 = evaluate(&tb, &d.taps, Some((&m16, 16)));
+    assert!((fx16 - dbl).abs() < 1.0, "WL16 {fx16} vs double {dbl}");
+
+    // The paper's operating point: VBL=13 costs well under 1.5 dB.
+    let bbm13 = BrokenBooth::new(16, 13, BbmType::Type0);
+    let s13 = evaluate(&tb, &d.taps, Some((&bbm13, 16)));
+    assert!(fx16 - s13 < 1.5, "VBL=13 cost {} dB", fx16 - s13);
+
+    // Deep breaking destroys the filter (Fig. 8b right edge).
+    let bbm21 = BrokenBooth::new(16, 21, BbmType::Type0);
+    let s21 = evaluate(&tb, &d.taps, Some((&bbm21, 16)));
+    assert!(s21 < s13 - 10.0, "VBL=21 {s21} vs VBL=13 {s13}");
+}
+
+#[test]
+fn snr_monotone_over_vbl_grid() {
+    let tb = Testbed::generate(1 << 12, 7);
+    let d = paper_lowpass(30).unwrap();
+    let mut last = f64::INFINITY;
+    for vbl in [11u32, 15, 17, 19, 21] {
+        let m = BrokenBooth::new(16, vbl, BbmType::Type0);
+        let s = evaluate(&tb, &d.taps, Some((&m, 16)));
+        assert!(s <= last + 0.75, "vbl={vbl}: {s} after {last}");
+        last = s;
+    }
+}
+
+#[test]
+fn different_seeds_same_conclusions() {
+    // The headline claims must not be seed-artifacts.
+    let d = paper_lowpass(30).unwrap();
+    for seed in [1u64, 2, 3] {
+        let tb = Testbed::generate(1 << 12, seed);
+        let m16 = ExactBooth::new(16);
+        let bbm13 = BrokenBooth::new(16, 13, BbmType::Type0);
+        let a = evaluate(&tb, &d.taps, Some((&m16, 16)));
+        let b = evaluate(&tb, &d.taps, Some((&bbm13, 16)));
+        assert!(a - b < 1.5, "seed {seed}: cost {}", a - b);
+        assert!(b > 20.0, "seed {seed}: SNR {b}");
+    }
+}
+
+#[test]
+fn type1_costs_more_snr_than_type0() {
+    let tb = Testbed::generate(1 << 12, 11);
+    let d = paper_lowpass(30).unwrap();
+    let t0 = BrokenBooth::new(16, 15, BbmType::Type0);
+    let t1 = BrokenBooth::new(16, 15, BbmType::Type1);
+    let s0 = evaluate(&tb, &d.taps, Some((&t0, 16)));
+    let s1 = evaluate(&tb, &d.taps, Some((&t1, 16)));
+    assert!(s1 <= s0 + 0.2, "type1 {s1} should not beat type0 {s0}");
+}
+
+#[test]
+fn block_planner_failure_injection() {
+    // Degenerate stream lengths must still partition correctly.
+    use bbm::coordinator::plan_blocks;
+    for n in [1usize, 29, 30, 31, 4095, 4096, 4097, 8192] {
+        let plans = plan_blocks(n, 4096, 30);
+        let total: usize = plans.iter().map(|p| p.out_len).sum();
+        assert_eq!(total, n, "n={n}");
+        assert!(plans.iter().all(|p| p.out_len >= 1));
+    }
+}
+
+#[test]
+fn batcher_rejects_malformed_requests() {
+    use bbm::coordinator::{Batcher, MultiplyRequest};
+    let mut b = Batcher::new(16, std::time::Duration::from_millis(1));
+    // Mismatched operand lengths.
+    assert!(b
+        .offer(MultiplyRequest { id: 1, x: vec![1, 2], y: vec![3] })
+        .is_err());
+    // Oversize request.
+    assert!(b
+        .offer(MultiplyRequest { id: 2, x: vec![0; 17], y: vec![0; 17] })
+        .is_err());
+    // State unharmed: a valid request still batches.
+    assert!(b.offer(MultiplyRequest { id: 3, x: vec![1; 16], y: vec![2; 16] }).unwrap().len() == 1);
+}

@@ -1,0 +1,147 @@
+//! Integration: the gate-level netlists against the arithmetic oracles
+//! across the full parameter grid the paper exercises, plus property
+//! tests over the multiplier invariants — the "big cross-validation"
+//! from DESIGN.md §4.
+
+use bbm::arith::{BbmType, MultKind, Multiplier};
+use bbm::gate::builders::{build_multiplier, decode_signed, decode_unsigned, encode_operands};
+use bbm::gate::eval_once;
+use bbm::testkit::{check, IntRange, PairGen};
+use bbm::util::Pcg64;
+
+fn gate_vs_arith(kind: MultKind, wl: u32, level: u32, samples: u32, seed: u64) {
+    let m = kind.build(wl, level);
+    let Some(nl) = build_multiplier(kind, wl, level) else { return };
+    let mut rng = Pcg64::seeded(seed);
+    let (lo, hi) = m.operand_range();
+    for _ in 0..samples {
+        let x = rng.range_i64(lo, hi);
+        let y = rng.range_i64(lo, hi);
+        let bits = eval_once(&nl, &encode_operands(x, y, wl));
+        let got =
+            if m.signed() { decode_signed(&bits) } else { decode_unsigned(&bits) as i64 };
+        assert_eq!(got, m.multiply(x, y), "{kind} wl={wl} level={level} x={x} y={y}");
+    }
+}
+
+#[test]
+fn full_grid_paper_configs() {
+    // The exact configurations the paper synthesizes.
+    for (wl, vbl) in [(4u32, 3u32), (8, 7), (12, 11), (16, 15), (16, 13)] {
+        gate_vs_arith(MultKind::BbmType0, wl, vbl, 300, 1);
+        gate_vs_arith(MultKind::BbmType1, wl, vbl, 300, 2);
+    }
+    for (wl, level) in [(8u32, 5u32), (12, 9), (16, 11)] {
+        gate_vs_arith(MultKind::Bam, wl, level, 300, 3);
+        gate_vs_arith(MultKind::Kulkarni, wl, level, 300, 4);
+    }
+}
+
+#[test]
+fn property_gate_equals_arith_random_configs() {
+    // Random (wl, vbl) pairs — the generator covers corner breaking
+    // levels including vbl = 2·wl (everything nullified).
+    let gen = PairGen(IntRange { lo: 2, hi: 8 }, IntRange { lo: 0, hi: 16 });
+    check("gate-eq-arith-bbm", &gen, 40, 5, |&(wl2, vbl)| {
+        let wl = (wl2 as u32 / 2) * 2;
+        if wl < 4 {
+            return true;
+        }
+        let vbl = (vbl as u32).min(2 * wl);
+        let m = bbm::arith::BrokenBooth::new(wl, vbl, BbmType::Type1);
+        let nl = bbm::gate::builders::build_broken_booth(wl, vbl, BbmType::Type1);
+        let mut rng = Pcg64::seeded((wl + vbl) as u64);
+        (0..64).all(|_| {
+            let x = rng.operand(wl);
+            let y = rng.operand(wl);
+            decode_signed(&eval_once(&nl, &encode_operands(x, y, wl))) == m.multiply(x, y)
+        })
+    });
+}
+
+#[test]
+fn property_type0_bounds_type1() {
+    // |error(Type0)| <= |error(Type1)| does NOT hold pointwise, but
+    // Type0's error can never be positive while Type1's can; check the
+    // signs and the containment of Type0 error within the row-mask bound
+    // Σ (2^vbl − 1) per row.
+    let gen = PairGen(IntRange { lo: -2048, hi: 2047 }, IntRange { lo: -2048, hi: 2047 });
+    for vbl in [3u32, 7, 11] {
+        let t0 = bbm::arith::BrokenBooth::new(12, vbl, BbmType::Type0);
+        let bound = (12 / 2) as i64 * ((1i64 << vbl) - 1);
+        check("type0-error-bound", &gen, 500, vbl as u64, |&(x, y)| {
+            let e = t0.error(x, y);
+            e <= 0 && e >= -bound
+        });
+    }
+}
+
+#[test]
+fn property_exactness_frontier() {
+    // If both operands' low bits are zero "below" the breaking level,
+    // Type0 is exact: x multiple of 2^vbl makes every row's masked part
+    // vanish.
+    for vbl in [2u32, 4, 6] {
+        let gen = PairGen(IntRange { lo: -8, hi: 7 }, IntRange { lo: -2048, hi: 2047 });
+        let m = bbm::arith::BrokenBooth::new(12, vbl, BbmType::Type0);
+        check("multiple-of-2^vbl-exact", &gen, 300, vbl as u64, |&(xh, y)| {
+            let x = xh << vbl; // low vbl bits zero
+            if x < -2048 || x > 2047 {
+                return true;
+            }
+            m.error(x, y) == 0
+        });
+    }
+}
+
+#[test]
+fn property_fir_netlist_streaming() {
+    // Random tap/signal values through the sequential FIR netlist equal
+    // the behavioural model cycle by cycle.
+    use bbm::gate::builders::{build_fir, FirSpec};
+    use bbm::gate::Simulator;
+    let spec = FirSpec { taps: 6, wl: 8, vbl: 5, ty: BbmType::Type0 };
+    let nl = build_fir(spec);
+    let m = bbm::arith::BrokenBooth::new(8, 5, BbmType::Type0);
+    let gen = IntRange { lo: 0, hi: i64::MAX };
+    check("fir-netlist-stream", &gen, 12, 9, |&seed| {
+        let mut rng = Pcg64::seeded(seed as u64);
+        let coeffs: Vec<i64> = (0..6).map(|_| rng.operand(8)).collect();
+        let xs: Vec<i64> = (0..24).map(|_| rng.operand(8)).collect();
+        let mut sim = Simulator::new(&nl);
+        let mut words = vec![0u64; nl.inputs.len()];
+        for (k, &c) in coeffs.iter().enumerate() {
+            for b in 0..8 {
+                words[8 + k * 8 + b] = ((c >> b) & 1) as u64;
+            }
+        }
+        for (n, &x) in xs.iter().enumerate() {
+            for b in 0..8 {
+                words[b] = ((x >> b) & 1) as u64;
+            }
+            sim.step(&words);
+            if n >= 1 {
+                let out = sim.output_words();
+                let mut v: i64 = 0;
+                for (i, &w) in out.iter().enumerate() {
+                    if w & 1 == 1 {
+                        v |= 1 << i;
+                    }
+                }
+                let bits = spec.acc_bits();
+                let got = (v << (64 - bits)) >> (64 - bits);
+                let want: i64 = (0..6)
+                    .map(|k| {
+                        let idx = n as i64 - 1 - k as i64;
+                        let xv = if idx >= 0 { xs[idx as usize] } else { 0 };
+                        m.multiply(xv, coeffs[k])
+                    })
+                    .sum();
+                if got != want {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
