@@ -1,0 +1,26 @@
+# Convenience targets. Tier-1 verify is the `verify` target; everything
+# runs offline with default features (no network, no XLA).
+
+.PHONY: verify build test clippy artifacts bench clean
+
+verify: build test clippy
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# AOT-compile the PJRT artifacts (needs the python/JAX toolchain; only
+# required for `--features pjrt` execution, never for tier-1).
+artifacts:
+	cd python && python -m compile.aot --outdir ../artifacts
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean

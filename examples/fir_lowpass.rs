@@ -3,20 +3,26 @@
 //!
 //! * designs the 30-tap Parks-McClellan low-pass from scratch,
 //! * generates the Fig.-7 testbed (three band-limited signals + noise),
-//! * streams the signal through the AOT-compiled approximate-FIR
-//!   artifact via the coordinator (rust → PJRT → XLA-compiled Pallas
-//!   kernel), for the accurate (VBL=0) and approximate (VBL=13) filters,
+//! * streams the signal through the coordinator's approximate-FIR
+//!   pipeline on a pluggable execution backend (native batched engine
+//!   by default; `pjrt` streams the AOT XLA artifacts), for the
+//!   accurate (VBL=0) and approximate (VBL=13) filters,
 //! * measures SNR_out for both and the gate-level power of both
 //!   datapaths, reproducing the paper's headline: double-digit power
 //!   saving for a fraction of a dB of SNR.
 //!
-//! Run with: `make artifacts && cargo run --release --example fir_lowpass`
+//! Run with: `cargo run --release --example fir_lowpass [-- native|pjrt]`
 
+use bbm::backend::BackendKind;
 use bbm::coordinator::DspServer;
 use bbm::dsp::{paper_lowpass, snr_out_db, Testbed};
 use bbm::repro::filter_app::run_fir_case;
 
 fn main() -> anyhow::Result<()> {
+    let kind = match std::env::args().nth(1) {
+        Some(s) => BackendKind::parse(&s)?,
+        None => BackendKind::Native,
+    };
     let n = 1 << 14;
     println!("== designing the paper's filter (Remez exchange) ==");
     let design = paper_lowpass(30)?;
@@ -26,8 +32,9 @@ fn main() -> anyhow::Result<()> {
     let tb = Testbed::generate(n, 42);
     println!("SNR_in = {:.2} dB (paper: -3.47 dB)", tb.snr_in_db());
 
-    println!("\n== streaming through the PJRT FIR artifact (L3 -> PJRT -> Pallas) ==");
-    let srv = DspServer::start_default(8)?;
+    println!("\n== streaming through the coordinator FIR pipeline (backend: {kind}) ==");
+    let srv = DspServer::start_kind(kind, 8)?;
+    println!("engine: {}", srv.backend_name());
     let gd = (design.taps.len() as f64 - 1.0) / 2.0;
     let t0 = std::time::Instant::now();
     let y_acc = srv.filter_signal(&tb.x, &design.taps, 16, 0)?;

@@ -2,13 +2,15 @@
 //!
 //! 1. Build a Broken-Booth multiplier model and inspect its error.
 //! 2. Cross-check the gate-level netlist against the arithmetic model.
-//! 3. Run a batch through the AOT-compiled PJRT artifact (L1 Pallas →
-//!    L2 JAX → HLO → rust), proving the three layers agree.
+//! 3. Run a batch through an execution backend (`bbm::backend`) and
+//!    prove it agrees with the scalar model — the native engine by
+//!    default; pass `pjrt` (with `--features pjrt` and built
+//!    artifacts) to drive the AOT XLA path instead.
 //!
-//! Run with: `cargo run --release --example quickstart`
-//! (build `make artifacts` first for step 3; it is skipped otherwise).
+//! Run with: `cargo run --release --example quickstart [-- native|pjrt]`
 
 use bbm::arith::{BbmType, BrokenBooth, Multiplier};
+use bbm::backend::Backend;
 use bbm::error::{exhaustive_stats, SweepConfig};
 use bbm::gate::builders::{build_broken_booth, decode_signed, encode_operands};
 use bbm::gate::eval_once;
@@ -45,23 +47,33 @@ fn main() -> anyhow::Result<()> {
     println!("  gate == arith on 200 random operands: {}", if ok { "OK" } else { "FAIL" });
     assert!(ok);
 
-    // --- 3. PJRT artifact (three-layer path) ----------------------------
-    match bbm::runtime::try_load_default() {
-        None => println!("artifacts not built; run `make artifacts` to exercise the PJRT path"),
-        Some(rt) => {
-            println!("PJRT platform: {}", rt.platform());
-            let n = bbm::runtime::SWEEP_BATCH;
+    // --- 3. execution backend (batched serving path) --------------------
+    let kind = match std::env::args().nth(1) {
+        Some(s) => bbm::backend::BackendKind::parse(&s)?,
+        None => bbm::backend::BackendKind::Native,
+    };
+    match kind.create() {
+        Err(e) => println!("backend `{kind}` unavailable ({e:#}); step 3 skipped"),
+        Ok(backend) => {
+            println!("backend: {}", backend.name());
+            let n = bbm::backend::SWEEP_BATCH;
             let mut x = vec![0i32; n];
             let mut y = vec![0i32; n];
             for i in 0..n {
                 x[i] = rng.operand(12) as i32;
                 y[i] = rng.operand(12) as i32;
             }
-            let out = rt.bbm_multiply(12, 0, &x, &y, 9)?;
+            let out = backend.multiply(&bbm::backend::MultiplyRequest {
+                kind: bbm::arith::MultKind::BbmType0,
+                wl: 12,
+                level: 9,
+                x: x.clone(),
+                y: y.clone(),
+            })?;
             let mism = (0..n)
-                .filter(|&i| out[i] as i64 != m.multiply(x[i] as i64, y[i] as i64))
+                .filter(|&i| out.p[i] != m.multiply(x[i] as i64, y[i] as i64))
                 .count();
-            println!("  pallas/XLA vs arith over {n} lanes: {mism} mismatches");
+            println!("  backend vs arith over {n} lanes: {mism} mismatches");
             assert_eq!(mism, 0);
         }
     }

@@ -1,25 +1,33 @@
 //! Domain example: the coordinator as a streaming DSP *service* — many
 //! concurrent client streams, bounded-queue backpressure, dynamic
-//! batching of multiply traffic, and live metrics.
+//! batching of multiply traffic, and live metrics, all on a pluggable
+//! execution backend.
 //!
 //! Four client threads each stream their own signal through the shared
 //! FIR service (two accurate, two approximate); a fifth client hammers
-//! the batched-multiply endpoint. The example asserts every stream's
-//! output matches the behavioural oracle — ordering and isolation under
-//! concurrency is exactly what the coordinator must guarantee.
+//! the batched-multiply endpoint through the micro-batcher. The example
+//! asserts every stream's output matches the behavioural oracle —
+//! ordering and isolation under concurrency is exactly what the
+//! coordinator must guarantee, whatever engine serves it.
 //!
-//! Run with: `make artifacts && cargo run --release --example serve_pipeline`
+//! Run with: `cargo run --release --example serve_pipeline [-- native|pjrt]`
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use bbm::arith::{BbmType, BrokenBooth, Multiplier};
-use bbm::coordinator::{Batcher, DspServer, MultiplyRequest};
+use bbm::arith::{BbmType, BrokenBooth, MultKind, Multiplier};
+use bbm::backend::{BackendKind, MultiplyRequest, SWEEP_BATCH};
+use bbm::coordinator::{Batcher, DspServer, LaneRequest};
 use bbm::dsp::{paper_lowpass, FixedFilter, Testbed};
 use bbm::util::Pcg64;
 
 fn main() -> anyhow::Result<()> {
-    let srv = Arc::new(DspServer::start_default(4)?);
+    let kind = match std::env::args().nth(1) {
+        Some(s) => BackendKind::parse(&s)?,
+        None => BackendKind::Native,
+    };
+    let srv = Arc::new(DspServer::start_kind(kind, 4)?);
+    println!("serving on backend: {}", srv.backend_name());
     let design = Arc::new(paper_lowpass(30)?);
 
     // --- four concurrent filter streams ---------------------------------
@@ -46,25 +54,23 @@ fn main() -> anyhow::Result<()> {
 
     // --- one batched-multiply client ------------------------------------
     let mism = {
-        let mut batcher = Batcher::new(bbm::runtime::SWEEP_BATCH, Duration::from_millis(2));
+        let mut batcher = Batcher::new(SWEEP_BATCH, Duration::from_millis(2));
         let mut rng = Pcg64::seeded(9);
         let oracle = BrokenBooth::new(16, 13, BbmType::Type0);
         let mut mism = 0usize;
         let mut run_batch = |b: bbm::coordinator::PackedBatch| -> anyhow::Result<usize> {
-            let (rtx, rrx) = std::sync::mpsc::channel();
-            srv.submit(bbm::coordinator::Job::Multiply {
+            let pending = srv.submit_multiply(MultiplyRequest {
+                kind: MultKind::BbmType0,
                 wl: 16,
-                ty: 0,
+                level: 13,
                 x: b.x.clone(),
                 y: b.y.clone(),
-                vbl: 13,
-                reply: rtx,
             });
-            let out = rrx.recv().expect("reply")?;
+            let out = pending.wait()?;
             let mut bad = 0;
             for &(_id, off, len) in &b.extents {
                 for i in off..off + len {
-                    if out[i] as i64 != oracle.multiply(b.x[i] as i64, b.y[i] as i64) {
+                    if out.p[i] != oracle.multiply(b.x[i] as i64, b.y[i] as i64) {
                         bad += 1;
                     }
                 }
@@ -75,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             let n = 1024 + (rng.below(8192)) as usize;
             let x: Vec<i32> = (0..n).map(|_| rng.operand(16) as i32).collect();
             let y: Vec<i32> = (0..n).map(|_| rng.operand(16) as i32).collect();
-            for b in batcher.offer(MultiplyRequest { id: req_id, x, y })? {
+            for b in batcher.offer(LaneRequest { id: req_id, x, y })? {
                 mism += run_batch(b)?;
             }
         }
@@ -87,7 +93,7 @@ fn main() -> anyhow::Result<()> {
 
     for h in handles {
         let (stream, worst) = h.join().expect("client thread")?;
-        println!("stream {stream}: PJRT vs behavioural oracle, worst |Δ| = {worst:.3e}");
+        println!("stream {stream}: served vs behavioural oracle, worst |Δ| = {worst:.3e}");
         assert!(worst < 1e-9, "stream {stream} diverged");
     }
     println!("batched multiply: {mism} mismatches across 40 interleaved requests");

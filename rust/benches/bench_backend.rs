@@ -1,0 +1,72 @@
+//! Backend-API batching baseline: NativeBackend batched multiply
+//! throughput vs progressively finer request granularities, down to the
+//! degenerate one-lane-per-request loop. Future SIMD/GPU backends are
+//! measured against the 64k-batched native line; the per-element line
+//! bounds the request-framing overhead batching amortizes away.
+
+include!("harness.rs");
+
+use bbm::arith::{MultKind, Multiplier};
+use bbm::backend::{Backend, MultiplyRequest, NativeBackend, SWEEP_BATCH};
+use bbm::util::Pcg64;
+
+fn main() {
+    let backend = NativeBackend::new();
+    let mut rng = Pcg64::seeded(3);
+    let x: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
+    let y: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
+    let kind = MultKind::BbmType0;
+
+    // Built once: the batched line measures the engine, not request
+    // construction (the finer-granularity lines below deliberately
+    // include construction — that is the framing overhead they bound).
+    let batched = MultiplyRequest { kind, wl: 16, level: 13, x: x.clone(), y: y.clone() };
+    report("native batched multiply, one 64k request", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(backend.multiply(&batched).unwrap().p.len());
+    });
+
+    report("native multiply, 64 x 1k requests", 10, SWEEP_BATCH as f64, || {
+        let mut total = 0usize;
+        for c in 0..64 {
+            let lo = c * 1024;
+            let req = MultiplyRequest {
+                kind,
+                wl: 16,
+                level: 13,
+                x: x[lo..lo + 1024].to_vec(),
+                y: y[lo..lo + 1024].to_vec(),
+            };
+            total += backend.multiply(&req).unwrap().p.len();
+        }
+        std::hint::black_box(total);
+    });
+
+    // Per-element scalar loop through the backend API: one request per
+    // lane. This is the framing-overhead bound; only a slice of the
+    // batch keeps the bench wall-clock sane, throughput is per-lane.
+    let n_scalar = 4096usize;
+    report("native multiply, one request per lane", 5, n_scalar as f64, || {
+        let mut total = 0usize;
+        for i in 0..n_scalar {
+            let req = MultiplyRequest {
+                kind,
+                wl: 16,
+                level: 13,
+                x: vec![x[i]],
+                y: vec![y[i]],
+            };
+            total += backend.multiply(&req).unwrap().p.len();
+        }
+        std::hint::black_box(total);
+    });
+
+    // Raw oracle loop (no API at all): the ceiling any backend chases.
+    let m = kind.build(16, 13);
+    report("raw arith oracle loop, 64k multiplies", 10, SWEEP_BATCH as f64, || {
+        let mut acc = 0i64;
+        for i in 0..SWEEP_BATCH {
+            acc = acc.wrapping_add(m.multiply(x[i] as i64, y[i] as i64));
+        }
+        std::hint::black_box(acc);
+    });
+}

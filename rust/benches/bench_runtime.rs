@@ -1,31 +1,70 @@
-//! Three-layer hot-path benches: PJRT executions from the rust
-//! coordinator (batched multiply, moments reduction, FIR blocks) vs the
-//! native rust engine — the §Perf comparison in EXPERIMENTS.md.
+//! Serving hot-path benches through the execution-backend API: batched
+//! multiply, moments reduction, FIR blocks and SNR accumulation on the
+//! selected engine vs the raw scalar oracle loop — the §Perf comparison
+//! in EXPERIMENTS.md.
+//!
+//! Select the engine with `cargo bench --bench bench_runtime -- pjrt`
+//! (default `native`). The pjrt engine needs `--features pjrt` plus
+//! built artifacts; unavailable engines skip with a notice.
 
 include!("harness.rs");
 
-use bbm::arith::{BbmType, BrokenBooth, Multiplier};
-use bbm::runtime::{self, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH};
+use bbm::arith::{BbmType, BrokenBooth, MultKind, Multiplier};
+use bbm::backend::{
+    Backend, BackendKind, FirRequest, MomentsRequest, MultiplyRequest, SnrRequest, FIR_BLOCK,
+    FIR_TAPS, SWEEP_BATCH,
+};
 use bbm::util::Pcg64;
 
 fn main() {
-    let Some(rt) = runtime::try_load_default() else {
-        println!("bench_runtime SKIPPED: run `make artifacts` first");
-        return;
+    let kind = match std::env::args().skip(1).find(|a| !a.starts_with('-')) {
+        Some(s) => match BackendKind::parse(&s) {
+            Ok(k) => k,
+            Err(e) => {
+                println!("bench_runtime: {e}");
+                return;
+            }
+        },
+        None => BackendKind::Native,
     };
+    let backend = match kind.create() {
+        Ok(b) => b,
+        Err(e) => {
+            println!("bench_runtime SKIPPED: backend `{kind}` unavailable ({e:#})");
+            return;
+        }
+    };
+    println!("engine: {}", backend.name());
+
     let mut rng = Pcg64::seeded(1);
     let x: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
     let y: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(16) as i32).collect();
 
-    report("pjrt bbm_multiply 64k lanes (wl16 type0)", 10, SWEEP_BATCH as f64, || {
-        std::hint::black_box(rt.bbm_multiply(16, 0, &x, &y, 13).unwrap().len());
+    // Requests are built once — `Backend::*` only borrows them, and the
+    // scalar-oracle baseline below allocates nothing per iteration either,
+    // so the comparison isolates engine time.
+    let mul_req = MultiplyRequest {
+        kind: MultKind::BbmType0,
+        wl: 16,
+        level: 13,
+        x: x.clone(),
+        y: y.clone(),
+    };
+    report("backend multiply 64k lanes (wl16 type0)", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(backend.multiply(&mul_req).unwrap().p.len());
     });
-    report("pjrt error_moments 64k lanes (wl12)", 10, SWEEP_BATCH as f64, || {
-        let xs: &Vec<i32> = &x;
-        std::hint::black_box(rt.error_moments(12, 0, xs, &y, 6).unwrap().0);
+    let mom_req = MomentsRequest {
+        kind: MultKind::BbmType0,
+        wl: 12,
+        level: 6,
+        x: x.clone(),
+        y: y.clone(),
+    };
+    report("backend moments 64k lanes (wl12)", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(backend.moments(&mom_req).unwrap().sum);
     });
     let m = BrokenBooth::new(16, 13, BbmType::Type0);
-    report("native rust same 64k multiplies", 10, SWEEP_BATCH as f64, || {
+    report("scalar oracle same 64k multiplies", 10, SWEEP_BATCH as f64, || {
         let mut acc = 0i64;
         for i in 0..SWEEP_BATCH {
             acc = acc.wrapping_add(m.multiply(x[i] as i64, y[i] as i64));
@@ -34,12 +73,15 @@ fn main() {
     });
     let xb: Vec<i32> = (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| rng.operand(16) as i32).collect();
     let h: Vec<i32> = (0..FIR_TAPS).map(|_| rng.operand(16) as i32).collect();
-    report("pjrt fir_block 4096 samples (wl16)", 5, FIR_BLOCK as f64, || {
-        std::hint::black_box(rt.fir_block(16, &xb, &h, 13).unwrap().len());
+    let fir_req = FirRequest { wl: 16, x: xb, h, vbl: 13 };
+    report("backend fir_block 4096 samples (wl16)", 5, FIR_BLOCK as f64, || {
+        std::hint::black_box(backend.fir(&fir_req).unwrap().y.len());
     });
-    report("pjrt snr_acc 4096", 10, FIR_BLOCK as f64, || {
-        let a = vec![1.0f64; FIR_BLOCK];
-        let b = vec![0.5f64; FIR_BLOCK];
-        std::hint::black_box(rt.snr_acc(&a, &b).unwrap().0);
+    let snr_req = SnrRequest {
+        reference: vec![1.0f64; FIR_BLOCK],
+        signal: vec![0.5f64; FIR_BLOCK],
+    };
+    report("backend snr_acc 4096", 10, FIR_BLOCK as f64, || {
+        std::hint::black_box(backend.snr(&snr_req).unwrap().ref_power);
     });
 }

@@ -1,0 +1,457 @@
+//! Pluggable execution backends: the typed request/response API every
+//! engine that serves the paper's workloads implements.
+//!
+//! The coordinator (L3) used to be hardwired to the PJRT [`crate::runtime`]
+//! through an ad-hoc job enum; this module decouples them behind the
+//! [`Backend`] trait so bit-accurate native Rust, PJRT/XLA, or a future
+//! SIMD/GPU engine can serve the same four workloads interchangeably:
+//!
+//! | request                | response          | paper workload                    |
+//! |------------------------|-------------------|-----------------------------------|
+//! | [`MomentsRequest`]     | [`ErrorMoments`]  | Table I / Fig. 2 error sweeps     |
+//! | [`FirRequest`]         | [`FirBlock`]      | §III.C streaming FIR blocks       |
+//! | [`MultiplyRequest`]    | [`ProductBlock`]  | batched multiply traffic          |
+//! | [`SnrRequest`]         | [`SnrAccum`]      | SNR power accumulation            |
+//!
+//! Implementations:
+//!
+//! * [`NativeBackend`] (default, always available) — batched loops over
+//!   the [`crate::arith`] oracles with exact `i128` reductions. Supports
+//!   every [`MultKind`] family and arbitrary batch lengths.
+//! * [`PjrtBackend`] (`--features pjrt`) — the AOT artifact path through
+//!   [`crate::runtime`]. Supports the Broken-Booth families the
+//!   artifacts were compiled for.
+//! * [`crate::testkit::MockBackend`] — instrumented test double for
+//!   coordinator backpressure/metrics tests.
+//!
+//! See `backend/README.md` for the feature-flag matrix and a checklist
+//! for adding a new backend.
+
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::arith::MultKind;
+
+/// Operand lanes per multiply/moments batch. Baked into the PJRT
+/// artifacts (must match `python/compile/aot.py`); the coordinator
+/// chunks sweep traffic at this size so every engine sees the same
+/// request shapes (the native backend itself accepts any length).
+pub const SWEEP_BATCH: usize = 65536;
+/// FIR output samples per block.
+pub const FIR_BLOCK: usize = 4096;
+/// FIR tap count (the paper's 30-tap Parks-McClellan low-pass).
+pub const FIR_TAPS: usize = 30;
+
+/// Typed error for backend operations.
+///
+/// Hand-implements `std::error::Error` (the offline build cannot carry
+/// the `thiserror` proc-macro); converts into `anyhow::Error` via `?`
+/// at the coordinator boundary.
+#[derive(Debug, Clone)]
+pub enum BackendError {
+    /// The backend cannot serve this request shape/family at all.
+    Unsupported {
+        /// Backend name.
+        backend: String,
+        /// What was asked for.
+        what: String,
+    },
+    /// Request failed validation (length mismatch, bad word length, …).
+    Shape(String),
+    /// The engine accepted the request but failed executing it.
+    Execution(String),
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Unsupported { backend, what } => {
+                write!(f, "backend `{backend}` does not support {what}")
+            }
+            BackendError::Shape(what) => write!(f, "invalid request: {what}"),
+            BackendError::Execution(what) => write!(f, "execution failed: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Result alias for backend operations.
+pub type BackendResult<T> = std::result::Result<T, BackendError>;
+
+/// Batched multiply: `p[i] = kind(wl, level).multiply(x[i], y[i])`.
+///
+/// Operands are `i32` carriers — two's-complement values for signed
+/// families, unsigned values for BAM/Kulkarni/ETM (see
+/// [`crate::arith::Multiplier`]). `x` and `y` must be the same length;
+/// the native backend accepts any length, PJRT requires exactly
+/// [`SWEEP_BATCH`] lanes.
+#[derive(Clone, Debug)]
+pub struct MultiplyRequest {
+    /// Multiplier family.
+    pub kind: MultKind,
+    /// Operand word length in bits.
+    pub wl: u32,
+    /// Breaking/precision knob (VBL, K, split — family-specific).
+    pub level: u32,
+    /// Left operands.
+    pub x: Vec<i32>,
+    /// Right operands.
+    pub y: Vec<i32>,
+}
+
+/// Batched multiply response: exact `i64` products (unsigned WL=16
+/// products overflow `i32`, so the carrier is wide for every family).
+#[derive(Clone, Debug)]
+pub struct ProductBlock {
+    /// One product per input lane.
+    pub p: Vec<i64>,
+}
+
+/// Error-moment reduction over one operand chunk: per-lane
+/// `err = approx − exact`, reduced to the four Table-I moments.
+#[derive(Clone, Debug)]
+pub struct MomentsRequest {
+    /// Multiplier family.
+    pub kind: MultKind,
+    /// Operand word length in bits.
+    pub wl: u32,
+    /// Breaking/precision knob.
+    pub level: u32,
+    /// Left operands.
+    pub x: Vec<i32>,
+    /// Right operands.
+    pub y: Vec<i32>,
+}
+
+/// Reduced error moments for one chunk. Mirrors the PJRT moments
+/// artifact's output tuple: the error-squared sum is carried as `f64`
+/// (exact for chunk sums below 2^53 — always true at [`SWEEP_BATCH`]
+/// chunking) and the maximum error is *not* tracked.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ErrorMoments {
+    /// Σ err.
+    pub sum: i64,
+    /// Σ err².
+    pub sum_sq: f64,
+    /// min err (zeros included; `0` for an exact multiplier).
+    pub min: i64,
+    /// Count of lanes with err ≠ 0.
+    pub nonzero: i64,
+}
+
+/// One streaming FIR block: `x` is the history-prefixed input
+/// (`FIR_BLOCK + FIR_TAPS − 1` samples), `h` the quantized taps, and
+/// tap products are Broken-Booth Type0 at `vbl` (`vbl = 0` = exact):
+/// `y[n] = Σ_k multiply(x[n + T − 1 − k], h[k])`.
+#[derive(Clone, Debug)]
+pub struct FirRequest {
+    /// Word length of samples and taps.
+    pub wl: u32,
+    /// History-prefixed input block (`FIR_BLOCK + FIR_TAPS − 1`).
+    pub x: Vec<i32>,
+    /// Quantized taps (`FIR_TAPS`).
+    pub h: Vec<i32>,
+    /// Breaking level (0 = accurate filter), `<= 2·wl`.
+    pub vbl: u32,
+}
+
+/// FIR block response: exact `i64` accumulators, one per output sample.
+#[derive(Clone, Debug)]
+pub struct FirBlock {
+    /// `FIR_BLOCK` accumulated outputs.
+    pub y: Vec<i64>,
+}
+
+/// SNR power accumulation over one block pair (both [`FIR_BLOCK`] long,
+/// zero-padded by the caller).
+#[derive(Clone, Debug)]
+pub struct SnrRequest {
+    /// Reference block.
+    pub reference: Vec<f64>,
+    /// Signal block.
+    pub signal: Vec<f64>,
+}
+
+/// SNR accumulator response.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SnrAccum {
+    /// Σ ref².
+    pub ref_power: f64,
+    /// Σ (ref − sig)².
+    pub err_power: f64,
+}
+
+/// An execution engine serving the four paper workloads.
+///
+/// Backends are *not* required to be `Send`: the coordinator constructs
+/// them inside its executor thread via a `Send` factory closure (real
+/// PJRT client handles cannot cross threads). Requests and responses
+/// are plain data and always cross threads freely.
+pub trait Backend {
+    /// Human-readable engine identifier (platform string for reports).
+    fn name(&self) -> String;
+
+    /// Batched multiply.
+    fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock>;
+
+    /// Error-moment reduction.
+    fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments>;
+
+    /// One FIR block.
+    fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock>;
+
+    /// SNR power accumulation.
+    fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum>;
+}
+
+/// Common request validation shared by backends.
+pub(crate) fn validate_pair(x: &[i32], y: &[i32], wl: u32) -> BackendResult<()> {
+    if x.len() != y.len() {
+        return Err(BackendError::Shape(format!(
+            "operand length mismatch: {} vs {}",
+            x.len(),
+            y.len()
+        )));
+    }
+    if wl == 0 || wl > 16 {
+        return Err(BackendError::Shape(format!("word length {wl} outside 1..=16")));
+    }
+    Ok(())
+}
+
+/// Family-specific `(wl, level)` bounds, mirroring the `arith`
+/// constructor asserts. Enforced here so a malformed request comes back
+/// as a [`BackendError::Shape`] reply instead of panicking (and thereby
+/// killing) the coordinator's executor thread.
+pub(crate) fn validate_family(kind: MultKind, wl: u32, level: u32) -> BackendResult<()> {
+    let even = wl % 2 == 0;
+    let ok = match kind {
+        // ExactBooth ignores the level knob entirely.
+        MultKind::ExactBooth => even,
+        MultKind::BbmType0 | MultKind::BbmType1 => even && level <= 2 * wl,
+        MultKind::Bam => level <= 2 * wl,
+        MultKind::Kulkarni => even && level <= 2 * wl + 2,
+        MultKind::Etm => level <= wl,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(BackendError::Shape(format!(
+            "invalid (wl={wl}, level={level}) for multiplier family `{kind}`"
+        )))
+    }
+}
+
+/// FIR request validation (the fixed artifact shape is the contract for
+/// every backend, so they stay interchangeable).
+pub(crate) fn validate_fir(req: &FirRequest) -> BackendResult<()> {
+    if req.x.len() != FIR_BLOCK + FIR_TAPS - 1 {
+        return Err(BackendError::Shape(format!(
+            "fir input must be FIR_BLOCK + FIR_TAPS - 1 = {} samples, got {}",
+            FIR_BLOCK + FIR_TAPS - 1,
+            req.x.len()
+        )));
+    }
+    if req.h.len() != FIR_TAPS {
+        return Err(BackendError::Shape(format!(
+            "expected {} taps, got {}",
+            FIR_TAPS,
+            req.h.len()
+        )));
+    }
+    if req.wl == 0 || req.wl > 16 {
+        return Err(BackendError::Shape(format!("word length {} outside 1..=16", req.wl)));
+    }
+    // The FIR datapath is Broken-Booth Type0; enforce its bounds here
+    // so both engines reject what the oracle constructor would panic on.
+    validate_family(MultKind::BbmType0, req.wl, req.vbl)
+}
+
+/// SNR request validation.
+pub(crate) fn validate_snr(req: &SnrRequest) -> BackendResult<()> {
+    if req.reference.len() != FIR_BLOCK || req.signal.len() != FIR_BLOCK {
+        return Err(BackendError::Shape(format!(
+            "snr blocks must both be FIR_BLOCK = {FIR_BLOCK} samples, got {} / {}",
+            req.reference.len(),
+            req.signal.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Enumeration of the execution backends, with `MultKind`-style CLI
+/// parsing for drivers, examples and benches (`--backend native|pjrt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Bit-accurate batched loops over the `arith` oracles (default).
+    Native,
+    /// AOT artifacts through the PJRT runtime (`--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// All kinds in presentation order.
+    pub const ALL: [BackendKind; 2] = [BackendKind::Native, BackendKind::Pjrt];
+
+    /// Parse from the CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "native" | "rust" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            other => anyhow::bail!("unknown backend kind: {other} (expected native|pjrt)"),
+        })
+    }
+
+    /// Construct the backend on the *current* thread. PJRT fails here
+    /// when the `pjrt` feature is off, when only the vendored `xla`
+    /// stub is linked, or when the artifacts have not been built.
+    pub fn create(self) -> anyhow::Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+            BackendKind::Pjrt => create_pjrt(),
+        }
+    }
+
+    /// A `Send` factory for constructing the backend inside another
+    /// thread (how the coordinator's executor uses it — PJRT client
+    /// handles must not cross threads).
+    pub fn factory(self) -> impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static {
+        move || self.create()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn create_pjrt() -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(PjrtBackend::load_default()?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn create_pjrt() -> anyhow::Result<Box<dyn Backend>> {
+    anyhow::bail!("pjrt backend requires building with `--features pjrt`")
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        BackendKind::parse(s).map_err(|e| e.to_string())
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Parse an artifact `manifest.txt`: one `name\tfile` line per artifact.
+/// Blank lines are skipped; a line with an empty name field is an error
+/// (the seed `expect`-panicked here).
+pub fn parse_manifest(text: &str) -> anyhow::Result<Vec<String>> {
+    let mut names = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let name = line.split('\t').next().unwrap_or("").trim();
+        if name.is_empty() {
+            anyhow::bail!("manifest line {}: missing artifact name in {raw:?}", lineno + 1);
+        }
+        names.push(name.to_string());
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip_and_aliases() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(&k.to_string()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("rust").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+    }
+
+    #[test]
+    fn native_kind_creates() {
+        let b = BackendKind::Native.create().unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_kind_errors_without_feature() {
+        let e = BackendKind::Pjrt.create().map(|_| ()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[test]
+    fn manifest_parses_and_rejects_malformed() {
+        let names = parse_manifest("bbm_wl12_type0\tbbm_wl12_type0.hlo.txt\n\nsnr_acc\tf.txt\n")
+            .unwrap();
+        assert_eq!(names, vec!["bbm_wl12_type0", "snr_acc"]);
+        let err = parse_manifest("good\tg.txt\n\tmissing-name.hlo.txt\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(validate_pair(&[1, 2], &[3], 8).is_err());
+        assert!(validate_pair(&[1], &[2], 17).is_err());
+        assert!(validate_pair(&[1], &[2], 8).is_ok());
+        let bad = FirRequest { wl: 16, x: vec![0; 10], h: vec![0; FIR_TAPS], vbl: 0 };
+        assert!(validate_fir(&bad).is_err());
+        let x = vec![0; FIR_BLOCK + FIR_TAPS - 1];
+        let bad = FirRequest { wl: 9, x: x.clone(), h: vec![0; FIR_TAPS], vbl: 0 };
+        assert!(validate_fir(&bad).is_err(), "odd wl must be rejected, not panic");
+        let bad = FirRequest { wl: 16, x, h: vec![0; FIR_TAPS], vbl: 33 };
+        assert!(validate_fir(&bad).is_err(), "vbl > 2*wl must be rejected");
+        let bad = SnrRequest { reference: vec![0.0; 3], signal: vec![0.0; FIR_BLOCK] };
+        assert!(validate_snr(&bad).is_err());
+    }
+
+    #[test]
+    fn family_bounds_mirror_constructor_asserts() {
+        use crate::arith::MultKind;
+        // Everything validate_family accepts must construct without
+        // panicking — the whole point of the check.
+        for kind in MultKind::ALL {
+            for wl in 1..=16u32 {
+                for level in 0..=(2 * wl + 2) {
+                    if validate_family(kind, wl, level).is_ok() {
+                        let _ = kind.build(wl, level);
+                    }
+                }
+            }
+        }
+        // And the known-bad shapes are rejected.
+        assert!(validate_family(MultKind::BbmType0, 9, 0).is_err());
+        assert!(validate_family(MultKind::BbmType0, 8, 17).is_err());
+        assert!(validate_family(MultKind::Kulkarni, 8, 19).is_err());
+        assert!(validate_family(MultKind::Etm, 8, 9).is_err());
+        assert!(validate_family(MultKind::Bam, 9, 3).is_ok(), "bam allows odd wl");
+    }
+
+    #[test]
+    fn backend_error_messages() {
+        let e = BackendError::Unsupported { backend: "pjrt".into(), what: "etm".into() };
+        assert!(e.to_string().contains("pjrt"));
+        let e: anyhow::Error = BackendError::Shape("nope".into()).into();
+        assert!(e.to_string().contains("nope"));
+    }
+}

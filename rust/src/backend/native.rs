@@ -1,0 +1,211 @@
+//! The default execution backend: bit-accurate batched loops over the
+//! [`crate::arith`] oracles, no external dependencies.
+//!
+//! Each request builds its multiplier model once and streams every
+//! operand lane through it in flat loops — the per-lane workloads are
+//! stateless, and the moments reduction accumulates Σerr and Σerr²
+//! exactly in `i128`, so no chunking is ever needed for correctness.
+//! (The PJRT artifacts' per-[`super::SWEEP_BATCH`]-chunk `f64` contract
+//! is strictly looser: Σerr² is folded to the artifact-shaped `f64`
+//! response exactly once, at the very end.) Batch length is arbitrary;
+//! the coordinator happens to send [`super::SWEEP_BATCH`]-sized chunks
+//! because that is what the PJRT engine requires.
+
+use crate::arith::{Multiplier, MultKind};
+
+use super::{
+    validate_family, validate_fir, validate_pair, validate_snr, Backend, BackendResult,
+    ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest, ProductBlock, SnrAccum,
+    SnrRequest, FIR_TAPS,
+};
+
+/// Batched native engine over the `arith` oracles.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// The native engine (stateless; construction is free).
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        let m = req.kind.build(req.wl, req.level);
+        let p = req
+            .x
+            .iter()
+            .zip(&req.y)
+            .map(|(&x, &y)| m.multiply(x as i64, y as i64))
+            .collect();
+        Ok(ProductBlock { p })
+    }
+
+    fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        let m = req.kind.build(req.wl, req.level);
+        let mut sum = 0i128;
+        let mut sum_sq = 0i128;
+        let mut min = i64::MAX;
+        let mut nonzero = 0i64;
+        for (&x, &y) in req.x.iter().zip(&req.y) {
+            let e = m.error(x as i64, y as i64);
+            sum += e as i128;
+            sum_sq += e as i128 * e as i128;
+            if e != 0 {
+                nonzero += 1;
+            }
+            if e < min {
+                min = e;
+            }
+        }
+        if req.x.is_empty() {
+            min = 0;
+        }
+        // Σerr² is exact in i128; the single fold to the artifact-shaped
+        // f64 response is the only rounding (and is exact below 2^53 —
+        // every paper configuration).
+        Ok(ErrorMoments { sum: sum as i64, sum_sq: sum_sq as f64, min, nonzero })
+    }
+
+    fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock> {
+        validate_fir(req)?;
+        // Broken-Booth Type0 with VBL = 0 *is* the exact modified-Booth
+        // multiplier, so one model covers the accurate and broken filters.
+        let m = MultKind::BbmType0.build(req.wl, req.vbl);
+        let out_len = req.x.len() - FIR_TAPS + 1;
+        let mut y = Vec::with_capacity(out_len);
+        for n in 0..out_len {
+            let mut acc = 0i64;
+            for (k, &hk) in req.h.iter().enumerate() {
+                // Same operand order as the Pallas kernel and the
+                // behavioural FixedFilter: multiply(sample, tap).
+                acc += m.multiply(req.x[n + FIR_TAPS - 1 - k] as i64, hk as i64);
+            }
+            y.push(acc);
+        }
+        Ok(FirBlock { y })
+    }
+
+    fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum> {
+        validate_snr(req)?;
+        let mut ref_power = 0.0f64;
+        let mut err_power = 0.0f64;
+        for (&r, &s) in req.reference.iter().zip(&req.signal) {
+            ref_power += r * r;
+            let d = r - s;
+            err_power += d * d;
+        }
+        Ok(SnrAccum { ref_power, err_power })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{FIR_BLOCK, FIR_TAPS};
+    use crate::testkit::draw_operands;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn multiply_matches_scalar_oracle_random_all_kinds() {
+        let b = NativeBackend::new();
+        for kind in MultKind::ALL {
+            let (wl, level) = (10u32, 5u32);
+            let (x, y) = draw_operands(kind, wl, 4096, 11);
+            let out =
+                b.multiply(&MultiplyRequest { kind, wl, level, x: x.clone(), y: y.clone() })
+                    .unwrap();
+            let m = kind.build(wl, level);
+            for i in 0..x.len() {
+                assert_eq!(out.p[i], m.multiply(x[i] as i64, y[i] as i64), "{kind} lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn moments_match_scalar_stats() {
+        let b = NativeBackend::new();
+        let kind = MultKind::BbmType0;
+        let (wl, level) = (12u32, 6u32);
+        let (x, y) = draw_operands(kind, wl, 5000, 23);
+        let got = b
+            .moments(&MomentsRequest { kind, wl, level, x: x.clone(), y: y.clone() })
+            .unwrap();
+        let m = kind.build(wl, level);
+        let mut stats = crate::util::stats::ErrorStats::new();
+        for i in 0..x.len() {
+            stats.push(m.error(x[i] as i64, y[i] as i64));
+        }
+        assert_eq!(got.sum as i128, stats.sum);
+        assert_eq!(got.sum_sq, stats.sum_sq as f64);
+        assert_eq!(got.min, stats.min_error());
+        assert_eq!(got.nonzero as u64, stats.nonzero);
+    }
+
+    #[test]
+    fn moments_of_exact_multiplier_are_zero() {
+        let b = NativeBackend::new();
+        let (x, y) = draw_operands(MultKind::ExactBooth, 8, 1024, 3);
+        let got = b
+            .moments(&MomentsRequest { kind: MultKind::ExactBooth, wl: 8, level: 0, x, y })
+            .unwrap();
+        assert_eq!(got, ErrorMoments { sum: 0, sum_sq: 0.0, min: 0, nonzero: 0 });
+    }
+
+    #[test]
+    fn fir_block_matches_direct_convolution() {
+        let b = NativeBackend::new();
+        let mut rng = Pcg64::seeded(7);
+        let x: Vec<i32> =
+            (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| rng.operand(14) as i32).collect();
+        let h: Vec<i32> = (0..FIR_TAPS).map(|_| rng.operand(14) as i32).collect();
+        let out = b.fir(&FirRequest { wl: 14, x: x.clone(), h: h.clone(), vbl: 0 }).unwrap();
+        assert_eq!(out.y.len(), FIR_BLOCK);
+        for n in [0usize, 1, 100, FIR_BLOCK - 1] {
+            let want: i64 = (0..FIR_TAPS)
+                .map(|k| x[n + FIR_TAPS - 1 - k] as i64 * h[k] as i64)
+                .sum();
+            assert_eq!(out.y[n], want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn snr_accumulates_powers() {
+        let b = NativeBackend::new();
+        let mut rng = Pcg64::seeded(5);
+        let reference: Vec<f64> = (0..FIR_BLOCK).map(|_| rng.gaussian()).collect();
+        let signal: Vec<f64> = (0..FIR_BLOCK).map(|_| rng.gaussian() * 0.1).collect();
+        let got = b
+            .snr(&SnrRequest { reference: reference.clone(), signal: signal.clone() })
+            .unwrap();
+        let want_pr: f64 = reference.iter().map(|v| v * v).sum();
+        let want_pe: f64 =
+            reference.iter().zip(&signal).map(|(r, s)| (r - s) * (r - s)).sum();
+        assert!((got.ref_power - want_pr).abs() < 1e-9 * want_pr.abs());
+        assert!((got.err_power - want_pe).abs() < 1e-9 * want_pe.abs());
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let b = NativeBackend::new();
+        let bad = MultiplyRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            x: vec![1, 2],
+            y: vec![3],
+        };
+        assert!(b.multiply(&bad).is_err());
+        let bad = FirRequest { wl: 16, x: vec![0; 7], h: vec![0; FIR_TAPS], vbl: 0 };
+        assert!(b.fir(&bad).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! The PJRT execution backend: adapts [`crate::runtime::Runtime`] (AOT
+//! HLO artifacts on a CPU PJRT client) to the [`Backend`] trait.
+//!
+//! Only compiled under `--features pjrt`. The artifacts are compiled
+//! for the Broken-Booth families (`bbm_wl{WL}_type{T}`,
+//! `moments_wl{WL}_type{T}`, `fir_wl{WL}_type0`, `snr_acc`), so multiply
+//! and moments requests for other [`MultKind`] families return
+//! [`BackendError::Unsupported`] — callers fall back to
+//! [`super::NativeBackend`] for those.
+
+use crate::arith::MultKind;
+use crate::runtime::Runtime;
+
+use super::{
+    validate_family, validate_fir, validate_pair, validate_snr, Backend, BackendError,
+    BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
+    ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
+};
+
+/// PJRT/XLA engine over an artifact directory.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Wrap an already-loaded runtime.
+    pub fn new(rt: Runtime) -> PjrtBackend {
+        PjrtBackend { rt }
+    }
+
+    /// Load from an artifact directory (reads `manifest.txt`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::load(dir)? })
+    }
+
+    /// Load from the repository's default artifact directory.
+    pub fn load_default() -> anyhow::Result<PjrtBackend> {
+        let dir = crate::runtime::default_artifact_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/manifest.txt not found; run `make artifacts`"))?;
+        PjrtBackend::load(dir)
+    }
+
+    /// The wrapped runtime (direct artifact access for benches).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Map a multiplier family onto the artifact type index.
+    fn artifact_type(&self, kind: MultKind) -> BackendResult<u32> {
+        match kind {
+            // VBL = 0 turns either broken type into the exact multiplier,
+            // so the exact family maps onto the type0 artifact.
+            MultKind::ExactBooth | MultKind::BbmType0 => Ok(0),
+            MultKind::BbmType1 => Ok(1),
+            other => Err(BackendError::Unsupported {
+                backend: self.name(),
+                what: format!("multiplier family `{other}` (no AOT artifact)"),
+            }),
+        }
+    }
+
+    fn check_batch(&self, n: usize) -> BackendResult<()> {
+        if n != SWEEP_BATCH {
+            return Err(BackendError::Shape(format!(
+                "pjrt artifacts are compiled for exactly {SWEEP_BATCH} lanes, got {n}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Artifacts are compiled per `(workload, wl, type)`; a combination
+    /// the manifest does not list (e.g. WL=8) is unsupported here, not
+    /// an execution failure — callers fall back to the native backend.
+    fn require_artifact(&self, name: &str) -> BackendResult<()> {
+        if self.rt.names().iter().any(|n| n == name) {
+            Ok(())
+        } else {
+            Err(BackendError::Unsupported {
+                backend: self.name(),
+                what: format!("artifact `{name}` (not in manifest)"),
+            })
+        }
+    }
+}
+
+fn exec_err(e: anyhow::Error) -> BackendError {
+    BackendError::Execution(format!("{e:#}"))
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt({})", self.rt.platform())
+    }
+
+    fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        self.check_batch(req.x.len())?;
+        let ty = self.artifact_type(req.kind)?;
+        self.require_artifact(&format!("bbm_wl{}_type{ty}", req.wl))?;
+        let level = if req.kind == MultKind::ExactBooth { 0 } else { req.level };
+        let out = self
+            .rt
+            .bbm_multiply(req.wl, ty, &req.x, &req.y, level as i32)
+            .map_err(exec_err)?;
+        Ok(ProductBlock { p: out.into_iter().map(|v| v as i64).collect() })
+    }
+
+    fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        self.check_batch(req.x.len())?;
+        let ty = self.artifact_type(req.kind)?;
+        self.require_artifact(&format!("moments_wl{}_type{ty}", req.wl))?;
+        let level = if req.kind == MultKind::ExactBooth { 0 } else { req.level };
+        let (sum, sum_sq, min, nonzero) = self
+            .rt
+            .error_moments(req.wl, ty, &req.x, &req.y, level as i32)
+            .map_err(exec_err)?;
+        Ok(ErrorMoments { sum, sum_sq, min, nonzero })
+    }
+
+    fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock> {
+        validate_fir(req)?;
+        self.require_artifact(&format!("fir_wl{}_type0", req.wl))?;
+        // The artifact ABI takes the level as a scalar i32 input.
+        let y = self.rt.fir_block(req.wl, &req.x, &req.h, req.vbl as i32).map_err(exec_err)?;
+        Ok(FirBlock { y })
+    }
+
+    fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum> {
+        validate_snr(req)?;
+        self.require_artifact("snr_acc")?;
+        let (ref_power, err_power) =
+            self.rt.snr_acc(&req.reference, &req.signal).map_err(exec_err)?;
+        Ok(SnrAccum { ref_power, err_power })
+    }
+}

@@ -1,13 +1,16 @@
-//! Dynamic micro-batcher: packs variable-size requests into the fixed
-//! operand batches the PJRT artifacts expect (`SWEEP_BATCH` lanes),
-//! flushing on capacity or linger timeout — the vLLM-router-style
-//! batching policy scaled down to this paper's request shapes.
+//! Dynamic micro-batcher: packs variable-size [`LaneRequest`]s into the
+//! fixed operand batches the execution backends prefer (`SWEEP_BATCH`
+//! lanes — mandatory for PJRT artifacts, cache-shaped for the native
+//! engine), flushing on capacity or linger timeout — the
+//! vLLM-router-style batching policy scaled down to this paper's
+//! request shapes. A [`PackedBatch`] becomes one
+//! [`crate::backend::MultiplyRequest`] through the server.
 
 use std::time::{Duration, Instant};
 
 /// One pending request: caller-tagged id plus its operand pairs.
 #[derive(Clone, Debug)]
-pub struct MultiplyRequest {
+pub struct LaneRequest {
     /// Caller tag for demultiplexing results.
     pub id: u64,
     /// Left operands.
@@ -32,7 +35,7 @@ pub struct PackedBatch {
 pub struct Batcher {
     capacity: usize,
     linger: Duration,
-    pending: Vec<MultiplyRequest>,
+    pending: Vec<LaneRequest>,
     pending_lanes: usize,
     oldest: Option<Instant>,
 }
@@ -52,7 +55,7 @@ impl Batcher {
     /// up to two: the previous batch flushed on overflow, plus the new
     /// one if the request exactly fills it. Requests larger than the
     /// capacity are rejected.
-    pub fn offer(&mut self, req: MultiplyRequest) -> anyhow::Result<Vec<PackedBatch>> {
+    pub fn offer(&mut self, req: LaneRequest) -> anyhow::Result<Vec<PackedBatch>> {
         anyhow::ensure!(req.x.len() == req.y.len(), "operand length mismatch");
         anyhow::ensure!(req.x.len() <= self.capacity, "request exceeds batch capacity");
         let mut out = Vec::new();
@@ -105,8 +108,8 @@ mod tests {
     use super::*;
     use crate::testkit::{check, IntRange, VecGen};
 
-    fn req(id: u64, n: usize) -> MultiplyRequest {
-        MultiplyRequest { id, x: vec![id as i32; n], y: vec![-(id as i32); n] }
+    fn req(id: u64, n: usize) -> LaneRequest {
+        LaneRequest { id, x: vec![id as i32; n], y: vec![-(id as i32); n] }
     }
 
     #[test]

@@ -2,18 +2,21 @@
 //!
 //! The paper's contribution is an arithmetic unit, so (per the
 //! architecture rules) L3 is a lean but real serving layer: a bounded
-//! job queue in front of a dedicated PJRT executor thread, an
-//! overlap-save block planner for streaming FIR requests, a dynamic
-//! micro-batcher for multiply traffic, and metrics. See
-//! [`server::DspServer`] for the public API; `examples/serve_pipeline.rs`
-//! drives the full loop.
+//! job queue in front of a dedicated executor thread that owns a
+//! pluggable execution [`crate::backend::Backend`], an overlap-save
+//! block planner for streaming FIR requests, a dynamic micro-batcher
+//! for multiply traffic, and metrics. The coordinator itself never
+//! names a concrete engine — callers pick one via
+//! [`crate::backend::BackendKind`] (native by default, PJRT behind the
+//! `pjrt` feature). See [`server::DspServer`] for the public API;
+//! `examples/serve_pipeline.rs` drives the full loop.
 
 pub mod batcher;
 pub mod blocks;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batcher, MultiplyRequest, PackedBatch};
+pub use batcher::{Batcher, LaneRequest, PackedBatch};
 pub use blocks::{block_input, pad_signal, plan_blocks, BlockPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{DspServer, Job};
+pub use server::{DspServer, Pending, QueueFull};

@@ -1,148 +1,143 @@
-//! The L3 coordinator server: a dedicated PJRT executor thread behind a
-//! bounded job queue, with streaming FIR filtering, exhaustive error
-//! sweeps and SNR accumulation as the request types.
+//! The L3 coordinator server: a dedicated executor thread behind a
+//! bounded job queue, generic over the execution [`Backend`], with
+//! streaming FIR filtering, exhaustive error sweeps and SNR
+//! accumulation as the request types.
 //!
 //! Topology (one box = one thread):
 //!
 //! ```text
-//!  callers ──▶ [bounded sync_channel]  ──▶ executor (owns Runtime)
-//!     ▲            backpressure               │ PJRT execute
+//!  callers ──▶ [bounded sync_channel]  ──▶ executor (owns Box<dyn Backend>)
+//!     ▲            backpressure               │ backend.multiply/fir/…
 //!     └──────────── per-job reply channels ◀──┘
 //! ```
 //!
-//! The PJRT CPU client parallelizes inside an execution, so a single
-//! executor thread keeps the device saturated while the bounded queue
-//! provides backpressure to producers — the same shape a vLLM-style
-//! router uses with one engine per device.
+//! The backend is constructed *inside* the executor thread from a
+//! `Send` factory (PJRT client handles cannot cross threads; the
+//! native backend does not care). One executor thread keeps an engine
+//! saturated while the bounded queue provides backpressure to
+//! producers — the same shape a vLLM-style router uses with one engine
+//! per device. Callers never see the backend: they submit typed
+//! requests ([`MultiplyRequest`] → [`ProductBlock`], …) and wait on
+//! [`Pending`] replies.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::arith::{MultKind, Multiplier};
+use crate::backend::{
+    Backend, BackendKind, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
+    ProductBlock, SnrAccum, SnrRequest, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
+};
 use crate::dsp::fixed;
-use crate::runtime::{Runtime, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH};
 use crate::util::stats::ErrorStats;
 
 use super::blocks::{block_input, pad_signal, plan_blocks};
 use super::metrics::{Metrics, MetricsSnapshot};
 
-/// One queued job for the executor.
-pub enum Job {
-    /// Error-moment reduction over one operand chunk.
-    Moments {
-        /// Word length (selects the artifact).
-        wl: u32,
-        /// Breaking discipline (0/1).
-        ty: u32,
-        /// Left operands (SWEEP_BATCH).
-        x: Vec<i32>,
-        /// Right operands.
-        y: Vec<i32>,
-        /// Breaking level.
-        vbl: i32,
-        /// Reply channel.
-        reply: Sender<Result<(i64, f64, i64, i64)>>,
-    },
-    /// One FIR block.
-    Fir {
-        /// Word length (16 or 14).
-        wl: u32,
-        /// History-prefixed input block.
-        x: Vec<i32>,
-        /// Quantized taps.
-        h: Vec<i32>,
-        /// Breaking level (0 = accurate).
-        vbl: i32,
-        /// Reply channel.
-        reply: Sender<Result<Vec<i64>>>,
-    },
-    /// Batched multiply.
-    Multiply {
-        /// Word length.
-        wl: u32,
-        /// Type.
-        ty: u32,
-        /// Left operands (SWEEP_BATCH).
-        x: Vec<i32>,
-        /// Right operands.
-        y: Vec<i32>,
-        /// Breaking level.
-        vbl: i32,
-        /// Reply channel.
-        reply: Sender<Result<Vec<i32>>>,
-    },
-    /// SNR power accumulation over one block pair.
-    Snr {
-        /// Reference block (FIR_BLOCK).
-        reference: Vec<f64>,
-        /// Signal block.
-        signal: Vec<f64>,
-        /// Reply channel.
-        reply: Sender<Result<(f64, f64)>>,
-    },
-    /// Stop the executor.
+/// One queued unit of work: a typed request plus its reply channel.
+/// Private — callers use the typed `submit_*` APIs.
+enum Job {
+    Multiply(MultiplyRequest, Sender<Result<ProductBlock>>),
+    Moments(MomentsRequest, Sender<Result<ErrorMoments>>),
+    Fir(FirRequest, Sender<Result<FirBlock>>),
+    Snr(SnrRequest, Sender<Result<SnrAccum>>),
     Shutdown,
 }
+
+/// A reply that has not arrived yet; `wait` blocks for it.
+pub struct Pending<T> {
+    rx: Receiver<Result<T>>,
+}
+
+impl<T> Pending<T> {
+    fn new(rx: Receiver<Result<T>>) -> Pending<T> {
+        Pending { rx }
+    }
+
+    /// Block until the executor answers (or terminates).
+    pub fn wait(self) -> Result<T> {
+        self.rx.recv().map_err(|_| anyhow!("executor terminated before replying"))?
+    }
+}
+
+/// Returned by `try_submit_*` when the bounded queue is full; carries
+/// the rejected request back to the caller.
+#[derive(Debug)]
+pub struct QueueFull<T>(pub T);
+
+impl<T> std::fmt::Display for QueueFull<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("coordinator queue full (backpressure)")
+    }
+}
+
+impl<T: std::fmt::Debug> std::error::Error for QueueFull<T> {}
 
 /// Handle to a running coordinator.
 pub struct DspServer {
     tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
     join: Option<std::thread::JoinHandle<()>>,
+    backend_name: String,
 }
 
 impl DspServer {
-    /// Start the executor over the artifact directory with a bounded
-    /// queue of `depth` jobs (the backpressure window).
-    pub fn start(artifact_dir: impl Into<std::path::PathBuf>, depth: usize) -> Result<DspServer> {
-        let dir = artifact_dir.into();
+    /// Start the executor with a bounded queue of `depth` jobs (the
+    /// backpressure window). The backend is constructed by `factory`
+    /// *inside* the executor thread; a construction error is returned
+    /// here, synchronously.
+    pub fn start<F>(factory: F, depth: usize) -> Result<DspServer>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
         let (tx, rx) = sync_channel::<Job>(depth.max(1));
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
-        let (init_tx, init_rx) = sync_channel::<Result<()>>(1);
-        // The PJRT client is constructed *inside* the executor thread
-        // (its handles are not Send); jobs and replies are plain data.
+        let (init_tx, init_rx) = sync_channel::<Result<String>>(1);
         let join = std::thread::Builder::new()
             .name("bbm-executor".into())
             .spawn(move || {
-                let rt = match Runtime::load(&dir) {
-                    Ok(rt) => {
-                        let _ = init_tx.send(Ok(()));
-                        rt
+                let backend = match factory() {
+                    Ok(b) => {
+                        let _ = init_tx.send(Ok(b.name()));
+                        b
                     }
                     Err(e) => {
                         let _ = init_tx.send(Err(e));
                         return;
                     }
                 };
-                executor_loop(rt, rx, m2);
+                executor_loop(backend, rx, m2);
             })
             .expect("spawn executor");
-        init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
-        Ok(DspServer { tx, metrics, join: Some(join) })
+        let backend_name =
+            init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
+        Ok(DspServer { tx, metrics, join: Some(join), backend_name })
     }
 
-    /// Start against the repository's default artifact directory.
+    /// Start over a named backend kind (CLI selection).
+    pub fn start_kind(kind: BackendKind, depth: usize) -> Result<DspServer> {
+        Self::start(kind.factory(), depth)
+    }
+
+    /// Start over the native batched backend (always available).
+    pub fn native(depth: usize) -> Result<DspServer> {
+        Self::start_kind(BackendKind::Native, depth)
+    }
+
+    /// Default server: the native backend. (The PJRT artifact path is
+    /// opt-in via [`DspServer::start_kind`] with `BackendKind::Pjrt`.)
     pub fn start_default(depth: usize) -> Result<DspServer> {
-        let dir = crate::runtime::default_artifact_dir()
-            .ok_or_else(|| anyhow!("artifacts/manifest.txt not found; run `make artifacts`"))?;
-        Self::start(dir, depth)
+        Self::native(depth)
     }
 
-    /// Submit a job (blocks when the queue is full — backpressure).
-    pub fn submit(&self, job: Job) {
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(job) {
-            Ok(()) => {}
-            Err(TrySendError::Full(job)) => {
-                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                let _ = self.tx.send(job);
-            }
-            Err(TrySendError::Disconnected(_)) => panic!("executor gone"),
-        }
+    /// Name of the engine serving this coordinator (for reports).
+    pub fn backend_name(&self) -> &str {
+        &self.backend_name
     }
 
     /// Current metrics.
@@ -150,10 +145,78 @@ impl DspServer {
         self.metrics.snapshot()
     }
 
+    // -- typed submission --------------------------------------------------
+
+    fn submit_job(&self, job: Job) {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => {
+                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                // Block until the executor drains a slot.
+                let _ = self.tx.send(job);
+            }
+            // Executor gone: dropping the job drops its reply sender,
+            // so the caller's `Pending::wait` reports the termination.
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Submit a batched multiply (blocks when the queue is full).
+    pub fn submit_multiply(&self, req: MultiplyRequest) -> Pending<ProductBlock> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Multiply(req, rtx));
+        Pending::new(rrx)
+    }
+
+    /// Non-blocking multiply submission: `Err(QueueFull)` hands the
+    /// request back when the bounded queue is at capacity.
+    pub fn try_submit_multiply(
+        &self,
+        req: MultiplyRequest,
+    ) -> std::result::Result<Pending<ProductBlock>, QueueFull<MultiplyRequest>> {
+        let (rtx, rrx) = channel();
+        match self.tx.try_send(Job::Multiply(req, rtx)) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Pending::new(rrx))
+            }
+            Err(TrySendError::Full(Job::Multiply(req, _))) => {
+                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                Err(QueueFull(req))
+            }
+            Err(TrySendError::Full(_)) => unreachable!("submitted job variant"),
+            // Treat like the blocking path: the dead reply channel
+            // surfaces the termination at `wait`.
+            Err(TrySendError::Disconnected(_)) => Ok(Pending::new(rrx)),
+        }
+    }
+
+    /// Submit an error-moment reduction (blocks when the queue is full).
+    pub fn submit_moments(&self, req: MomentsRequest) -> Pending<ErrorMoments> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Moments(req, rtx));
+        Pending::new(rrx)
+    }
+
+    /// Submit one FIR block (blocks when the queue is full).
+    pub fn submit_fir(&self, req: FirRequest) -> Pending<FirBlock> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Fir(req, rtx));
+        Pending::new(rrx)
+    }
+
+    /// Submit an SNR accumulation (blocks when the queue is full).
+    pub fn submit_snr(&self, req: SnrRequest) -> Pending<SnrAccum> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Snr(req, rtx));
+        Pending::new(rrx)
+    }
+
     // -- high-level request APIs -----------------------------------------
 
-    /// Stream a real-valued signal through the AOT FIR datapath:
-    /// quantize (Q1.WL−1), overlap-save blocks through PJRT, dequantize.
+    /// Stream a real-valued signal through the FIR datapath: quantize
+    /// (Q1.WL−1), overlap-save blocks through the backend, dequantize.
     /// `vbl = 0` is the accurate filter.
     pub fn filter_signal(&self, x: &[f64], taps: &[f64], wl: u32, vbl: u32) -> Result<Vec<f64>> {
         anyhow::ensure!(taps.len() == FIR_TAPS, "expected {FIR_TAPS} taps");
@@ -167,30 +230,37 @@ impl DspServer {
         // Pipeline: submit every block, then collect in order.
         let mut replies = Vec::with_capacity(plans.len());
         for plan in &plans {
-            let (rtx, rrx) = std::sync::mpsc::channel();
             let xin = block_input(&padded, plan, FIR_BLOCK, FIR_TAPS);
-            self.submit(Job::Fir { wl, x: xin, h: h.clone(), vbl: vbl as i32, reply: rtx });
-            replies.push((plan.out_len, rrx));
+            let pending = self.submit_fir(FirRequest { wl, x: xin, h: h.clone(), vbl });
+            replies.push((plan.out_len, pending));
         }
         let frac = wl - 1;
         let denom = (1i64 << frac) as f64 * (1i64 << frac) as f64 * x_scale;
         let mut y = Vec::with_capacity(x.len());
-        for (out_len, rrx) in replies {
-            let block = rrx.recv().map_err(|_| anyhow!("executor dropped reply"))??;
-            for &acc in block.iter().take(out_len) {
+        for (out_len, pending) in replies {
+            let block = pending.wait()?;
+            for &acc in block.y.iter().take(out_len) {
                 y.push(acc as f64 / denom);
             }
         }
         Ok(y)
     }
 
-    /// Exhaustive error sweep over all `2^(2wl)` operand pairs through
-    /// the PJRT moments artifact (chunked at SWEEP_BATCH).
-    pub fn exhaustive_sweep(&self, wl: u32, ty: u32, vbl: u32) -> Result<ErrorStats> {
-        anyhow::ensure!(2 * wl <= 32 && (1usize << (2 * wl)) % SWEEP_BATCH == 0);
+    /// Exhaustive error sweep over all `2^(2wl)` operand pairs of any
+    /// multiplier family, chunked at [`SWEEP_BATCH`] through the
+    /// backend's moments reduction.
+    pub fn exhaustive_sweep(&self, kind: MultKind, wl: u32, level: u32) -> Result<ErrorStats> {
+        anyhow::ensure!(
+            2 * wl <= 32 && (1usize << (2 * wl)) % SWEEP_BATCH == 0,
+            "exhaustive sweep needs 8 <= wl <= 16 (got {wl})"
+        );
+        // Reject invalid (kind, wl, level) here — building the oracle
+        // below would panic on what the backend would cleanly refuse.
+        crate::backend::validate_family(kind, wl, level)?;
         let total: u64 = 1u64 << (2 * wl);
         let chunks = total / SWEEP_BATCH as u64;
-        let half = 1i64 << (wl - 1);
+        let lo = kind.build(wl, level).operand_range().0;
+        let mask = (1u64 << wl) - 1;
         let mut replies = Vec::with_capacity(chunks as usize);
         for c in 0..chunks {
             let mut x = Vec::with_capacity(SWEEP_BATCH);
@@ -198,27 +268,25 @@ impl DspServer {
             let base = c * SWEEP_BATCH as u64;
             for k in 0..SWEEP_BATCH as u64 {
                 let g = base + k;
-                x.push(((g >> wl) as i64 - half) as i32);
-                y.push(((g & ((1 << wl) - 1)) as i64 - half) as i32);
+                x.push((lo + (g >> wl) as i64) as i32);
+                y.push((lo + (g & mask) as i64) as i32);
             }
-            let (rtx, rrx) = std::sync::mpsc::channel();
-            self.submit(Job::Moments { wl, ty, x, y, vbl: vbl as i32, reply: rtx });
-            replies.push(rrx);
+            replies.push(self.submit_moments(MomentsRequest { kind, wl, level, x, y }));
         }
         let mut stats = ErrorStats::new();
-        for rrx in replies {
-            let (sum, sq, mn, cnt) = rrx.recv().map_err(|_| anyhow!("reply lost"))??;
+        for pending in replies {
+            let m = pending.wait()?;
             stats.n += SWEEP_BATCH as u64;
-            stats.sum += sum as i128;
-            stats.sum_sq += sq as u128; // exact: err² sums are < 2^53 per chunk
-            stats.nonzero += cnt as u64;
-            stats.min = stats.min.min(mn);
-            stats.max = stats.max.max(0); // moments kernel does not track max
+            stats.sum += m.sum as i128;
+            stats.sum_sq += m.sum_sq as u128; // exact: err² sums are < 2^53 per chunk
+            stats.nonzero += m.nonzero as u64;
+            stats.min = stats.min.min(m.min);
+            stats.max = stats.max.max(0); // moments reduction does not track max
         }
         Ok(stats)
     }
 
-    /// SNR between two real signals via blocked PJRT accumulation.
+    /// SNR between two real signals via blocked backend accumulation.
     pub fn snr_db(&self, reference: &[f64], signal: &[f64]) -> Result<f64> {
         let n = reference.len().min(signal.len());
         let mut pr = 0.0f64;
@@ -230,22 +298,18 @@ impl DspServer {
             let mut sblk = signal[idx..idx + len].to_vec();
             rblk.resize(FIR_BLOCK, 0.0);
             sblk.resize(FIR_BLOCK, 0.0);
-            let (rtx, rrx) = std::sync::mpsc::channel();
-            self.submit(Job::Snr { reference: rblk, signal: sblk, reply: rtx });
-            let (a, b) = rrx.recv().map_err(|_| anyhow!("reply lost"))??;
-            pr += a;
-            pe += b;
+            let acc = self.submit_snr(SnrRequest { reference: rblk, signal: sblk }).wait()?;
+            pr += acc.ref_power;
+            pe += acc.err_power;
             idx += len;
         }
         Ok(crate::util::stats::db(pr / pe.max(1e-300)))
     }
 
-    /// Graceful shutdown (drains outstanding jobs first).
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+    /// Graceful shutdown (drains outstanding jobs first). Equivalent to
+    /// dropping the handle; provided for explicitness at call sites.
+    pub fn shutdown(self) {
+        drop(self);
     }
 }
 
@@ -258,35 +322,35 @@ impl Drop for DspServer {
     }
 }
 
-fn executor_loop(rt: Runtime, rx: Receiver<Job>, metrics: Arc<Metrics>) {
+fn executor_loop(backend: Box<dyn Backend>, rx: Receiver<Job>, metrics: Arc<Metrics>) {
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
         match job {
             Job::Shutdown => break,
-            Job::Moments { wl, ty, x, y, vbl, reply } => {
-                let n = x.len() as u64;
-                let res = rt.error_moments(wl, ty, &x, &y, vbl);
+            Job::Multiply(req, reply) => {
+                let n = req.x.len() as u64;
+                let res = backend.multiply(&req).map_err(anyhow::Error::from);
                 metrics.executions.fetch_add(1, Ordering::Relaxed);
                 metrics.record_job(t0.elapsed(), n);
                 let _ = reply.send(res);
             }
-            Job::Fir { wl, x, h, vbl, reply } => {
-                let n = x.len() as u64;
-                let res = rt.fir_block(wl, &x, &h, vbl);
+            Job::Moments(req, reply) => {
+                let n = req.x.len() as u64;
+                let res = backend.moments(&req).map_err(anyhow::Error::from);
                 metrics.executions.fetch_add(1, Ordering::Relaxed);
                 metrics.record_job(t0.elapsed(), n);
                 let _ = reply.send(res);
             }
-            Job::Multiply { wl, ty, x, y, vbl, reply } => {
-                let n = x.len() as u64;
-                let res = rt.bbm_multiply(wl, ty, &x, &y, vbl);
+            Job::Fir(req, reply) => {
+                let n = req.x.len() as u64;
+                let res = backend.fir(&req).map_err(anyhow::Error::from);
                 metrics.executions.fetch_add(1, Ordering::Relaxed);
                 metrics.record_job(t0.elapsed(), n);
                 let _ = reply.send(res);
             }
-            Job::Snr { reference, signal, reply } => {
-                let n = reference.len() as u64;
-                let res = rt.snr_acc(&reference, &signal);
+            Job::Snr(req, reply) => {
+                let n = req.reference.len() as u64;
+                let res = backend.snr(&req).map_err(anyhow::Error::from);
                 metrics.executions.fetch_add(1, Ordering::Relaxed);
                 metrics.record_job(t0.elapsed(), n);
                 let _ = reply.send(res);

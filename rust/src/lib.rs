@@ -7,34 +7,54 @@
 //! evaluation substrates the paper's methodology needs (a gate-level
 //! netlist/power/timing/sizing "synthesizer" standing in for Design
 //! Compiler + PrimeTime, and a from-scratch Parks-McClellan DSP testbed),
-//! and a three-layer rust + JAX + Pallas runtime where exhaustive error
-//! sweeps and FIR filtering run through AOT-compiled XLA executables via
-//! PJRT.
+//! and a serving stack whose execution engine is pluggable: the
+//! coordinator speaks only the [`backend::Backend`] trait, served by a
+//! bit-accurate native batched engine by default and by AOT-compiled
+//! XLA executables via PJRT behind the `pjrt` feature.
 //!
 //! ## Layer map
 //!
 //! * [`arith`] — bit-accurate integer models of every multiplier (oracle
-//!   and fast path).
+//!   and fast path). The ground truth every other layer is checked
+//!   against.
 //! * [`gate`] — structural netlists, event-driven toggle simulation,
 //!   power/area/timing models, constraint-driven sizing.
 //! * [`dsp`] — Remez exchange filter design, testbed signals, fixed-point
 //!   FIR, SNR measurement.
-//! * [`error`] — exhaustive/random error sweeps and statistics.
-//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
-//! * [`coordinator`] — streaming DSP pipeline server (router, batcher,
-//!   worker pool, backpressure, metrics).
-//! * [`repro`] — one driver per paper table/figure.
-//! * [`util`] — self-contained PRNG, CLI, stats and report helpers
-//!   (offline build: no external crates beyond `xla`/`anyhow`/`thiserror`).
-//! * [`testkit`] — minimal property-based testing engine used by the
-//!   test-suite (offline stand-in for proptest).
+//! * [`error`] — exhaustive/random error sweeps and statistics
+//!   (in-process, multi-threaded).
+//! * [`backend`] — **the execution-backend API**: typed request/response
+//!   pairs for the four paper workloads (batched multiply, error
+//!   moments, FIR blocks, SNR accumulation) behind the
+//!   [`backend::Backend`] trait; [`backend::NativeBackend`] (default)
+//!   and [`backend::PjrtBackend`] (`--features pjrt`) implement it.
+//!   See `src/backend/README.md`.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
+//!   (compiled only with `--features pjrt`; the default build never
+//!   references the `xla` crate).
+//! * [`coordinator`] — streaming DSP pipeline server (bounded queue,
+//!   executor thread owning a `Box<dyn Backend>`, overlap-save block
+//!   planner, dynamic micro-batcher, backpressure, metrics).
+//! * [`repro`] — one driver per paper table/figure, with
+//!   `--backend native|pjrt` selection.
+//! * [`util`] — self-contained PRNG, CLI, stats and report helpers.
+//! * [`testkit`] — minimal property-based testing engine plus the
+//!   instrumented [`testkit::MockBackend`] (offline stand-ins for
+//!   proptest/mock crates).
+//!
+//! Offline policy: the only dependencies are the vendored path crates
+//! under `rust/vendor/` (`anyhow` shim; `xla` stub pulled in by the
+//! optional `pjrt` feature). `cargo build --release && cargo test -q`
+//! must pass with no network and no artifacts built.
 
 pub mod arith;
+pub mod backend;
 pub mod coordinator;
 pub mod dsp;
 pub mod error;
 pub mod gate;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod testkit;
 pub mod util;

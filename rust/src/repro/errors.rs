@@ -1,7 +1,8 @@
 //! Table I and Fig. 2 regenerators: exhaustive error statistics of the
 //! Broken-Booth multiplier.
 
-use crate::arith::{BbmType, BrokenBooth};
+use crate::arith::{BbmType, BrokenBooth, MultKind};
+use crate::backend::BackendKind;
 use crate::error::{exhaustive_histogram, exhaustive_stats, SweepConfig};
 use crate::util::cli::Args;
 use crate::util::report::{sci, Series, Table};
@@ -9,9 +10,10 @@ use crate::util::report::{sci, Series, Table};
 /// Table I: MSE, error mean/probability and minimum error of Type0 with
 /// WL = 12 over VBL ∈ {3, 6, 9, 12} — all 2^24 input pairs.
 ///
-/// `--pjrt` routes the sweep through the AOT moments artifact via the
-/// coordinator instead of the native rust engine (same numbers, exercises
-/// the three-layer path).
+/// `--backend native|pjrt` routes the sweep through the coordinator's
+/// moments pipeline on the selected execution backend instead of the
+/// in-process multi-threaded sweep engine (same numbers, exercises the
+/// serving path). `--pjrt` is a back-compat alias for `--backend pjrt`.
 pub fn table1(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 12u32)?;
     let vbls = args.list_or("vbls", &[3u32, 6, 9, 12])?;
@@ -19,21 +21,24 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
         0 => BbmType::Type0,
         _ => BbmType::Type1,
     };
-    let use_pjrt = args.flag("pjrt");
+    let backend = if args.flag("pjrt") {
+        Some(BackendKind::Pjrt)
+    } else {
+        args.get("backend").map(BackendKind::parse).transpose()?
+    };
 
     let mut t = Table::new(
         &format!("Table I — Broken-Booth {ty} WL={wl}, exhaustive 2^{} pairs", 2 * wl),
         &["VBL", "Error Mean", "MSE", "Error Prob.", "Min-Error"],
     );
-    let server = if use_pjrt {
-        Some(crate::coordinator::DspServer::start_default(8)?)
-    } else {
-        None
+    let server = match backend {
+        Some(kind) => Some(crate::coordinator::DspServer::start_kind(kind, 8)?),
+        None => None,
     };
+    let kind = if ty == BbmType::Type0 { MultKind::BbmType0 } else { MultKind::BbmType1 };
     for &vbl in &vbls {
         let stats = if let Some(srv) = &server {
-            let tyn = if ty == BbmType::Type0 { 0 } else { 1 };
-            srv.exhaustive_sweep(wl, tyn, vbl)?
+            srv.exhaustive_sweep(kind, wl, vbl)?
         } else {
             let m = BrokenBooth::new(wl, vbl, ty);
             exhaustive_stats(&m, SweepConfig::default()).stats
@@ -95,6 +100,25 @@ mod tests {
         // WL=8 keeps the exhaustive sweep fast in CI.
         let args = Args::parse(&["--wl".into(), "8".into(), "--vbls".into(), "3,6".into()], &[])
             .unwrap();
+        table1(&args).unwrap();
+    }
+
+    #[test]
+    fn table1_served_through_native_backend() {
+        // WL=8 is one SWEEP_BATCH chunk per VBL — exercises the
+        // coordinator + backend path end to end, offline.
+        let args = Args::parse(
+            &[
+                "--wl".into(),
+                "8".into(),
+                "--vbls".into(),
+                "3,6".into(),
+                "--backend".into(),
+                "native".into(),
+            ],
+            &[],
+        )
+        .unwrap();
         table1(&args).unwrap();
     }
 

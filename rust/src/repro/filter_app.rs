@@ -201,13 +201,19 @@ pub fn table4(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// End-to-end PJRT variant of the application study — used by the
+/// End-to-end served variant of the application study — used by the
 /// `fir_lowpass` example and the integration tests: streams the testbed
-/// through the AOT FIR artifact via the coordinator and reports SNR.
-pub fn snr_via_pjrt(wl: u32, vbl: u32, n: usize) -> anyhow::Result<(f64, f64)> {
+/// through the coordinator on the selected execution backend and
+/// reports `(served SNR, behavioural SNR)`.
+pub fn snr_via_server(
+    kind: crate::backend::BackendKind,
+    wl: u32,
+    vbl: u32,
+    n: usize,
+) -> anyhow::Result<(f64, f64)> {
     let tb = Testbed::generate(n, 42);
     let d = paper_lowpass(30)?;
-    let srv = crate::coordinator::DspServer::start_default(8)?;
+    let srv = crate::coordinator::DspServer::start_kind(kind, 8)?;
     let y = srv.filter_signal(&tb.x, &d.taps, wl, vbl)?;
     let gd = (d.taps.len() as f64 - 1.0) / 2.0;
     let snr = crate::dsp::snr_out_db(&tb, &y, gd);
@@ -222,6 +228,13 @@ pub fn snr_via_pjrt(wl: u32, vbl: u32, n: usize) -> anyhow::Result<(f64, f64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn snr_via_native_server_tracks_behavioural_model() {
+        let (served, behav) = snr_via_server(crate::backend::BackendKind::Native, 16, 13, 4096)
+            .unwrap();
+        assert!((served - behav).abs() < 0.5, "served {served} vs behavioural {behav}");
+    }
 
     #[test]
     fn fir_case_small_runs() {

@@ -4,17 +4,22 @@
 //! (see DESIGN.md §7 for the experiment index):
 //!
 //! ```text
-//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --pjrt]
+//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --backend native|pjrt]
 //! bbm fig2   [--wl 10 --vbl 9 --bins 41]
 //! bbm fig3   [--wl 16 --vbl 15 --nvec 100000]
 //! bbm table2 / table3 [--wls 4,8,12,16 --nvec 50000]
 //! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
 //! bbm fig7 / fig8a / fig8b [--samples N]
 //! bbm table4 [--samples 8192 --cycles 8192]
-//! bbm verify [--seed 1]
+//! bbm verify [--seed 1 --backend native|pjrt]
 //! bbm ablation [adders|dct|reducers]
 //! bbm all    (everything, paper-scale parameters)
 //! ```
+//!
+//! `--backend` selects the execution engine serving the coordinator
+//! (see `crate::backend`): `native` is the offline default; `pjrt`
+//! needs `--features pjrt` plus built artifacts. The bare `--pjrt`
+//! flag is kept as a back-compat alias for `--backend pjrt`.
 
 pub mod ablation;
 pub mod errors;
@@ -84,6 +89,7 @@ fn print_help() {
     println!(
         "bbm — Broken-Booth Multiplier reproduction\n\
          commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 verify all\n\
+         options: --backend native|pjrt selects the execution engine (default native)\n\
          see DESIGN.md §7 for the experiment index and options"
     );
 }

@@ -1,78 +1,234 @@
-//! Cross-layer verification driver: the PJRT artifacts (L1 Pallas → L2
-//! JAX → HLO) against the rust `arith` oracles — the end-to-end
-//! correctness proof that all three layers compute the same function.
+//! Cross-layer verification driver: an execution [`Backend`] against
+//! the scalar `arith` oracles — the end-to-end correctness proof that
+//! every engine computes the same function.
+//!
+//! With `--backend native` (the default) this runs fully offline and
+//! must always pass: the batched native engine is checked bit-for-bit
+//! against the scalar oracles, exhaustively at WL=8 for **all six**
+//! multiplier families and on random [`SWEEP_BATCH`] batches at the
+//! paper's word lengths. With `--backend pjrt` the same checks drive
+//! the AOT artifacts (L1 Pallas → L2 JAX → HLO → PJRT); families the
+//! artifacts do not cover are reported as skipped.
 
-use crate::arith::{BbmType, BrokenBooth, Multiplier};
-use crate::runtime::{Runtime, SWEEP_BATCH};
+use crate::arith::{Multiplier, MultKind};
+use crate::backend::{
+    Backend, BackendError, BackendKind, MomentsRequest, MultiplyRequest, SWEEP_BATCH,
+};
+use crate::testkit::draw_operands;
 use crate::util::cli::Args;
-use crate::util::Pcg64;
 
-/// Verify one `(wl, ty)` artifact against the arith model on `n` random
-/// batches. Returns mismatch count (0 on success).
-pub fn verify_bbm(rt: &Runtime, wl: u32, ty: u32, vbl: u32, seed: u64) -> anyhow::Result<u64> {
-    let bty = if ty == 0 { BbmType::Type0 } else { BbmType::Type1 };
-    let m = BrokenBooth::new(wl, vbl, bty);
-    let mut rng = Pcg64::seeded(seed);
-    let mut x = vec![0i32; SWEEP_BATCH];
-    let mut y = vec![0i32; SWEEP_BATCH];
+/// Verify one `(kind, wl, level)` batched multiply against the scalar
+/// oracle on one random [`SWEEP_BATCH`] batch. `Ok(None)` means the
+/// backend does not support this family; otherwise the mismatch count.
+pub fn verify_multiply(
+    backend: &dyn Backend,
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    seed: u64,
+) -> anyhow::Result<Option<u64>> {
+    let (x, y) = draw_operands(kind, wl, SWEEP_BATCH, seed);
+    let req = MultiplyRequest { kind, wl, level, x: x.clone(), y: y.clone() };
+    let out = match backend.multiply(&req) {
+        Err(BackendError::Unsupported { .. }) => return Ok(None),
+        Err(e) => return Err(e.into()),
+        Ok(out) => out,
+    };
+    let m = kind.build(wl, level);
+    let mut bad = 0u64;
     for i in 0..SWEEP_BATCH {
-        x[i] = rng.operand(wl) as i32;
-        y[i] = rng.operand(wl) as i32;
-    }
-    let out = rt.bbm_multiply(wl, ty, &x, &y, vbl as i32)?;
-    let mut bad = 0;
-    for i in 0..SWEEP_BATCH {
-        if out[i] as i64 != m.multiply(x[i] as i64, y[i] as i64) {
+        if out.p[i] != m.multiply(x[i] as i64, y[i] as i64) {
             bad += 1;
         }
     }
-    Ok(bad)
+    Ok(Some(bad))
 }
 
-/// Verify the moments artifact against the rust sweep engine on a random
-/// chunk.
-pub fn verify_moments(rt: &Runtime, wl: u32, ty: u32, vbl: u32, seed: u64) -> anyhow::Result<u64> {
-    let bty = if ty == 0 { BbmType::Type0 } else { BbmType::Type1 };
-    let m = BrokenBooth::new(wl, vbl, bty);
-    let mut rng = Pcg64::seeded(seed);
-    let mut x = vec![0i32; SWEEP_BATCH];
-    let mut y = vec![0i32; SWEEP_BATCH];
+/// Verify the backend's moments reduction against the scalar sweep
+/// engine on one random chunk. `Ok(Some(0))` on agreement.
+pub fn verify_moments(
+    backend: &dyn Backend,
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    seed: u64,
+) -> anyhow::Result<Option<u64>> {
+    let (x, y) = draw_operands(kind, wl, SWEEP_BATCH, seed);
+    let m = kind.build(wl, level);
     let mut stats = crate::util::stats::ErrorStats::new();
     for i in 0..SWEEP_BATCH {
-        x[i] = rng.operand(wl) as i32;
-        y[i] = rng.operand(wl) as i32;
         stats.push(m.error(x[i] as i64, y[i] as i64));
     }
-    let (sum, sq, mn, cnt) = rt.error_moments(wl, ty, &x, &y, vbl as i32)?;
-    let ok = sum as i128 == stats.sum
-        && (sq - stats.sum_sq as f64).abs() <= 1e-6 * stats.sum_sq.max(1) as f64
-        && mn == stats.min_error()
-        && cnt as u64 == stats.nonzero;
-    Ok(if ok { 0 } else { 1 })
+    let req = MomentsRequest { kind, wl, level, x, y };
+    let got = match backend.moments(&req) {
+        Err(BackendError::Unsupported { .. }) => return Ok(None),
+        Err(e) => return Err(e.into()),
+        Ok(got) => got,
+    };
+    let ok = got.sum as i128 == stats.sum
+        && (got.sum_sq - stats.sum_sq as f64).abs() <= 1e-6 * stats.sum_sq.max(1) as f64
+        && got.min == stats.min_error()
+        && got.nonzero as u64 == stats.nonzero;
+    Ok(Some(u64::from(!ok)))
 }
 
-/// The `verify` subcommand: all artifacts vs oracles.
+/// Exhaustive WL=8 cross-check: every one of the `2^16` operand pairs
+/// (conveniently exactly one [`SWEEP_BATCH`] chunk) through the
+/// backend's multiply *and* moments paths, compared bit-for-bit against
+/// the scalar oracle. Returns the mismatch count, `None` if the family
+/// is unsupported.
+pub fn verify_exhaustive_wl8(
+    backend: &dyn Backend,
+    kind: MultKind,
+    level: u32,
+) -> anyhow::Result<Option<u64>> {
+    let wl = 8u32;
+    let m = kind.build(wl, level);
+    let (lo, hi) = m.operand_range();
+    let mut x = Vec::with_capacity(SWEEP_BATCH);
+    let mut y = Vec::with_capacity(SWEEP_BATCH);
+    for a in lo..=hi {
+        for b in lo..=hi {
+            x.push(a as i32);
+            y.push(b as i32);
+        }
+    }
+    debug_assert_eq!(x.len(), SWEEP_BATCH);
+    let req = MultiplyRequest { kind, wl, level, x: x.clone(), y: y.clone() };
+    let out = match backend.multiply(&req) {
+        Err(BackendError::Unsupported { .. }) => return Ok(None),
+        Err(e) => return Err(e.into()),
+        Ok(out) => out,
+    };
+    let mut bad = 0u64;
+    let mut stats = crate::util::stats::ErrorStats::new();
+    for i in 0..SWEEP_BATCH {
+        let exact_in = (x[i] as i64, y[i] as i64);
+        if out.p[i] != m.multiply(exact_in.0, exact_in.1) {
+            bad += 1;
+        }
+        stats.push(m.error(exact_in.0, exact_in.1));
+    }
+    let got = match backend.moments(&MomentsRequest { kind, wl, level, x, y }) {
+        Err(BackendError::Unsupported { .. }) => return Ok(Some(bad)),
+        Err(e) => return Err(e.into()),
+        Ok(got) => got,
+    };
+    // One chunk: the f64 Σerr² is exact, so the comparison is bit-for-bit.
+    if got.sum as i128 != stats.sum
+        || got.sum_sq != stats.sum_sq as f64
+        || got.min != stats.min_error()
+        || got.nonzero as u64 != stats.nonzero
+    {
+        bad += 1;
+    }
+    Ok(Some(bad))
+}
+
+/// The study levels exercised per family at a word length: level 0 plus
+/// the five levels `repro::pdp::levels_for` uses, deduplicated.
+pub fn verify_levels(kind: MultKind, wl: u32) -> Vec<u32> {
+    let mut set = std::collections::BTreeSet::new();
+    set.insert(0u32);
+    set.extend(super::pdp::levels_for(kind, wl));
+    set.into_iter().collect()
+}
+
+/// The `verify` subcommand: the selected backend vs the scalar oracles.
 pub fn verify(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_or("seed", 1u64)?;
-    let rt = crate::runtime::try_load_default()
-        .ok_or_else(|| anyhow::anyhow!("artifacts missing; run `make artifacts`"))?;
-    println!("platform: {}", rt.platform());
+    let bk = if args.flag("pjrt") {
+        BackendKind::Pjrt
+    } else {
+        args.get_or("backend", BackendKind::Native)?
+    };
+    let backend = bk.create()?;
+    println!("backend: {}", backend.name());
     let mut failures = 0u64;
-    for (wl, ty) in [(12u32, 0u32), (12, 1), (16, 0), (16, 1)] {
+
+    println!("-- exhaustive WL=8 sweep, all families --");
+    for kind in MultKind::ALL {
+        for level in verify_levels(kind, 8) {
+            match verify_exhaustive_wl8(backend.as_ref(), kind, level)? {
+                None => println!("  {kind:<9} level={level:<2}: SKIP (unsupported)"),
+                Some(bad) => {
+                    println!(
+                        "  {kind:<9} level={level:<2}: {} ({SWEEP_BATCH} pairs)",
+                        if bad == 0 { "OK".to_string() } else { format!("{bad} mismatches") }
+                    );
+                    failures += bad;
+                }
+            }
+        }
+    }
+
+    println!("-- random batches at paper word lengths --");
+    for (wl, kind) in [
+        (12u32, MultKind::BbmType0),
+        (12, MultKind::BbmType1),
+        (16, MultKind::BbmType0),
+        (16, MultKind::BbmType1),
+    ] {
         for vbl in [0u32, 3, 9, 13] {
-            let bad = verify_bbm(&rt, wl, ty, vbl, seed + vbl as u64)?;
-            println!("bbm_wl{wl}_type{ty} vbl={vbl}: {bad} mismatches / {SWEEP_BATCH}");
-            failures += bad;
+            match verify_multiply(backend.as_ref(), kind, wl, vbl, seed + vbl as u64)? {
+                None => println!("  {kind} wl={wl} vbl={vbl}: SKIP"),
+                Some(bad) => {
+                    println!("  {kind} wl={wl} vbl={vbl}: {bad} mismatches / {SWEEP_BATCH}");
+                    failures += bad;
+                }
+            }
         }
     }
-    for (wl, ty) in [(12u32, 0u32), (12, 1), (10, 0)] {
+
+    println!("-- moments reductions --");
+    for (wl, kind) in
+        [(12u32, MultKind::BbmType0), (12, MultKind::BbmType1), (10, MultKind::BbmType0)]
+    {
         for vbl in [0u32, 6, 9] {
-            let bad = verify_moments(&rt, wl, ty, vbl, seed + 100 + vbl as u64)?;
-            println!("moments_wl{wl}_type{ty} vbl={vbl}: {}", if bad == 0 { "OK" } else { "FAIL" });
-            failures += bad;
+            match verify_moments(backend.as_ref(), kind, wl, vbl, seed + 100 + vbl as u64)? {
+                None => println!("  moments {kind} wl={wl} vbl={vbl}: SKIP"),
+                Some(bad) => {
+                    println!(
+                        "  moments {kind} wl={wl} vbl={vbl}: {}",
+                        if bad == 0 { "OK" } else { "FAIL" }
+                    );
+                    failures += bad;
+                }
+            }
         }
     }
-    anyhow::ensure!(failures == 0, "{failures} cross-layer mismatches");
-    println!("verify: all artifacts match the rust oracles");
+
+    anyhow::ensure!(failures == 0, "{failures} backend-vs-oracle mismatches");
+    println!("verify: backend `{}` matches the scalar arith oracles", backend.name());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    #[test]
+    fn native_backend_verifies_clean() {
+        let b = NativeBackend::new();
+        assert_eq!(
+            verify_multiply(&b, MultKind::BbmType0, 12, 9, 42).unwrap(),
+            Some(0)
+        );
+        assert_eq!(verify_moments(&b, MultKind::Bam, 10, 5, 7).unwrap(), Some(0));
+    }
+
+    #[test]
+    fn verify_subcommand_runs_green_offline() {
+        let args = Args::parse(&[], &["pjrt"]).unwrap();
+        verify(&args).unwrap();
+    }
+
+    #[test]
+    fn levels_cover_zero_and_study_points() {
+        let levels = verify_levels(MultKind::BbmType0, 8);
+        assert!(levels.contains(&0));
+        assert!(levels.len() > 1);
+        assert!(levels.windows(2).all(|w| w[0] < w[1]));
+    }
 }

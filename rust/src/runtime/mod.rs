@@ -1,10 +1,13 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them from the coordinator's hot path.
+//! executes them on behalf of [`crate::backend::PjrtBackend`].
 //!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire inference-side dependency: HLO text → `HloModuleProto` →
-//! `XlaComputation` → `PjRtLoadedExecutable` on the CPU PJRT client.
-//! One executable per model variant, compiled once and cached.
+//! Compiled only with `--features pjrt`. Python runs only at build time
+//! (`make artifacts`); this module is the entire inference-side
+//! dependency: HLO text → `HloModuleProto` → `XlaComputation` →
+//! `PjRtLoadedExecutable` on the CPU PJRT client. One executable per
+//! model variant, compiled once and cached. By default the `xla`
+//! dependency is the vendored compile-only stub
+//! (`rust/vendor/xla-stub`); swap it for the real bindings to execute.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -12,12 +15,9 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
-/// Block sizes baked into the artifacts (must match `python/compile/aot.py`).
-pub const SWEEP_BATCH: usize = 65536;
-/// FIR output block length.
-pub const FIR_BLOCK: usize = 4096;
-/// FIR tap count.
-pub const FIR_TAPS: usize = 30;
+// Block sizes are owned by the backend API (the contract all engines
+// share); re-exported here for continuity with older call sites.
+pub use crate::backend::{FIR_BLOCK, FIR_TAPS, SWEEP_BATCH};
 
 /// A loaded, compiled artifact registry over one PJRT client.
 pub struct Runtime {
@@ -34,11 +34,8 @@ impl Runtime {
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
-        let names = text
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(|l| l.split('\t').next().expect("manifest line").to_string())
-            .collect();
+        let names = crate::backend::parse_manifest(&text)
+            .with_context(|| format!("parsing {manifest:?}"))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
         Ok(Runtime { client, dir, names, exes: Mutex::new(HashMap::new()) })
     }

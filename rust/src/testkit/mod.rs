@@ -1,12 +1,38 @@
 //! Minimal property-based testing engine — the offline stand-in for
-//! `proptest`, used by the coordinator/arith invariant suites.
+//! `proptest`, used by the coordinator/arith invariant suites — plus
+//! the instrumented [`MockBackend`] execution engine for hermetic
+//! coordinator tests (see [`mock`]).
 //!
 //! A property is a closure over generated inputs; the runner executes it
 //! on `cases` seeded-random inputs and, on failure, performs greedy
 //! shrinking via the generator's `shrink` hook before reporting the
 //! minimal counterexample.
 
+pub mod mock;
+
+pub use mock::{Gate, MockBackend, MockState};
+
+use crate::arith::{MultKind, Multiplier};
 use crate::util::Pcg64;
+
+/// Draw `n` random operand pairs for a multiplier family, respecting
+/// its operand convention (signed two's-complement vs unsigned). The
+/// single source of truth for kind-aware operand generation in the
+/// backend/verify test suites.
+pub fn draw_operands(kind: MultKind, wl: u32, n: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let signed = kind.build(wl, 0).signed();
+    let mut rng = Pcg64::seeded(seed);
+    let draw = |rng: &mut Pcg64| {
+        if signed {
+            rng.operand(wl) as i32
+        } else {
+            rng.operand_unsigned(wl) as i32
+        }
+    };
+    let x: Vec<i32> = (0..n).map(|_| draw(&mut rng)).collect();
+    let y: Vec<i32> = (0..n).map(|_| draw(&mut rng)).collect();
+    (x, y)
+}
 
 /// A value generator with optional shrinking.
 pub trait Gen {

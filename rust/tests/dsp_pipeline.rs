@@ -87,16 +87,16 @@ fn block_planner_failure_injection() {
 
 #[test]
 fn batcher_rejects_malformed_requests() {
-    use bbm::coordinator::{Batcher, MultiplyRequest};
+    use bbm::coordinator::{Batcher, LaneRequest};
     let mut b = Batcher::new(16, std::time::Duration::from_millis(1));
     // Mismatched operand lengths.
     assert!(b
-        .offer(MultiplyRequest { id: 1, x: vec![1, 2], y: vec![3] })
+        .offer(LaneRequest { id: 1, x: vec![1, 2], y: vec![3] })
         .is_err());
     // Oversize request.
     assert!(b
-        .offer(MultiplyRequest { id: 2, x: vec![0; 17], y: vec![0; 17] })
+        .offer(LaneRequest { id: 2, x: vec![0; 17], y: vec![0; 17] })
         .is_err());
     // State unharmed: a valid request still batches.
-    assert!(b.offer(MultiplyRequest { id: 3, x: vec![1; 16], y: vec![2; 16] }).unwrap().len() == 1);
+    assert!(b.offer(LaneRequest { id: 3, x: vec![1; 16], y: vec![2; 16] }).unwrap().len() == 1);
 }

@@ -1,0 +1,260 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no access to crates.io, so this path
+//! dependency re-implements exactly the subset of `anyhow`'s API the
+//! workspace uses — `Error`, `Result`, the `Context` extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros — with the same
+//! source-level spelling, so swapping in the real crate is a one-line
+//! `Cargo.toml` change.
+//!
+//! Semantics intentionally mirrored from upstream:
+//!
+//! * `Error` does **not** implement `std::error::Error`; that is what
+//!   makes the blanket `From<E: std::error::Error>` impl coherent.
+//! * `Display` shows the outermost message; the alternate form (`{:#}`)
+//!   shows the whole cause chain joined with `": "`; `Debug` shows the
+//!   message plus a `Caused by:` list (what `.unwrap()` prints).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error with a human-readable cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut stack = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            stack.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        stack.into_iter()
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that powers `?` on any std error. Coherent
+// because `Error` itself never implements `std::error::Error` (the same
+// trick upstream anyhow relies on).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("chain has at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily evaluated context message to the error case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// `Result<T, Error>` gets `.context()` too (upstream anyhow supports
+// this through its sealed `ext::StdError` trait, implemented both for
+// `E: std::error::Error` and for `Error` itself — coherent for the same
+// reason as the `From` blanket above: `Error` never implements
+// `std::error::Error`).
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let n = 7;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("bad value {}", n + 1);
+        assert_eq!(e.to_string(), "bad value 8");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn context_builds_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing thing");
+        assert_eq!(e.root_cause(), "missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(v: u32) -> Result<u32> {
+            ensure!(v < 10);
+            ensure!(v != 3, "three is right out (got {v})");
+            if v == 4 {
+                bail!("four");
+            }
+            Ok(v)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert!(check(12).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(check(3).unwrap_err().to_string(), "three is right out (got 3)");
+        assert_eq!(check(4).unwrap_err().to_string(), "four");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer2").unwrap_err();
+        assert_eq!(e.to_string(), "outer2");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("nothing there").unwrap_err().to_string(), "nothing there");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_bounds<T: Send + Sync + 'static>() {}
+        assert_bounds::<Error>();
+    }
+}
