@@ -1,7 +1,7 @@
 # Convenience targets. Tier-1 verify is the `verify` target; everything
 # runs offline with default features (no network, no XLA).
 
-.PHONY: verify build test clippy artifacts bench clean
+.PHONY: verify build test lint fmt clippy artifacts bench clean
 
 verify: build test clippy
 
@@ -10,6 +10,13 @@ build:
 
 test:
 	cargo test -q
+
+# Style gate mirrored by .github/workflows/ci.yml: formatting must be
+# clean and clippy warning-free across every target.
+lint: fmt clippy
+
+fmt:
+	cargo fmt --all -- --check
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

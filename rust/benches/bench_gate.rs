@@ -1,23 +1,70 @@
-//! Gate-substrate costs: netlist generation, event simulation (the
-//! 5×10⁵-vector power run of §II.C), STA, and constraint synthesis.
+//! Gate-substrate costs: netlist generation, the bitsliced activity
+//! simulation (the 5×10⁵-vector power run of §II.C) against its scalar
+//! oracle baseline, STA, and constraint synthesis.
 
 include!("harness.rs");
 
 use bbm::arith::BbmType;
 use bbm::gate::builders::{build_broken_booth, build_fir, FirSpec};
-use bbm::gate::{analyze, find_tmin, run_random, synthesize};
+use bbm::gate::ir::Levelized;
+use bbm::gate::{analyze, find_tmin, run_random, run_random_scalar, synthesize};
+
+/// Measure scalar vs bitsliced activity simulation on one design and
+/// report vectors/sec plus the speedup (acceptance bar: >= 10x). Each
+/// engine is timed exactly once.
+fn sim_speedup(label: &str, nl: &bbm::gate::Netlist, nvec: u64) {
+    let (min_b, mean_b) = time_it(3, || {
+        std::hint::black_box(run_random(nl, nvec, 1).total_toggles());
+    });
+    // The scalar oracle is ~2 orders of magnitude slower; time a slice
+    // and compare per-vector throughput.
+    let scalar_nvec = (nvec / 16).max(64);
+    let (min_s, mean_s) = time_it(1, || {
+        std::hint::black_box(run_random_scalar(nl, scalar_nvec, 1).total_toggles());
+    });
+    for (name, n, min, mean) in [
+        (format!("bitsliced sim {nvec} vectors {label}"), nvec, min_b, mean_b),
+        (format!("scalar oracle sim {scalar_nvec} vectors {label}"), scalar_nvec, min_s, mean_s),
+    ] {
+        println!(
+            "bench {name:<44} min {:>9.3} ms  mean {:>9.3} ms  {:>12.1} items/s",
+            min * 1e3,
+            mean * 1e3,
+            n as f64 / min
+        );
+    }
+    let vps_bit = nvec as f64 / min_b;
+    let vps_scalar = scalar_nvec as f64 / min_s;
+    println!(
+        "  {label}: bitsliced {:.2e} vec/s vs scalar {:.2e} vec/s -> {:.1}x speedup (target >= 10x)",
+        vps_bit,
+        vps_scalar,
+        vps_bit / vps_scalar
+    );
+}
 
 fn main() {
     report("build netlist wl16 (accurate)", 20, 1.0, || {
         std::hint::black_box(build_broken_booth(16, 0, BbmType::Type0).cells.len());
     });
     let nl = build_broken_booth(16, 0, BbmType::Type0);
-    report("STA wl16", 50, nl.cells.len() as f64, || {
+    report("levelize wl16", 50, nl.cells.len() as f64, || {
+        std::hint::black_box(Levelized::compile(&nl).num_ops());
+    });
+    let lv = Levelized::compile(&nl);
+    println!("  (wl16 accurate: {} cells, {} levels deep)", lv.num_ops(), lv.depth());
+    report("STA wl16 (precompiled IR)", 50, nl.cells.len() as f64, || {
+        std::hint::black_box(bbm::gate::analyze_levelized(&nl, &lv).critical);
+    });
+    report("STA wl16 (compile + analyze)", 50, nl.cells.len() as f64, || {
         std::hint::black_box(analyze(&nl).critical);
     });
-    report("sim 5e5 vectors wl16 (paper's power run)", 3, 500_000.0, || {
-        std::hint::black_box(run_random(&nl, 500_000, 1).total_toggles());
-    });
+
+    // The paper's power run: 5x10^5 random vectors, scalar vs bitsliced.
+    let nl8 = build_broken_booth(8, 0, BbmType::Type0);
+    sim_speedup("wl8", &nl8, 500_000);
+    sim_speedup("wl16 (paper's power run)", &nl, 500_000);
+
     report("find_tmin wl16", 3, 1.0, || {
         let mut nl = build_broken_booth(16, 0, BbmType::Type0);
         std::hint::black_box(find_tmin(&mut nl).delay_ps);

@@ -4,6 +4,7 @@
 include!("harness.rs");
 
 use bbm::arith::{BbmType, MultKind};
+use bbm::coordinator::DspServer;
 use bbm::repro::pdp::measure_family;
 use bbm::repro::synth::compare_at_wl;
 
@@ -11,9 +12,11 @@ fn main() {
     report("fig3+tableII/III point (wl16 pair @5 constraints)", 2, 10.0, || {
         std::hint::black_box(compare_at_wl(16, 15, BbmType::Type0, 32_000, 3).points.len());
     });
+    let srv = DspServer::native(8).unwrap();
     for kind in [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni] {
-        report(&format!("fig5/6 family {kind} (wl8, 5 pts)"), 2, 5.0, || {
-            std::hint::black_box(measure_family(kind, 8, 1750.0, 16_000).unwrap().len());
+        report(&format!("fig5/6 family {kind} (wl8, 5 pts, served)"), 2, 5.0, || {
+            std::hint::black_box(measure_family(&srv, kind, 8, 1750.0, 16_000).unwrap().len());
         });
     }
+    srv.shutdown();
 }

@@ -4,7 +4,7 @@
 //! The coordinator (L3) used to be hardwired to the PJRT [`crate::runtime`]
 //! through an ad-hoc job enum; this module decouples them behind the
 //! [`Backend`] trait so bit-accurate native Rust, PJRT/XLA, or a future
-//! SIMD/GPU engine can serve the same four workloads interchangeably:
+//! SIMD/GPU engine can serve the same five workloads interchangeably:
 //!
 //! | request                | response          | paper workload                    |
 //! |------------------------|-------------------|-----------------------------------|
@@ -12,12 +12,15 @@
 //! | [`FirRequest`]         | [`FirBlock`]      | §III.C streaming FIR blocks       |
 //! | [`MultiplyRequest`]    | [`ProductBlock`]  | batched multiply traffic          |
 //! | [`SnrRequest`]         | [`SnrAccum`]      | SNR power accumulation            |
+//! | [`PowerRequest`]       | [`PowerReport`]   | §II.C / Fig. 3–6 gate-level power |
 //!
 //! Implementations:
 //!
 //! * [`NativeBackend`] (default, always available) — batched loops over
-//!   the [`crate::arith`] oracles with exact `i128` reductions. Supports
-//!   every [`MultKind`] family and arbitrary batch lengths.
+//!   the [`crate::arith`] oracles with exact `i128` reductions, plus
+//!   the levelized-IR bitsliced gate engine (`crate::gate`) for the
+//!   power workload. Supports every [`MultKind`] family and arbitrary
+//!   batch lengths.
 //! * [`PjrtBackend`] (`--features pjrt`) — the AOT artifact path through
 //!   [`crate::runtime`]. Supports the Broken-Booth families the
 //!   artifacts were compiled for.
@@ -187,7 +190,67 @@ pub struct SnrAccum {
     pub err_power: f64,
 }
 
-/// An execution engine serving the four paper workloads.
+/// Gate-level power characterization of one multiplier design point:
+/// build the netlist, synthesize it at the delay constraint, drive it
+/// with random vectors on the bitsliced activity engine, and report
+/// average power — the paper's §II.C measurement loop as a servable
+/// batch job.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerRequest {
+    /// Multiplier family (must have a gate model; ETM comes back
+    /// [`BackendError::Unsupported`]).
+    pub kind: MultKind,
+    /// Operand word length in bits.
+    pub wl: u32,
+    /// Breaking/precision knob (VBL, K — family-specific).
+    pub level: u32,
+    /// Delay constraint in ps. `<= 0` requests minimum-delay synthesis
+    /// (`Tmin` hunting), with power evaluated at the achieved delay.
+    pub constraint_ps: f64,
+    /// Random stimulus vectors (rounded up to a multiple of the 64
+    /// bitsliced lanes; the paper uses 5×10⁵).
+    pub nvec: u64,
+    /// Stimulus stream seed.
+    pub seed: u64,
+}
+
+/// Measured power/area/delay of one synthesized design point.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PowerReport {
+    /// Dynamic (switching) power, mW.
+    pub dynamic_mw: f64,
+    /// Leakage power, mW.
+    pub leakage_mw: f64,
+    /// Clock-tree power (DFF clock pins), mW.
+    pub clock_mw: f64,
+    /// Achieved critical delay, ps.
+    pub delay_ps: f64,
+    /// Clock/vector period power was evaluated at, ps (the constraint,
+    /// or the achieved delay for `Tmin` requests).
+    pub period_ps: f64,
+    /// Whether the requested constraint was met.
+    pub met: bool,
+    /// Total placed area, µm².
+    pub area_um2: f64,
+    /// Cell count of the synthesized netlist.
+    pub cells: u64,
+    /// Vectors actually applied (after lane rounding).
+    pub vectors: u64,
+}
+
+impl PowerReport {
+    /// Total average power, mW.
+    pub fn total_mw(&self) -> f64 {
+        self.dynamic_mw + self.leakage_mw + self.clock_mw
+    }
+
+    /// Power-delay product at the evaluated period, pJ.
+    pub fn pdp_pj(&self) -> f64 {
+        self.total_mw() * self.period_ps * 1e-3
+    }
+}
+
+/// An execution engine serving the five paper workloads.
 ///
 /// Backends are *not* required to be `Send`: the coordinator constructs
 /// them inside its executor thread via a `Send` factory closure (real
@@ -208,6 +271,9 @@ pub trait Backend {
 
     /// SNR power accumulation.
     fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum>;
+
+    /// Gate-level power characterization of one design point.
+    fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport>;
 }
 
 /// Common request validation shared by backends.
@@ -271,6 +337,25 @@ pub(crate) fn validate_fir(req: &FirRequest) -> BackendResult<()> {
     // The FIR datapath is Broken-Booth Type0; enforce its bounds here
     // so both engines reject what the oracle constructor would panic on.
     validate_family(MultKind::BbmType0, req.wl, req.vbl)
+}
+
+/// Power request validation: family bounds plus stimulus sanity, so a
+/// malformed request is a typed reply instead of a panicking executor.
+pub(crate) fn validate_power(req: &PowerRequest) -> BackendResult<()> {
+    if req.wl == 0 || req.wl > 16 {
+        return Err(BackendError::Shape(format!("word length {} outside 1..=16", req.wl)));
+    }
+    validate_family(req.kind, req.wl, req.level)?;
+    if req.nvec == 0 {
+        return Err(BackendError::Shape("power run needs at least one vector".into()));
+    }
+    if !req.constraint_ps.is_finite() {
+        return Err(BackendError::Shape(format!(
+            "non-finite delay constraint {}",
+            req.constraint_ps
+        )));
+    }
+    Ok(())
 }
 
 /// SNR request validation.
@@ -423,6 +508,21 @@ mod tests {
         assert!(validate_fir(&bad).is_err(), "vbl > 2*wl must be rejected");
         let bad = SnrRequest { reference: vec![0.0; 3], signal: vec![0.0; FIR_BLOCK] };
         assert!(validate_snr(&bad).is_err());
+        let good = PowerRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 7,
+            constraint_ps: 0.0,
+            nvec: 64,
+            seed: 1,
+        };
+        assert!(validate_power(&good).is_ok());
+        assert!(validate_power(&PowerRequest { nvec: 0, ..good }).is_err());
+        assert!(validate_power(&PowerRequest { wl: 9, ..good }).is_err());
+        assert!(validate_power(&PowerRequest { level: 17, ..good }).is_err());
+        assert!(
+            validate_power(&PowerRequest { constraint_ps: f64::NAN, ..good }).is_err()
+        );
     }
 
     #[test]

@@ -12,11 +12,12 @@
 //! because that is what the PJRT engine requires.
 
 use crate::arith::{Multiplier, MultKind};
+use crate::gate;
 
 use super::{
-    validate_family, validate_fir, validate_pair, validate_snr, Backend, BackendResult,
-    ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest, ProductBlock, SnrAccum,
-    SnrRequest, FIR_TAPS,
+    validate_family, validate_fir, validate_pair, validate_power, validate_snr, Backend,
+    BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest,
+    MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, FIR_TAPS,
 };
 
 /// Batched native engine over the `arith` oracles.
@@ -106,6 +107,40 @@ impl Backend for NativeBackend {
         }
         Ok(SnrAccum { ref_power, err_power })
     }
+
+    fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport> {
+        validate_power(req)?;
+        let Some(mut nl) = gate::builders::build_multiplier(req.kind, req.wl, req.level)
+        else {
+            return Err(BackendError::Unsupported {
+                backend: self.name(),
+                what: format!("gate-level power model for family `{}`", req.kind),
+            });
+        };
+        // Synthesize: Tmin hunt for non-positive constraints, timing
+        // closure + power recovery otherwise.
+        let synth = if req.constraint_ps <= 0.0 {
+            gate::find_tmin(&mut nl)
+        } else {
+            gate::synthesize(&mut nl, req.constraint_ps)
+        };
+        let period_ps = if req.constraint_ps <= 0.0 { synth.delay_ps } else { req.constraint_ps };
+        // Activity on the bitsliced engine over one compiled program.
+        let lv = gate::Levelized::compile(&nl);
+        let act = gate::run_random_levelized(&lv, req.nvec, req.seed);
+        let p = gate::average_power(&nl, &act, period_ps);
+        Ok(PowerReport {
+            dynamic_mw: p.dynamic_mw,
+            leakage_mw: p.leakage_mw,
+            clock_mw: p.clock_mw,
+            delay_ps: synth.delay_ps,
+            period_ps,
+            met: synth.met,
+            area_um2: nl.area(),
+            cells: nl.cells.len() as u64,
+            vectors: act.vectors,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +227,54 @@ mod tests {
             reference.iter().zip(&signal).map(|(r, s)| (r - s) * (r - s)).sum();
         assert!((got.ref_power - want_pr).abs() < 1e-9 * want_pr.abs());
         assert!((got.err_power - want_pe).abs() < 1e-9 * want_pe.abs());
+    }
+
+    #[test]
+    fn power_workload_characterizes_design_points() {
+        let b = NativeBackend::new();
+        let base = PowerRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            constraint_ps: 0.0,
+            nvec: 64 * 32,
+            seed: 7,
+        };
+        // Tmin request: period equals the achieved delay.
+        let acc = b.power(&base).unwrap();
+        assert!(acc.met && acc.delay_ps > 0.0);
+        assert_eq!(acc.period_ps, acc.delay_ps);
+        assert!(acc.total_mw() > 0.0 && acc.area_um2 > 0.0 && acc.cells > 0);
+        assert_eq!(acc.vectors, 64 * 32);
+        // Breaking at the same relaxed constraint costs less power+area.
+        let constraint = acc.delay_ps * 1.5;
+        let acc_rel = b.power(&PowerRequest { constraint_ps: constraint, ..base }).unwrap();
+        let brk_rel = b
+            .power(&PowerRequest { constraint_ps: constraint, level: 7, ..base })
+            .unwrap();
+        assert!(acc_rel.met && brk_rel.met);
+        assert!(brk_rel.area_um2 < acc_rel.area_um2);
+        assert!(brk_rel.total_mw() < acc_rel.total_mw());
+        // Determinism: same request, same report.
+        let again = b.power(&base).unwrap();
+        assert_eq!(acc, again);
+    }
+
+    #[test]
+    fn power_workload_rejects_unmodeled_family() {
+        let b = NativeBackend::new();
+        let req = PowerRequest {
+            kind: MultKind::Etm,
+            wl: 8,
+            level: 4,
+            constraint_ps: 0.0,
+            nvec: 64,
+            seed: 1,
+        };
+        match b.power(&req) {
+            Err(BackendError::Unsupported { .. }) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::runtime::Runtime;
 use super::{
     validate_family, validate_fir, validate_pair, validate_snr, Backend, BackendError,
     BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
+    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
 };
 
 /// PJRT/XLA engine over an artifact directory.
@@ -134,5 +134,14 @@ impl Backend for PjrtBackend {
         let (ref_power, err_power) =
             self.rt.snr_acc(&req.reference, &req.signal).map_err(exec_err)?;
         Ok(SnrAccum { ref_power, err_power })
+    }
+
+    fn power(&self, _req: &PowerRequest) -> BackendResult<PowerReport> {
+        // Gate-level characterization is a native-engine workload: the
+        // AOT artifacts only cover the arithmetic kernels.
+        Err(BackendError::Unsupported {
+            backend: self.name(),
+            what: "gate-level power characterization (no AOT artifact)".to_string(),
+        })
     }
 }

@@ -30,7 +30,8 @@ use anyhow::{anyhow, Result};
 use crate::arith::{MultKind, Multiplier};
 use crate::backend::{
     Backend, BackendKind, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    ProductBlock, SnrAccum, SnrRequest, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
+    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, FIR_BLOCK, FIR_TAPS,
+    SWEEP_BATCH,
 };
 use crate::dsp::fixed;
 use crate::util::stats::ErrorStats;
@@ -45,6 +46,7 @@ enum Job {
     Moments(MomentsRequest, Sender<Result<ErrorMoments>>),
     Fir(FirRequest, Sender<Result<FirBlock>>),
     Snr(SnrRequest, Sender<Result<SnrAccum>>),
+    Power(PowerRequest, Sender<Result<PowerReport>>),
     Shutdown,
 }
 
@@ -213,6 +215,15 @@ impl DspServer {
         Pending::new(rrx)
     }
 
+    /// Submit a gate-level power characterization (blocks when the
+    /// queue is full). Sweep drivers pipeline one request per design
+    /// point and collect the reports in order.
+    pub fn submit_power(&self, req: PowerRequest) -> Pending<PowerReport> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Power(req, rtx));
+        Pending::new(rrx)
+    }
+
     // -- high-level request APIs -----------------------------------------
 
     /// Stream a real-valued signal through the FIR datapath: quantize
@@ -351,6 +362,13 @@ fn executor_loop(backend: Box<dyn Backend>, rx: Receiver<Job>, metrics: Arc<Metr
             Job::Snr(req, reply) => {
                 let n = req.reference.len() as u64;
                 let res = backend.snr(&req).map_err(anyhow::Error::from);
+                metrics.executions.fetch_add(1, Ordering::Relaxed);
+                metrics.record_job(t0.elapsed(), n);
+                let _ = reply.send(res);
+            }
+            Job::Power(req, reply) => {
+                let n = req.nvec;
+                let res = backend.power(&req).map_err(anyhow::Error::from);
                 metrics.executions.fetch_add(1, Ordering::Relaxed);
                 metrics.record_job(t0.elapsed(), n);
                 let _ = reply.send(res);

@@ -131,17 +131,64 @@ pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
     })
 }
 
+/// Logical shard count of [`random_stats`]. Fixed (not tied to the
+/// machine's thread count) so the drawn operand streams — and therefore
+/// the statistics — are identical on any host.
+const RANDOM_SHARDS: u64 = 16;
+
 /// Randomized sweep with `n` uniform input pairs (used where the paper
 /// samples rather than enumerates, and for quick CI-sized checks).
+///
+/// The work is split into [`RANDOM_SHARDS`] fixed shards, each drawing
+/// from its own [`Pcg64::split`] stream of `seed`, and the shards are
+/// executed by a work-stealing thread pool. Because the streams are
+/// derived up front and [`ErrorStats::merge`] is exact and commutative,
+/// the result is deterministic regardless of worker count.
 pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> SweepResult {
-    let mut rng = Pcg64::seeded(seed);
-    let mut stats = ErrorStats::new();
+    let mut root = Pcg64::seeded(seed);
+    let quotas: Vec<(Pcg64, u64)> = (0..RANDOM_SHARDS)
+        .map(|s| {
+            let extra = u64::from(s < n % RANDOM_SHARDS);
+            (root.split(), n / RANDOM_SHARDS + extra)
+        })
+        .collect();
     let (lo, hi) = mult.operand_range();
-    for _ in 0..n {
-        let x = rng.range_i64(lo, hi);
-        let y = rng.range_i64(lo, hi);
-        stats.push(mult.multiply(x, y) - x * y);
-    }
+    let next = Arc::new(AtomicU64::new(0));
+    let nthreads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(4)
+        .min(RANDOM_SHARDS as usize);
+
+    let stats = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..nthreads {
+            let next = Arc::clone(&next);
+            let quotas = &quotas;
+            handles.push(scope.spawn(move || {
+                let mut local = ErrorStats::new();
+                loop {
+                    let s = next.fetch_add(1, Ordering::Relaxed) as usize;
+                    if s >= quotas.len() {
+                        break;
+                    }
+                    let (stream, quota) = &quotas[s];
+                    let mut rng = stream.clone();
+                    for _ in 0..*quota {
+                        let x = rng.range_i64(lo, hi);
+                        let y = rng.range_i64(lo, hi);
+                        local.push(mult.multiply(x, y) - x * y);
+                    }
+                }
+                local
+            }));
+        }
+        let mut total = ErrorStats::new();
+        for h in handles {
+            total.merge(&h.join().expect("random sweep worker panicked"));
+        }
+        total
+    });
+
     SweepResult { name: mult.name(), wl: mult.wl(), pairs: n, stats }
 }
 

@@ -1,0 +1,694 @@
+//! Structural netlist generators for every gate-modeled multiplier
+//! family plus the sequential FIR datapath — the stand-in for the
+//! paper's RTL + Design Compiler elaboration step.
+//!
+//! Every builder is **bit-exact** against its [`crate::arith`] oracle
+//! (the cross-validation lives in `tests/gate_vs_arith.rs` and
+//! `tests/sim_equivalence.rs`):
+//!
+//! * [`build_broken_booth`] — radix-4 modified-Booth rows broken at the
+//!   Vertical Breaking Level, Type0 (complement-and-increment folded
+//!   before breaking) or Type1 (the `+1` correction dot breaks too);
+//! * [`build_bam`] — the unsigned Broken-Array baseline;
+//! * [`build_kulkarni`] — the 2×2-block multiplier with the paper's K
+//!   line (inaccurate blocks strictly right of column K);
+//! * [`build_fir`] — `taps` Broken-Booth cores on a DFF delay line with
+//!   a merged accumulation tree (Table IV's datapath);
+//! * [`build_multiplier`] — [`MultKind`]-indexed dispatcher (`None`
+//!   for families without a gate model, currently ETM).
+//!
+//! The Type0 breaking trick: the row value the arith model masks is the
+//! *completed* two's complement `d·x`, so a naive netlist would need the
+//! whole low-column incrementer even for broken columns. Instead the
+//! carry of the folded `+1` through the masked columns is computed
+//! directly — `carry = neg ∧ NOR(m_0..m_{k0−1})` — so broken columns
+//! cost one selector AND plus a share of a NOR tree instead of a full
+//! reduction-tree slice. Type1 rows whose correction dot falls below
+//! the VBL need nothing at all.
+//!
+//! All partial-product dots are summed by [`compress::wallace_reduce`]
+//! (3:2 carry-save) and a [`compress::kogge_stone_cpa`] back-end, both
+//! operating mod `2^columns` (carries out of the top column drop, which
+//! is exactly the product-field truncation the arith models apply).
+
+use crate::arith::{BbmType, Kulkarni, MultKind};
+
+use super::cell::CellKind;
+use super::netlist::{NetId, Netlist};
+
+/// Carry-save compression and carry-propagate adder back-ends shared by
+/// every builder (and exercised directly by `repro::ablation reducers`).
+pub mod compress {
+    use super::{NetId, Netlist};
+
+    /// Reduce a dot matrix (one `Vec<NetId>` of equally-weighted dots
+    /// per column, LSB first) to two addend rows with 3:2 full-adder
+    /// compression. Carries out of the last column are dropped: the
+    /// reduction is exact **mod `2^cols.len()`**. Empty columns come
+    /// back as constant-zero nets.
+    pub fn wallace_reduce(
+        nl: &mut Netlist,
+        mut cols: Vec<Vec<NetId>>,
+    ) -> (Vec<NetId>, Vec<NetId>) {
+        let n = cols.len();
+        while cols.iter().any(|c| c.len() > 2) {
+            let mut next: Vec<Vec<NetId>> = vec![Vec::new(); n];
+            for c in 0..n {
+                let dots = std::mem::take(&mut cols[c]);
+                let full = dots.len() / 3;
+                for g in 0..full {
+                    let (s, co) = nl.full_adder(dots[3 * g], dots[3 * g + 1], dots[3 * g + 2]);
+                    next[c].push(s);
+                    if c + 1 < n {
+                        next[c + 1].push(co);
+                    }
+                }
+                for &d in &dots[3 * full..] {
+                    next[c].push(d);
+                }
+            }
+            cols = next;
+        }
+        let mut a = Vec::with_capacity(n);
+        let mut b = Vec::with_capacity(n);
+        for c in 0..n {
+            a.push(match cols[c].first() {
+                Some(&d) => d,
+                None => nl.zero(),
+            });
+            b.push(match cols[c].get(1) {
+                Some(&d) => d,
+                None => nl.zero(),
+            });
+        }
+        (a, b)
+    }
+
+    /// Ripple-carry CPA: `a + b` mod `2^n` (final carry dropped).
+    pub fn ripple_cpa(nl: &mut Netlist, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len(), "addend width mismatch");
+        let mut out = Vec::with_capacity(a.len());
+        let mut carry: Option<NetId> = None;
+        for k in 0..a.len() {
+            let (s, co) = match carry {
+                None => nl.half_adder(a[k], b[k]),
+                Some(ci) => nl.full_adder(a[k], b[k], ci),
+            };
+            out.push(s);
+            carry = Some(co);
+        }
+        out
+    }
+
+    /// Kogge-Stone parallel-prefix CPA: `a + b` mod `2^n` in
+    /// `O(log n)` logic levels (the generators' default back-end —
+    /// min-delay synthesis regime, traded against the ripple CPA by
+    /// `repro::ablation reducers`).
+    pub fn kogge_stone_cpa(nl: &mut Netlist, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len(), "addend width mismatch");
+        let n = a.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut g: Vec<NetId> = (0..n).map(|k| nl.and(a[k], b[k])).collect();
+        let mut p: Vec<NetId> = (0..n).map(|k| nl.xor(a[k], b[k])).collect();
+        let psum = p.clone();
+        let mut d = 1;
+        while d < n {
+            let mut g2 = g.clone();
+            let mut p2 = p.clone();
+            for k in d..n {
+                let t = nl.and(p[k], g[k - d]);
+                g2[k] = nl.or(g[k], t);
+                p2[k] = nl.and(p[k], p[k - d]);
+            }
+            g = g2;
+            p = p2;
+            d *= 2;
+        }
+        // Carry into bit k is the full prefix generate over bits 0..k.
+        let mut out = Vec::with_capacity(n);
+        out.push(psum[0]);
+        for k in 1..n {
+            out.push(nl.xor(psum[k], g[k - 1]));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// operand encoding
+// ---------------------------------------------------------------------
+
+/// Pack two operands into the primary-input bit vector every multiplier
+/// netlist expects: `x` then `y`, LSB first, two's-complement truncated
+/// to `wl` bits each.
+pub fn encode_operands(x: i64, y: i64, wl: u32) -> Vec<bool> {
+    let mut bits = Vec::with_capacity(2 * wl as usize);
+    for b in 0..wl {
+        bits.push((x >> b) & 1 == 1);
+    }
+    for b in 0..wl {
+        bits.push((y >> b) & 1 == 1);
+    }
+    bits
+}
+
+/// Interpret output bits (LSB first) as a two's-complement value.
+pub fn decode_signed(bits: &[bool]) -> i64 {
+    assert!(!bits.is_empty() && bits.len() <= 64, "bad product width");
+    let v = decode_unsigned(bits);
+    let w = bits.len() as u32;
+    if w == 64 {
+        v as i64
+    } else {
+        ((v << (64 - w)) as i64) >> (64 - w)
+    }
+}
+
+/// Interpret output bits (LSB first) as an unsigned value.
+pub fn decode_unsigned(bits: &[bool]) -> u64 {
+    assert!(bits.len() <= 64, "bad product width");
+    let mut v = 0u64;
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            v |= 1u64 << i;
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// shared column summation
+// ---------------------------------------------------------------------
+
+/// Sum a dot matrix to per-column bits (mod `2^cols.len()`), returning
+/// `None` for columns that are constant zero (everything below the
+/// first populated column). Compression and CPA only span the populated
+/// suffix, so broken low columns cost no adder cells at all.
+fn sum_columns(nl: &mut Netlist, cols: Vec<Vec<NetId>>) -> Vec<Option<NetId>> {
+    let n = cols.len();
+    let Some(c0) = cols.iter().position(|c| !c.is_empty()) else {
+        return vec![None; n];
+    };
+    let (a, b) = compress::wallace_reduce(nl, cols[c0..].to_vec());
+    let bits = compress::kogge_stone_cpa(nl, &a, &b);
+    let mut out: Vec<Option<NetId>> = vec![None; c0];
+    out.extend(bits.into_iter().map(Some));
+    out
+}
+
+/// Materialize a summed column as a net (constant-zero tie if empty).
+fn col_net(nl: &mut Netlist, bit: Option<NetId>) -> NetId {
+    match bit {
+        Some(n) => n,
+        None => nl.zero(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Broken-Booth partial products
+// ---------------------------------------------------------------------
+
+/// Generate the Booth partial-product dot matrix for `x × y` broken at
+/// `vbl`, over `2·wl` columns. Shared by the standalone multiplier and
+/// the FIR datapath cores.
+fn booth_pp_columns(
+    nl: &mut Netlist,
+    x: &[NetId],
+    y: &[NetId],
+    vbl: u32,
+    ty: BbmType,
+) -> Vec<Vec<NetId>> {
+    let wl = x.len() as u32;
+    debug_assert!(wl >= 2 && wl % 2 == 0 && y.len() == x.len());
+    debug_assert!(vbl <= 2 * wl);
+    let p = 2 * wl;
+    let mut cols: Vec<Vec<NetId>> = vec![Vec::new(); p as usize];
+    for i in 0..wl / 2 {
+        let shift = 2 * i;
+        let b0 = y[(2 * i) as usize];
+        let b1 = y[(2 * i + 1) as usize];
+        // Booth encoder: |d| == 1, |d| == 2 and d < 0 from the
+        // overlapping triple. `neg` must be *strictly* negative — the
+        // all-ones triple encodes digit 0, and treating it as negative
+        // only cancels when the +1 survives, which Type1 breaking
+        // forfeits.
+        let (one, two, neg) = if i == 0 {
+            // b_{-1} = 0: one = b0, two = b1 & !b0, neg = b1.
+            let nb0 = nl.not(b0);
+            let two = nl.and(b1, nb0);
+            (b0, two, b1)
+        } else {
+            let bm = y[(2 * i - 1) as usize];
+            let one = nl.xor(b0, bm);
+            let same_low = nl.xnor(b0, bm);
+            let diff_hi = nl.xor(b1, b0);
+            let two = nl.and(same_low, diff_hi);
+            let not_both = nl.add(CellKind::Nand2, &[b0, bm]);
+            let neg = nl.and(b1, not_both);
+            (one, two, neg)
+        };
+        let w = p - shift;
+        let k0 = vbl.saturating_sub(shift).min(w);
+        // Selector output bit k of |d|·x (sign-extended through the
+        // field): one→x_k, two→x_{k-1}, else 0.
+        let sel = |nl: &mut Netlist, k: u32| -> NetId {
+            let sx = x[k.min(wl - 1) as usize];
+            let t1 = nl.and(one, sx);
+            if k == 0 {
+                t1 // 2x has a zero LSB
+            } else {
+                let sx1 = x[(k - 1).min(wl - 1) as usize];
+                let t2 = nl.and(two, sx1);
+                nl.or(t1, t2)
+            }
+        };
+        // Surviving dots: selector output, one's-complemented when the
+        // digit is negative.
+        for k in k0..w {
+            let m = sel(nl, k);
+            let pp = nl.xor(m, neg);
+            cols[(shift + k) as usize].push(pp);
+        }
+        // The two's-complement correction.
+        match ty {
+            // Type1 keeps the raw +1 dot only if its column survives.
+            BbmType::Type1 => {
+                if shift >= vbl {
+                    cols[shift as usize].push(neg);
+                }
+            }
+            // Type0 folds the +1 before breaking: below the VBL only
+            // its carry into the first kept column remains, and that
+            // carry is `neg ∧ NOR(m_low)` (the masked low field of
+            // ¬m + 1 overflows exactly when every m_low bit is 0).
+            BbmType::Type0 => {
+                if vbl <= shift {
+                    cols[shift as usize].push(neg);
+                } else if vbl < p {
+                    let lows: Vec<NetId> = (0..k0).map(|k| sel(nl, k)).collect();
+                    let any = nl.or_tree(&lows);
+                    let none = nl.not(any);
+                    let carry = nl.and(neg, none);
+                    cols[vbl as usize].push(carry);
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Broken-Booth multiplier netlist (`vbl = 0` is the exact
+/// modified-Booth baseline). Inputs: `x` bus then `y` bus (LSB first);
+/// outputs: the `2·wl` product bits, LSB first, two's complement.
+pub fn build_broken_booth(wl: u32, vbl: u32, ty: BbmType) -> Netlist {
+    assert!(wl >= 2 && wl % 2 == 0 && wl <= 24, "wl must be even, 2..=24");
+    assert!(vbl <= 2 * wl, "vbl must be <= 2*wl");
+    let mut nl = Netlist::new(&format!("bbm_{ty}_wl{wl}_vbl{vbl}"));
+    let x = nl.input_bus(wl);
+    let y = nl.input_bus(wl);
+    let cols = booth_pp_columns(&mut nl, &x, &y, vbl, ty);
+    let bits = sum_columns(&mut nl, cols);
+    for bit in bits {
+        let net = col_net(&mut nl, bit);
+        nl.output(net);
+    }
+    nl
+}
+
+/// Broken-Array multiplier netlist (unsigned, HBL fixed to 0 as in the
+/// paper's comparison). Outputs the `2·wl` unsigned product bits.
+pub fn build_bam(wl: u32, vbl: u32) -> Netlist {
+    assert!(wl >= 1 && wl <= 24, "wl must be 1..=24");
+    assert!(vbl <= 2 * wl, "vbl must be <= 2*wl");
+    let mut nl = Netlist::new(&format!("bam_wl{wl}_vbl{vbl}"));
+    let x = nl.input_bus(wl);
+    let y = nl.input_bus(wl);
+    let p = 2 * wl;
+    let mut cols: Vec<Vec<NetId>> = vec![Vec::new(); p as usize];
+    for j in 0..wl {
+        for i in 0..wl {
+            if i + j >= vbl {
+                let dot = nl.and(x[i as usize], y[j as usize]);
+                cols[(i + j) as usize].push(dot);
+            }
+        }
+    }
+    let bits = sum_columns(&mut nl, cols);
+    for bit in bits {
+        let net = col_net(&mut nl, bit);
+        nl.output(net);
+    }
+    nl
+}
+
+/// Kulkarni 2×2-block multiplier netlist with the paper's K knob:
+/// blocks entirely right of column K use the inaccurate 3-output block
+/// (`3×3 → 7`), the rest are exact. Outputs the `2·wl` unsigned
+/// product bits.
+pub fn build_kulkarni(wl: u32, k: u32) -> Netlist {
+    assert!(wl >= 2 && wl % 2 == 0 && wl <= 24, "wl must be even, 2..=24");
+    assert!(k <= 2 * wl + 2, "k must be <= 2*wl + 2");
+    let mut nl = Netlist::new(&format!("kulkarni_wl{wl}_k{k}"));
+    let x = nl.input_bus(wl);
+    let y = nl.input_bus(wl);
+    let model = Kulkarni::new(wl, k);
+    let d = wl / 2;
+    let p = 2 * wl;
+    let mut cols: Vec<Vec<NetId>> = vec![Vec::new(); p as usize];
+    for c in 0..d {
+        for r in 0..d {
+            let a0 = x[(2 * c) as usize];
+            let a1 = x[(2 * c + 1) as usize];
+            let b0 = y[(2 * r) as usize];
+            let b1 = y[(2 * r + 1) as usize];
+            let base = (2 * (c + r)) as usize;
+            let p0 = nl.and(a0, b0);
+            let t10 = nl.and(a1, b0);
+            let t01 = nl.and(a0, b1);
+            let t11 = nl.and(a1, b1);
+            if model.block_is_approx(c, r) {
+                // Kulkarni block: 3 outputs, 3·3 → 7.
+                let p1 = nl.or(t10, t01);
+                cols[base].push(p0);
+                cols[base + 1].push(p1);
+                cols[base + 2].push(t11);
+            } else {
+                // Exact 2×2 block: 4 outputs.
+                let p1 = nl.xor(t10, t01);
+                let c1 = nl.and(t10, t01);
+                let p2 = nl.xor(t11, c1);
+                let p3 = nl.and(t11, c1);
+                cols[base].push(p0);
+                cols[base + 1].push(p1);
+                cols[base + 2].push(p2);
+                cols[base + 3].push(p3);
+            }
+        }
+    }
+    let bits = sum_columns(&mut nl, cols);
+    for bit in bits {
+        let net = col_net(&mut nl, bit);
+        nl.output(net);
+    }
+    nl
+}
+
+/// Build the gate model for a [`MultKind`] design point, or `None` for
+/// families without one (currently ETM, which the paper only evaluates
+/// behaviourally).
+pub fn build_multiplier(kind: MultKind, wl: u32, level: u32) -> Option<Netlist> {
+    match kind {
+        MultKind::ExactBooth => Some(build_broken_booth(wl, 0, BbmType::Type0)),
+        MultKind::BbmType0 => Some(build_broken_booth(wl, level, BbmType::Type0)),
+        MultKind::BbmType1 => Some(build_broken_booth(wl, level, BbmType::Type1)),
+        MultKind::Bam => Some(build_bam(wl, level)),
+        MultKind::Kulkarni => Some(build_kulkarni(wl, level)),
+        MultKind::Etm => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// FIR datapath
+// ---------------------------------------------------------------------
+
+/// Parameters of the sequential FIR datapath generator.
+#[derive(Clone, Copy, Debug)]
+pub struct FirSpec {
+    /// Number of taps (= multipliers on the delay line).
+    pub taps: u32,
+    /// Word length of samples and coefficients.
+    pub wl: u32,
+    /// Broken-Booth breaking level of the tap multipliers (0 = exact).
+    pub vbl: u32,
+    /// Breaking discipline of the tap multipliers.
+    pub ty: BbmType,
+}
+
+impl FirSpec {
+    /// Accumulator width: full `2·wl`-bit products plus `⌈log2 taps⌉`
+    /// growth bits, so the sum never wraps.
+    pub fn acc_bits(&self) -> u32 {
+        let growth = if self.taps <= 1 {
+            0
+        } else {
+            32 - (self.taps - 1).leading_zeros()
+        };
+        2 * self.wl + growth
+    }
+}
+
+/// Sequential FIR datapath: an input DFF delay line, one Broken-Booth
+/// core per tap, and a merged carry-save accumulation tree.
+///
+/// Inputs: the sample bus (`wl` bits), then one coefficient bus per tap
+/// (`taps × wl` bits). Outputs: the `acc_bits()`-bit accumulator, two's
+/// complement, combinational on the delay-line registers — so the
+/// output at cycle `n` is `Σ_k multiply(x[n−1−k], h[k])`.
+pub fn build_fir(spec: FirSpec) -> Netlist {
+    assert!(spec.taps >= 1, "need at least one tap");
+    assert!(
+        spec.wl >= 2 && spec.wl % 2 == 0 && spec.wl <= 24,
+        "wl must be even, 2..=24"
+    );
+    assert!(spec.vbl <= 2 * spec.wl, "vbl must be <= 2*wl");
+    let wl = spec.wl;
+    let p = 2 * wl;
+    let acc_bits = spec.acc_bits();
+    let mut nl = Netlist::new(&format!(
+        "fir{}_{}_wl{}_vbl{}",
+        spec.taps, spec.ty, wl, spec.vbl
+    ));
+    let x = nl.input_bus(wl);
+    let taps_in: Vec<Vec<NetId>> = (0..spec.taps).map(|_| nl.input_bus(wl)).collect();
+    // Delay line: stage k holds x[n-1-k] during cycle n.
+    let mut delayed: Vec<Vec<NetId>> = Vec::with_capacity(spec.taps as usize);
+    let mut prev = x;
+    for _ in 0..spec.taps {
+        let q: Vec<NetId> = prev.iter().map(|&d| nl.dff(d)).collect();
+        delayed.push(q.clone());
+        prev = q;
+    }
+    // Per-tap product cores (each truncated to its own 2·wl-bit field —
+    // the Broken-Booth product contract), then one merged accumulator.
+    let mut acc_cols: Vec<Vec<NetId>> = vec![Vec::new(); acc_bits as usize];
+    for k in 0..spec.taps as usize {
+        let cols = booth_pp_columns(&mut nl, &delayed[k], &taps_in[k], spec.vbl, spec.ty);
+        let prod = sum_columns(&mut nl, cols);
+        for (c, bit) in prod.iter().enumerate() {
+            if let Some(net) = bit {
+                acc_cols[c].push(*net);
+            }
+        }
+        // Sign-extend the product into the growth columns.
+        if let Some(sign) = prod[(p - 1) as usize] {
+            for c in p..acc_bits {
+                acc_cols[c as usize].push(sign);
+            }
+        }
+    }
+    let bits = sum_columns(&mut nl, acc_cols);
+    for bit in bits {
+        let net = col_net(&mut nl, bit);
+        nl.output(net);
+    }
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{Bam, BrokenBooth, Multiplier};
+    use crate::gate::sim::eval_once;
+    use crate::util::Pcg64;
+
+    fn gate_product_signed(nl: &Netlist, x: i64, y: i64, wl: u32) -> i64 {
+        decode_signed(&eval_once(nl, &encode_operands(x, y, wl)))
+    }
+
+    fn gate_product_unsigned(nl: &Netlist, x: i64, y: i64, wl: u32) -> i64 {
+        decode_unsigned(&eval_once(nl, &encode_operands(x, y, wl))) as i64
+    }
+
+    #[test]
+    fn broken_booth_exhaustive_wl4_all_vbl_both_types() {
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            for vbl in 0..=8u32 {
+                let m = BrokenBooth::new(4, vbl, ty);
+                let nl = build_broken_booth(4, vbl, ty);
+                assert!(nl.check_topological());
+                for x in -8i64..8 {
+                    for y in -8i64..8 {
+                        assert_eq!(
+                            gate_product_signed(&nl, x, y, 4),
+                            m.multiply(x, y),
+                            "{ty} vbl={vbl} x={x} y={y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broken_booth_sampled_wl8_wl12() {
+        let mut rng = Pcg64::seeded(31);
+        for (wl, vbl) in [(8u32, 0u32), (8, 7), (8, 16), (12, 5), (12, 11)] {
+            for ty in [BbmType::Type0, BbmType::Type1] {
+                let m = BrokenBooth::new(wl, vbl, ty);
+                let nl = build_broken_booth(wl, vbl, ty);
+                for _ in 0..200 {
+                    let (x, y) = (rng.operand(wl), rng.operand(wl));
+                    assert_eq!(
+                        gate_product_signed(&nl, x, y, wl),
+                        m.multiply(x, y),
+                        "{ty} wl={wl} vbl={vbl} x={x} y={y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bam_exhaustive_wl4() {
+        for vbl in 0..=8u32 {
+            let m = Bam::new(4, vbl, 0);
+            let nl = build_bam(4, vbl);
+            for x in 0i64..16 {
+                for y in 0i64..16 {
+                    assert_eq!(
+                        gate_product_unsigned(&nl, x, y, 4),
+                        m.multiply(x, y),
+                        "vbl={vbl} x={x} y={y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kulkarni_exhaustive_wl4() {
+        for k in 0..=10u32 {
+            let m = Kulkarni::new(4, k);
+            let nl = build_kulkarni(4, k);
+            for x in 0i64..16 {
+                for y in 0i64..16 {
+                    assert_eq!(
+                        gate_product_unsigned(&nl, x, y, 4),
+                        m.multiply(x, y),
+                        "k={k} x={x} y={y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn breaking_removes_cells_and_area() {
+        let full = build_broken_booth(8, 0, BbmType::Type0);
+        let broken = build_broken_booth(8, 7, BbmType::Type0);
+        assert!(broken.cells.len() < full.cells.len());
+        assert!(broken.area() < full.area() * 0.9, "{} vs {}", broken.area(), full.area());
+        // Type1 breaking is at least as cheap as Type0's.
+        let t1 = build_broken_booth(8, 7, BbmType::Type1);
+        assert!(t1.cells.len() <= broken.cells.len());
+    }
+
+    #[test]
+    fn cpa_backends_agree_mod_2n() {
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..20 {
+            let n = 11usize;
+            let av = rng.below(1 << n);
+            let bv = rng.below(1 << n);
+            for ks in [false, true] {
+                let mut nl = Netlist::new("cpa");
+                let a = nl.input_bus(n as u32);
+                let b = nl.input_bus(n as u32);
+                let bits = if ks {
+                    compress::kogge_stone_cpa(&mut nl, &a, &b)
+                } else {
+                    compress::ripple_cpa(&mut nl, &a, &b)
+                };
+                for bit in bits {
+                    nl.output(bit);
+                }
+                let mut inputs = Vec::new();
+                for k in 0..n {
+                    inputs.push((av >> k) & 1 == 1);
+                }
+                for k in 0..n {
+                    inputs.push((bv >> k) & 1 == 1);
+                }
+                let got = decode_unsigned(&eval_once(&nl, &inputs));
+                assert_eq!(got, (av + bv) % (1 << n), "ks={ks} a={av} b={bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn wallace_reduce_preserves_column_sums() {
+        // Random dot matrix: sum of dots per weight must survive the
+        // reduction mod 2^n.
+        let mut rng = Pcg64::seeded(9);
+        let n = 10usize;
+        let mut nl = Netlist::new("wal");
+        let mut cols: Vec<Vec<NetId>> = vec![Vec::new(); n];
+        let mut dot_bits: Vec<(usize, bool)> = Vec::new();
+        let mut inputs = Vec::new();
+        for (c, col) in cols.iter_mut().enumerate() {
+            let h = rng.below(6) as usize;
+            for _ in 0..h {
+                col.push(nl.input());
+                let v = rng.below(2) == 1;
+                dot_bits.push((c, v));
+                inputs.push(v);
+            }
+        }
+        let (a, b) = compress::wallace_reduce(&mut nl, cols);
+        let bits = compress::kogge_stone_cpa(&mut nl, &a, &b);
+        for bit in bits {
+            nl.output(bit);
+        }
+        let want: u64 = dot_bits
+            .iter()
+            .map(|&(c, v)| if v { 1u64 << c } else { 0 })
+            .fold(0u64, |acc, v| acc.wrapping_add(v))
+            % (1 << n);
+        let got = decode_unsigned(&eval_once(&nl, &inputs));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fir_acc_bits_growth() {
+        let spec = FirSpec { taps: 6, wl: 8, vbl: 0, ty: BbmType::Type0 };
+        assert_eq!(spec.acc_bits(), 19);
+        let spec = FirSpec { taps: 30, wl: 16, vbl: 0, ty: BbmType::Type0 };
+        assert_eq!(spec.acc_bits(), 37);
+        let spec = FirSpec { taps: 1, wl: 8, vbl: 0, ty: BbmType::Type0 };
+        assert_eq!(spec.acc_bits(), 16);
+    }
+
+    #[test]
+    fn fir_netlist_shape() {
+        let spec = FirSpec { taps: 4, wl: 6, vbl: 3, ty: BbmType::Type0 };
+        let nl = build_fir(spec);
+        assert!(nl.check_topological());
+        assert_eq!(nl.inputs.len(), 6 + 4 * 6);
+        assert_eq!(nl.outputs.len(), spec.acc_bits() as usize);
+        assert_eq!(nl.num_dffs(), 4 * 6);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for &(x, y) in &[(0i64, 0i64), (-128, 127), (5, -6), (-1, -1)] {
+            let bits = encode_operands(x, y, 8);
+            assert_eq!(bits.len(), 16);
+            assert_eq!(decode_signed(&bits[..8]), x);
+            assert_eq!(decode_signed(&bits[8..]), y);
+        }
+        assert_eq!(decode_unsigned(&[true, false, true]), 5);
+        assert_eq!(decode_signed(&[true, true]), -1);
+    }
+}

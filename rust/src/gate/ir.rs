@@ -1,0 +1,235 @@
+//! Levelized netlist IR — the compiled form of a [`Netlist`] that the
+//! simulator, STA and power layers consume instead of re-walking the
+//! raw cell graph.
+//!
+//! Compilation does three things once per structure:
+//!
+//! 1. **Flattens** every combinational cell into a fixed-width [`Op`]
+//!    (kind + three dense input net indices + output index + the
+//!    originating cell index), so the per-step simulation loop is a
+//!    linear scan over one contiguous array;
+//! 2. **Levelizes**: ops are scheduled by ASAP logic level (primary
+//!    inputs, tie cells' sources and DFF outputs are level 0), with
+//!    [`Levelized::level_start`] marking the level boundaries — the
+//!    schedule any wavefront/parallel evaluator needs, and the depth
+//!    statistic reports consume;
+//! 3. **Splits state**: DFFs are extracted into a dense `(D, Q, cell)`
+//!    table so one step = one clock cycle with a two-phase latch.
+//!
+//! The IR is *structure only* — cell drive strengths stay in the
+//! [`Netlist`] (the sizing optimizer mutates them between STA calls),
+//! so one compiled program serves every sizing iteration and every
+//! simulation run on the same structure.
+
+use super::cell::CellKind;
+use super::netlist::Netlist;
+
+/// One flattened combinational cell: opcode plus dense net indices.
+/// Unused input slots hold 0; evaluators may load them unconditionally
+/// (net 0 always exists in any netlist with cells) but must ignore the
+/// value — dispatch is on `kind`.
+#[derive(Clone, Copy, Debug)]
+pub struct Op {
+    /// Cell type.
+    pub kind: CellKind,
+    /// First input net.
+    pub a: u32,
+    /// Second input net.
+    pub b: u32,
+    /// Third input net.
+    pub c: u32,
+    /// Output net.
+    pub out: u32,
+    /// Index of the originating cell in [`Netlist::cells`].
+    pub cell: u32,
+}
+
+/// A compiled, levelized netlist program.
+#[derive(Clone, Debug, Default)]
+pub struct Levelized {
+    /// Module name (reports only).
+    pub name: String,
+    /// Total number of nets (dense index space of every op).
+    pub num_nets: u32,
+    /// Primary-input nets in declaration order.
+    pub inputs: Vec<u32>,
+    /// Primary-output nets in declaration order.
+    pub outputs: Vec<u32>,
+    /// Combinational ops in level order (level 1 first). Level order is
+    /// also a topological order: an op only reads level-0 sources or
+    /// outputs of strictly earlier levels.
+    pub ops: Vec<Op>,
+    /// Op-index boundaries per level: level `l` (1-based) spans
+    /// `ops[level_start[l-1] .. level_start[l]]`; `len() - 1` levels.
+    pub level_start: Vec<u32>,
+    /// `(D net, Q net, cell index)` per flip-flop.
+    pub dffs: Vec<(u32, u32, u32)>,
+    /// ASAP logic level per net (0 for sources and DFF outputs).
+    pub net_level: Vec<u32>,
+}
+
+impl Levelized {
+    /// Compile a netlist into its levelized program.
+    pub fn compile(nl: &Netlist) -> Levelized {
+        let n = nl.num_nets as usize;
+        let mut net_level = vec![0u32; n];
+        let mut tagged: Vec<(u32, Op)> = Vec::with_capacity(nl.cells.len());
+        let mut dffs = Vec::new();
+        for (ci, cell) in nl.cells.iter().enumerate() {
+            if cell.kind == CellKind::Dff {
+                dffs.push((cell.inputs[0].0, cell.output.0, ci as u32));
+                continue;
+            }
+            let mut lvl = 0u32;
+            for &i in &cell.inputs {
+                lvl = lvl.max(net_level[i.0 as usize]);
+            }
+            let lvl = lvl + 1;
+            net_level[cell.output.0 as usize] = lvl;
+            let pin = |i: usize| cell.inputs.get(i).map(|x| x.0).unwrap_or(0);
+            tagged.push((
+                lvl,
+                Op {
+                    kind: cell.kind,
+                    a: pin(0),
+                    b: pin(1),
+                    c: pin(2),
+                    out: cell.output.0,
+                    cell: ci as u32,
+                },
+            ));
+        }
+        // Stable sort by level keeps same-level ops in construction
+        // order (they are mutually independent, so any order is valid).
+        tagged.sort_by_key(|&(lvl, _)| lvl);
+        let depth = tagged.last().map(|&(lvl, _)| lvl).unwrap_or(0) as usize;
+        let mut level_start = vec![0u32; depth + 1];
+        for &(lvl, _) in &tagged {
+            level_start[lvl as usize] += 1;
+        }
+        for l in 1..level_start.len() {
+            level_start[l] += level_start[l - 1];
+        }
+        let ops: Vec<Op> = tagged.into_iter().map(|(_, op)| op).collect();
+        Levelized {
+            name: nl.name.clone(),
+            num_nets: nl.num_nets,
+            inputs: nl.inputs.iter().map(|n| n.0).collect(),
+            outputs: nl.outputs.iter().map(|n| n.0).collect(),
+            ops,
+            level_start,
+            dffs,
+            net_level,
+        }
+    }
+
+    /// Number of combinational logic levels.
+    pub fn depth(&self) -> u32 {
+        (self.level_start.len() - 1) as u32
+    }
+
+    /// Number of combinational ops.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// `true` when the design has no state.
+    pub fn is_combinational(&self) -> bool {
+        self.dffs.is_empty()
+    }
+
+    /// Ops of one level (1-based, `1..=depth()`).
+    pub fn level(&self, l: u32) -> &[Op] {
+        let lo = self.level_start[(l - 1) as usize] as usize;
+        let hi = self.level_start[l as usize] as usize;
+        &self.ops[lo..hi]
+    }
+
+    /// Sanity: every op reads only sources or outputs of earlier ops —
+    /// the invariant the linear evaluation loop relies on.
+    pub fn check_schedule(&self) -> bool {
+        let mut ready = vec![false; self.num_nets as usize];
+        for &i in &self.inputs {
+            ready[i as usize] = true;
+        }
+        for &(_, q, _) in &self.dffs {
+            ready[q as usize] = true;
+        }
+        for op in &self.ops {
+            let pins = [op.a, op.b, op.c];
+            for &p in pins.iter().take(op.kind.arity()) {
+                if !ready[p as usize] {
+                    return false;
+                }
+            }
+            ready[op.out as usize] = true;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::BbmType;
+    use crate::gate::builders::build_broken_booth;
+
+    fn small() -> Netlist {
+        let mut nl = Netlist::new("t");
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let y = nl.and(x, a);
+        let z = nl.or(y, b);
+        nl.output(z);
+        nl
+    }
+
+    #[test]
+    fn compile_levels_chain() {
+        let nl = small();
+        let lv = Levelized::compile(&nl);
+        assert_eq!(lv.num_ops(), 3);
+        assert_eq!(lv.depth(), 3);
+        assert!(lv.check_schedule());
+        assert_eq!(lv.level(1).len(), 1);
+        assert_eq!(lv.level(1)[0].kind, CellKind::Xor2);
+        // Net levels: inputs 0, xor 1, and 2, or 3.
+        assert_eq!(lv.net_level[lv.outputs[0] as usize], 3);
+    }
+
+    #[test]
+    fn dffs_are_sources() {
+        let mut nl = Netlist::new("seq");
+        let a = nl.input();
+        let q = nl.dff(a);
+        let y = nl.not(q);
+        nl.output(y);
+        let lv = Levelized::compile(&nl);
+        assert_eq!(lv.dffs.len(), 1);
+        assert_eq!(lv.num_ops(), 1);
+        assert!(lv.check_schedule());
+        assert_eq!(lv.net_level[q.0 as usize], 0);
+    }
+
+    #[test]
+    fn multiplier_compiles_and_schedules() {
+        let nl = build_broken_booth(8, 0, BbmType::Type0);
+        let lv = Levelized::compile(&nl);
+        assert_eq!(lv.num_ops(), nl.cells.len());
+        assert!(lv.check_schedule());
+        assert!(lv.depth() >= 6, "a wl=8 multiplier is deeper than 6 levels");
+        assert!(lv.is_combinational());
+        // Level boundaries partition the op list.
+        assert_eq!(*lv.level_start.last().unwrap() as usize, lv.ops.len());
+    }
+
+    #[test]
+    fn empty_netlist_compiles() {
+        let nl = Netlist::new("empty");
+        let lv = Levelized::compile(&nl);
+        assert_eq!(lv.depth(), 0);
+        assert_eq!(lv.num_ops(), 0);
+        assert!(lv.check_schedule());
+    }
+}

@@ -5,18 +5,42 @@
 //!
 //! 1. [`builders`] generate a structural netlist for a multiplier (or
 //!    the whole FIR datapath) at given `(WL, VBL/K)`;
-//! 2. [`size`] "synthesizes" it under a delay constraint (critical-path
+//! 2. [`ir`] compiles it once into the **levelized IR** every analysis
+//!    consumes;
+//! 3. [`size`] "synthesizes" it under a delay constraint (critical-path
 //!    upsizing + slack-driven power recovery);
-//! 3. [`sim`] measures switching activity under random vectors (the
+//! 4. [`sim`] measures switching activity under random vectors (the
 //!    paper: 5×10⁵) or a real signal workload;
-//! 4. [`power`] turns activity into average total power; [`timing`]
+//! 5. [`power`] turns activity into average total power; [`timing`]
 //!    reports the achieved critical delay.
 //!
-//! [`characterize`] bundles 2–4 into the per-design-point measurement
-//! every table/figure driver consumes.
+//! [`characterize`] bundles 3–5 into the per-design-point measurement
+//! every table/figure driver consumes, and the execution-backend layer
+//! serves the same measurement as a typed `PowerRequest` workload
+//! (`crate::backend`).
+//!
+//! ## Levelized IR and bitslicing
+//!
+//! [`ir::Levelized`] is the compiled form of a [`Netlist`]: every
+//! combinational cell flattened to a fixed-width op (opcode + dense net
+//! indices), scheduled by ASAP logic level, with DFF state split into a
+//! dense `(D, Q)` table. The structure compiles once; drive strengths
+//! stay in the netlist so the sizing loop re-runs STA on the same
+//! schedule without re-walking the graph.
+//!
+//! [`sim::Simulator`] evaluates that program on `u64` **lane words** —
+//! 64 independent stimulus vectors per pass, one per bit, with toggle
+//! counting via `count_ones(new ^ old)`. The paper's 5×10⁵-vector
+//! activity run therefore takes ~7.8k passes instead of 5×10⁵ scalar
+//! evaluations (see `benches/bench_gate.rs` for the measured speedup
+//! against the scalar oracle). The scalar interpreter
+//! ([`sim::ScalarSim`], [`eval_once`]) walks the raw netlist one
+//! boolean per net and is the correctness oracle the lanes are proven
+//! bit-identical against (`tests/sim_equivalence.rs`).
 
 pub mod builders;
 pub mod cell;
+pub mod ir;
 pub mod netlist;
 pub mod power;
 pub mod sim;
@@ -24,11 +48,15 @@ pub mod size;
 pub mod timing;
 
 pub use cell::{CellKind, Size};
+pub use ir::Levelized;
 pub use netlist::{Cell, NetId, Netlist};
 pub use power::{average_power, pdp_pj, PowerReport};
-pub use sim::{eval_once, run_random, run_stream, Activity, Simulator};
+pub use sim::{
+    eval_once, run_random, run_random_levelized, run_random_scalar, run_stream, Activity,
+    ScalarSim, Simulator,
+};
 pub use size::{find_tmin, meet_constraint, recover_power, synthesize, SynthResult};
-pub use timing::{analyze, critical_path, Timing};
+pub use timing::{analyze, analyze_levelized, critical_path, Timing};
 
 /// One synthesized-and-measured design point.
 #[derive(Clone, Debug)]
@@ -65,7 +93,8 @@ impl Characterization {
 /// random vectors, and report area/delay/power — one full design point.
 pub fn characterize(nl: &mut Netlist, constraint_ps: f64, nvec: u64, seed: u64) -> Characterization {
     let synth = synthesize(nl, constraint_ps);
-    let act = run_random(nl, nvec, seed);
+    let lv = Levelized::compile(nl);
+    let act = run_random_levelized(&lv, nvec, seed);
     let power = average_power(nl, &act, constraint_ps);
     Characterization {
         name: nl.name.clone(),

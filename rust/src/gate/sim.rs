@@ -1,31 +1,45 @@
-//! Bit-parallel event simulation with per-net toggle counting — the
-//! stand-in for the paper's post-synthesis VCD extraction.
+//! Gate-level simulation: a 64-lane bitsliced engine over the
+//! levelized IR, plus the scalar reference interpreter it is checked
+//! against — the stand-in for the paper's post-synthesis VCD
+//! extraction.
 //!
-//! The simulator evaluates 64 independent stimulus lanes at once (one per
-//! bit of a `u64` word), exactly like a 64-seat Monte-Carlo of the
-//! paper's `5 × 10^5`-random-vector power run. Toggle counts accumulate
-//! `popcount(new ^ old)` per net per step, which is the zero-delay
-//! switching activity `α` the power model consumes (glitch activity is
-//! not modeled — noted in DESIGN.md §1; it affects both the accurate and
-//! approximate designs alike, preserving the paper's relative claims).
+//! The bitsliced [`Simulator`] evaluates a compiled
+//! [`Levelized`] program on `u64` lane words — 64 independent stimulus
+//! vectors per pass, one per bit — exactly like a 64-seat Monte-Carlo
+//! of the paper's `5 × 10^5`-random-vector power run. Toggle counts
+//! accumulate `count_ones(new ^ old)` per net per step, which is the
+//! zero-delay switching activity `α` the power model consumes (glitch
+//! activity is not modeled; it affects the accurate and approximate
+//! designs alike, preserving the paper's relative claims).
 //!
-//! Sequential designs (DFFs) are supported: DFF output nets hold state
-//! that updates at the end of each step, i.e. one step = one clock cycle.
+//! The scalar [`ScalarSim`] walks the raw [`Netlist`] one boolean per
+//! net and is the **correctness oracle**: `tests/sim_equivalence.rs`
+//! proves the lanes bit-identical (values *and* toggle counts) against
+//! it, and [`run_random`] / [`run_random_scalar`] draw identical
+//! per-input vector streams from split [`Pcg64`] generators so the two
+//! engines are directly comparable.
+//!
+//! Sequential designs (DFFs) are supported by both engines: DFF output
+//! nets hold state that updates at the end of each step (two-phase
+//! read-all-D / write-all-Q), i.e. one step = one clock cycle.
+
+use std::borrow::Cow;
 
 use super::cell::CellKind;
+use super::ir::Levelized;
 use super::netlist::Netlist;
 use crate::util::Pcg64;
 
 /// Switching-activity record from a simulation run.
 #[derive(Clone, Debug)]
 pub struct Activity {
-    /// Transition count per net (summed over all 64 lanes).
+    /// Transition count per net (summed over all lanes).
     pub toggles: Vec<u64>,
     /// Number of time steps executed.
     pub steps: u64,
-    /// Stimulus lanes (always 64 here).
+    /// Stimulus lanes per step (64 bitsliced, 1 scalar).
     pub lanes: u32,
-    /// Clock-cycle count per lane (equals `steps` for sequential designs).
+    /// Applied vector count (`steps × lanes`).
     pub vectors: u64,
 }
 
@@ -45,21 +59,37 @@ impl Activity {
     }
 }
 
-/// 64-lane bit-parallel simulator over a [`Netlist`].
+#[inline]
+fn eval_op(kind: CellKind, a: u64, b: u64, c: u64) -> u64 {
+    match kind {
+        CellKind::Tie0 => 0,
+        CellKind::Tie1 => !0u64,
+        CellKind::Buf => a,
+        CellKind::Inv => !a,
+        CellKind::Nand2 => !(a & b),
+        CellKind::Nor2 => !(a | b),
+        CellKind::And2 => a & b,
+        CellKind::Or2 => a | b,
+        CellKind::Xor2 => a ^ b,
+        CellKind::Xnor2 => !(a ^ b),
+        CellKind::Mux2 => (a & c) | (!a & b),
+        CellKind::And3 => a & b & c,
+        CellKind::Or3 => a | b | c,
+        CellKind::Aoi21 => !((a & b) | c),
+        CellKind::Dff => unreachable!("DFFs latch at step boundaries"),
+    }
+}
+
+/// 64-lane bitsliced simulator over a compiled [`Levelized`] program.
 ///
-/// The netlist is "compiled" once at construction into a flat opcode
-/// program (kind + three input indices + output index per combinational
-/// cell) so the per-step loop is a linear scan over dense arrays instead
-/// of chasing per-cell `Vec`s — see EXPERIMENTS.md §Perf.
+/// Construct with [`Simulator::new`] (compiles the netlist on the fly)
+/// or [`Simulator::over`] to share one compiled program across many
+/// runs — the engine the backend Power workload uses.
 pub struct Simulator<'a> {
-    nl: &'a Netlist,
+    prog: Cow<'a, Levelized>,
     /// Current value word per net.
     pub words: Vec<u64>,
     prev: Vec<u64>,
-    /// Flat combinational program: (kind, in0, in1, in2, out).
-    ops: Vec<(CellKind, u32, u32, u32, u32)>,
-    /// (D-net, Q-net) per flip-flop.
-    dffs: Vec<(u32, u32)>,
     /// Scratch for the two-phase DFF latch.
     dff_next: Vec<u64>,
     toggles: Vec<u64>,
@@ -67,27 +97,26 @@ pub struct Simulator<'a> {
     first: bool,
 }
 
+impl Simulator<'static> {
+    /// New simulator with all nets at 0, compiling `nl` privately.
+    pub fn new(nl: &Netlist) -> Simulator<'static> {
+        Simulator::from_prog(Cow::Owned(Levelized::compile(nl)))
+    }
+}
+
 impl<'a> Simulator<'a> {
-    /// New simulator with all nets at 0.
-    pub fn new(nl: &'a Netlist) -> Self {
-        let n = nl.num_nets as usize;
-        let mut ops = Vec::with_capacity(nl.cells.len());
-        let mut dffs = Vec::new();
-        for c in &nl.cells {
-            if c.kind == CellKind::Dff {
-                dffs.push((c.inputs[0].0, c.output.0));
-                continue;
-            }
-            let pin = |i: usize| c.inputs.get(i).map(|n| n.0).unwrap_or(0);
-            ops.push((c.kind, pin(0), pin(1), pin(2), c.output.0));
-        }
-        let ndff = dffs.len();
+    /// New simulator over a shared compiled program.
+    pub fn over(prog: &'a Levelized) -> Simulator<'a> {
+        Simulator::from_prog(Cow::Borrowed(prog))
+    }
+
+    fn from_prog(prog: Cow<'a, Levelized>) -> Simulator<'a> {
+        let n = prog.num_nets as usize;
+        let ndff = prog.dffs.len();
         Simulator {
-            nl,
+            prog,
             words: vec![0; n],
             prev: vec![0; n],
-            ops,
-            dffs,
             dff_next: vec![0; ndff],
             toggles: vec![0; n],
             steps: 0,
@@ -95,61 +124,49 @@ impl<'a> Simulator<'a> {
         }
     }
 
-    /// Apply one step: set primary-input words, propagate, latch DFFs,
-    /// accumulate toggles.
+    /// The compiled program this simulator runs.
+    pub fn program(&self) -> &Levelized {
+        &self.prog
+    }
+
+    /// Apply one step: set primary-input words, propagate in level
+    /// order, accumulate toggles, latch DFFs.
     pub fn step(&mut self, input_words: &[u64]) {
-        assert_eq!(input_words.len(), self.nl.inputs.len(), "input arity");
-        for (&net, &w) in self.nl.inputs.iter().zip(input_words) {
-            self.words[net.0 as usize] = w;
-        }
-        // Combinational propagation in topological order (DFF outputs
-        // already carry the current state values).
+        let prog: &Levelized = &self.prog;
+        assert_eq!(input_words.len(), prog.inputs.len(), "input arity");
         let w = &mut self.words;
-        for &(kind, i0, i1, i2, out) in &self.ops {
-            let a = w[i0 as usize];
-            let v = match kind {
-                CellKind::Tie0 => 0,
-                CellKind::Tie1 => !0u64,
-                CellKind::Buf => a,
-                CellKind::Inv => !a,
-                CellKind::Nand2 => !(a & w[i1 as usize]),
-                CellKind::Nor2 => !(a | w[i1 as usize]),
-                CellKind::And2 => a & w[i1 as usize],
-                CellKind::Or2 => a | w[i1 as usize],
-                CellKind::Xor2 => a ^ w[i1 as usize],
-                CellKind::Xnor2 => !(a ^ w[i1 as usize]),
-                CellKind::Mux2 => (a & w[i2 as usize]) | (!a & w[i1 as usize]),
-                CellKind::And3 => a & w[i1 as usize] & w[i2 as usize],
-                CellKind::Or3 => a | w[i1 as usize] | w[i2 as usize],
-                CellKind::Aoi21 => !((a & w[i1 as usize]) | w[i2 as usize]),
-                CellKind::Dff => unreachable!("DFFs latch at step boundaries"),
-            };
-            w[out as usize] = v;
+        for (&net, &word) in prog.inputs.iter().zip(input_words) {
+            w[net as usize] = word;
         }
-        // Toggle accounting (skip the priming step: the all-zero initial
-        // state is not a real applied vector).
+        // Level-ordered propagation (DFF outputs already carry the
+        // current state values).
+        for op in &prog.ops {
+            w[op.out as usize] =
+                eval_op(op.kind, w[op.a as usize], w[op.b as usize], w[op.c as usize]);
+        }
+        // Toggle accounting (skip the priming step: the all-zero
+        // initial state is not a real applied vector).
         if !self.first {
-            for (i, (&cur, &old)) in self.words.iter().zip(&self.prev).enumerate() {
-                self.toggles[i] += (cur ^ old).count_ones() as u64;
+            for (t, (&cur, &old)) in self.toggles.iter_mut().zip(w.iter().zip(&self.prev)) {
+                *t += (cur ^ old).count_ones() as u64;
             }
             self.steps += 1;
         }
         self.first = false;
-        self.prev.copy_from_slice(&self.words);
-        // Latch DFF next-state for the following cycle — two-phase
-        // (read all D pins, then write all Q pins) so flop chains shift
-        // one stage per cycle instead of shooting through.
-        for (k, &(d, _q)) in self.dffs.iter().enumerate() {
-            self.dff_next[k] = self.words[d as usize];
+        self.prev.copy_from_slice(w);
+        // Two-phase DFF latch (read all D pins, then write all Q pins)
+        // so flop chains shift one stage per cycle.
+        for (k, &(d, _q, _)) in prog.dffs.iter().enumerate() {
+            self.dff_next[k] = w[d as usize];
         }
-        for (k, &(_d, q)) in self.dffs.iter().enumerate() {
-            self.words[q as usize] = self.dff_next[k];
+        for (k, &(_d, q, _)) in prog.dffs.iter().enumerate() {
+            w[q as usize] = self.dff_next[k];
         }
     }
 
     /// Current output-port words.
     pub fn output_words(&self) -> Vec<u64> {
-        self.nl.outputs.iter().map(|&n| self.prev[n.0 as usize]).collect()
+        self.prog.outputs.iter().map(|&n| self.prev[n as usize]).collect()
     }
 
     /// Finish and return the activity record.
@@ -163,42 +180,215 @@ impl<'a> Simulator<'a> {
     }
 }
 
-/// Evaluate the netlist functionally on a single boolean vector
-/// (lane 0 only) and return the output bits — the correctness interface
-/// used for gate-vs-arith cross-validation.
+/// Scalar reference interpreter over the raw [`Netlist`] — one boolean
+/// per net, no bitslicing, no compilation. This is the correctness
+/// oracle the bitsliced engine is checked against, and the baseline
+/// `benches/bench_gate.rs` measures the speedup from.
+pub struct ScalarSim<'a> {
+    nl: &'a Netlist,
+    vals: Vec<bool>,
+    prev: Vec<bool>,
+    dff_next: Vec<bool>,
+    toggles: Vec<u64>,
+    steps: u64,
+    first: bool,
+}
+
+impl<'a> ScalarSim<'a> {
+    /// New scalar simulator with all nets at 0.
+    pub fn new(nl: &'a Netlist) -> ScalarSim<'a> {
+        let n = nl.num_nets as usize;
+        let ndff = nl.num_dffs();
+        ScalarSim {
+            nl,
+            vals: vec![false; n],
+            prev: vec![false; n],
+            dff_next: vec![false; ndff],
+            toggles: vec![0; n],
+            steps: 0,
+            first: true,
+        }
+    }
+
+    /// Apply one step with boolean inputs (same semantics as
+    /// [`Simulator::step`] on a single lane).
+    pub fn step(&mut self, inputs: &[bool]) {
+        assert_eq!(inputs.len(), self.nl.inputs.len(), "input arity");
+        for (&net, &b) in self.nl.inputs.iter().zip(inputs) {
+            self.vals[net.0 as usize] = b;
+        }
+        for cell in &self.nl.cells {
+            if cell.kind == CellKind::Dff {
+                continue;
+            }
+            let pin = |i: usize| {
+                cell.inputs.get(i).map(|n| self.vals[n.0 as usize]).unwrap_or(false)
+            };
+            let (a, b, c) = (pin(0), pin(1), pin(2));
+            self.vals[cell.output.0 as usize] = match cell.kind {
+                CellKind::Tie0 => false,
+                CellKind::Tie1 => true,
+                CellKind::Buf => a,
+                CellKind::Inv => !a,
+                CellKind::Nand2 => !(a && b),
+                CellKind::Nor2 => !(a || b),
+                CellKind::And2 => a && b,
+                CellKind::Or2 => a || b,
+                CellKind::Xor2 => a ^ b,
+                CellKind::Xnor2 => !(a ^ b),
+                CellKind::Mux2 => {
+                    if a {
+                        c
+                    } else {
+                        b
+                    }
+                }
+                CellKind::And3 => a && b && c,
+                CellKind::Or3 => a || b || c,
+                CellKind::Aoi21 => !((a && b) || c),
+                CellKind::Dff => unreachable!(),
+            };
+        }
+        if !self.first {
+            for (t, (&cur, &old)) in
+                self.toggles.iter_mut().zip(self.vals.iter().zip(&self.prev))
+            {
+                *t += u64::from(cur != old);
+            }
+            self.steps += 1;
+        }
+        self.first = false;
+        self.prev.copy_from_slice(&self.vals);
+        let mut k = 0;
+        for cell in &self.nl.cells {
+            if cell.kind == CellKind::Dff {
+                self.dff_next[k] = self.vals[cell.inputs[0].0 as usize];
+                k += 1;
+            }
+        }
+        let mut k = 0;
+        for cell in &self.nl.cells {
+            if cell.kind == CellKind::Dff {
+                self.vals[cell.output.0 as usize] = self.dff_next[k];
+                k += 1;
+            }
+        }
+    }
+
+    /// Current per-net values (post-propagation, post-latch).
+    pub fn values(&self) -> &[bool] {
+        &self.vals
+    }
+
+    /// Current output-port values.
+    pub fn outputs(&self) -> Vec<bool> {
+        self.nl.outputs.iter().map(|&n| self.prev[n.0 as usize]).collect()
+    }
+
+    /// Finish and return the (single-lane) activity record.
+    pub fn finish(self) -> Activity {
+        Activity { toggles: self.toggles, steps: self.steps, lanes: 1, vectors: self.steps }
+    }
+}
+
+/// Evaluate the netlist functionally on a single boolean vector through
+/// the **scalar oracle** and return the output bits — the correctness
+/// interface used for gate-vs-arith cross-validation.
 pub fn eval_once(nl: &Netlist, inputs: &[bool]) -> Vec<bool> {
-    let mut sim = Simulator::new(nl);
-    let words: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
-    sim.step(&words);
-    sim.output_words().iter().map(|&w| w & 1 == 1).collect()
+    let mut sim = ScalarSim::new(nl);
+    sim.step(inputs);
+    sim.outputs()
+}
+
+/// Derive one decorrelated [`Pcg64`] stream per primary input from a
+/// root seed — the shared stimulus contract of [`run_random`] and
+/// [`run_random_scalar`].
+fn input_streams(seed: u64, nin: usize) -> Vec<Pcg64> {
+    let mut root = Pcg64::seeded(seed);
+    (0..nin).map(|_| root.split()).collect()
+}
+
+fn random_steps(nvec: u64) -> u64 {
+    nvec.div_ceil(64).max(2)
+}
+
+/// Vectors actually applied by a `run_random`-style run after rounding
+/// `nvec` up to the 64-lane step granularity (with the two-step
+/// minimum). Exposed so report producers (e.g. the mock backend) share
+/// the engine's rounding rule instead of re-implementing it.
+pub fn rounded_vectors(nvec: u64) -> u64 {
+    random_steps(nvec) * 64
 }
 
 /// Drive the design with `nvec` uniform random vectors (rounded up to a
-/// multiple of 64) and return the measured switching activity — the
-/// paper's power-characterization stimulus.
+/// multiple of 64 lanes) on the bitsliced engine and return the
+/// measured switching activity — the paper's power-characterization
+/// stimulus. Compiles the netlist privately; use
+/// [`run_random_levelized`] to amortize compilation across runs.
 pub fn run_random(nl: &Netlist, nvec: u64, seed: u64) -> Activity {
-    let mut rng = Pcg64::seeded(seed);
-    let mut sim = Simulator::new(nl);
-    let steps = nvec.div_ceil(64).max(2);
-    let nin = nl.inputs.len();
-    let mut words = vec![0u64; nin];
+    run_random_levelized(&Levelized::compile(nl), nvec, seed)
+}
+
+/// [`run_random`] over a pre-compiled program (the backend Power
+/// workload's engine).
+pub fn run_random_levelized(prog: &Levelized, nvec: u64, seed: u64) -> Activity {
+    let mut streams = input_streams(seed, prog.inputs.len());
+    let mut sim = Simulator::over(prog);
+    let steps = random_steps(nvec);
+    let mut words = vec![0u64; prog.inputs.len()];
     // One extra priming step: the first applied vector only establishes
     // state and is not counted as a transition pair.
     for _ in 0..=steps {
-        for w in words.iter_mut() {
-            *w = rng.next_u64();
+        for (w, s) in words.iter_mut().zip(streams.iter_mut()) {
+            *w = s.next_u64();
         }
         sim.step(&words);
     }
     sim.finish()
 }
 
+/// Scalar twin of [`run_random`]: identical per-input vector streams,
+/// simulated lane by lane through 64 [`ScalarSim`] instances. Produces
+/// a bit-identical [`Activity`] (same toggles, steps and vector count)
+/// at roughly 1/64th the throughput — the deterministic cross-check and
+/// benchmark baseline.
+pub fn run_random_scalar(nl: &Netlist, nvec: u64, seed: u64) -> Activity {
+    let nin = nl.inputs.len();
+    let mut streams = input_streams(seed, nin);
+    let steps = random_steps(nvec);
+    let mut sims: Vec<ScalarSim> = (0..64).map(|_| ScalarSim::new(nl)).collect();
+    let mut words = vec![0u64; nin];
+    let mut bits = vec![false; nin];
+    for _ in 0..=steps {
+        for (w, s) in words.iter_mut().zip(streams.iter_mut()) {
+            *w = s.next_u64();
+        }
+        for (lane, sim) in sims.iter_mut().enumerate() {
+            for (b, &w) in bits.iter_mut().zip(&words) {
+                *b = (w >> lane) & 1 == 1;
+            }
+            sim.step(&bits);
+        }
+    }
+    let mut toggles = vec![0u64; nl.num_nets as usize];
+    let mut steps_done = 0;
+    for sim in sims {
+        let act = sim.finish();
+        steps_done = act.steps;
+        for (t, &s) in toggles.iter_mut().zip(&act.toggles) {
+            *t += s;
+        }
+    }
+    Activity { toggles, steps: steps_done, lanes: 64, vectors: steps_done * 64 }
+}
+
 /// Drive a *sequential* design with per-cycle input words supplied by a
 /// closure (`cycle -> input words`), e.g. streaming signal samples into
 /// the FIR datapath.
 pub fn run_stream<F: FnMut(u64, &mut [u64])>(nl: &Netlist, cycles: u64, mut f: F) -> Activity {
-    let mut sim = Simulator::new(nl);
-    let mut words = vec![0u64; nl.inputs.len()];
+    let prog = Levelized::compile(nl);
+    let mut sim = Simulator::over(&prog);
+    let mut words = vec![0u64; prog.inputs.len()];
     for cyc in 0..cycles {
         f(cyc, &mut words);
         sim.step(&words);
@@ -300,6 +490,40 @@ mod tests {
         let nl = xor_design();
         let a = run_random(&nl, 6400, 9);
         let b = run_random(&nl, 6400, 9);
+        assert_eq!(a.toggles, b.toggles);
+    }
+
+    #[test]
+    fn scalar_twin_matches_bitsliced_combinational() {
+        let nl = xor_design();
+        let fast = run_random(&nl, 64 * 10, 7);
+        let slow = run_random_scalar(&nl, 64 * 10, 7);
+        assert_eq!(fast.toggles, slow.toggles);
+        assert_eq!(fast.steps, slow.steps);
+        assert_eq!(fast.vectors, slow.vectors);
+    }
+
+    #[test]
+    fn scalar_twin_matches_bitsliced_sequential() {
+        let mut nl = Netlist::new("seq");
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let q = nl.dff(x);
+        let y = nl.and(q, a);
+        nl.output(y);
+        let fast = run_random(&nl, 64 * 8, 3);
+        let slow = run_random_scalar(&nl, 64 * 8, 3);
+        assert_eq!(fast.toggles, slow.toggles);
+        assert_eq!(fast.vectors, slow.vectors);
+    }
+
+    #[test]
+    fn shared_program_runs_match_private_compiles() {
+        let nl = xor_design();
+        let prog = Levelized::compile(&nl);
+        let a = run_random_levelized(&prog, 6400, 5);
+        let b = run_random(&nl, 6400, 5);
         assert_eq!(a.toggles, b.toggles);
     }
 }

@@ -14,8 +14,9 @@
 //!    the paper's Fig-3 power/delay banana.
 
 use super::cell::CellKind;
+use super::ir::Levelized;
 use super::netlist::Netlist;
-use super::timing::{analyze, critical_path};
+use super::timing::{analyze_levelized, critical_path};
 
 /// Result of a sizing run.
 #[derive(Clone, Debug)]
@@ -31,13 +32,16 @@ pub struct SynthResult {
 /// Greedily upsize along critical paths until `constraint_ps` is met or
 /// no move helps. Returns the achieved delay.
 pub fn meet_constraint(nl: &mut Netlist, constraint_ps: f64) -> SynthResult {
+    // Sizing only mutates drive strengths, never structure, so one
+    // compiled schedule serves every STA call in the loop.
+    let lv = Levelized::compile(nl);
     let mut moves = 0;
-    let mut best = analyze(nl).critical;
+    let mut best = analyze_levelized(nl, &lv).critical;
     // A bounded number of iterations keeps worst-case runtime sane on
     // pathological netlists; each move strictly reduces critical delay.
     let max_moves = nl.cells.len() * 4;
     while best > constraint_ps && moves < max_moves {
-        let t = analyze(nl);
+        let t = analyze_levelized(nl, &lv);
         let path = critical_path(nl, &t);
         let mut improved = false;
         // Try the locally-best upsize on the path (evaluate by full STA,
@@ -47,7 +51,7 @@ pub fn meet_constraint(nl: &mut Netlist, constraint_ps: f64) -> SynthResult {
             let cur = nl.cells[ci].size;
             let Some(up) = cur.up() else { continue };
             nl.cells[ci].size = up;
-            let d = analyze(nl).critical;
+            let d = analyze_levelized(nl, &lv).critical;
             nl.cells[ci].size = cur;
             if d < best - 1e-9 {
                 let gain = best - d;
@@ -59,7 +63,7 @@ pub fn meet_constraint(nl: &mut Netlist, constraint_ps: f64) -> SynthResult {
         if let Some((ci, _)) = best_choice {
             nl.cells[ci].size = nl.cells[ci].size.up().unwrap();
             moves += 1;
-            best = analyze(nl).critical;
+            best = analyze_levelized(nl, &lv).critical;
             improved = true;
         }
         if !improved {
@@ -80,11 +84,12 @@ pub fn find_tmin(nl: &mut Netlist) -> SynthResult {
 /// certainly tolerates it, while keeping the critical delay within
 /// `constraint_ps`. Returns the final achieved delay.
 pub fn recover_power(nl: &mut Netlist, constraint_ps: f64) -> SynthResult {
+    let lv = Levelized::compile(nl);
     let mut moves = 0;
     let mut rounds = 0;
     loop {
         rounds += 1;
-        let before = analyze(nl);
+        let before = analyze_levelized(nl, &lv);
         if before.critical > constraint_ps {
             // Shouldn't happen if timing was closed first; bail out.
             break SynthResult { delay_ps: before.critical, met: false, moves };
@@ -115,11 +120,11 @@ pub fn recover_power(nl: &mut Netlist, constraint_ps: f64) -> SynthResult {
             }
         }
         if applied.is_empty() || rounds > 24 {
-            let t = analyze(nl);
+            let t = analyze_levelized(nl, &lv);
             break SynthResult { delay_ps: t.critical, met: t.critical <= constraint_ps, moves };
         }
         // Post-check: roll back (in reverse) until timing is met again.
-        while analyze(nl).critical > constraint_ps {
+        while analyze_levelized(nl, &lv).critical > constraint_ps {
             let Some((ci, sz)) = applied.pop() else { break };
             nl.cells[ci].size = sz;
             moves -= 1;
@@ -144,6 +149,7 @@ mod tests {
     use super::*;
     use crate::gate::cell::Size;
     use crate::gate::netlist::Netlist;
+    use crate::gate::timing::analyze;
 
     fn mult_like() -> Netlist {
         // A few layers of mixed logic with fanout, enough for sizing to

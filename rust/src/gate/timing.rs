@@ -1,13 +1,18 @@
-//! Static timing analysis over a [`Netlist`] — the stand-in for the
-//! synthesis tool's timing engine.
+//! Static timing analysis — the stand-in for the synthesis tool's
+//! timing engine.
 //!
-//! Arrival times propagate in topological order with the logical-effort
-//! delay model of [`super::cell`]: `d = tau + drive/size · C_load`.
-//! Sequential designs time the register-to-register / input-to-register
-//! paths: DFF outputs launch at `clk→q`, DFF D-pins and primary outputs
-//! are endpoints.
+//! Arrival times propagate over the levelized IR's op schedule (level
+//! order is a topological order) with the logical-effort delay model of
+//! [`super::cell`]: `d = tau + drive/size · C_load`. Drive strengths
+//! are read from the [`Netlist`] at every call, so the sizing optimizer
+//! compiles the structure once ([`Levelized::compile`]) and re-runs
+//! [`analyze_levelized`] per candidate move without re-walking the raw
+//! graph. Sequential designs time the register-to-register /
+//! input-to-register paths: DFF outputs launch at `clk→q`, DFF D-pins
+//! and primary outputs are endpoints.
 
 use super::cell::CellKind;
+use super::ir::Levelized;
 use super::netlist::Netlist;
 
 /// STA result.
@@ -28,34 +33,32 @@ pub struct Timing {
 /// DFF setup time, ps.
 pub const T_SETUP: f64 = 35.0;
 
-/// Run STA at the current cell sizes.
+/// Run STA at the current cell sizes (compiles the structure on the
+/// fly; hot loops should compile once and use [`analyze_levelized`]).
 pub fn analyze(nl: &Netlist) -> Timing {
+    analyze_levelized(nl, &Levelized::compile(nl))
+}
+
+/// Run STA over a pre-compiled [`Levelized`] schedule, reading the
+/// current drive strengths from `nl`.
+pub fn analyze_levelized(nl: &Netlist, lv: &Levelized) -> Timing {
+    debug_assert_eq!(lv.num_nets, nl.num_nets, "IR/netlist mismatch");
     let loads = nl.net_loads();
     let mut arrival = vec![0.0f64; nl.num_nets as usize];
     let mut worst_input = vec![u32::MAX; nl.cells.len()];
     let mut is_po = vec![false; nl.num_nets as usize];
-    for &o in &nl.outputs {
-        is_po[o.0 as usize] = true;
+    for &o in &lv.outputs {
+        is_po[o as usize] = true;
     }
     // DFF outputs launch at clk->q.
-    for c in &nl.cells {
-        if c.kind == CellKind::Dff {
-            arrival[c.output.0 as usize] =
-                c.kind.delay(c.size, loads[c.output.0 as usize]);
-        }
+    for &(_d, q, ci) in &lv.dffs {
+        let c = &nl.cells[ci as usize];
+        arrival[q as usize] = c.kind.delay(c.size, loads[q as usize]);
     }
     let mut critical = 0.0f64;
     let mut critical_cell = usize::MAX;
-    for (ci, c) in nl.cells.iter().enumerate() {
-        if c.kind == CellKind::Dff {
-            // Endpoint: D-pin arrival + setup.
-            let t = arrival[c.inputs[0].0 as usize] + T_SETUP;
-            if t > critical {
-                critical = t;
-                critical_cell = ci;
-            }
-            continue;
-        }
+    for op in &lv.ops {
+        let c = &nl.cells[op.cell as usize];
         let mut worst = 0.0f64;
         let mut wi = u32::MAX;
         for &i in &c.inputs {
@@ -65,12 +68,20 @@ pub fn analyze(nl: &Netlist) -> Timing {
                 wi = i.0;
             }
         }
-        worst_input[ci] = wi;
-        let out = c.output.0 as usize;
+        worst_input[op.cell as usize] = wi;
+        let out = op.out as usize;
         arrival[out] = worst + c.kind.delay(c.size, loads[out]);
         if is_po[out] && arrival[out] > critical {
             critical = arrival[out];
-            critical_cell = ci;
+            critical_cell = op.cell as usize;
+        }
+    }
+    // DFF D-pins are endpoints: arrival + setup.
+    for &(d, _q, ci) in &lv.dffs {
+        let t = arrival[d as usize] + T_SETUP;
+        if t > critical {
+            critical = t;
+            critical_cell = ci as usize;
         }
     }
     // Primary outputs driven directly by inputs (degenerate) are covered:

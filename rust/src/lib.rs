@@ -17,18 +17,20 @@
 //! * [`arith`] — bit-accurate integer models of every multiplier (oracle
 //!   and fast path). The ground truth every other layer is checked
 //!   against.
-//! * [`gate`] — structural netlists, event-driven toggle simulation,
-//!   power/area/timing models, constraint-driven sizing.
+//! * [`gate`] — structural netlists compiled to a levelized IR
+//!   ([`gate::ir::Levelized`]), a 64-lane bitsliced toggle simulator
+//!   with a scalar reference oracle, power/area/timing models, and
+//!   constraint-driven sizing.
 //! * [`dsp`] — Remez exchange filter design, testbed signals, fixed-point
 //!   FIR, SNR measurement.
 //! * [`error`] — exhaustive/random error sweeps and statistics
 //!   (in-process, multi-threaded).
 //! * [`backend`] — **the execution-backend API**: typed request/response
-//!   pairs for the four paper workloads (batched multiply, error
-//!   moments, FIR blocks, SNR accumulation) behind the
-//!   [`backend::Backend`] trait; [`backend::NativeBackend`] (default)
-//!   and [`backend::PjrtBackend`] (`--features pjrt`) implement it.
-//!   See `src/backend/README.md`.
+//!   pairs for the five paper workloads (batched multiply, error
+//!   moments, FIR blocks, SNR accumulation, gate-level power
+//!   characterization) behind the [`backend::Backend`] trait;
+//!   [`backend::NativeBackend`] (default) and [`backend::PjrtBackend`]
+//!   (`--features pjrt`) implement it. See `src/backend/README.md`.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
 //!   (compiled only with `--features pjrt`; the default build never
 //!   references the `xla` crate).

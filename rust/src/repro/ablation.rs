@@ -204,7 +204,7 @@ pub fn reducers(_args: &Args) -> anyhow::Result<()> {
     use crate::gate::Netlist;
     let mut t = Table::new(
         "Ablation — CPA back-end (32-column random dot matrix)",
-        &["backend", "cells", "area_um2", "critical_ps"],
+        &["backend", "cells", "levels", "area_um2", "critical_ps"],
     );
     for ks in [true, false] {
         let mut nl = Netlist::new(if ks { "ks" } else { "ripple" });
@@ -222,10 +222,12 @@ pub fn reducers(_args: &Args) -> anyhow::Result<()> {
         for bit in bits {
             nl.output(bit);
         }
-        let timing = crate::gate::analyze(&nl);
+        let lv = crate::gate::Levelized::compile(&nl);
+        let timing = crate::gate::analyze_levelized(&nl, &lv);
         t.row(vec![
             if ks { "kogge-stone".into() } else { "ripple".into() },
             nl.cells.len().to_string(),
+            lv.depth().to_string(),
             format!("{:.0}", nl.area()),
             format!("{:.0}", timing.critical),
         ]);

@@ -7,11 +7,17 @@
 //! 3. synthesize at a fixed relaxed constraint (paper: 1.75 ns) → PDP at
 //!    that constraint,
 //! 4. average the two PDPs (Fig. 6).
+//!
+//! Steps 2–3 are served: every design point becomes a
+//! [`PowerRequest`] pipelined through the coordinator (two per level —
+//! a `Tmin` request and a relaxed-constraint request), so the full
+//! family sweep batches through the execution backend's bitsliced gate
+//! engine instead of characterizing in-process.
 
 use crate::arith::MultKind;
+use crate::backend::{BackendKind, PowerRequest};
+use crate::coordinator::DspServer;
 use crate::error::{sweep_mse, SweepConfig};
-use crate::gate::builders::build_multiplier;
-use crate::gate::{characterize, find_tmin, run_random, average_power};
 use crate::util::cli::Args;
 use crate::util::report::{Series, Table};
 
@@ -49,28 +55,58 @@ pub fn levels_for(kind: MultKind, wl: u32) -> Vec<u32> {
     }
 }
 
-/// Measure one family across its levels.
+/// Measure one family across its levels through the coordinator's
+/// power workload: submit a `Tmin` and a relaxed-constraint request per
+/// level (pipelined), compute exhaustive MSE in-process while the
+/// executor drains, then collect the reports in order.
 pub fn measure_family(
+    srv: &DspServer,
     kind: MultKind,
     wl: u32,
     relaxed_ps: f64,
     nvec: u64,
 ) -> anyhow::Result<Vec<PdpPoint>> {
-    let mut out = Vec::new();
+    let mut pending = Vec::new();
     for level in levels_for(kind, wl) {
+        let tmin = srv.submit_power(PowerRequest {
+            kind,
+            wl,
+            level,
+            constraint_ps: 0.0,
+            nvec,
+            seed: 11,
+        });
+        let relaxed = srv.submit_power(PowerRequest {
+            kind,
+            wl,
+            level,
+            constraint_ps: relaxed_ps,
+            nvec,
+            seed: 11,
+        });
+        pending.push((level, tmin, relaxed));
+    }
+    let mut out = Vec::new();
+    for (level, tmin, relaxed) in pending {
         let m = kind.build(wl, level);
         let mse = sweep_mse(m.as_ref(), SweepConfig::default());
-        // Step 2: min-delay synthesis.
-        let mut nl = build_multiplier(kind, wl, level)
-            .ok_or_else(|| anyhow::anyhow!("{kind} has no gate model"))?;
-        let t = find_tmin(&mut nl);
-        let act = run_random(&nl, nvec, 11);
-        let p_min = average_power(&nl, &act, t.delay_ps);
-        let pdp_min = p_min.total_mw() * t.delay_ps * 1e-3;
-        // Step 3: relaxed-constraint synthesis on a fresh netlist.
-        let mut nl2 = build_multiplier(kind, wl, level).unwrap();
-        let c = characterize(&mut nl2, relaxed_ps, nvec, 11);
-        let pdp_relaxed = c.power.total_mw() * relaxed_ps * 1e-3;
+        // Step 2: PDP at the achieved min delay (the Tmin request's
+        // evaluation period *is* the achieved delay).
+        let t = tmin.wait()?;
+        let pdp_min = t.pdp_pj();
+        // Step 3: PDP at the relaxed constraint. An unmet constraint
+        // still yields a report (power evaluated at the requested
+        // period, as the paper's step 3 does); flag it rather than
+        // aborting the whole figure.
+        let r = relaxed.wait()?;
+        if !r.met {
+            eprintln!(
+                "warning: {kind} level {level}: relaxed constraint {relaxed_ps} ps not met \
+                 (achieved {:.0} ps)",
+                r.delay_ps
+            );
+        }
+        let pdp_relaxed = r.pdp_pj();
         out.push(PdpPoint { kind, level, mse, pdp_min_pj: pdp_min, pdp_relaxed_pj: pdp_relaxed });
     }
     Ok(out)
@@ -79,13 +115,20 @@ pub fn measure_family(
 const FAMILIES: [MultKind; 4] =
     [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni];
 
+fn power_server(args: &Args) -> anyhow::Result<DspServer> {
+    let kind = args.get_or("backend", BackendKind::Native)?;
+    DspServer::start_kind(kind, 8)
+}
+
 /// Fig. 5: per-family PDP (min-delay and relaxed) vs log10 MSE.
 pub fn fig5(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 8u32)?;
     let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
     let nvec = args.get_or("nvec", 50_000u64)?;
+    let srv = power_server(args)?;
+    println!("power workload served by backend `{}`", srv.backend_name());
     for kind in FAMILIES {
-        let pts = measure_family(kind, wl, relaxed_ns * 1e3, nvec)?;
+        let pts = measure_family(&srv, kind, wl, relaxed_ns * 1e3, nvec)?;
         let mut t = Table::new(
             &format!("Fig. 5 — {kind} (WL={wl}): PDP vs MSE"),
             &["level", "log10(MSE)", "PDP@min_pJ", "PDP@relaxed_pJ", "PDP_avg_pJ"],
@@ -101,6 +144,7 @@ pub fn fig5(args: &Args) -> anyhow::Result<()> {
         }
         t.print();
     }
+    srv.shutdown();
     Ok(())
 }
 
@@ -109,6 +153,8 @@ pub fn fig6(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 8u32)?;
     let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
     let nvec = args.get_or("nvec", 50_000u64)?;
+    let srv = power_server(args)?;
+    println!("power workload served by backend `{}`", srv.backend_name());
     let mut s = Series::new(
         &format!("Fig. 6 — average PDP vs log10 MSE (WL={wl})"),
         "log10_mse",
@@ -116,7 +162,7 @@ pub fn fig6(args: &Args) -> anyhow::Result<()> {
     );
     let mut all: Vec<Vec<PdpPoint>> = Vec::new();
     for kind in FAMILIES {
-        all.push(measure_family(kind, wl, relaxed_ns * 1e3, nvec)?);
+        all.push(measure_family(&srv, kind, wl, relaxed_ns * 1e3, nvec)?);
     }
     // Each family has its own MSE positions; emit one row per point with
     // NaN for the other families (figure-style sparse series).
@@ -137,6 +183,7 @@ pub fn fig6(args: &Args) -> anyhow::Result<()> {
         "kulkarni PDP(last)/PDP(first) = {k_flat:.2} (paper: ~flat, no improvement at high MSE)"
     );
     println!("type0 PDP(first)/PDP(last) = {t0_drop:.2} (paper: steady decrease as MSE grows)");
+    srv.shutdown();
     Ok(())
 }
 
@@ -171,9 +218,11 @@ mod tests {
 
     #[test]
     fn pdp_decreases_with_breaking_bbm_wl6() {
-        let pts = measure_family(MultKind::BbmType1, 6, 2000.0, 6400).unwrap();
+        let srv = DspServer::native(4).unwrap();
+        let pts = measure_family(&srv, MultKind::BbmType1, 6, 2000.0, 6400).unwrap();
         let first = pts.first().unwrap().pdp_avg_pj();
         let last = pts.last().unwrap().pdp_avg_pj();
         assert!(last < first, "PDP should fall as VBL rises: {first} -> {last}");
+        srv.shutdown();
     }
 }

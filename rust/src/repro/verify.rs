@@ -12,7 +12,8 @@
 
 use crate::arith::{Multiplier, MultKind};
 use crate::backend::{
-    Backend, BackendError, BackendKind, MomentsRequest, MultiplyRequest, SWEEP_BATCH,
+    Backend, BackendError, BackendKind, MomentsRequest, MultiplyRequest, PowerRequest,
+    SWEEP_BATCH,
 };
 use crate::testkit::draw_operands;
 use crate::util::cli::Args;
@@ -198,9 +199,51 @@ pub fn verify(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    println!("-- gate power workload --");
+    match verify_power(backend.as_ref())? {
+        None => println!("  power bbm wl=8: SKIP (unsupported)"),
+        Some(bad) => {
+            println!("  power bbm wl=8: {}", if bad == 0 { "OK" } else { "FAIL" });
+            failures += bad;
+        }
+    }
+
     anyhow::ensure!(failures == 0, "{failures} backend-vs-oracle mismatches");
     println!("verify: backend `{}` matches the scalar arith oracles", backend.name());
     Ok(())
+}
+
+/// Power-workload sanity: the served characterization must report the
+/// paper's qualitative shape (breaking at the same constraint saves
+/// both power and area). `Ok(None)` when the backend has no gate
+/// engine; otherwise the failed-claim count.
+pub fn verify_power(backend: &dyn Backend) -> anyhow::Result<Option<u64>> {
+    let base = PowerRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 0,
+        constraint_ps: 0.0,
+        nvec: 64 * 64,
+        seed: 3,
+    };
+    let acc = match backend.power(&base) {
+        Err(BackendError::Unsupported { .. }) => return Ok(None),
+        Err(e) => return Err(e.into()),
+        Ok(r) => r,
+    };
+    let constraint = acc.delay_ps * 1.5;
+    let acc_rel = backend
+        .power(&PowerRequest { constraint_ps: constraint, ..base })
+        .map_err(anyhow::Error::from)?;
+    let brk_rel = backend
+        .power(&PowerRequest { constraint_ps: constraint, level: 7, ..base })
+        .map_err(anyhow::Error::from)?;
+    let mut bad = 0u64;
+    bad += u64::from(!(acc.met && acc.total_mw() > 0.0));
+    bad += u64::from(!(acc_rel.met && brk_rel.met));
+    bad += u64::from(!(brk_rel.total_mw() < acc_rel.total_mw()));
+    bad += u64::from(!(brk_rel.area_um2 < acc_rel.area_um2));
+    Ok(Some(bad))
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::backend::{
     Backend, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    ProductBlock, SnrAccum, SnrRequest,
+    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest,
 };
 
 /// Shared call counters, readable from the test thread while the
@@ -25,6 +25,8 @@ pub struct MockState {
     pub firs: AtomicU64,
     /// SNR requests served.
     pub snrs: AtomicU64,
+    /// Power-characterization requests served.
+    pub powers: AtomicU64,
 }
 
 impl MockState {
@@ -33,12 +35,13 @@ impl MockState {
         Arc::new(MockState::default())
     }
 
-    /// Total requests served across all four endpoints.
+    /// Total requests served across all five endpoints.
     pub fn total(&self) -> u64 {
         self.multiplies.load(Ordering::SeqCst)
             + self.moments.load(Ordering::SeqCst)
             + self.firs.load(Ordering::SeqCst)
             + self.snrs.load(Ordering::SeqCst)
+            + self.powers.load(Ordering::SeqCst)
     }
 }
 
@@ -146,6 +149,25 @@ impl Backend for MockBackend {
         let err_power =
             req.reference.iter().zip(&req.signal).map(|(r, s)| (r - s) * (r - s)).sum();
         Ok(SnrAccum { ref_power, err_power })
+    }
+
+    fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport> {
+        self.gate.wait();
+        self.state.powers.fetch_add(1, Ordering::SeqCst);
+        // Deterministic synthetic report: cheap, request-derived numbers
+        // so coordinator tests can assert plumbing without gate work.
+        let period = if req.constraint_ps > 0.0 { req.constraint_ps } else { 100.0 };
+        Ok(PowerReport {
+            dynamic_mw: 1.0 + req.level as f64 * 0.01,
+            leakage_mw: 0.25,
+            clock_mw: 0.0,
+            delay_ps: 100.0,
+            period_ps: period,
+            met: true,
+            area_um2: 42.0,
+            cells: 7,
+            vectors: crate::gate::sim::rounded_vectors(req.nvec),
+        })
     }
 }
 

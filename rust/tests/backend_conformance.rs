@@ -12,9 +12,9 @@
 use std::sync::Arc;
 
 use bbm::arith::MultKind;
-use bbm::backend::{Backend, MultiplyRequest, NativeBackend};
+use bbm::backend::{Backend, MultiplyRequest, NativeBackend, PowerRequest};
 use bbm::coordinator::DspServer;
-use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels};
+use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels, verify_power};
 use bbm::testkit::{Gate, MockBackend, MockState};
 
 #[test]
@@ -44,6 +44,56 @@ fn native_rejects_family_bounds_instead_of_panicking() {
         let req = MultiplyRequest { kind, wl, level, x: vec![1], y: vec![1] };
         assert!(backend.multiply(&req).is_err(), "{kind} wl={wl} level={level}");
     }
+}
+
+#[test]
+fn native_power_workload_passes_verify_and_serves_through_coordinator() {
+    // Direct conformance: the shared power-sanity checker is green.
+    let backend = NativeBackend::new();
+    assert_eq!(verify_power(&backend).unwrap(), Some(0));
+
+    // Served path: characterization jobs pipeline through the
+    // coordinator like any other workload and stay deterministic.
+    let srv = DspServer::native(4).unwrap();
+    let req = PowerRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 7,
+        constraint_ps: 0.0,
+        nvec: 64 * 16,
+        seed: 9,
+    };
+    let a = srv.submit_power(req).wait().unwrap();
+    let b = srv.submit_power(req).wait().unwrap();
+    assert_eq!(a, b, "served power characterization must be deterministic");
+    assert!(a.met && a.total_mw() > 0.0 && a.cells > 0);
+    assert_eq!(a.vectors, 64 * 16);
+    // Errors come back as typed replies, not executor deaths.
+    let bad = PowerRequest { kind: MultKind::Etm, level: 4, ..req };
+    let err = srv.submit_power(bad).wait().unwrap_err();
+    assert!(err.to_string().contains("does not support"), "{err}");
+    let again = srv.submit_power(req).wait().unwrap();
+    assert_eq!(again, a, "server must survive unsupported power requests");
+    srv.shutdown();
+}
+
+#[test]
+fn mock_backend_counts_power_requests() {
+    let state = MockState::new();
+    let mock = MockBackend::new(state.clone());
+    let req = PowerRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 3,
+        constraint_ps: 1500.0,
+        nvec: 100,
+        seed: 1,
+    };
+    let r = mock.power(&req).unwrap();
+    assert!(r.met);
+    assert_eq!(r.period_ps, 1500.0);
+    assert_eq!(state.powers.load(std::sync::atomic::Ordering::SeqCst), 1);
+    assert_eq!(state.total(), 1);
 }
 
 fn tiny_req(tag: i32) -> MultiplyRequest {
