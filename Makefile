@@ -1,7 +1,7 @@
 # Convenience targets. Tier-1 verify is the `verify` target; everything
 # runs offline with default features (no network, no XLA).
 
-.PHONY: verify build test lint fmt clippy artifacts bench clean
+.PHONY: verify build test lint fmt clippy artifacts bench bench-json clean
 
 verify: build test clippy
 
@@ -28,6 +28,13 @@ artifacts:
 
 bench:
 	cargo bench
+
+# Smoke-mode perf trajectory: runs the headline benches in seconds and
+# writes machine-readable BENCH_5.json at the repo root (CI uploads it
+# as an artifact on every PR, so the benches can never rot unnoticed).
+# BENCH_FULL=1 switches to paper-scale vector counts.
+bench-json:
+	cargo bench --bench bench_json
 
 clean:
 	cargo clean

@@ -1,14 +1,35 @@
 //! Backend-API batching baseline: NativeBackend batched multiply
 //! throughput vs progressively finer request granularities, down to the
-//! degenerate one-lane-per-request loop. Future SIMD/GPU backends are
-//! measured against the 64k-batched native line; the per-element line
-//! bounds the request-framing overhead batching amortizes away.
+//! degenerate one-lane-per-request loop, plus compiled-kernel (LUT)
+//! batches and executor-pool scaling on batched moments jobs. Future
+//! SIMD/GPU backends are measured against the 64k-batched native line;
+//! the per-element line bounds the request-framing overhead batching
+//! amortizes away.
 
 include!("harness.rs");
 
 use bbm::arith::{MultKind, Multiplier};
-use bbm::backend::{Backend, MultiplyRequest, NativeBackend, SWEEP_BATCH};
+use bbm::backend::{Backend, MomentsRequest, MultiplyRequest, NativeBackend, SWEEP_BATCH};
+use bbm::coordinator::DspServer;
 use bbm::util::Pcg64;
+
+/// Wall-clock seconds to drain `jobs` pipelined moments batches
+/// through a native server with `workers` executors.
+fn pool_moments_secs(workers: usize, jobs: usize, req: &MomentsRequest) -> f64 {
+    let srv = if workers > 1 {
+        DspServer::native_pool(workers, 16).unwrap()
+    } else {
+        DspServer::native(16).unwrap()
+    };
+    let t = std::time::Instant::now();
+    let pendings: Vec<_> = (0..jobs).map(|_| srv.submit_moments(req.clone())).collect();
+    for p in pendings {
+        std::hint::black_box(p.wait().unwrap().sum);
+    }
+    let dt = t.elapsed().as_secs_f64();
+    srv.shutdown();
+    dt
+}
 
 fn main() {
     let backend = NativeBackend::new();
@@ -69,4 +90,38 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+
+    // Compiled-kernel batch: WL=8 requests route through the memoized
+    // ProductTable (one indexed load per lane) instead of the digit
+    // model the WL=16 lines above execute.
+    let mut rng8 = Pcg64::seeded(4);
+    let x8: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng8.operand(8) as i32).collect();
+    let y8: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng8.operand(8) as i32).collect();
+    let lut_req = MultiplyRequest { kind, wl: 8, level: 5, x: x8, y: y8 };
+    std::hint::black_box(backend.multiply(&lut_req).unwrap()); // compile + memoize
+    report("native batched multiply, 64k lut (wl8)", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(backend.multiply(&lut_req).unwrap().p.len());
+    });
+
+    // Executor-pool scaling on batched moments jobs (WL=12 keeps the
+    // work digit-level and CPU-bound so scaling is visible).
+    let mut rng12 = Pcg64::seeded(5);
+    let req12 = MomentsRequest {
+        kind,
+        wl: 12,
+        level: 9,
+        x: (0..SWEEP_BATCH).map(|_| rng12.operand(12) as i32).collect(),
+        y: (0..SWEEP_BATCH).map(|_| rng12.operand(12) as i32).collect(),
+    };
+    let jobs = 32;
+    let items = (jobs * SWEEP_BATCH) as f64;
+    let t1 = pool_moments_secs(1, jobs, &req12);
+    let t4 = pool_moments_secs(4, jobs, &req12);
+    for (name, dt) in [
+        ("moments x32 via DspServer, 1 worker", t1),
+        ("moments x32 via DspServer, 4 workers", t4),
+    ] {
+        report_line(name, dt, dt, items);
+    }
+    println!("  executor pool: 4 workers {:.2}x over 1 worker on batched moments", t1 / t4);
 }

@@ -1,13 +1,43 @@
-//! Table I / Fig. 2 regeneration cost: exhaustive error sweeps, native
-//! engine (sharded) and per-thread scaling.
+//! Table I / Fig. 2 regeneration cost: exhaustive error sweeps — the
+//! compiled ProductTable kernels vs the digit-level models, plus the
+//! threaded engine's per-thread scaling on the big (WL > 8) spans.
 
 include!("harness.rs");
 
 use bbm::arith::{BbmType, BrokenBooth};
 use bbm::error::{exhaustive_histogram, exhaustive_stats, SweepConfig};
+use bbm::testkit::DigitLevel;
 
 fn main() {
-    // Table I row (WL=12 => 2^24 pairs) at several thread counts.
+    // WL=8 Table-I-style row: LUT kernel vs forced digit-level model.
+    // Acceptance bar for the compiled kernels: >= 5x. Both sides of the
+    // headline ratio run single-threaded (the LUT fast path is one flat
+    // scan) so the kernel speedup is not diluted by the digit engine's
+    // thread fan-out; the all-threads digit line is context.
+    let m8 = BrokenBooth::new(8, 5, BbmType::Type0);
+    let pairs8 = (1u64 << 16) as f64;
+    let one_thread = SweepConfig { threads: 1, ..SweepConfig::default() };
+    let (lut_min, lut_mean) = time_it(20, || {
+        std::hint::black_box(exhaustive_stats(&m8, SweepConfig::default()).stats.mse());
+    });
+    let (dig_min, dig_mean) = time_it(20, || {
+        std::hint::black_box(exhaustive_stats(&DigitLevel(m8), one_thread).stats.mse());
+    });
+    let (dig_all_min, dig_all_mean) = time_it(20, || {
+        std::hint::black_box(
+            exhaustive_stats(&DigitLevel(m8), SweepConfig::default()).stats.mse(),
+        );
+    });
+    report_line("exhaustive wl8 vbl5 (lut kernel)", lut_min, lut_mean, pairs8);
+    report_line("exhaustive wl8 vbl5 (digit, 1 thread)", dig_min, dig_mean, pairs8);
+    report_line("exhaustive wl8 vbl5 (digit, all threads)", dig_all_min, dig_all_mean, pairs8);
+    println!(
+        "  wl8 exhaustive: lut {:.1}x faster than the 1-thread digit model (target >= 5x)",
+        dig_min / lut_min
+    );
+
+    // Table I row (WL=12 => 2^24 pairs, digit path) at several thread
+    // counts, auto-chunked.
     let m12 = BrokenBooth::new(12, 6, BbmType::Type0);
     for threads in [1usize, 2, 4, 8, 0] {
         let label = format!(
@@ -15,11 +45,11 @@ fn main() {
             if threads == 0 { "all".to_string() } else { threads.to_string() }
         );
         report(&label, 3, (1u64 << 24) as f64, || {
-            let r = exhaustive_stats(&m12, SweepConfig { threads, chunk: 64 });
+            let r = exhaustive_stats(&m12, SweepConfig { threads, chunk: 0 });
             std::hint::black_box(r.stats.mse());
         });
     }
-    // Fig. 2 (WL=10 histogram, 2^20 pairs).
+    // Fig. 2 (WL=10 histogram, 2^20 pairs, digit path).
     let m10 = BrokenBooth::new(10, 9, BbmType::Type0);
     report("fig2-hist wl10 vbl9", 5, (1u64 << 20) as f64, || {
         let h = exhaustive_histogram(&m10, 41, (1u64 << 19) as f64, SweepConfig::default());

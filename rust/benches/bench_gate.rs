@@ -7,7 +7,9 @@ include!("harness.rs");
 use bbm::arith::BbmType;
 use bbm::gate::builders::{build_broken_booth, build_fir, FirSpec};
 use bbm::gate::ir::Levelized;
-use bbm::gate::{analyze, find_tmin, run_random, run_random_scalar, synthesize};
+use bbm::gate::{
+    analyze, find_tmin, run_random, run_random_scalar, run_random_sharded, synthesize,
+};
 
 /// Measure scalar vs bitsliced activity simulation on one design and
 /// report vectors/sec plus the speedup (acceptance bar: >= 10x). Each
@@ -26,12 +28,7 @@ fn sim_speedup(label: &str, nl: &bbm::gate::Netlist, nvec: u64) {
         (format!("bitsliced sim {nvec} vectors {label}"), nvec, min_b, mean_b),
         (format!("scalar oracle sim {scalar_nvec} vectors {label}"), scalar_nvec, min_s, mean_s),
     ] {
-        println!(
-            "bench {name:<44} min {:>9.3} ms  mean {:>9.3} ms  {:>12.1} items/s",
-            min * 1e3,
-            mean * 1e3,
-            n as f64 / min
-        );
+        report_line(&name, min, mean, n as f64);
     }
     let vps_bit = nvec as f64 / min_b;
     let vps_scalar = scalar_nvec as f64 / min_s;
@@ -64,6 +61,33 @@ fn main() {
     let nl8 = build_broken_booth(8, 0, BbmType::Type0);
     sim_speedup("wl8", &nl8, 500_000);
     sim_speedup("wl16 (paper's power run)", &nl, 500_000);
+
+    // Lane-blocked sharded engine (the served Power workload's runner):
+    // 64-lane single-thread baseline vs 256-lane blocked passes, single
+    // worker and full fan-out.
+    let prog16 = Levelized::compile(&nl);
+    let nvec = 500_000u64;
+    let (min_base, mean_base) = time_it(3, || {
+        std::hint::black_box(run_random(&nl, nvec, 1).total_toggles());
+    });
+    let (min_b1, mean_b1) = time_it(3, || {
+        std::hint::black_box(run_random_sharded(&prog16, nvec, 1, 1).total_toggles());
+    });
+    let (min_bn, mean_bn) = time_it(3, || {
+        std::hint::black_box(run_random_sharded(&prog16, nvec, 1, 0).total_toggles());
+    });
+    for (name, min, mean) in [
+        ("bitsliced 64-lane sim 500k vec wl16", min_base, mean_base),
+        ("sharded blocked sim 500k vec wl16 (1 thr)", min_b1, mean_b1),
+        ("sharded blocked sim 500k vec wl16 (all thr)", min_bn, mean_bn),
+    ] {
+        report_line(name, min, mean, nvec as f64);
+    }
+    println!(
+        "  wl16 power run: sharded blocked {:.2}x (1 thread), {:.2}x (all threads) over 64-lane",
+        min_base / min_b1,
+        min_base / min_bn
+    );
 
     report("find_tmin wl16", 3, 1.0, || {
         let mut nl = build_broken_booth(16, 0, BbmType::Type0);

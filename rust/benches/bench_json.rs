@@ -1,0 +1,147 @@
+//! Machine-readable perf trajectory: a smoke-scale run of the PR-5
+//! headline benchmarks, written as JSON to `BENCH_5.json` at the repo
+//! root (override with `BENCH_OUT=/path`). Runs in seconds so CI can
+//! execute it on every PR — set `BENCH_FULL=1` for paper-scale vector
+//! counts.
+//!
+//! Self-contained on purpose (no `include!("harness.rs")`): it wants
+//! structured results, not console lines, and pulling the shared
+//! harness in unused would trip `-D dead_code` on this target.
+
+use std::time::Instant;
+
+use bbm::arith::{BbmType, BrokenBooth, MultKind};
+use bbm::backend::{MomentsRequest, SWEEP_BATCH};
+use bbm::coordinator::DspServer;
+use bbm::error::{exhaustive_stats, SweepConfig};
+use bbm::gate::builders::build_broken_booth;
+use bbm::gate::ir::Levelized;
+use bbm::gate::{run_random, run_random_sharded};
+use bbm::testkit::DigitLevel;
+use bbm::util::Pcg64;
+
+/// Minimum over `iters` timed runs after one warm-up, in seconds.
+fn time_min<F: FnMut()>(iters: u32, mut f: F) -> f64 {
+    f();
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        min = min.min(t.elapsed().as_secs_f64());
+    }
+    min
+}
+
+struct Entry {
+    name: &'static str,
+    secs: f64,
+    items: f64,
+}
+
+impl Entry {
+    fn ns_per_op(&self) -> f64 {
+        self.secs * 1e9 / self.items
+    }
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok_and(|v| v == "1");
+    let mode = if full { "full" } else { "smoke" };
+    let mut entries: Vec<Entry> = Vec::new();
+
+    // 1. WL=8 exhaustive sweep: compiled LUT kernel vs digit model.
+    // Both sides single-threaded so the ratio measures the kernel, not
+    // the digit engine's thread fan-out (the LUT path is one flat scan).
+    let m8 = BrokenBooth::new(8, 5, BbmType::Type0);
+    let pairs8 = (1u64 << 16) as f64;
+    let iters = if full { 50 } else { 10 };
+    let lut = time_min(iters, || {
+        std::hint::black_box(exhaustive_stats(&m8, SweepConfig::default()).stats.mse());
+    });
+    let one_thread = SweepConfig { threads: 1, ..SweepConfig::default() };
+    let digit = time_min(iters, || {
+        std::hint::black_box(exhaustive_stats(&DigitLevel(m8), one_thread).stats.mse());
+    });
+    entries.push(Entry { name: "exhaustive_wl8_lut", secs: lut, items: pairs8 });
+    entries.push(Entry { name: "exhaustive_wl8_digit", secs: digit, items: pairs8 });
+
+    // 2. Executor-pool scaling: pipelined WL=12 moments batches.
+    let mut rng = Pcg64::seeded(5);
+    let req = MomentsRequest {
+        kind: MultKind::BbmType0,
+        wl: 12,
+        level: 9,
+        x: (0..SWEEP_BATCH).map(|_| rng.operand(12) as i32).collect(),
+        y: (0..SWEEP_BATCH).map(|_| rng.operand(12) as i32).collect(),
+    };
+    let jobs = if full { 64 } else { 16 };
+    let pool_secs = |workers: usize| {
+        let srv = if workers > 1 {
+            DspServer::native_pool(workers, 16).unwrap()
+        } else {
+            DspServer::native(16).unwrap()
+        };
+        let t = Instant::now();
+        let pendings: Vec<_> = (0..jobs).map(|_| srv.submit_moments(req.clone())).collect();
+        for p in pendings {
+            std::hint::black_box(p.wait().unwrap().sum);
+        }
+        let dt = t.elapsed().as_secs_f64();
+        srv.shutdown();
+        dt
+    };
+    let items = (jobs * SWEEP_BATCH) as f64;
+    let pool1 = pool_secs(1);
+    let pool4 = pool_secs(4);
+    entries.push(Entry { name: "pool_moments_1worker", secs: pool1, items });
+    entries.push(Entry { name: "pool_moments_4workers", secs: pool4, items });
+
+    // 3. Gate activity run: 64-lane single-thread vs blocked sharded.
+    let nl = build_broken_booth(8, 0, BbmType::Type0);
+    let prog = Levelized::compile(&nl);
+    let nvec: u64 = if full { 500_000 } else { 64_000 };
+    let base = time_min(3, || {
+        std::hint::black_box(run_random(&nl, nvec, 1).total_toggles());
+    });
+    let sharded = time_min(3, || {
+        std::hint::black_box(run_random_sharded(&prog, nvec, 1, 0).total_toggles());
+    });
+    entries.push(Entry { name: "gate_sim_64lane", secs: base, items: nvec as f64 });
+    entries.push(Entry { name: "gate_sim_blocked_sharded", secs: sharded, items: nvec as f64 });
+
+    // Emit JSON (no serde offline; the shape is flat enough to format
+    // by hand).
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"pr\": 5,\n");
+    json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    json.push_str("  \"benches\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_op\": {:.3}, \"items_per_sec\": {:.1}}}{}\n",
+            e.name,
+            e.ns_per_op(),
+            e.items / e.secs,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"ratios\": {\n");
+    json.push_str(&format!(
+        "    \"lut_vs_digit_exhaustive_wl8\": {:.3},\n",
+        digit / lut
+    ));
+    json.push_str(&format!("    \"pool4_vs_pool1_moments\": {:.3},\n", pool1 / pool4));
+    json.push_str(&format!(
+        "    \"blocked_sharded_vs_64lane_sim\": {:.3}\n",
+        base / sharded
+    ));
+    json.push_str("  }\n");
+    json.push_str("}\n");
+
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_5.json").to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("{json}");
+    println!("wrote {path}");
+}

@@ -53,12 +53,17 @@ fn main() {
     report("backend multiply 64k lanes (wl16 type0)", 10, SWEEP_BATCH as f64, || {
         std::hint::black_box(backend.multiply(&mul_req).unwrap().p.len());
     });
+    // Moments runs at wl=12, so it needs its own 12-bit operand draw
+    // (the wl=16 operands above are outside the 12-bit signed range and
+    // request validation rejects them).
+    let x12: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(12) as i32).collect();
+    let y12: Vec<i32> = (0..SWEEP_BATCH).map(|_| rng.operand(12) as i32).collect();
     let mom_req = MomentsRequest {
         kind: MultKind::BbmType0,
         wl: 12,
         level: 6,
-        x: x.clone(),
-        y: y.clone(),
+        x: x12,
+        y: y12,
     };
     report("backend moments 64k lanes (wl12)", 10, SWEEP_BATCH as f64, || {
         std::hint::black_box(backend.moments(&mom_req).unwrap().sum);

@@ -21,13 +21,21 @@ pub fn time_it<F: FnMut()>(iters: u32, mut f: F) -> (f64, f64) {
     (min, total / iters as f64)
 }
 
-/// Report one benchmark line.
-pub fn report(name: &str, iters: u32, items_per_iter: f64, f: impl FnMut()) {
-    let (min, mean) = time_it(iters, f);
+/// Report one benchmark line from pre-measured timings — for targets
+/// that time phases separately to derive speedup ratios. (Allowed dead:
+/// every bench target includes this file; not all use it.)
+#[allow(dead_code)]
+pub fn report_line(name: &str, min: f64, mean: f64, items_per_iter: f64) {
     println!(
         "bench {name:<44} min {:>9.3} ms  mean {:>9.3} ms  {:>12.1} items/s",
         min * 1e3,
         mean * 1e3,
         items_per_iter / min
     );
+}
+
+/// Report one benchmark line.
+pub fn report(name: &str, iters: u32, items_per_iter: f64, f: impl FnMut()) {
+    let (min, mean) = time_it(iters, f);
+    report_line(name, min, mean, items_per_iter);
 }

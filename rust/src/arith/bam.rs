@@ -96,6 +96,12 @@ impl Multiplier for Bam {
     fn name(&self) -> String {
         format!("bam(wl={},vbl={},hbl={})", self.wl, self.vbl, self.hbl)
     }
+
+    fn descriptor(&self) -> Option<(super::MultKind, u32, u32)> {
+        // Only the study configuration (HBL fixed to 0, as in the
+        // paper's comparison) maps onto a `MultKind` design point.
+        (self.hbl == 0).then_some((super::MultKind::Bam, self.wl, self.vbl))
+    }
 }
 
 #[cfg(test)]

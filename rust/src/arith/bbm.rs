@@ -165,6 +165,14 @@ impl Multiplier for BrokenBooth {
     fn name(&self) -> String {
         format!("bbm-{}(wl={},vbl={})", self.ty, self.wl, self.vbl)
     }
+
+    fn descriptor(&self) -> Option<(super::MultKind, u32, u32)> {
+        let kind = match self.ty {
+            BbmType::Type0 => super::MultKind::BbmType0,
+            BbmType::Type1 => super::MultKind::BbmType1,
+        };
+        Some((kind, self.wl, self.vbl))
+    }
 }
 
 #[cfg(test)]

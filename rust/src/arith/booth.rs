@@ -78,6 +78,11 @@ impl Multiplier for ExactBooth {
     fn name(&self) -> String {
         format!("booth-exact(wl={})", self.wl)
     }
+
+    fn descriptor(&self) -> Option<(super::MultKind, u32, u32)> {
+        // `build` ignores the level knob for the exact multiplier.
+        Some((super::MultKind::ExactBooth, self.wl, 0))
+    }
 }
 
 #[cfg(test)]

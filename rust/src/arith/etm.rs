@@ -77,6 +77,10 @@ impl Multiplier for Etm {
     fn name(&self) -> String {
         format!("etm(wl={},split={})", self.wl, self.split)
     }
+
+    fn descriptor(&self) -> Option<(super::MultKind, u32, u32)> {
+        Some((super::MultKind::Etm, self.wl, self.split))
+    }
 }
 
 #[cfg(test)]

@@ -114,6 +114,10 @@ impl Multiplier for Kulkarni {
     fn name(&self) -> String {
         format!("kulkarni(wl={},k={})", self.wl, self.k)
     }
+
+    fn descriptor(&self) -> Option<(super::MultKind, u32, u32)> {
+        Some((super::MultKind::Kulkarni, self.wl, self.k))
+    }
 }
 
 #[cfg(test)]

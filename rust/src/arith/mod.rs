@@ -14,6 +14,12 @@
 //!   `[0, 2^WL)`.
 //! * Every product is an exact integer in an `i64`, so all error
 //!   arithmetic is exact.
+//!
+//! For `WL ≤ 8` the [`table`] module compiles each `(family, WL,
+//! level)` design point into a memoized flat product LUT
+//! ([`ProductTable`]); hot sweep/serving paths execute on the LUT while
+//! the digit-level models here remain the oracle (and the `WL > 8`
+//! execution path).
 
 pub mod adders;
 pub mod bam;
@@ -21,6 +27,7 @@ pub mod bbm;
 pub mod booth;
 pub mod etm;
 pub mod kulkarni;
+pub mod table;
 
 pub use adders::{adder_mse, Adder, EtaI, ExactAdder, ImpactAdder, ImpactVariant, Loa};
 pub use bam::Bam;
@@ -28,6 +35,7 @@ pub use bbm::{BrokenBooth, BbmType};
 pub use booth::{booth_digits, exact_booth, ExactBooth};
 pub use etm::Etm;
 pub use kulkarni::Kulkarni;
+pub use table::{product_table, table_for, ProductTable, MAX_TABLE_WL};
 
 /// A WL-bit combinational multiplier model.
 ///
@@ -65,6 +73,15 @@ pub trait Multiplier: Send + Sync {
         } else {
             (0, (1i64 << self.wl()) - 1)
         }
+    }
+
+    /// The `(family, wl, level)` study coordinates of this model when
+    /// it is exactly a [`MultKind::build`] instance — the key the
+    /// compiled-kernel cache ([`table::product_table`]) resolves LUTs
+    /// by. Models with no family mapping (e.g. [`Bam`] with a nonzero
+    /// HBL) return `None` and always execute digit-level.
+    fn descriptor(&self) -> Option<(MultKind, u32, u32)> {
+        None
     }
 }
 
@@ -108,6 +125,25 @@ impl MultKind {
             MultKind::Bam => Box::new(Bam::new(wl, level, 0)),
             MultKind::Kulkarni => Box::new(Kulkarni::new(wl, level)),
             MultKind::Etm => Box::new(Etm::new(wl, level)),
+        }
+    }
+
+    /// `true` when `(wl, level)` is inside this family's constructor
+    /// bounds — [`MultKind::build`] with valid parameters never
+    /// panics. Mirrored by backend request validation
+    /// (`backend::validate_family`) and the compiled-kernel cache
+    /// ([`table::product_table`]).
+    pub fn valid_params(self, wl: u32, level: u32) -> bool {
+        let even = wl % 2 == 0;
+        match self {
+            // ExactBooth ignores the level knob entirely.
+            MultKind::ExactBooth => (2..=booth::MAX_WL).contains(&wl) && even,
+            MultKind::BbmType0 | MultKind::BbmType1 => {
+                (2..=booth::MAX_WL).contains(&wl) && even && level <= 2 * wl
+            }
+            MultKind::Bam => (1..=31).contains(&wl) && level <= 2 * wl,
+            MultKind::Kulkarni => (2..=31).contains(&wl) && even && level <= 2 * wl + 2,
+            MultKind::Etm => (1..=31).contains(&wl) && level <= wl,
         }
     }
 

@@ -1,0 +1,283 @@
+//! Compiled product-table kernels: a flat `2^WL × 2^WL` lookup table
+//! per `(family, WL, level)` design point, replacing the digit-level
+//! Booth/BAM/Kulkarni recoding on every hot sweep path.
+//!
+//! The digit-level models in the sibling modules are the *oracles*:
+//! they define the function. But an exhaustive Table-I sweep or a
+//! served moments batch re-derives the same recoding millions of times.
+//! For `WL ≤ MAX_TABLE_WL` the whole operand square is at most
+//! `2^16` products — small enough to *compile once* into a flat `i32`
+//! LUT (256 KiB worst case) and serve every subsequent request with a
+//! single indexed load.
+//!
+//! * [`ProductTable::compile`] enumerates the digit-level model over
+//!   its full operand range, so the table is bit-identical to the
+//!   oracle by construction (proved exhaustively in the tests below and
+//!   in `tests/backend_conformance.rs`).
+//! * [`product_table`] memoizes compiled tables in a process-wide
+//!   cache keyed on `(MultKind, wl, level)` — the coordinator's
+//!   executor pool and the sweep engine share one copy per design
+//!   point.
+//! * [`table_for`] resolves a table from any [`Multiplier`] that
+//!   reports a study [`Multiplier::descriptor`]; models outside the
+//!   study grid (e.g. BAM with a nonzero HBL) stay digit-level.
+//!
+//! `WL > MAX_TABLE_WL` always falls back to the digit-level model: a
+//! WL=10 table would already be 4 MiB per design point and the paper's
+//! larger word lengths (12/16) are far past cache-resident sizes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{MultKind, Multiplier};
+
+/// Largest word length compiled to a flat LUT (`2^(2·8)` i32 entries =
+/// 256 KiB — comfortably cache-resident; one step further would be 4 MiB).
+pub const MAX_TABLE_WL: u32 = 8;
+
+/// A compiled multiplier kernel: every product of one `(family, WL,
+/// level)` design point, precomputed into a flat row-major table.
+#[derive(Clone, Debug)]
+pub struct ProductTable {
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    signed: bool,
+    name: String,
+    lo: i64,
+    mask: usize,
+    table: Vec<i32>,
+}
+
+impl ProductTable {
+    /// Compile the digit-level model `kind.build(wl, level)` into a
+    /// LUT. `None` when `wl` is outside `1..=MAX_TABLE_WL` or the
+    /// parameters are invalid for the family (the digit constructor
+    /// would assert).
+    pub fn compile(kind: MultKind, wl: u32, level: u32) -> Option<ProductTable> {
+        if wl > MAX_TABLE_WL || !kind.valid_params(wl, level) {
+            return None;
+        }
+        let model = kind.build(wl, level);
+        let (lo, hi) = model.operand_range();
+        let side = (hi - lo + 1) as usize;
+        let mut table = Vec::with_capacity(side * side);
+        for x in lo..=hi {
+            for y in lo..=hi {
+                // Products of WL <= 8 operands fit i32 for every family
+                // (|p| < 2^16), so the flat carrier is exact.
+                table.push(model.multiply(x, y) as i32);
+            }
+        }
+        Some(ProductTable {
+            kind,
+            wl,
+            level,
+            signed: model.signed(),
+            name: model.name(),
+            lo,
+            mask: side - 1,
+            table,
+        })
+    }
+
+    /// Design-point family.
+    pub fn kind(&self) -> MultKind {
+        self.kind
+    }
+
+    /// Breaking/precision level the table was compiled at.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Operands per axis (`2^wl`).
+    pub fn side(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// The compiled product. Out-of-range operands wrap into the
+    /// operand field (callers are expected to respect
+    /// [`Multiplier::operand_range`], as with the digit models).
+    #[inline]
+    pub fn lookup(&self, x: i64, y: i64) -> i64 {
+        let xi = (x.wrapping_sub(self.lo) as usize) & self.mask;
+        let yi = (y.wrapping_sub(self.lo) as usize) & self.mask;
+        self.table[(xi << self.wl) | yi] as i64
+    }
+
+    /// Batched multiply over parallel operand lanes — the kernel the
+    /// native backend's `MultiplyRequest` path runs on.
+    pub fn multiply_slice(&self, x: &[i32], y: &[i32]) -> Vec<i64> {
+        x.iter().zip(y).map(|(&a, &b)| self.lookup(a as i64, b as i64)).collect()
+    }
+
+    /// Every `(x, y, product)` of the operand square in row-major
+    /// order — one flat scan regenerates an exhaustive sweep.
+    pub fn entries(&self) -> impl Iterator<Item = (i64, i64, i64)> + '_ {
+        let (wl, mask, lo) = (self.wl, self.mask, self.lo);
+        self.table
+            .iter()
+            .enumerate()
+            .map(move |(i, &p)| (lo + (i >> wl) as i64, lo + (i & mask) as i64, p as i64))
+    }
+}
+
+impl Multiplier for ProductTable {
+    fn wl(&self) -> u32 {
+        self.wl
+    }
+
+    fn signed(&self) -> bool {
+        self.signed
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        self.lookup(x, y)
+    }
+
+    fn name(&self) -> String {
+        format!("{}+lut", self.name)
+    }
+
+    fn descriptor(&self) -> Option<(MultKind, u32, u32)> {
+        Some((self.kind, self.wl, self.level))
+    }
+}
+
+type TableKey = (MultKind, u32, u32);
+
+fn cache() -> &'static Mutex<HashMap<TableKey, Arc<ProductTable>>> {
+    static CACHE: OnceLock<Mutex<HashMap<TableKey, Arc<ProductTable>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Memoized process-wide kernel cache: compile once per `(family, wl,
+/// level)`, share the `Arc` with every sweep thread and executor-pool
+/// worker. `None` when the design point has no LUT (wl too large or
+/// invalid parameters) — callers fall back to the digit-level model.
+pub fn product_table(kind: MultKind, wl: u32, level: u32) -> Option<Arc<ProductTable>> {
+    if wl > MAX_TABLE_WL || !kind.valid_params(wl, level) {
+        return None;
+    }
+    // The exact multiplier ignores the level knob; canonicalize the key
+    // (as `descriptor()` does) so requests at different nominal levels
+    // share one table instead of compiling duplicates.
+    let level = if kind == MultKind::ExactBooth { 0 } else { level };
+    if let Some(t) = cache().lock().expect("product-table cache poisoned").get(&(kind, wl, level))
+    {
+        return Some(Arc::clone(t));
+    }
+    // Compile outside the lock so distinct design points compile
+    // concurrently on a cold cache (a racing duplicate compile is
+    // harmless: first insert wins, the loser is dropped).
+    let t = Arc::new(ProductTable::compile(kind, wl, level)?);
+    let mut map = cache().lock().expect("product-table cache poisoned");
+    Some(Arc::clone(map.entry((kind, wl, level)).or_insert(t)))
+}
+
+/// Resolve the compiled kernel for any model that reports its study
+/// coordinates (see [`Multiplier::descriptor`]).
+pub fn table_for<M: Multiplier + ?Sized>(model: &M) -> Option<Arc<ProductTable>> {
+    let (kind, wl, level) = model.descriptor()?;
+    product_table(kind, wl, level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every valid level of a family at word length `wl` (the exact
+    /// multiplier ignores the knob, so one level covers it).
+    fn all_levels(kind: MultKind, wl: u32) -> Vec<u32> {
+        if kind == MultKind::ExactBooth {
+            return if kind.valid_params(wl, 0) { vec![0] } else { vec![] };
+        }
+        (0..=(2 * wl + 2)).filter(|&l| kind.valid_params(wl, l)).collect()
+    }
+
+    #[test]
+    fn lut_matches_digit_oracle_exhaustively_all_families_wl_le_8() {
+        // The satellite acceptance bar: for every family and every
+        // valid level at WL <= 8, the compiled table equals the
+        // digit-level oracle on the whole operand square.
+        for kind in MultKind::ALL {
+            for wl in 1..=8u32 {
+                for level in all_levels(kind, wl) {
+                    let Some(t) = ProductTable::compile(kind, wl, level) else {
+                        continue;
+                    };
+                    let m = kind.build(wl, level);
+                    let (lo, hi) = m.operand_range();
+                    assert_eq!(t.side() as i64, hi - lo + 1, "{kind} wl={wl}");
+                    for x in lo..=hi {
+                        for y in lo..=hi {
+                            assert_eq!(
+                                t.lookup(x, y),
+                                m.multiply(x, y),
+                                "{kind} wl={wl} level={level} x={x} y={y}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entries_cover_square_in_order() {
+        let t = ProductTable::compile(MultKind::BbmType0, 4, 3).unwrap();
+        let m = MultKind::BbmType0.build(4, 3);
+        let (lo, hi) = m.operand_range();
+        let mut want = Vec::new();
+        for x in lo..=hi {
+            for y in lo..=hi {
+                want.push((x, y, m.multiply(x, y)));
+            }
+        }
+        let got: Vec<(i64, i64, i64)> = t.entries().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn multiply_slice_matches_scalar_lookup() {
+        let t = ProductTable::compile(MultKind::Kulkarni, 8, 9).unwrap();
+        let mut rng = crate::util::Pcg64::seeded(5);
+        let x: Vec<i32> = (0..512).map(|_| rng.operand_unsigned(8) as i32).collect();
+        let y: Vec<i32> = (0..512).map(|_| rng.operand_unsigned(8) as i32).collect();
+        let p = t.multiply_slice(&x, &y);
+        for i in 0..x.len() {
+            assert_eq!(p[i], t.lookup(x[i] as i64, y[i] as i64));
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_and_rejects_out_of_range() {
+        let a = product_table(MultKind::Bam, 8, 5).unwrap();
+        let b = product_table(MultKind::Bam, 8, 5).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        // The exact multiplier's ignored level knob canonicalizes to one
+        // table.
+        let e0 = product_table(MultKind::ExactBooth, 8, 0).unwrap();
+        let e5 = product_table(MultKind::ExactBooth, 8, 5).unwrap();
+        assert!(Arc::ptr_eq(&e0, &e5), "exact tables must share one cache entry");
+        assert!(product_table(MultKind::Bam, 7, 5).is_some(), "bam allows odd wl <= 8");
+        assert!(product_table(MultKind::Bam, 9, 5).is_none(), "wl > 8 has no LUT");
+        assert!(product_table(MultKind::BbmType0, 8, 17).is_none(), "invalid level");
+        assert!(product_table(MultKind::BbmType0, 7, 0).is_none(), "odd wl for booth");
+    }
+
+    #[test]
+    fn table_for_resolves_study_models_only() {
+        let m = crate::arith::BrokenBooth::new(8, 5, crate::arith::BbmType::Type0);
+        let t = table_for(&m).expect("wl=8 study point has a kernel");
+        assert_eq!(t.lookup(-7, 9), m.multiply(-7, 9));
+        // A LUT is its own descriptor's kernel (no infinite regress).
+        assert!(table_for(t.as_ref()).is_some());
+        // Off-grid models stay digit-level.
+        let bam_hbl = crate::arith::Bam::new(8, 3, 2);
+        assert!(table_for(&bam_hbl).is_none(), "hbl != 0 is not a MultKind point");
+        let wide = crate::arith::BrokenBooth::new(12, 5, crate::arith::BbmType::Type0);
+        assert!(table_for(&wide).is_none(), "wl=12 has no LUT");
+    }
+}

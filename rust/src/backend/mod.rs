@@ -292,26 +292,48 @@ pub(crate) fn validate_pair(x: &[i32], y: &[i32], wl: u32) -> BackendResult<()> 
 }
 
 /// Family-specific `(wl, level)` bounds, mirroring the `arith`
-/// constructor asserts. Enforced here so a malformed request comes back
-/// as a [`BackendError::Shape`] reply instead of panicking (and thereby
-/// killing) the coordinator's executor thread.
+/// constructor asserts (the shared predicate is
+/// [`MultKind::valid_params`]). Enforced here so a malformed request
+/// comes back as a [`BackendError::Shape`] reply instead of panicking
+/// (and thereby killing) the coordinator's executor threads.
 pub(crate) fn validate_family(kind: MultKind, wl: u32, level: u32) -> BackendResult<()> {
-    let even = wl % 2 == 0;
-    let ok = match kind {
-        // ExactBooth ignores the level knob entirely.
-        MultKind::ExactBooth => even,
-        MultKind::BbmType0 | MultKind::BbmType1 => even && level <= 2 * wl,
-        MultKind::Bam => level <= 2 * wl,
-        MultKind::Kulkarni => even && level <= 2 * wl + 2,
-        MultKind::Etm => level <= wl,
-    };
-    if ok {
+    if kind.valid_params(wl, level) {
         Ok(())
     } else {
         Err(BackendError::Shape(format!(
             "invalid (wl={wl}, level={level}) for multiplier family `{kind}`"
         )))
     }
+}
+
+/// Operand-range validation: every lane must lie in the family's WL-bit
+/// operand range (signed two's-complement or unsigned — the
+/// [`crate::arith::Multiplier`] convention). Enforced at the request
+/// boundary so engines may dispatch to compiled LUT kernels (which
+/// index by operand value) without ever silently diverging from the
+/// digit-level models on an out-of-contract lane.
+pub(crate) fn validate_operands(
+    kind: MultKind,
+    wl: u32,
+    x: &[i32],
+    y: &[i32],
+) -> BackendResult<()> {
+    let signed =
+        matches!(kind, MultKind::ExactBooth | MultKind::BbmType0 | MultKind::BbmType1);
+    let (lo, hi) = if signed {
+        (-(1i64 << (wl - 1)), (1i64 << (wl - 1)) - 1)
+    } else {
+        (0, (1i64 << wl) - 1)
+    };
+    for (i, (&a, &b)) in x.iter().zip(y).enumerate() {
+        if !(lo..=hi).contains(&(a as i64)) || !(lo..=hi).contains(&(b as i64)) {
+            return Err(BackendError::Shape(format!(
+                "operand lane {i} outside the {wl}-bit {} range [{lo}, {hi}]: ({a}, {b})",
+                if signed { "signed" } else { "unsigned" }
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// FIR request validation (the fixed artifact shape is the contract for
@@ -336,7 +358,19 @@ pub(crate) fn validate_fir(req: &FirRequest) -> BackendResult<()> {
     }
     // The FIR datapath is Broken-Booth Type0; enforce its bounds here
     // so both engines reject what the oracle constructor would panic on.
-    validate_family(MultKind::BbmType0, req.wl, req.vbl)
+    validate_family(MultKind::BbmType0, req.wl, req.vbl)?;
+    // Samples and taps are signed WL-bit values (see validate_operands
+    // for why range enforcement matters to the LUT kernels).
+    let (lo, hi) = (-(1i64 << (req.wl - 1)), (1i64 << (req.wl - 1)) - 1);
+    for (what, vals) in [("sample", &req.x), ("tap", &req.h)] {
+        if let Some(v) = vals.iter().find(|v| !(lo..=hi).contains(&(**v as i64))) {
+            return Err(BackendError::Shape(format!(
+                "fir {what} {v} outside the {}-bit signed range [{lo}, {hi}]",
+                req.wl
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Power request validation: family bounds plus stimulus sanity, so a
@@ -523,6 +557,27 @@ mod tests {
         assert!(
             validate_power(&PowerRequest { constraint_ps: f64::NAN, ..good }).is_err()
         );
+    }
+
+    #[test]
+    fn operand_ranges_are_enforced() {
+        // Signed family: the full two's-complement range passes, one
+        // past either end is rejected.
+        let ok = [-128i32, -1, 0, 127];
+        assert!(validate_operands(MultKind::BbmType0, 8, &ok, &ok).is_ok());
+        assert!(validate_operands(MultKind::BbmType0, 8, &[128], &[0]).is_err());
+        assert!(validate_operands(MultKind::BbmType0, 8, &[0], &[-129]).is_err());
+        // Unsigned family: negatives and 2^wl are out.
+        let ok = [0i32, 1, 255];
+        assert!(validate_operands(MultKind::Bam, 8, &ok, &ok).is_ok());
+        assert!(validate_operands(MultKind::Bam, 8, &[-1], &[0]).is_err());
+        assert!(validate_operands(MultKind::Bam, 8, &[0], &[256]).is_err());
+        // FIR samples/taps are signed wl-bit values.
+        let mut x = vec![0; FIR_BLOCK + FIR_TAPS - 1];
+        let h = vec![0; FIR_TAPS];
+        x[7] = 1 << 15; // out of the 16-bit signed range
+        let bad = FirRequest { wl: 16, x, h, vbl: 0 };
+        assert!(validate_fir(&bad).is_err(), "out-of-range fir sample must be rejected");
     }
 
     #[test]

@@ -1,23 +1,28 @@
 //! The default execution backend: bit-accurate batched loops over the
 //! [`crate::arith`] oracles, no external dependencies.
 //!
-//! Each request builds its multiplier model once and streams every
-//! operand lane through it in flat loops — the per-lane workloads are
-//! stateless, and the moments reduction accumulates Σerr and Σerr²
-//! exactly in `i128`, so no chunking is ever needed for correctness.
-//! (The PJRT artifacts' per-[`super::SWEEP_BATCH`]-chunk `f64` contract
-//! is strictly looser: Σerr² is folded to the artifact-shaped `f64`
-//! response exactly once, at the very end.) Batch length is arbitrary;
-//! the coordinator happens to send [`super::SWEEP_BATCH`]-sized chunks
-//! because that is what the PJRT engine requires.
+//! Each request resolves its multiplier *kernel* once and streams every
+//! operand lane through it in flat loops. For `WL ≤ 8` the kernel is a
+//! compiled [`crate::arith::ProductTable`] from the process-wide
+//! memoized cache (one indexed load per lane instead of a digit-level
+//! recoding); larger word lengths build the digit-level oracle, which
+//! computes the identical function (the LUT is compiled *from* it).
+//! The moments reduction accumulates Σerr and Σerr² exactly in `i128`,
+//! so no chunking is ever needed for correctness. (The PJRT artifacts'
+//! per-[`super::SWEEP_BATCH`]-chunk `f64` contract is strictly looser:
+//! Σerr² is folded to the artifact-shaped `f64` response exactly once,
+//! at the very end.) Batch length is arbitrary; the coordinator happens
+//! to send [`super::SWEEP_BATCH`]-sized chunks because that is what the
+//! PJRT engine requires.
 
-use crate::arith::{Multiplier, MultKind};
+use crate::arith::{product_table, Multiplier, MultKind};
 use crate::gate;
 
 use super::{
-    validate_family, validate_fir, validate_pair, validate_power, validate_snr, Backend,
-    BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest,
-    MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, FIR_TAPS,
+    validate_family, validate_fir, validate_operands, validate_pair, validate_power,
+    validate_snr, Backend, BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest,
+    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
+    SnrRequest, FIR_TAPS,
 };
 
 /// Batched native engine over the `arith` oracles.
@@ -39,33 +44,53 @@ impl Backend for NativeBackend {
     fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
         validate_pair(&req.x, &req.y, req.wl)?;
         validate_family(req.kind, req.wl, req.level)?;
-        let m = req.kind.build(req.wl, req.level);
-        let p = req
-            .x
-            .iter()
-            .zip(&req.y)
-            .map(|(&x, &y)| m.multiply(x as i64, y as i64))
-            .collect();
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
+        let p = match product_table(req.kind, req.wl, req.level) {
+            Some(t) => t.multiply_slice(&req.x, &req.y),
+            None => {
+                let m = req.kind.build(req.wl, req.level);
+                req.x
+                    .iter()
+                    .zip(&req.y)
+                    .map(|(&x, &y)| m.multiply(x as i64, y as i64))
+                    .collect()
+            }
+        };
         Ok(ProductBlock { p })
     }
 
     fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
         validate_pair(&req.x, &req.y, req.wl)?;
         validate_family(req.kind, req.wl, req.level)?;
-        let m = req.kind.build(req.wl, req.level);
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
         let mut sum = 0i128;
         let mut sum_sq = 0i128;
         let mut min = i64::MAX;
         let mut nonzero = 0i64;
-        for (&x, &y) in req.x.iter().zip(&req.y) {
-            let e = m.error(x as i64, y as i64);
-            sum += e as i128;
-            sum_sq += e as i128 * e as i128;
-            if e != 0 {
-                nonzero += 1;
-            }
-            if e < min {
-                min = e;
+        {
+            let mut fold = |e: i64| {
+                sum += e as i128;
+                sum_sq += e as i128 * e as i128;
+                if e != 0 {
+                    nonzero += 1;
+                }
+                if e < min {
+                    min = e;
+                }
+            };
+            match product_table(req.kind, req.wl, req.level) {
+                Some(t) => {
+                    for (&x, &y) in req.x.iter().zip(&req.y) {
+                        let (x, y) = (x as i64, y as i64);
+                        fold(t.lookup(x, y) - x * y);
+                    }
+                }
+                None => {
+                    let m = req.kind.build(req.wl, req.level);
+                    for (&x, &y) in req.x.iter().zip(&req.y) {
+                        fold(m.error(x as i64, y as i64));
+                    }
+                }
             }
         }
         if req.x.is_empty() {
@@ -80,19 +105,17 @@ impl Backend for NativeBackend {
     fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock> {
         validate_fir(req)?;
         // Broken-Booth Type0 with VBL = 0 *is* the exact modified-Booth
-        // multiplier, so one model covers the accurate and broken filters.
-        let m = MultKind::BbmType0.build(req.wl, req.vbl);
+        // multiplier, so one kernel covers the accurate and broken
+        // filters. Same operand order as the Pallas kernel and the
+        // behavioural FixedFilter: multiply(sample, tap).
         let out_len = req.x.len() - FIR_TAPS + 1;
-        let mut y = Vec::with_capacity(out_len);
-        for n in 0..out_len {
-            let mut acc = 0i64;
-            for (k, &hk) in req.h.iter().enumerate() {
-                // Same operand order as the Pallas kernel and the
-                // behavioural FixedFilter: multiply(sample, tap).
-                acc += m.multiply(req.x[n + FIR_TAPS - 1 - k] as i64, hk as i64);
+        let y = match product_table(MultKind::BbmType0, req.wl, req.vbl) {
+            Some(t) => fir_accumulate(&req.x, &req.h, out_len, |x, h| t.lookup(x, h)),
+            None => {
+                let m = MultKind::BbmType0.build(req.wl, req.vbl);
+                fir_accumulate(&req.x, &req.h, out_len, |x, h| m.multiply(x, h))
             }
-            y.push(acc);
-        }
+        };
         Ok(FirBlock { y })
     }
 
@@ -125,9 +148,11 @@ impl Backend for NativeBackend {
             gate::synthesize(&mut nl, req.constraint_ps)
         };
         let period_ps = if req.constraint_ps <= 0.0 { synth.delay_ps } else { req.constraint_ps };
-        // Activity on the bitsliced engine over one compiled program.
+        // Activity on the lane-blocked sharded engine over one compiled
+        // program: fixed shard grid, so the report is bit-identical no
+        // matter how many simulation threads the host grants.
         let lv = gate::Levelized::compile(&nl);
-        let act = gate::run_random_levelized(&lv, req.nvec, req.seed);
+        let act = gate::run_random_sharded(&lv, req.nvec, req.seed, 0);
         let p = gate::average_power(&nl, &act, period_ps);
         Ok(PowerReport {
             dynamic_mw: p.dynamic_mw,
@@ -141,6 +166,25 @@ impl Backend for NativeBackend {
             vectors: act.vectors,
         })
     }
+}
+
+/// The FIR inner loop, monomorphized over the tap-product kernel (LUT
+/// lookup or digit-level multiply).
+fn fir_accumulate(
+    x: &[i32],
+    h: &[i32],
+    out_len: usize,
+    mul: impl Fn(i64, i64) -> i64,
+) -> Vec<i64> {
+    let mut y = Vec::with_capacity(out_len);
+    for n in 0..out_len {
+        let mut acc = 0i64;
+        for (k, &hk) in h.iter().enumerate() {
+            acc += mul(x[n + FIR_TAPS - 1 - k] as i64, hk as i64);
+        }
+        y.push(acc);
+    }
+    y
 }
 
 #[cfg(test)]

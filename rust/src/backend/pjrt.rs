@@ -12,9 +12,9 @@ use crate::arith::MultKind;
 use crate::runtime::Runtime;
 
 use super::{
-    validate_family, validate_fir, validate_pair, validate_snr, Backend, BackendError,
-    BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
+    validate_family, validate_fir, validate_operands, validate_pair, validate_snr, Backend,
+    BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest,
+    MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
 };
 
 /// PJRT/XLA engine over an artifact directory.
@@ -95,6 +95,7 @@ impl Backend for PjrtBackend {
     fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
         validate_pair(&req.x, &req.y, req.wl)?;
         validate_family(req.kind, req.wl, req.level)?;
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
         self.check_batch(req.x.len())?;
         let ty = self.artifact_type(req.kind)?;
         self.require_artifact(&format!("bbm_wl{}_type{ty}", req.wl))?;
@@ -109,6 +110,7 @@ impl Backend for PjrtBackend {
     fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
         validate_pair(&req.x, &req.y, req.wl)?;
         validate_family(req.kind, req.wl, req.level)?;
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
         self.check_batch(req.x.len())?;
         let ty = self.artifact_type(req.kind)?;
         self.require_artifact(&format!("moments_wl{}_type{ty}", req.wl))?;

@@ -1,5 +1,10 @@
 //! Lightweight coordinator metrics: atomic counters plus a latency
 //! accumulator, snapshotted into reports by the server and examples.
+//!
+//! The executor pool gives every worker its own [`Metrics`] hub (no
+//! cross-worker cache-line traffic on the hot counters) and the server
+//! folds them into one [`MetricsSnapshot`] via
+//! [`MetricsSnapshot::merge`] at snapshot time.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -72,6 +77,22 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Fold another snapshot into this one (executor-pool
+    /// aggregation): counters and busy time add, the worst-case
+    /// latency takes the max. Submit-side counters (`submitted`,
+    /// `backpressure_events`) live in the server's own hub, worker
+    /// hubs only count executions — so merging the full set
+    /// double-counts nothing.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.executions += other.executions;
+        self.items += other.items;
+        self.busy += other.busy;
+        self.max_latency = self.max_latency.max(other.max_latency);
+        self.backpressure_events += other.backpressure_events;
+    }
+
     /// Items per second of executor busy time.
     pub fn throughput(&self) -> f64 {
         let s = self.busy.as_secs_f64();
@@ -133,5 +154,23 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_latency(), Duration::ZERO);
         assert_eq!(s.throughput(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_latency() {
+        let a = Metrics::new();
+        a.submitted.fetch_add(2, Ordering::Relaxed);
+        a.record_job(Duration::from_millis(4), 10);
+        let b = Metrics::new();
+        b.record_job(Duration::from_millis(6), 30);
+        b.record_job(Duration::from_millis(2), 5);
+        let mut snap = a.snapshot();
+        snap.merge(&b.snapshot());
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.items, 45);
+        assert_eq!(snap.busy, Duration::from_millis(12));
+        assert_eq!(snap.max_latency, Duration::from_millis(6));
+        assert_eq!(snap.mean_latency(), Duration::from_millis(4));
     }
 }

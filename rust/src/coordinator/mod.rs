@@ -2,10 +2,15 @@
 //!
 //! The paper's contribution is an arithmetic unit, so (per the
 //! architecture rules) L3 is a lean but real serving layer: a bounded
-//! job queue in front of a dedicated executor thread that owns a
-//! pluggable execution [`crate::backend::Backend`], an overlap-save
-//! block planner for streaming FIR requests, a dynamic micro-batcher
-//! for multiply traffic, and metrics. The coordinator itself never
+//! job queue in front of an executor *pool* whose workers each own a
+//! pluggable execution [`crate::backend::Backend`] instance
+//! ([`server::DspServer::start_pool`]; PJRT keeps the classic single
+//! executor of [`server::DspServer::start`]), an overlap-save block
+//! planner for streaming FIR requests, a dynamic micro-batcher for
+//! multiply traffic, and per-worker metrics folded into one snapshot.
+//! Exhaustive-sweep and SNR submissions shard into sub-jobs fanned
+//! across the workers and merge with exact accumulators, so results
+//! are bit-identical at any worker count. The coordinator itself never
 //! names a concrete engine — callers pick one via
 //! [`crate::backend::BackendKind`] (native by default, PJRT behind the
 //! `pjrt` feature). See [`server::DspServer`] for the public API;

@@ -1,28 +1,40 @@
-//! The L3 coordinator server: a dedicated executor thread behind a
-//! bounded job queue, generic over the execution [`Backend`], with
-//! streaming FIR filtering, exhaustive error sweeps and SNR
-//! accumulation as the request types.
+//! The L3 coordinator server: an executor *pool* behind one bounded
+//! job queue, generic over the execution [`Backend`], with streaming
+//! FIR filtering, exhaustive error sweeps and SNR accumulation as the
+//! request types.
 //!
 //! Topology (one box = one thread):
 //!
 //! ```text
-//!  callers ──▶ [bounded sync_channel]  ──▶ executor (owns Box<dyn Backend>)
-//!     ▲            backpressure               │ backend.multiply/fir/…
+//!  callers ──▶ [bounded sync_channel] ──▶ executor 0 (owns Box<dyn Backend>)
+//!     ▲            backpressure      └──▶ executor 1 (own backend instance)
+//!     │                              └──▶ …          (N = `start_pool`)
 //!     └──────────── per-job reply channels ◀──┘
 //! ```
 //!
-//! The backend is constructed *inside* the executor thread from a
+//! Each backend is constructed *inside* its executor thread from a
 //! `Send` factory (PJRT client handles cannot cross threads; the
-//! native backend does not care). One executor thread keeps an engine
-//! saturated while the bounded queue provides backpressure to
-//! producers — the same shape a vLLM-style router uses with one engine
-//! per device. Callers never see the backend: they submit typed
-//! requests ([`MultiplyRequest`] → [`ProductBlock`], …) and wait on
-//! [`Pending`] replies.
+//! native backend does not care). [`DspServer::start`] spawns the
+//! classic single executor — the only shape PJRT supports, since its
+//! factory can construct exactly one engine. [`DspServer::start_pool`]
+//! spawns N workers draining the shared queue, one backend instance
+//! per worker — the shape a vLLM-style router uses with one engine per
+//! device. The bounded queue provides backpressure to producers either
+//! way. Callers never see the backend: they submit typed requests
+//! ([`MultiplyRequest`] → [`ProductBlock`], …) and wait on [`Pending`]
+//! replies.
+//!
+//! High-level sweep/SNR submissions are *sharded*:
+//! [`DspServer::exhaustive_sweep`] splits the operand space into
+//! sub-jobs sized to the worker count (single-worker servers keep the
+//! exact [`SWEEP_BATCH`] artifact shape PJRT requires) and merges the
+//! chunk moments with exact integer accumulators, so the statistics
+//! are bit-identical at any worker count; [`DspServer::snr_db`]
+//! pipelines every block before collecting, in submission order.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -79,46 +91,95 @@ impl<T> std::fmt::Display for QueueFull<T> {
 
 impl<T: std::fmt::Debug> std::error::Error for QueueFull<T> {}
 
-/// Handle to a running coordinator.
+/// One worker's backend constructor, run inside its executor thread.
+type BoxedFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// Handle to a running coordinator (one executor thread, or a pool).
 pub struct DspServer {
     tx: SyncSender<Job>,
-    metrics: Arc<Metrics>,
-    join: Option<std::thread::JoinHandle<()>>,
+    /// Submit-side counters (`submitted`, `backpressure_events`).
+    submit_metrics: Arc<Metrics>,
+    /// Execution-side counters, one hub per worker.
+    worker_metrics: Vec<Arc<Metrics>>,
+    join: Vec<std::thread::JoinHandle<()>>,
     backend_name: String,
 }
 
 impl DspServer {
-    /// Start the executor with a bounded queue of `depth` jobs (the
-    /// backpressure window). The backend is constructed by `factory`
-    /// *inside* the executor thread; a construction error is returned
-    /// here, synchronously.
+    /// Start a single executor with a bounded queue of `depth` jobs
+    /// (the backpressure window). The backend is constructed by
+    /// `factory` *inside* the executor thread; a construction error is
+    /// returned here, synchronously. This is the only shape available
+    /// to engines whose factory can build exactly one instance (PJRT).
     pub fn start<F>(factory: F, depth: usize) -> Result<DspServer>
     where
         F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Job>(depth.max(1));
-        let metrics = Arc::new(Metrics::new());
-        let m2 = metrics.clone();
-        let (init_tx, init_rx) = sync_channel::<Result<String>>(1);
-        let join = std::thread::Builder::new()
-            .name("bbm-executor".into())
-            .spawn(move || {
-                let backend = match factory() {
-                    Ok(b) => {
-                        let _ = init_tx.send(Ok(b.name()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(e));
-                        return;
-                    }
-                };
-                executor_loop(backend, rx, m2);
+        Self::start_workers(vec![Box::new(factory) as BoxedFactory], depth)
+    }
+
+    /// Start a pool of `workers` executor threads draining one shared
+    /// bounded queue of `depth` jobs. The factory runs once *per
+    /// worker*, inside that worker's thread, so every worker owns an
+    /// independent backend instance — which is why it must be `Fn`
+    /// (callable N times) and `Sync` (shared across the spawns), and
+    /// why PJRT stays on the single-executor [`DspServer::start`]
+    /// path. Any construction failure aborts the whole pool.
+    pub fn start_pool<F>(factory: F, workers: usize, depth: usize) -> Result<DspServer>
+    where
+        F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(workers >= 1, "executor pool needs at least one worker");
+        let factory = Arc::new(factory);
+        let factories: Vec<BoxedFactory> = (0..workers)
+            .map(|_| {
+                let f = Arc::clone(&factory);
+                Box::new(move || f()) as BoxedFactory
             })
-            .expect("spawn executor");
-        let backend_name =
-            init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
-        Ok(DspServer { tx, metrics, join: Some(join), backend_name })
+            .collect();
+        Self::start_workers(factories, depth)
+    }
+
+    fn start_workers(factories: Vec<BoxedFactory>, depth: usize) -> Result<DspServer> {
+        let workers = factories.len();
+        let (tx, rx) = sync_channel::<Job>(depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let submit_metrics = Arc::new(Metrics::new());
+        let (init_tx, init_rx) = sync_channel::<Result<String>>(workers);
+        let mut worker_metrics = Vec::with_capacity(workers);
+        let mut join = Vec::with_capacity(workers);
+        for (w, factory) in factories.into_iter().enumerate() {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::new(Metrics::new());
+            worker_metrics.push(Arc::clone(&metrics));
+            let init_tx = init_tx.clone();
+            join.push(
+                std::thread::Builder::new()
+                    .name(format!("bbm-executor-{w}"))
+                    .spawn(move || {
+                        let backend = match factory() {
+                            Ok(b) => {
+                                let _ = init_tx.send(Ok(b.name()));
+                                b
+                            }
+                            Err(e) => {
+                                let _ = init_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        executor_loop(backend, &rx, &metrics);
+                    })
+                    .expect("spawn executor"),
+            );
+        }
+        drop(init_tx);
+        let mut backend_name = String::new();
+        for _ in 0..workers {
+            // On any init failure `tx` is dropped with the error return,
+            // disconnecting the queue; already-started siblings exit.
+            backend_name = init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
+        }
+        Ok(DspServer { tx, submit_metrics, worker_metrics, join, backend_name })
     }
 
     /// Start over a named backend kind (CLI selection).
@@ -129,6 +190,16 @@ impl DspServer {
     /// Start over the native batched backend (always available).
     pub fn native(depth: usize) -> Result<DspServer> {
         Self::start_kind(BackendKind::Native, depth)
+    }
+
+    /// A pool of `workers` native-backend executors (the native engine
+    /// is stateless, so instances are free).
+    pub fn native_pool(workers: usize, depth: usize) -> Result<DspServer> {
+        Self::start_pool(
+            || Ok(Box::new(crate::backend::NativeBackend::new()) as Box<dyn Backend>),
+            workers,
+            depth,
+        )
     }
 
     /// Default server: the native backend. (The PJRT artifact path is
@@ -142,19 +213,35 @@ impl DspServer {
         &self.backend_name
     }
 
-    /// Current metrics.
+    /// Number of executor threads draining the queue.
+    pub fn workers(&self) -> usize {
+        self.join.len()
+    }
+
+    /// Current metrics: the submit-side hub folded together with every
+    /// worker's execution hub.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut snap = self.submit_metrics.snapshot();
+        for m in &self.worker_metrics {
+            snap.merge(&m.snapshot());
+        }
+        snap
+    }
+
+    /// Per-worker execution snapshots (pool introspection; a single
+    /// server reports one entry).
+    pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.worker_metrics.iter().map(|m| m.snapshot()).collect()
     }
 
     // -- typed submission --------------------------------------------------
 
     fn submit_job(&self, job: Job) {
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(job) {
             Ok(()) => {}
             Err(TrySendError::Full(job)) => {
-                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 // Block until the executor drains a slot.
                 let _ = self.tx.send(job);
             }
@@ -180,11 +267,11 @@ impl DspServer {
         let (rtx, rrx) = channel();
         match self.tx.try_send(Job::Multiply(req, rtx)) {
             Ok(()) => {
-                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(Pending::new(rrx))
             }
             Err(TrySendError::Full(Job::Multiply(req, _))) => {
-                self.metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 Err(QueueFull(req))
             }
             Err(TrySendError::Full(_)) => unreachable!("submitted job variant"),
@@ -258,8 +345,15 @@ impl DspServer {
     }
 
     /// Exhaustive error sweep over all `2^(2wl)` operand pairs of any
-    /// multiplier family, chunked at [`SWEEP_BATCH`] through the
-    /// backend's moments reduction.
+    /// multiplier family through the backend's moments reduction.
+    ///
+    /// Single-executor servers chunk at exactly [`SWEEP_BATCH`] (the
+    /// artifact shape PJRT requires). Pools shard finer — about four
+    /// sub-jobs per worker — so even a one-batch sweep (WL = 8) fans
+    /// out across every worker. Chunk moments merge with exact integer
+    /// accumulators (each chunk's `f64` Σerr² is an exact integer below
+    /// 2^53, summed in `u128`), so the statistics are bit-identical at
+    /// any worker count and any sharding.
     pub fn exhaustive_sweep(&self, kind: MultKind, wl: u32, level: u32) -> Result<ErrorStats> {
         anyhow::ensure!(
             2 * wl <= 32 && (1usize << (2 * wl)) % SWEEP_BATCH == 0,
@@ -269,25 +363,33 @@ impl DspServer {
         // below would panic on what the backend would cleanly refuse.
         crate::backend::validate_family(kind, wl, level)?;
         let total: u64 = 1u64 << (2 * wl);
-        let chunks = total / SWEEP_BATCH as u64;
+        let chunk = if self.workers() > 1 {
+            let target_jobs = (self.workers() * 4) as u64;
+            total.div_ceil(target_jobs).min(SWEEP_BATCH as u64).max(1)
+        } else {
+            SWEEP_BATCH as u64
+        };
         let lo = kind.build(wl, level).operand_range().0;
         let mask = (1u64 << wl) - 1;
-        let mut replies = Vec::with_capacity(chunks as usize);
-        for c in 0..chunks {
-            let mut x = Vec::with_capacity(SWEEP_BATCH);
-            let mut y = Vec::with_capacity(SWEEP_BATCH);
-            let base = c * SWEEP_BATCH as u64;
-            for k in 0..SWEEP_BATCH as u64 {
-                let g = base + k;
+        let mut replies = Vec::with_capacity(total.div_ceil(chunk) as usize);
+        let mut base = 0u64;
+        while base < total {
+            let end = (base + chunk).min(total);
+            let n = (end - base) as usize;
+            let mut x = Vec::with_capacity(n);
+            let mut y = Vec::with_capacity(n);
+            for g in base..end {
                 x.push((lo + (g >> wl) as i64) as i32);
                 y.push((lo + (g & mask) as i64) as i32);
             }
-            replies.push(self.submit_moments(MomentsRequest { kind, wl, level, x, y }));
+            replies
+                .push((n as u64, self.submit_moments(MomentsRequest { kind, wl, level, x, y })));
+            base = end;
         }
         let mut stats = ErrorStats::new();
-        for pending in replies {
+        for (n, pending) in replies {
             let m = pending.wait()?;
-            stats.n += SWEEP_BATCH as u64;
+            stats.n += n;
             stats.sum += m.sum as i128;
             stats.sum_sq += m.sum_sq as u128; // exact: err² sums are < 2^53 per chunk
             stats.nonzero += m.nonzero as u64;
@@ -298,10 +400,12 @@ impl DspServer {
     }
 
     /// SNR between two real signals via blocked backend accumulation.
+    /// Every block is submitted before the first reply is collected, so
+    /// a pool drains them concurrently; collection stays in submission
+    /// order, keeping the `f64` sums deterministic at any worker count.
     pub fn snr_db(&self, reference: &[f64], signal: &[f64]) -> Result<f64> {
         let n = reference.len().min(signal.len());
-        let mut pr = 0.0f64;
-        let mut pe = 0.0f64;
+        let mut replies = Vec::with_capacity(n.div_ceil(FIR_BLOCK));
         let mut idx = 0;
         while idx < n {
             let len = FIR_BLOCK.min(n - idx);
@@ -309,10 +413,15 @@ impl DspServer {
             let mut sblk = signal[idx..idx + len].to_vec();
             rblk.resize(FIR_BLOCK, 0.0);
             sblk.resize(FIR_BLOCK, 0.0);
-            let acc = self.submit_snr(SnrRequest { reference: rblk, signal: sblk }).wait()?;
+            replies.push(self.submit_snr(SnrRequest { reference: rblk, signal: sblk }));
+            idx += len;
+        }
+        let mut pr = 0.0f64;
+        let mut pe = 0.0f64;
+        for pending in replies {
+            let acc = pending.wait()?;
             pr += acc.ref_power;
             pe += acc.err_power;
-            idx += len;
         }
         Ok(crate::util::stats::db(pr / pe.max(1e-300)))
     }
@@ -326,53 +435,74 @@ impl DspServer {
 
 impl Drop for DspServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(j) = self.join.take() {
+        // One shutdown marker per worker; outstanding jobs drain first
+        // (FIFO), and each worker consumes exactly one marker.
+        for _ in 0..self.join.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for j in self.join.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-fn executor_loop(backend: Box<dyn Backend>, rx: Receiver<Job>, metrics: Arc<Metrics>) {
-    while let Ok(job) = rx.recv() {
-        let t0 = Instant::now();
-        match job {
-            Job::Shutdown => break,
-            Job::Multiply(req, reply) => {
-                let n = req.x.len() as u64;
-                let res = backend.multiply(&req).map_err(anyhow::Error::from);
-                metrics.executions.fetch_add(1, Ordering::Relaxed);
-                metrics.record_job(t0.elapsed(), n);
-                let _ = reply.send(res);
-            }
-            Job::Moments(req, reply) => {
-                let n = req.x.len() as u64;
-                let res = backend.moments(&req).map_err(anyhow::Error::from);
-                metrics.executions.fetch_add(1, Ordering::Relaxed);
-                metrics.record_job(t0.elapsed(), n);
-                let _ = reply.send(res);
-            }
-            Job::Fir(req, reply) => {
-                let n = req.x.len() as u64;
-                let res = backend.fir(&req).map_err(anyhow::Error::from);
-                metrics.executions.fetch_add(1, Ordering::Relaxed);
-                metrics.record_job(t0.elapsed(), n);
-                let _ = reply.send(res);
-            }
-            Job::Snr(req, reply) => {
-                let n = req.reference.len() as u64;
-                let res = backend.snr(&req).map_err(anyhow::Error::from);
-                metrics.executions.fetch_add(1, Ordering::Relaxed);
-                metrics.record_job(t0.elapsed(), n);
-                let _ = reply.send(res);
-            }
-            Job::Power(req, reply) => {
-                let n = req.nvec;
-                let res = backend.power(&req).map_err(anyhow::Error::from);
-                metrics.executions.fetch_add(1, Ordering::Relaxed);
-                metrics.record_job(t0.elapsed(), n);
-                let _ = reply.send(res);
-            }
+/// One worker's drain loop over the shared queue. The mutex only guards
+/// the *dequeue* — a worker blocked in `recv` releases it as soon as a
+/// job arrives, so siblings keep draining while it executes.
+fn executor_loop(backend: Box<dyn Backend>, rx: &Mutex<Receiver<Job>>, metrics: &Metrics) {
+    loop {
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            // A sibling panicked while holding the dequeue lock; treat
+            // the pool as shutting down.
+            Err(_) => return,
+        };
+        let Ok(job) = job else { return };
+        if matches!(job, Job::Shutdown) {
+            return;
+        }
+        serve_job(backend.as_ref(), job, metrics);
+    }
+}
+
+fn serve_job(backend: &dyn Backend, job: Job, metrics: &Metrics) {
+    let t0 = Instant::now();
+    match job {
+        Job::Shutdown => {}
+        Job::Multiply(req, reply) => {
+            let n = req.x.len() as u64;
+            let res = backend.multiply(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
+        }
+        Job::Moments(req, reply) => {
+            let n = req.x.len() as u64;
+            let res = backend.moments(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
+        }
+        Job::Fir(req, reply) => {
+            let n = req.x.len() as u64;
+            let res = backend.fir(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
+        }
+        Job::Snr(req, reply) => {
+            let n = req.reference.len() as u64;
+            let res = backend.snr(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
+        }
+        Job::Power(req, reply) => {
+            let n = req.nvec;
+            let res = backend.power(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
         }
     }
 }

@@ -1,9 +1,17 @@
 //! Sharded exhaustive / randomized error sweeps.
+//!
+//! `WL ≤ 8` models that report a study descriptor execute on the
+//! memoized compiled kernels of [`crate::arith::table`]: the exhaustive
+//! paths regenerate their statistics from one flat LUT scan (the whole
+//! operand square is at most 64 Ki entries), and the randomized sweep
+//! replaces each digit-level recoding with an indexed load. All
+//! accumulators are exact integers, so every path produces bit-identical
+//! statistics to the digit-level engine it replaces.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::arith::Multiplier;
+use crate::arith::{table, Multiplier};
 use crate::util::stats::{ErrorStats, Histogram};
 use crate::util::Pcg64;
 
@@ -14,13 +22,19 @@ use super::SweepResult;
 pub struct SweepConfig {
     /// Worker threads (0 = available parallelism).
     pub threads: usize,
-    /// Chunk of x-values handed to a worker at a time.
+    /// Chunk of x-values handed to a worker at a time (0 = auto-size
+    /// from the operand span and worker count).
     pub chunk: u64,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
-        SweepConfig { threads: 0, chunk: 64 }
+        // Auto chunking. The old fixed chunk of 64 x-values was tuned
+        // for digit-level workers; now that WL <= 8 sweeps run on flat
+        // LUT scans and the threaded path only serves the big spans,
+        // sizing the chunk from the span keeps the shared-counter
+        // traffic negligible while still load-balancing the tail.
+        SweepConfig { threads: 0, chunk: 0 }
     }
 }
 
@@ -32,16 +46,36 @@ impl SweepConfig {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         }
     }
+
+    /// The x-chunk workers grab at a time: explicit when set, otherwise
+    /// ~8 grabs per worker bounded to `[16, 4096]` rows.
+    fn resolved_chunk(&self, span: u64, threads: usize) -> u64 {
+        if self.chunk > 0 {
+            self.chunk
+        } else {
+            span.div_ceil(threads as u64 * 8).clamp(16, 4096)
+        }
+    }
 }
 
 /// Exhaustively apply all `2^(2·WL)` input pairs and accumulate the
-/// paper's error statistics. Deterministic; sharded over x-values.
+/// paper's error statistics. Deterministic; LUT fast path for `WL ≤ 8`
+/// study models, sharded over x-values otherwise.
 pub fn exhaustive_stats<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> SweepResult {
     let (lo, hi) = mult.operand_range();
     let span = (hi - lo + 1) as u64;
+    // Compiled-kernel fast path: one single-thread flat scan beats any
+    // thread fan-out at these sizes (<= 64 Ki entries).
+    if let Some(t) = table::table_for(mult) {
+        let mut stats = ErrorStats::new();
+        for (x, y, p) in t.entries() {
+            stats.push(p - x * y);
+        }
+        return SweepResult { name: mult.name(), wl: mult.wl(), pairs: span * span, stats };
+    }
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = cfg.resolved_threads();
-    let chunk = cfg.chunk.max(1);
+    let chunk = cfg.resolved_chunk(span, nthreads);
 
     let stats = std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -97,9 +131,17 @@ pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
 ) -> Histogram {
     let (lo, hi) = mult.operand_range();
     let span = (hi - lo + 1) as u64;
+    // Same compiled-kernel fast path as `exhaustive_stats`.
+    if let Some(t) = table::table_for(mult) {
+        let mut h = Histogram::new(bins, scale);
+        for (x, y, p) in t.entries() {
+            h.push(p - x * y);
+        }
+        return h;
+    }
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = cfg.resolved_threads();
-    let chunk = cfg.chunk.max(1);
+    let chunk = cfg.resolved_chunk(span, nthreads);
 
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -153,6 +195,9 @@ pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> Swee
         })
         .collect();
     let (lo, hi) = mult.operand_range();
+    // Compiled kernel when available (identical products by
+    // construction, so the drawn streams and statistics are unchanged).
+    let lut = table::table_for(mult);
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = std::thread::available_parallelism()
         .map(|t| t.get())
@@ -164,6 +209,7 @@ pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> Swee
         for _ in 0..nthreads {
             let next = Arc::clone(&next);
             let quotas = &quotas;
+            let lut = &lut;
             handles.push(scope.spawn(move || {
                 let mut local = ErrorStats::new();
                 loop {
@@ -176,7 +222,11 @@ pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> Swee
                     for _ in 0..*quota {
                         let x = rng.range_i64(lo, hi);
                         let y = rng.range_i64(lo, hi);
-                        local.push(mult.multiply(x, y) - x * y);
+                        let p = match lut {
+                            Some(t) => t.lookup(x, y),
+                            None => mult.multiply(x, y),
+                        };
+                        local.push(p - x * y);
                     }
                 }
                 local
@@ -209,7 +259,9 @@ mod tests {
 
     #[test]
     fn sharding_is_deterministic() {
-        let m = BrokenBooth::new(8, 5, BbmType::Type0);
+        // `DigitLevel` hides the descriptor so this exercises the
+        // threaded digit-level engine (the LUT path has no sharding).
+        let m = DigitLevel(BrokenBooth::new(8, 5, BbmType::Type0));
         let a = exhaustive_stats(&m, SweepConfig { threads: 1, chunk: 7 });
         let b = exhaustive_stats(&m, SweepConfig { threads: 4, chunk: 3 });
         assert_eq!(a.stats.sum, b.stats.sum);
@@ -241,6 +293,30 @@ mod tests {
         assert_eq!(h.n, 65536);
         let pct: f64 = h.percentages().iter().sum();
         assert!((pct - 100.0).abs() < 1e-9);
+    }
+
+    use crate::testkit::DigitLevel;
+
+    #[test]
+    fn lut_path_bit_identical_to_digit_path_wl8() {
+        let m = BrokenBooth::new(8, 5, BbmType::Type1);
+        let fast = exhaustive_stats(&m, SweepConfig::default());
+        let slow = exhaustive_stats(&DigitLevel(m), SweepConfig::default());
+        assert_eq!(fast.stats.n, slow.stats.n);
+        assert_eq!(fast.stats.sum, slow.stats.sum);
+        assert_eq!(fast.stats.sum_sq, slow.stats.sum_sq);
+        assert_eq!(fast.stats.nonzero, slow.stats.nonzero);
+        assert_eq!(fast.stats.min, slow.stats.min);
+        assert_eq!(fast.stats.max, slow.stats.max);
+        let hf = exhaustive_histogram(&m, 25, (1u64 << 15) as f64, SweepConfig::default());
+        let hs =
+            exhaustive_histogram(&DigitLevel(m), 25, (1u64 << 15) as f64, SweepConfig::default());
+        assert_eq!(hf.bins, hs.bins);
+        let rf = random_stats(&m, 5_000, 9);
+        let rs = random_stats(&DigitLevel(m), 5_000, 9);
+        assert_eq!(rf.stats.sum, rs.stats.sum);
+        assert_eq!(rf.stats.sum_sq, rs.stats.sum_sq);
+        assert_eq!(rf.stats.min, rs.stats.min);
     }
 
     #[test]

@@ -28,15 +28,21 @@
 //! stay in the netlist so the sizing loop re-runs STA on the same
 //! schedule without re-walking the graph.
 //!
-//! [`sim::Simulator`] evaluates that program on `u64` **lane words** —
-//! 64 independent stimulus vectors per pass, one per bit, with toggle
-//! counting via `count_ones(new ^ old)`. The paper's 5×10⁵-vector
-//! activity run therefore takes ~7.8k passes instead of 5×10⁵ scalar
-//! evaluations (see `benches/bench_gate.rs` for the measured speedup
-//! against the scalar oracle). The scalar interpreter
-//! ([`sim::ScalarSim`], [`eval_once`]) walks the raw netlist one
-//! boolean per net and is the correctness oracle the lanes are proven
-//! bit-identical against (`tests/sim_equivalence.rs`).
+//! [`sim::Simulator`] evaluates that program on **blocks** of `u64`
+//! lane words — `B × 64` independent stimulus vectors per pass (256 at
+//! the default [`LANE_BLOCK`]), with toggle counting via
+//! `count_ones(new ^ old)` and the per-op lane loop monomorphized per
+//! block width. [`run_random_sharded`] additionally fans a fixed grid
+//! of [`SIM_SHARDS`] stream shards across worker threads — activity is
+//! bit-identical at any worker count, which is what the served Power
+//! workload runs on. The paper's 5×10⁵-vector activity run therefore
+//! takes ~2k blocked passes split over the pool instead of 5×10⁵
+//! scalar evaluations (see `benches/bench_gate.rs` for the measured
+//! speedups against the scalar oracle and the single-thread 64-lane
+//! engine). The scalar interpreter ([`sim::ScalarSim`], [`eval_once`])
+//! walks the raw netlist one boolean per net and is the correctness
+//! oracle the lanes are proven bit-identical against
+//! (`tests/sim_equivalence.rs`).
 
 pub mod builders;
 pub mod cell;
@@ -52,8 +58,8 @@ pub use ir::Levelized;
 pub use netlist::{Cell, NetId, Netlist};
 pub use power::{average_power, pdp_pj, PowerReport};
 pub use sim::{
-    eval_once, run_random, run_random_levelized, run_random_scalar, run_stream, Activity,
-    ScalarSim, Simulator,
+    eval_once, run_random, run_random_levelized, run_random_scalar, run_random_sharded,
+    run_stream, sharded_vectors, Activity, ScalarSim, Simulator, LANE_BLOCK, SIM_SHARDS,
 };
 pub use size::{find_tmin, meet_constraint, recover_power, synthesize, SynthResult};
 pub use timing::{analyze, analyze_levelized, critical_path, Timing};
@@ -91,10 +97,13 @@ impl Characterization {
 
 /// Synthesize `nl` at `constraint_ps`, measure activity with `nvec`
 /// random vectors, and report area/delay/power — one full design point.
+/// Runs on the same lane-blocked sharded engine as the served Power
+/// workload, so in-process drivers (Fig. 3, Tables II/III) and the
+/// coordinator path report identical numbers for the same design point.
 pub fn characterize(nl: &mut Netlist, constraint_ps: f64, nvec: u64, seed: u64) -> Characterization {
     let synth = synthesize(nl, constraint_ps);
     let lv = Levelized::compile(nl);
-    let act = run_random_levelized(&lv, nvec, seed);
+    let act = run_random_sharded(&lv, nvec, seed, 0);
     let power = average_power(nl, &act, constraint_ps);
     Characterization {
         name: nl.name.clone(),

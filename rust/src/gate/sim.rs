@@ -1,16 +1,29 @@
-//! Gate-level simulation: a 64-lane bitsliced engine over the
+//! Gate-level simulation: a lane-blocked bitsliced engine over the
 //! levelized IR, plus the scalar reference interpreter it is checked
 //! against — the stand-in for the paper's post-synthesis VCD
 //! extraction.
 //!
 //! The bitsliced [`Simulator`] evaluates a compiled
-//! [`Levelized`] program on `u64` lane words — 64 independent stimulus
-//! vectors per pass, one per bit — exactly like a 64-seat Monte-Carlo
-//! of the paper's `5 × 10^5`-random-vector power run. Toggle counts
-//! accumulate `count_ones(new ^ old)` per net per step, which is the
-//! zero-delay switching activity `α` the power model consumes (glitch
-//! activity is not modeled; it affects the accurate and approximate
-//! designs alike, preserving the paper's relative claims).
+//! [`Levelized`] program on **blocks** of `u64` lane words — `B × 64`
+//! independent stimulus vectors per pass (256 lanes at the default
+//! [`LANE_BLOCK`] `B = 4`), with the per-op inner loop monomorphized
+//! and unrolled per block size. Each pass is exactly like a
+//! `B × 64`-seat Monte-Carlo of the paper's `5 × 10^5`-random-vector
+//! power run. Toggle counts accumulate `count_ones(new ^ old)` per net
+//! per step, which is the zero-delay switching activity `α` the power
+//! model consumes (glitch activity is not modeled; it affects the
+//! accurate and approximate designs alike, preserving the paper's
+//! relative claims).
+//!
+//! [`run_random`] keeps the classic single-thread 64-lane contract;
+//! [`run_random_sharded`] splits the vector budget over a **fixed**
+//! grid of [`SIM_SHARDS`] independent stream shards (each with its own
+//! [`Pcg64::split`] streams), packs [`LANE_BLOCK`] shards per blocked
+//! simulator pass, and fans the shard jobs across worker threads.
+//! Because the shard grid never depends on the thread count and toggle
+//! merging is a commutative integer sum, the activity is bit-identical
+//! at any worker count — the property the served Power workload's
+//! determinism rests on.
 //!
 //! The scalar [`ScalarSim`] walks the raw [`Netlist`] one boolean per
 //! net and is the **correctness oracle**: `tests/sim_equivalence.rs`
@@ -24,11 +37,22 @@
 //! read-all-D / write-all-Q), i.e. one step = one clock cycle.
 
 use std::borrow::Cow;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::cell::CellKind;
-use super::ir::Levelized;
+use super::ir::{Levelized, Op};
 use super::netlist::Netlist;
 use crate::util::Pcg64;
+
+/// `u64` lane words evaluated together per net in the blocked engine
+/// (256 stimulus lanes per pass).
+pub const LANE_BLOCK: usize = 4;
+
+/// Fixed shard count of [`run_random_sharded`]. Like the error sweeps'
+/// `RANDOM_SHARDS`, it is *not* tied to the machine's thread count, so
+/// the drawn stimulus — and therefore every toggle count — is identical
+/// on any host at any worker count.
+pub const SIM_SHARDS: usize = 16;
 
 /// Switching-activity record from a simulation run.
 #[derive(Clone, Debug)]
@@ -37,7 +61,9 @@ pub struct Activity {
     pub toggles: Vec<u64>,
     /// Number of time steps executed.
     pub steps: u64,
-    /// Stimulus lanes per step (64 bitsliced, 1 scalar).
+    /// Stimulus lanes per step: 1 scalar, `64 × blocks` bitsliced
+    /// (64 classic, 256 at [`LANE_BLOCK`]), `64 × SIM_SHARDS` for a
+    /// sharded run.
     pub lanes: u32,
     /// Applied vector count (`steps × lanes`).
     pub vectors: u64,
@@ -80,14 +106,19 @@ fn eval_op(kind: CellKind, a: u64, b: u64, c: u64) -> u64 {
     }
 }
 
-/// 64-lane bitsliced simulator over a compiled [`Levelized`] program.
+/// Lane-blocked bitsliced simulator over a compiled [`Levelized`]
+/// program: every net carries `blocks` consecutive `u64` lane words
+/// (`blocks × 64` stimulus lanes per pass).
 ///
-/// Construct with [`Simulator::new`] (compiles the netlist on the fly)
-/// or [`Simulator::over`] to share one compiled program across many
-/// runs — the engine the backend Power workload uses.
+/// Construct with [`Simulator::new`] / [`Simulator::over`] for the
+/// classic 64-lane engine (one word per net), or
+/// [`Simulator::new_block`] / [`Simulator::over_block`] for a wider
+/// block — [`LANE_BLOCK`] is the tuned width the sharded runner uses.
 pub struct Simulator<'a> {
     prog: Cow<'a, Levelized>,
-    /// Current value word per net.
+    blocks: usize,
+    /// Current value words, net-major: net `n`'s block occupies
+    /// `words[n*blocks .. (n+1)*blocks]`.
     pub words: Vec<u64>,
     prev: Vec<u64>,
     /// Scratch for the two-phase DFF latch.
@@ -98,26 +129,41 @@ pub struct Simulator<'a> {
 }
 
 impl Simulator<'static> {
-    /// New simulator with all nets at 0, compiling `nl` privately.
+    /// New 64-lane simulator with all nets at 0, compiling `nl`
+    /// privately.
     pub fn new(nl: &Netlist) -> Simulator<'static> {
-        Simulator::from_prog(Cow::Owned(Levelized::compile(nl)))
+        Simulator::from_prog(Cow::Owned(Levelized::compile(nl)), 1)
+    }
+
+    /// New `blocks`-wide simulator, compiling `nl` privately.
+    pub fn new_block(nl: &Netlist, blocks: usize) -> Simulator<'static> {
+        Simulator::from_prog(Cow::Owned(Levelized::compile(nl)), blocks)
     }
 }
 
 impl<'a> Simulator<'a> {
-    /// New simulator over a shared compiled program.
+    /// New 64-lane simulator over a shared compiled program.
     pub fn over(prog: &'a Levelized) -> Simulator<'a> {
-        Simulator::from_prog(Cow::Borrowed(prog))
+        Simulator::from_prog(Cow::Borrowed(prog), 1)
     }
 
-    fn from_prog(prog: Cow<'a, Levelized>) -> Simulator<'a> {
+    /// New `blocks`-wide simulator over a shared compiled program —
+    /// the engine [`run_random_sharded`] packs [`LANE_BLOCK`] stream
+    /// shards into.
+    pub fn over_block(prog: &'a Levelized, blocks: usize) -> Simulator<'a> {
+        Simulator::from_prog(Cow::Borrowed(prog), blocks)
+    }
+
+    fn from_prog(prog: Cow<'a, Levelized>, blocks: usize) -> Simulator<'a> {
+        assert!(blocks >= 1, "need at least one lane word per net");
         let n = prog.num_nets as usize;
         let ndff = prog.dffs.len();
         Simulator {
             prog,
-            words: vec![0; n],
-            prev: vec![0; n],
-            dff_next: vec![0; ndff],
+            blocks,
+            words: vec![0; n * blocks],
+            prev: vec![0; n * blocks],
+            dff_next: vec![0; ndff * blocks],
             toggles: vec![0; n],
             steps: 0,
             first: true,
@@ -129,26 +175,49 @@ impl<'a> Simulator<'a> {
         &self.prog
     }
 
-    /// Apply one step: set primary-input words, propagate in level
-    /// order, accumulate toggles, latch DFFs.
+    /// `u64` lane words per net.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Apply one 64-lane step (the `blocks = 1` engine; see
+    /// [`Simulator::step_block`] for the general form).
     pub fn step(&mut self, input_words: &[u64]) {
+        assert_eq!(self.blocks, 1, "step() is the blocks = 1 interface");
+        self.step_block(input_words);
+    }
+
+    /// Apply one blocked step: set primary-input blocks (input-major,
+    /// `blocks` words per input), propagate every level pass over all
+    /// `blocks × 64` lanes with an unrolled op loop, accumulate
+    /// toggles, latch DFFs.
+    pub fn step_block(&mut self, input_words: &[u64]) {
         let prog: &Levelized = &self.prog;
-        assert_eq!(input_words.len(), prog.inputs.len(), "input arity");
+        let b = self.blocks;
+        assert_eq!(input_words.len(), prog.inputs.len() * b, "input arity");
         let w = &mut self.words;
-        for (&net, &word) in prog.inputs.iter().zip(input_words) {
-            w[net as usize] = word;
+        for (i, &net) in prog.inputs.iter().enumerate() {
+            let base = net as usize * b;
+            w[base..base + b].copy_from_slice(&input_words[i * b..(i + 1) * b]);
         }
         // Level-ordered propagation (DFF outputs already carry the
-        // current state values).
-        for op in &prog.ops {
-            w[op.out as usize] =
-                eval_op(op.kind, w[op.a as usize], w[op.b as usize], w[op.c as usize]);
+        // current state values), monomorphized so the per-op block loop
+        // unrolls at the common widths.
+        match b {
+            1 => propagate::<1>(&prog.ops, w),
+            2 => propagate::<2>(&prog.ops, w),
+            4 => propagate::<4>(&prog.ops, w),
+            8 => propagate::<8>(&prog.ops, w),
+            _ => propagate_dyn(&prog.ops, w, b),
         }
         // Toggle accounting (skip the priming step: the all-zero
         // initial state is not a real applied vector).
         if !self.first {
-            for (t, (&cur, &old)) in self.toggles.iter_mut().zip(w.iter().zip(&self.prev)) {
-                *t += (cur ^ old).count_ones() as u64;
+            for (net, t) in self.toggles.iter_mut().enumerate() {
+                let base = net * b;
+                for j in 0..b {
+                    *t += (w[base + j] ^ self.prev[base + j]).count_ones() as u64;
+                }
             }
             self.steps += 1;
         }
@@ -157,25 +226,65 @@ impl<'a> Simulator<'a> {
         // Two-phase DFF latch (read all D pins, then write all Q pins)
         // so flop chains shift one stage per cycle.
         for (k, &(d, _q, _)) in prog.dffs.iter().enumerate() {
-            self.dff_next[k] = w[d as usize];
+            let src = d as usize * b;
+            self.dff_next[k * b..(k + 1) * b].copy_from_slice(&w[src..src + b]);
         }
         for (k, &(_d, q, _)) in prog.dffs.iter().enumerate() {
-            w[q as usize] = self.dff_next[k];
+            let dst = q as usize * b;
+            w[dst..dst + b].copy_from_slice(&self.dff_next[k * b..(k + 1) * b]);
         }
     }
 
-    /// Current output-port words.
+    /// Current output-port words (one word per output at `blocks = 1`,
+    /// `blocks` consecutive words per output otherwise).
     pub fn output_words(&self) -> Vec<u64> {
-        self.prog.outputs.iter().map(|&n| self.prev[n as usize]).collect()
+        let b = self.blocks;
+        let mut out = Vec::with_capacity(self.prog.outputs.len() * b);
+        for &n in &self.prog.outputs {
+            out.extend_from_slice(&self.prev[n as usize * b..n as usize * b + b]);
+        }
+        out
     }
 
     /// Finish and return the activity record.
     pub fn finish(self) -> Activity {
+        let lanes = (64 * self.blocks) as u32;
         Activity {
             toggles: self.toggles,
             steps: self.steps,
-            lanes: 64,
-            vectors: self.steps * 64,
+            lanes,
+            vectors: self.steps * lanes as u64,
+        }
+    }
+}
+
+/// The blocked wavefront kernel, monomorphized per block width so the
+/// inner lane loop fully unrolls.
+fn propagate<const B: usize>(ops: &[Op], w: &mut [u64]) {
+    for op in ops {
+        let (a, b, c, o) = (
+            op.a as usize * B,
+            op.b as usize * B,
+            op.c as usize * B,
+            op.out as usize * B,
+        );
+        for j in 0..B {
+            w[o + j] = eval_op(op.kind, w[a + j], w[b + j], w[c + j]);
+        }
+    }
+}
+
+/// Fallback kernel for uncommon block widths.
+fn propagate_dyn(ops: &[Op], w: &mut [u64], blocks: usize) {
+    for op in ops {
+        let (a, b, c, o) = (
+            op.a as usize * blocks,
+            op.b as usize * blocks,
+            op.c as usize * blocks,
+            op.out as usize * blocks,
+        );
+        for j in 0..blocks {
+            w[o + j] = eval_op(op.kind, w[a + j], w[b + j], w[c + j]);
         }
     }
 }
@@ -312,14 +421,6 @@ fn random_steps(nvec: u64) -> u64 {
     nvec.div_ceil(64).max(2)
 }
 
-/// Vectors actually applied by a `run_random`-style run after rounding
-/// `nvec` up to the 64-lane step granularity (with the two-step
-/// minimum). Exposed so report producers (e.g. the mock backend) share
-/// the engine's rounding rule instead of re-implementing it.
-pub fn rounded_vectors(nvec: u64) -> u64 {
-    random_steps(nvec) * 64
-}
-
 /// Drive the design with `nvec` uniform random vectors (rounded up to a
 /// multiple of 64 lanes) on the bitsliced engine and return the
 /// measured switching activity — the paper's power-characterization
@@ -329,8 +430,7 @@ pub fn run_random(nl: &Netlist, nvec: u64, seed: u64) -> Activity {
     run_random_levelized(&Levelized::compile(nl), nvec, seed)
 }
 
-/// [`run_random`] over a pre-compiled program (the backend Power
-/// workload's engine).
+/// [`run_random`] over a pre-compiled program.
 pub fn run_random_levelized(prog: &Levelized, nvec: u64, seed: u64) -> Activity {
     let mut streams = input_streams(seed, prog.inputs.len());
     let mut sim = Simulator::over(prog);
@@ -380,6 +480,129 @@ pub fn run_random_scalar(nl: &Netlist, nvec: u64, seed: u64) -> Activity {
         }
     }
     Activity { toggles, steps: steps_done, lanes: 64, vectors: steps_done * 64 }
+}
+
+fn sharded_steps(nvec: u64) -> u64 {
+    nvec.div_ceil((64 * SIM_SHARDS) as u64).max(1)
+}
+
+/// Vectors actually applied by a [`run_random_sharded`] run after
+/// rounding `nvec` up to the shard grid (`SIM_SHARDS × 64` lanes per
+/// step). Exposed so report producers (e.g. the mock backend) share
+/// the engine's rounding rule instead of re-implementing it.
+pub fn sharded_vectors(nvec: u64) -> u64 {
+    sharded_steps(nvec) * (64 * SIM_SHARDS) as u64
+}
+
+/// The sharded multi-thread twin of [`run_random`] — the served Power
+/// workload's engine.
+///
+/// The vector budget splits over [`SIM_SHARDS`] fixed shards. Each
+/// shard gets its own decorrelated per-input [`Pcg64::split`] streams
+/// (root → shard root → input streams, all derived up front in fixed
+/// order). Shards then pack into blocked [`Simulator`] jobs — up to
+/// [`LANE_BLOCK`] shards per job, fewer when more worker threads are
+/// available than jobs, so an 8- or 16-core host fans out over 8 or 16
+/// jobs instead of capping at `SIM_SHARDS / LANE_BLOCK`. Jobs are
+/// drained by `workers` threads (0 = available parallelism) off an
+/// atomic counter.
+///
+/// Because the per-shard streams are fixed **before** grouping, lanes
+/// evaluate independently, and toggle vectors merge by commutative
+/// integer summation, the activity is **bit-identical at any worker
+/// count and any block grouping** — deterministic in `seed` alone
+/// (`sharded_run_bit_identical_at_any_worker_count` pins this).
+///
+/// The stimulus differs from [`run_random`]'s (independent shard
+/// streams rather than one 64-lane stream), so absolute toggle counts
+/// are a different — equally valid — random sample of the same design.
+pub fn run_random_sharded(prog: &Levelized, nvec: u64, seed: u64, workers: usize) -> Activity {
+    let nin = prog.inputs.len();
+    let steps = sharded_steps(nvec);
+    // Derive every shard's input streams up front, in fixed order.
+    let mut root = Pcg64::seeded(seed);
+    let shard_streams: Vec<Vec<Pcg64>> = (0..SIM_SHARDS)
+        .map(|_| {
+            let mut shard_root = root.split();
+            (0..nin).map(|_| shard_root.split()).collect()
+        })
+        .collect();
+    let nworkers = if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+    // Shards per job: the widest power-of-two block <= LANE_BLOCK that
+    // still yields at least one job per worker (block ∈ {4, 2, 1}, all
+    // dividing SIM_SHARDS). Grouping does not affect results.
+    let block = if nworkers <= SIM_SHARDS / LANE_BLOCK {
+        LANE_BLOCK
+    } else if nworkers <= SIM_SHARDS / 2 {
+        2
+    } else {
+        1
+    };
+    let njobs = SIM_SHARDS / block;
+    // Pack `block` shards per job, input-major (input i's block at
+    // words [i*block .. (i+1)*block], block lane j = shard j's stream).
+    let job_streams: Vec<Vec<Pcg64>> = (0..njobs)
+        .map(|j| {
+            let mut streams = Vec::with_capacity(nin * block);
+            for i in 0..nin {
+                for b in 0..block {
+                    streams.push(shard_streams[j * block + b][i].clone());
+                }
+            }
+            streams
+        })
+        .collect();
+    let nworkers = nworkers.min(njobs);
+    let next = AtomicUsize::new(0);
+    let (toggles, steps_done) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..nworkers {
+            let next = &next;
+            let job_streams = &job_streams;
+            handles.push(scope.spawn(move || {
+                let mut local = vec![0u64; prog.num_nets as usize];
+                let mut words = vec![0u64; nin * block];
+                loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= job_streams.len() {
+                        break;
+                    }
+                    let mut streams = job_streams[j].clone();
+                    let mut sim = Simulator::over_block(prog, block);
+                    // One extra priming step, as in `run_random`.
+                    for _ in 0..=steps {
+                        for (w, s) in words.iter_mut().zip(streams.iter_mut()) {
+                            *w = s.next_u64();
+                        }
+                        sim.step_block(&words);
+                    }
+                    let act = sim.finish();
+                    for (t, &s) in local.iter_mut().zip(&act.toggles) {
+                        *t += s;
+                    }
+                }
+                local
+            }));
+        }
+        let mut total = vec![0u64; prog.num_nets as usize];
+        for h in handles {
+            let local = h.join().expect("sharded sim worker panicked");
+            for (t, &s) in total.iter_mut().zip(&local) {
+                *t += s;
+            }
+        }
+        (total, steps)
+    });
+    Activity {
+        toggles,
+        steps: steps_done,
+        lanes: (64 * SIM_SHARDS) as u32,
+        vectors: steps_done * (64 * SIM_SHARDS) as u64,
+    }
 }
 
 /// Drive a *sequential* design with per-cycle input words supplied by a
@@ -525,5 +748,104 @@ mod tests {
         let a = run_random_levelized(&prog, 6400, 5);
         let b = run_random(&nl, 6400, 5);
         assert_eq!(a.toggles, b.toggles);
+    }
+
+    fn seq_design() -> Netlist {
+        let mut nl = Netlist::new("seq");
+        let a = nl.input();
+        let b = nl.input();
+        let x = nl.xor(a, b);
+        let q = nl.dff(x);
+        let y = nl.and(q, a);
+        nl.output(y);
+        nl
+    }
+
+    #[test]
+    fn blocked_step_equals_independent_64_lane_sims() {
+        // A B=4 blocked simulator must behave exactly like 4 separate
+        // 64-lane simulators fed the per-block word streams — values,
+        // outputs and toggle sums (combinational and sequential).
+        for nl in [xor_design(), seq_design()] {
+            let prog = Levelized::compile(&nl);
+            let nin = prog.inputs.len();
+            let mut rng = Pcg64::seeded(13);
+            let mut blocked = Simulator::over_block(&prog, 4);
+            let mut singles: Vec<Simulator> = (0..4).map(|_| Simulator::over(&prog)).collect();
+            for _ in 0..10 {
+                let words: Vec<u64> = (0..nin * 4).map(|_| rng.next_u64()).collect();
+                blocked.step_block(&words);
+                for (j, sim) in singles.iter_mut().enumerate() {
+                    let lane_words: Vec<u64> = (0..nin).map(|i| words[i * 4 + j]).collect();
+                    sim.step(&lane_words);
+                }
+                let out = blocked.output_words();
+                for (j, sim) in singles.iter().enumerate() {
+                    let single_out = sim.output_words();
+                    for (o, &w) in single_out.iter().enumerate() {
+                        assert_eq!(out[o * 4 + j], w, "{} output {o} block {j}", nl.name);
+                    }
+                }
+            }
+            let fast = blocked.finish();
+            assert_eq!(fast.lanes, 256);
+            let mut want = vec![0u64; nl.num_nets as usize];
+            let mut want_vectors = 0;
+            for sim in singles {
+                let act = sim.finish();
+                want_vectors += act.vectors;
+                for (t, &s) in want.iter_mut().zip(&act.toggles) {
+                    *t += s;
+                }
+            }
+            assert_eq!(fast.toggles, want, "{}", nl.name);
+            assert_eq!(fast.vectors, want_vectors, "{}", nl.name);
+        }
+    }
+
+    #[test]
+    fn sharded_run_bit_identical_at_any_worker_count() {
+        for nl in [xor_design(), seq_design()] {
+            let prog = Levelized::compile(&nl);
+            let one = run_random_sharded(&prog, 4000, 9, 1);
+            let four = run_random_sharded(&prog, 4000, 9, 4);
+            let all = run_random_sharded(&prog, 4000, 9, 0);
+            assert_eq!(one.toggles, four.toggles, "{}", nl.name);
+            assert_eq!(one.toggles, all.toggles, "{}", nl.name);
+            assert_eq!(one.vectors, four.vectors);
+            assert_eq!(one.vectors, sharded_vectors(4000));
+        }
+    }
+
+    #[test]
+    fn sharded_run_equals_per_shard_64_lane_reference() {
+        // Re-derive the shard streams exactly as `run_random_sharded`
+        // does and run each shard on the plain 64-lane engine: the
+        // toggle sums must match bit for bit.
+        let nl = seq_design();
+        let prog = Levelized::compile(&nl);
+        let nin = prog.inputs.len();
+        let (nvec, seed) = (3000u64, 21u64);
+        let fast = run_random_sharded(&prog, nvec, seed, 0);
+        let steps = nvec.div_ceil((64 * SIM_SHARDS) as u64).max(1);
+        let mut root = Pcg64::seeded(seed);
+        let mut want = vec![0u64; nl.num_nets as usize];
+        for _ in 0..SIM_SHARDS {
+            let mut shard_root = root.split();
+            let mut streams: Vec<Pcg64> = (0..nin).map(|_| shard_root.split()).collect();
+            let mut sim = Simulator::over(&prog);
+            let mut words = vec![0u64; nin];
+            for _ in 0..=steps {
+                for (w, s) in words.iter_mut().zip(streams.iter_mut()) {
+                    *w = s.next_u64();
+                }
+                sim.step(&words);
+            }
+            for (t, &s) in want.iter_mut().zip(&sim.finish().toggles) {
+                *t += s;
+            }
+        }
+        assert_eq!(fast.toggles, want);
+        assert_eq!(fast.vectors, steps * (64 * SIM_SHARDS) as u64);
     }
 }

@@ -14,9 +14,10 @@
 //!
 //! ## Layer map
 //!
-//! * [`arith`] — bit-accurate integer models of every multiplier (oracle
-//!   and fast path). The ground truth every other layer is checked
-//!   against.
+//! * [`arith`] — bit-accurate integer models of every multiplier (the
+//!   oracle ground truth every other layer is checked against), plus
+//!   [`arith::table`]: memoized compiled product-LUT kernels serving
+//!   every WL ≤ 8 hot path.
 //! * [`gate`] — structural netlists compiled to a levelized IR
 //!   ([`gate::ir::Levelized`]), a 64-lane bitsliced toggle simulator
 //!   with a scalar reference oracle, power/area/timing models, and
@@ -35,8 +36,10 @@
 //!   (compiled only with `--features pjrt`; the default build never
 //!   references the `xla` crate).
 //! * [`coordinator`] — streaming DSP pipeline server (bounded queue,
-//!   executor thread owning a `Box<dyn Backend>`, overlap-save block
-//!   planner, dynamic micro-batcher, backpressure, metrics).
+//!   executor *pool* whose workers each own a `Box<dyn Backend>`,
+//!   sharded sweep/SNR fan-out with bit-identical merging, overlap-save
+//!   block planner, dynamic micro-batcher, backpressure, per-worker
+//!   metrics).
 //! * [`repro`] — one driver per paper table/figure, with
 //!   `--backend native|pjrt` selection.
 //! * [`util`] — self-contained PRNG, CLI, stats and report helpers.

@@ -14,9 +14,13 @@ use crate::util::report::{sci, Series, Table};
 /// moments pipeline on the selected execution backend instead of the
 /// in-process multi-threaded sweep engine (same numbers, exercises the
 /// serving path). `--pjrt` is a back-compat alias for `--backend pjrt`.
+/// `--threads N` controls sweep parallelism: the in-process engine's
+/// worker threads, or — with `--backend native` — the size of the
+/// coordinator's executor pool (PJRT stays single-executor).
 pub fn table1(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 12u32)?;
     let vbls = args.list_or("vbls", &[3u32, 6, 9, 12])?;
+    let threads = args.get_or("threads", 0usize)?;
     let ty = match args.get_or("type", 0u32)? {
         0 => BbmType::Type0,
         _ => BbmType::Type1,
@@ -32,16 +36,22 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
         &["VBL", "Error Mean", "MSE", "Error Prob.", "Min-Error"],
     );
     let server = match backend {
+        Some(BackendKind::Native) if threads > 1 => {
+            Some(crate::coordinator::DspServer::native_pool(threads, 16)?)
+        }
         Some(kind) => Some(crate::coordinator::DspServer::start_kind(kind, 8)?),
         None => None,
     };
+    if let Some(srv) = &server {
+        println!("served by backend `{}` ({} workers)", srv.backend_name(), srv.workers());
+    }
     let kind = if ty == BbmType::Type0 { MultKind::BbmType0 } else { MultKind::BbmType1 };
     for &vbl in &vbls {
         let stats = if let Some(srv) = &server {
             srv.exhaustive_sweep(kind, wl, vbl)?
         } else {
             let m = BrokenBooth::new(wl, vbl, ty);
-            exhaustive_stats(&m, SweepConfig::default()).stats
+            exhaustive_stats(&m, SweepConfig { threads, ..SweepConfig::default() }).stats
         };
         t.row(vec![
             format!("VBL = {vbl}"),
@@ -63,13 +73,16 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
 
 /// Fig. 2: percentage distribution of the normalized error for WL = 10,
 /// VBL = 9 (error normalized to 2^19, the maximum 10×10 signed output).
+/// `--threads N` sets the sweep engine's worker-thread count.
 pub fn fig2(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 10u32)?;
     let vbl = args.get_or("vbl", 9u32)?;
     let bins = args.get_or("bins", 41usize)?;
+    let threads = args.get_or("threads", 0usize)?;
     let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
     let scale = (1u64 << (2 * wl - 1)) as f64;
-    let h = exhaustive_histogram(&m, bins, scale, SweepConfig::default());
+    let h =
+        exhaustive_histogram(&m, bins, scale, SweepConfig { threads, ..SweepConfig::default() });
     let mut s = Series::new(
         &format!("Fig. 2 — error distribution, WL={wl} VBL={vbl} (normalized to 2^{})", 2 * wl - 1),
         "norm_error",
@@ -115,6 +128,27 @@ mod tests {
                 "3,6".into(),
                 "--backend".into(),
                 "native".into(),
+            ],
+            &[],
+        )
+        .unwrap();
+        table1(&args).unwrap();
+    }
+
+    #[test]
+    fn table1_served_through_native_pool() {
+        // --threads > 1 with --backend native sizes an executor pool;
+        // the sharded sweep must reproduce the same row.
+        let args = Args::parse(
+            &[
+                "--wl".into(),
+                "8".into(),
+                "--vbls".into(),
+                "3,6".into(),
+                "--backend".into(),
+                "native".into(),
+                "--threads".into(),
+                "4".into(),
             ],
             &[],
         )

@@ -4,8 +4,8 @@
 //! (see DESIGN.md §7 for the experiment index):
 //!
 //! ```text
-//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --backend native|pjrt]
-//! bbm fig2   [--wl 10 --vbl 9 --bins 41]
+//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --backend native|pjrt --threads N]
+//! bbm fig2   [--wl 10 --vbl 9 --bins 41 --threads N]
 //! bbm fig3   [--wl 16 --vbl 15 --nvec 100000]
 //! bbm table2 / table3 [--wls 4,8,12,16 --nvec 50000]
 //! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
@@ -89,7 +89,8 @@ fn print_help() {
     println!(
         "bbm — Broken-Booth Multiplier reproduction\n\
          commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 verify all\n\
-         options: --backend native|pjrt selects the execution engine (default native)\n\
+         options: --backend native|pjrt selects the execution engine (default native);\n\
+         \x20        --threads N sets sweep parallelism on table1/fig2 (native pool size)\n\
          see DESIGN.md §7 for the experiment index and options"
     );
 }

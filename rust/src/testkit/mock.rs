@@ -166,7 +166,9 @@ impl Backend for MockBackend {
             met: true,
             area_um2: 42.0,
             cells: 7,
-            vectors: crate::gate::sim::rounded_vectors(req.nvec),
+            // Mirror the native engine's lane rounding (the sharded
+            // activity runner's grid).
+            vectors: crate::gate::sim::sharded_vectors(req.nvec),
         })
     }
 }

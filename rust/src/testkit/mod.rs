@@ -15,6 +15,32 @@ pub use mock::{Gate, MockBackend, MockState};
 use crate::arith::{MultKind, Multiplier};
 use crate::util::Pcg64;
 
+/// Delegating [`Multiplier`] wrapper that hides the study descriptor,
+/// forcing the digit-level execution path even where a compiled LUT
+/// exists (`arith::table`) — the baseline side of every LUT-vs-model
+/// equivalence test and benchmark.
+pub struct DigitLevel<M: Multiplier>(pub M);
+
+impl<M: Multiplier> Multiplier for DigitLevel<M> {
+    fn wl(&self) -> u32 {
+        self.0.wl()
+    }
+
+    fn signed(&self) -> bool {
+        self.0.signed()
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        self.0.multiply(x, y)
+    }
+
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    // `descriptor` deliberately NOT forwarded: the default `None` is
+    // the whole point of the wrapper.
+}
+
 /// Draw `n` random operand pairs for a multiplier family, respecting
 /// its operand convention (signed two's-complement vs unsigned). The
 /// single source of truth for kind-aware operand generation in the

@@ -3,8 +3,13 @@
 //! 1. The acceptance bar for any execution backend: an exhaustive WL=8
 //!    cross-check (all 2^16 operand pairs) of batched multiply *and*
 //!    moments against the scalar `arith` oracles, bit-for-bit, for
-//!    every `MultKind` family — run here against `NativeBackend`.
-//! 2. Hermetic coordinator tests on the instrumented
+//!    every `MultKind` family — run here against `NativeBackend`
+//!    (whose WL ≤ 8 requests execute on the compiled ProductTable
+//!    kernels, so this test is also the LUT acceptance bar).
+//! 2. Executor-pool conformance: a 4-worker `native_pool` must produce
+//!    bit-identical sweep/SNR/power results to a single executor, with
+//!    per-worker metrics summing into the aggregate snapshot.
+//! 3. Hermetic coordinator tests on the instrumented
 //!    `testkit::MockBackend`: bounded-queue backpressure
 //!    (`try_submit` → `QueueFull`) and `MetricsSnapshot` counters —
 //!    no artifacts, no timing races.
@@ -16,6 +21,7 @@ use bbm::backend::{Backend, MultiplyRequest, NativeBackend, PowerRequest};
 use bbm::coordinator::DspServer;
 use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels, verify_power};
 use bbm::testkit::{Gate, MockBackend, MockState};
+use bbm::util::Pcg64;
 
 #[test]
 fn native_matches_oracles_exhaustively_wl8_all_families() {
@@ -75,6 +81,66 @@ fn native_power_workload_passes_verify_and_serves_through_coordinator() {
     let again = srv.submit_power(req).wait().unwrap();
     assert_eq!(again, a, "server must survive unsupported power requests");
     srv.shutdown();
+}
+
+#[test]
+fn pool_bit_identical_to_single_worker_with_metrics_summing() {
+    let single = DspServer::native(8).unwrap();
+    let pool = DspServer::native_pool(4, 8).unwrap();
+    assert_eq!(single.workers(), 1);
+    assert_eq!(pool.workers(), 4);
+    assert_eq!(pool.backend_name(), "native");
+
+    // Sharded exhaustive sweeps: same stats bit for bit, and both equal
+    // the in-process sweep engine.
+    for (kind, level) in [(MultKind::BbmType0, 6u32), (MultKind::Bam, 9)] {
+        let a = single.exhaustive_sweep(kind, 8, level).unwrap();
+        let b = pool.exhaustive_sweep(kind, 8, level).unwrap();
+        assert_eq!(a.n, b.n, "{kind}");
+        assert_eq!(a.sum, b.sum, "{kind}");
+        assert_eq!(a.sum_sq, b.sum_sq, "{kind}");
+        assert_eq!(a.nonzero, b.nonzero, "{kind}");
+        assert_eq!(a.min_error(), b.min_error(), "{kind}");
+        let m = kind.build(8, level);
+        let oracle = bbm::error::exhaustive_stats(m.as_ref(), bbm::error::SweepConfig::default());
+        assert_eq!(b.sum, oracle.stats.sum, "{kind} vs oracle");
+        assert_eq!(b.sum_sq, oracle.stats.sum_sq, "{kind} vs oracle");
+    }
+
+    // Pipelined SNR: identical f64 bits (collection stays in submission
+    // order on both servers).
+    let mut rng = Pcg64::seeded(3);
+    let reference: Vec<f64> = (0..10_000).map(|_| rng.gaussian()).collect();
+    let signal: Vec<f64> = reference.iter().map(|v| v * 0.9).collect();
+    let da = single.snr_db(&reference, &signal).unwrap();
+    let db = pool.snr_db(&reference, &signal).unwrap();
+    assert_eq!(da.to_bits(), db.to_bits(), "snr must not depend on worker count");
+
+    // Served power characterization: deterministic across pool sizes.
+    let req = PowerRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 7,
+        constraint_ps: 0.0,
+        nvec: 64 * 16,
+        seed: 9,
+    };
+    let pa = single.submit_power(req).wait().unwrap();
+    let pb = pool.submit_power(req).wait().unwrap();
+    assert_eq!(pa, pb, "power report must not depend on worker count");
+
+    // Metrics: submit-side and per-worker hubs fold into one snapshot.
+    let m = pool.metrics();
+    assert_eq!(m.submitted, m.completed, "pool drained everything");
+    assert_eq!(m.executions, m.completed);
+    let per = pool.worker_metrics();
+    assert_eq!(per.len(), 4);
+    assert_eq!(per.iter().map(|w| w.completed).sum::<u64>(), m.completed);
+    assert_eq!(per.iter().map(|w| w.items).sum::<u64>(), m.items);
+    assert!(per.iter().all(|w| w.submitted == 0), "workers never count submissions");
+
+    pool.shutdown();
+    single.shutdown();
 }
 
 #[test]
