@@ -1,7 +1,7 @@
 # Convenience targets. Tier-1 verify is the `verify` target; everything
 # runs offline with default features (no network, no XLA).
 
-.PHONY: verify build test lint fmt clippy artifacts bench bench-json clean
+.PHONY: verify build test lint fmt clippy artifacts bench bench-json bench-trend clean
 
 verify: build test clippy
 
@@ -30,11 +30,17 @@ bench:
 	cargo bench
 
 # Smoke-mode perf trajectory: runs the headline benches in seconds and
-# writes machine-readable BENCH_5.json at the repo root (CI uploads it
+# writes machine-readable BENCH_6.json at the repo root (CI uploads it
 # as an artifact on every PR, so the benches can never rot unnoticed).
 # BENCH_FULL=1 switches to paper-scale vector counts.
 bench-json:
 	cargo bench --bench bench_json
+
+# Perf-trend gate: diff BENCH_6.json against the previous PR's artifact
+# (downloaded into baseline/ by CI) and fail on >25% ns/op regressions.
+# Skips cleanly when no baseline is present.
+bench-trend: bench-json
+	python3 tools/bench_trend.py --new BENCH_6.json --baseline-dir baseline --max-ratio 1.25
 
 clean:
 	cargo clean

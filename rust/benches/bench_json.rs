@@ -1,8 +1,10 @@
-//! Machine-readable perf trajectory: a smoke-scale run of the PR-5
-//! headline benchmarks, written as JSON to `BENCH_5.json` at the repo
-//! root (override with `BENCH_OUT=/path`). Runs in seconds so CI can
-//! execute it on every PR — set `BENCH_FULL=1` for paper-scale vector
-//! counts.
+//! Machine-readable perf trajectory: a smoke-scale run of the headline
+//! benchmarks (PR-5 kernels plus the PR-6 GEMM workload), written as
+//! JSON to `BENCH_6.json` at the repo root (override with
+//! `BENCH_OUT=/path`). Runs in seconds so CI can execute it on every
+//! PR — set `BENCH_FULL=1` for paper-scale vector counts.
+//! `tools/bench_trend.py` diffs this file against the previous PR's
+//! artifact and fails CI on large ns/op regressions.
 //!
 //! Self-contained on purpose (no `include!("harness.rs")`): it wants
 //! structured results, not console lines, and pulling the shared
@@ -11,12 +13,14 @@
 use std::time::Instant;
 
 use bbm::arith::{BbmType, BrokenBooth, MultKind};
-use bbm::backend::{MomentsRequest, SWEEP_BATCH};
+use bbm::backend::{GemmRequest, MomentsRequest, SWEEP_BATCH};
 use bbm::coordinator::DspServer;
 use bbm::error::{exhaustive_stats, SweepConfig};
 use bbm::gate::builders::build_broken_booth;
 use bbm::gate::ir::Levelized;
 use bbm::gate::{run_random, run_random_sharded};
+use bbm::nn::gemm::{gemm, gemm_digit};
+use bbm::nn::GemmDims;
 use bbm::testkit::DigitLevel;
 use bbm::util::Pcg64;
 
@@ -109,11 +113,57 @@ fn main() {
     entries.push(Entry { name: "gate_sim_64lane", secs: base, items: nvec as f64 });
     entries.push(Entry { name: "gate_sim_blocked_sharded", secs: sharded, items: nvec as f64 });
 
+    // 4. Approximate GEMM tiles (WL=8): memoized LUT kernel vs the
+    // digit-level oracle, one in-process blocked multiply each.
+    let (gm, gk, gn) = if full { (256usize, 128usize, 64usize) } else { (96, 64, 32) };
+    let dims = GemmDims { m: gm, k: gk, n: gn };
+    let mut grng = Pcg64::seeded(9);
+    let ga: Vec<i32> = (0..gm * gk).map(|_| grng.operand(8) as i32).collect();
+    let gb: Vec<i32> = (0..gk * gn).map(|_| grng.operand(8) as i32).collect();
+    let macs = (gm * gk * gn) as f64;
+    let glut = time_min(iters, || {
+        std::hint::black_box(gemm(MultKind::BbmType0, 8, 5, dims, &ga, &gb)[0]);
+    });
+    let gdigit = time_min(3, || {
+        std::hint::black_box(gemm_digit(MultKind::BbmType0, 8, 5, dims, &ga, &gb)[0]);
+    });
+    entries.push(Entry { name: "gemm_wl8_lut", secs: glut, items: macs });
+    entries.push(Entry { name: "gemm_wl8_digit", secs: gdigit, items: macs });
+
+    // 5. Served GEMM: the coordinator's row-tiled dispatch, 1 worker vs
+    // a 4-worker pool (bit-identical results, measured wall clock).
+    let greq = GemmRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 5,
+        m: gm,
+        k: gk,
+        n: gn,
+        a: ga.clone(),
+        b: gb.clone(),
+    };
+    let gemm_secs = |workers: usize| {
+        let srv = if workers > 1 {
+            DspServer::native_pool(workers, 16).unwrap()
+        } else {
+            DspServer::native(16).unwrap()
+        };
+        let dt = time_min(iters, || {
+            std::hint::black_box(srv.gemm(greq.clone()).unwrap()[0]);
+        });
+        srv.shutdown();
+        dt
+    };
+    let gemm1 = gemm_secs(1);
+    let gemm4 = gemm_secs(4);
+    entries.push(Entry { name: "gemm_served_1worker", secs: gemm1, items: macs });
+    entries.push(Entry { name: "gemm_served_4workers", secs: gemm4, items: macs });
+
     // Emit JSON (no serde offline; the shape is flat enough to format
     // by hand).
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 5,\n");
+    json.push_str("  \"pr\": 6,\n");
     json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     json.push_str("  \"benches\": [\n");
     for (i, e) in entries.iter().enumerate() {
@@ -133,14 +183,16 @@ fn main() {
     ));
     json.push_str(&format!("    \"pool4_vs_pool1_moments\": {:.3},\n", pool1 / pool4));
     json.push_str(&format!(
-        "    \"blocked_sharded_vs_64lane_sim\": {:.3}\n",
+        "    \"blocked_sharded_vs_64lane_sim\": {:.3},\n",
         base / sharded
     ));
+    json.push_str(&format!("    \"gemm_lut_vs_digit_wl8\": {:.3},\n", gdigit / glut));
+    json.push_str(&format!("    \"gemm_pool4_vs_pool1\": {:.3}\n", gemm1 / gemm4));
     json.push_str("  }\n");
     json.push_str("}\n");
 
     let path = std::env::var("BENCH_OUT")
-        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_5.json").to_string());
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json").to_string());
     std::fs::write(&path, &json).expect("write bench json");
     println!("{json}");
     println!("wrote {path}");

@@ -9,10 +9,11 @@ use bbm::repro::pdp::measure_family;
 use bbm::repro::synth::compare_at_wl;
 
 fn main() {
-    report("fig3+tableII/III point (wl16 pair @5 constraints)", 2, 10.0, || {
-        std::hint::black_box(compare_at_wl(16, 15, BbmType::Type0, 32_000, 3).points.len());
-    });
     let srv = DspServer::native(8).unwrap();
+    report("fig3+tableII/III point (wl16 pair @5 constraints)", 2, 10.0, || {
+        let cmp = compare_at_wl(&srv, 16, 15, BbmType::Type0, 32_000, 3).unwrap();
+        std::hint::black_box(cmp.points.len());
+    });
     for kind in [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni] {
         report(&format!("fig5/6 family {kind} (wl8, 5 pts, served)"), 2, 5.0, || {
             std::hint::black_box(measure_family(&srv, kind, 8, 1750.0, 16_000).unwrap().len());

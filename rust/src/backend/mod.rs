@@ -4,7 +4,7 @@
 //! The coordinator (L3) used to be hardwired to the PJRT [`crate::runtime`]
 //! through an ad-hoc job enum; this module decouples them behind the
 //! [`Backend`] trait so bit-accurate native Rust, PJRT/XLA, or a future
-//! SIMD/GPU engine can serve the same five workloads interchangeably:
+//! SIMD/GPU engine can serve the same six workloads interchangeably:
 //!
 //! | request                | response          | paper workload                    |
 //! |------------------------|-------------------|-----------------------------------|
@@ -13,6 +13,7 @@
 //! | [`MultiplyRequest`]    | [`ProductBlock`]  | batched multiply traffic          |
 //! | [`SnrRequest`]         | [`SnrAccum`]      | SNR power accumulation            |
 //! | [`PowerRequest`]       | [`PowerReport`]   | §II.C / Fig. 3–6 gate-level power |
+//! | [`GemmRequest`]        | [`GemmBlock`]     | quantized DNN inference tiles     |
 //!
 //! Implementations:
 //!
@@ -250,7 +251,46 @@ impl PowerReport {
     }
 }
 
-/// An execution engine serving the five paper workloads.
+/// Blocked approximate GEMM tile: `C[m×n] = A[m×k] · B[k×n]`, row-major,
+/// with every scalar product routed through the `kind(wl, level)`
+/// multiplier model and accumulated exactly in `i64`.
+///
+/// Unlike [`MultiplyRequest`], GEMM operands are *always* signed WL-bit
+/// two's-complement values (quantized activations/weights). Families
+/// with an unsigned operand convention (BAM/Kulkarni/ETM) multiply the
+/// magnitudes and reapply the sign:
+/// `p = sign(a)·sign(b) · kind(|a|, |b|)` — the standard sign-magnitude
+/// wrapper those array multipliers get in a signed datapath. Because
+/// accumulation is exact integer addition, results are bit-identical
+/// regardless of how the coordinator tiles rows across pool workers.
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    /// Multiplier family.
+    pub kind: MultKind,
+    /// Operand word length in bits.
+    pub wl: u32,
+    /// Breaking/precision knob (VBL, K, split — family-specific).
+    pub level: u32,
+    /// Output rows.
+    pub m: usize,
+    /// Inner (reduction) dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Left operand, row-major `m × k`.
+    pub a: Vec<i32>,
+    /// Right operand, row-major `k × n`.
+    pub b: Vec<i32>,
+}
+
+/// GEMM tile response: exact `i64` accumulators, row-major `m × n`.
+#[derive(Clone, Debug)]
+pub struct GemmBlock {
+    /// Accumulated products, one per output element.
+    pub c: Vec<i64>,
+}
+
+/// An execution engine serving the six paper workloads.
 ///
 /// Backends are *not* required to be `Send`: the coordinator constructs
 /// them inside its executor thread via a `Send` factory closure (real
@@ -274,6 +314,9 @@ pub trait Backend {
 
     /// Gate-level power characterization of one design point.
     fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport>;
+
+    /// One blocked approximate-GEMM tile.
+    fn gemm(&self, req: &GemmRequest) -> BackendResult<GemmBlock>;
 }
 
 /// Common request validation shared by backends.
@@ -388,6 +431,43 @@ pub(crate) fn validate_power(req: &PowerRequest) -> BackendResult<()> {
             "non-finite delay constraint {}",
             req.constraint_ps
         )));
+    }
+    Ok(())
+}
+
+/// GEMM request validation: dimension/operand agreement, family bounds,
+/// and the signed WL-bit operand contract (see [`GemmRequest`] — GEMM
+/// lanes are signed for every family, so this deliberately does *not*
+/// reuse [`validate_operands`]'s per-family convention).
+pub(crate) fn validate_gemm(req: &GemmRequest) -> BackendResult<()> {
+    if req.m == 0 || req.k == 0 || req.n == 0 {
+        return Err(BackendError::Shape(format!(
+            "gemm dims must be positive, got m={} k={} n={}",
+            req.m, req.k, req.n
+        )));
+    }
+    if req.a.len() != req.m * req.k || req.b.len() != req.k * req.n {
+        return Err(BackendError::Shape(format!(
+            "gemm operand lengths {} / {} disagree with dims m={} k={} n={}",
+            req.a.len(),
+            req.b.len(),
+            req.m,
+            req.k,
+            req.n
+        )));
+    }
+    if req.wl == 0 || req.wl > 16 {
+        return Err(BackendError::Shape(format!("word length {} outside 1..=16", req.wl)));
+    }
+    validate_family(req.kind, req.wl, req.level)?;
+    let (lo, hi) = (-(1i64 << (req.wl - 1)), (1i64 << (req.wl - 1)) - 1);
+    for (what, vals) in [("a", &req.a), ("b", &req.b)] {
+        if let Some(v) = vals.iter().find(|v| !(lo..=hi).contains(&(**v as i64))) {
+            return Err(BackendError::Shape(format!(
+                "gemm operand {what} entry {v} outside the {}-bit signed range [{lo}, {hi}]",
+                req.wl
+            )));
+        }
     }
     Ok(())
 }
@@ -557,6 +637,30 @@ mod tests {
         assert!(
             validate_power(&PowerRequest { constraint_ps: f64::NAN, ..good }).is_err()
         );
+    }
+
+    #[test]
+    fn gemm_validation_enforces_dims_and_signed_ranges() {
+        let good = GemmRequest {
+            kind: MultKind::Bam,
+            wl: 8,
+            level: 6,
+            m: 2,
+            k: 3,
+            n: 2,
+            a: vec![-128, 5, 127, -1, 0, 3],
+            b: vec![1, -2, 3, -4, 5, -6],
+        };
+        // Unsigned families take *signed* gemm lanes (sign-magnitude).
+        assert!(validate_gemm(&good).is_ok());
+        assert!(validate_gemm(&GemmRequest { m: 0, ..good.clone() }).is_err());
+        assert!(validate_gemm(&GemmRequest { k: 2, ..good.clone() }).is_err());
+        assert!(validate_gemm(&GemmRequest { wl: 17, ..good.clone() }).is_err());
+        assert!(validate_gemm(&GemmRequest { level: 19, ..good.clone() }).is_err());
+        let bad = GemmRequest { a: vec![-129, 5, 127, -1, 0, 3], ..good.clone() };
+        assert!(validate_gemm(&bad).is_err(), "a below the signed range");
+        let bad = GemmRequest { b: vec![1, -2, 3, -4, 5, 128], ..good };
+        assert!(validate_gemm(&bad).is_err(), "b above the signed range");
     }
 
     #[test]

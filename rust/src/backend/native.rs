@@ -19,10 +19,10 @@ use crate::arith::{product_table, Multiplier, MultKind};
 use crate::gate;
 
 use super::{
-    validate_family, validate_fir, validate_operands, validate_pair, validate_power,
-    validate_snr, Backend, BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest,
-    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
-    SnrRequest, FIR_TAPS,
+    validate_family, validate_fir, validate_gemm, validate_operands, validate_pair,
+    validate_power, validate_snr, Backend, BackendError, BackendResult, ErrorMoments, FirBlock,
+    FirRequest, GemmBlock, GemmRequest, MomentsRequest, MultiplyRequest, PowerReport,
+    PowerRequest, ProductBlock, SnrAccum, SnrRequest, FIR_TAPS,
 };
 
 /// Batched native engine over the `arith` oracles.
@@ -165,6 +165,16 @@ impl Backend for NativeBackend {
             cells: nl.cells.len() as u64,
             vectors: act.vectors,
         })
+    }
+
+    fn gemm(&self, req: &GemmRequest) -> BackendResult<GemmBlock> {
+        validate_gemm(req)?;
+        // The kernel selection (LUT at WL ≤ 8, digit model above) and
+        // the sign-magnitude wrapper for unsigned families both live in
+        // `nn::gemm`, shared with the in-process inference paths.
+        let dims = crate::nn::GemmDims { m: req.m, k: req.k, n: req.n };
+        let c = crate::nn::gemm::gemm(req.kind, req.wl, req.level, dims, &req.a, &req.b);
+        Ok(GemmBlock { c })
     }
 }
 
@@ -319,6 +329,37 @@ mod tests {
             Err(BackendError::Unsupported { .. }) => {}
             other => panic!("expected Unsupported, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn gemm_workload_matches_in_process_kernels() {
+        let b = NativeBackend::new();
+        let mut rng = Pcg64::seeded(13);
+        let (m, k, n) = (6usize, 9usize, 4usize);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.operand(8) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.operand(8) as i32).collect();
+        let dims = crate::nn::GemmDims { m, k, n };
+        for (kind, level) in [(MultKind::BbmType0, 5u32), (MultKind::Bam, 6), (MultKind::Etm, 3)]
+        {
+            let req = GemmRequest { kind, wl: 8, level, m, k, n, a: a.clone(), b: w.clone() };
+            let out = b.gemm(&req).unwrap();
+            let direct = crate::nn::gemm::gemm(kind, 8, level, dims, &a, &w);
+            let oracle = crate::nn::gemm::gemm_digit(kind, 8, level, dims, &a, &w);
+            assert_eq!(out.c, direct, "{kind} vs in-process LUT path");
+            assert_eq!(out.c, oracle, "{kind} vs digit oracle");
+        }
+        // Malformed dims come back as typed shape errors.
+        let bad = GemmRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            m: 2,
+            k: 2,
+            n: 2,
+            a: vec![1, 2, 3],
+            b: vec![1, 2, 3, 4],
+        };
+        assert!(b.gemm(&bad).is_err());
     }
 
     #[test]

@@ -13,8 +13,9 @@ use crate::runtime::Runtime;
 
 use super::{
     validate_family, validate_fir, validate_operands, validate_pair, validate_snr, Backend,
-    BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest,
-    MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, SWEEP_BATCH,
+    BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, GemmBlock, GemmRequest,
+    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
+    SnrRequest, SWEEP_BATCH,
 };
 
 /// PJRT/XLA engine over an artifact directory.
@@ -144,6 +145,15 @@ impl Backend for PjrtBackend {
         Err(BackendError::Unsupported {
             backend: self.name(),
             what: "gate-level power characterization (no AOT artifact)".to_string(),
+        })
+    }
+
+    fn gemm(&self, _req: &GemmRequest) -> BackendResult<GemmBlock> {
+        // No GEMM artifact is compiled yet (the AOT set predates the nn
+        // subsystem); callers fall back to the native backend.
+        Err(BackendError::Unsupported {
+            backend: self.name(),
+            what: "approximate gemm tiles (no AOT artifact)".to_string(),
         })
     }
 }

@@ -24,13 +24,16 @@
 //! ([`MultiplyRequest`] → [`ProductBlock`], …) and wait on [`Pending`]
 //! replies.
 //!
-//! High-level sweep/SNR submissions are *sharded*:
+//! High-level sweep/SNR/GEMM submissions are *sharded*:
 //! [`DspServer::exhaustive_sweep`] splits the operand space into
 //! sub-jobs sized to the worker count (single-worker servers keep the
 //! exact [`SWEEP_BATCH`] artifact shape PJRT requires) and merges the
 //! chunk moments with exact integer accumulators, so the statistics
 //! are bit-identical at any worker count; [`DspServer::snr_db`]
-//! pipelines every block before collecting, in submission order.
+//! pipelines every block before collecting, in submission order; and
+//! [`DspServer::gemm`] row-tiles large matrix multiplies across the
+//! pool, with exact `i64` accumulation keeping the merged block
+//! bit-identical to the single-job path.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -41,9 +44,9 @@ use anyhow::{anyhow, Result};
 
 use crate::arith::{MultKind, Multiplier};
 use crate::backend::{
-    Backend, BackendKind, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest, FIR_BLOCK, FIR_TAPS,
-    SWEEP_BATCH,
+    Backend, BackendKind, ErrorMoments, FirBlock, FirRequest, GemmBlock, GemmRequest,
+    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
+    SnrRequest, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
 };
 use crate::dsp::fixed;
 use crate::util::stats::ErrorStats;
@@ -59,6 +62,7 @@ enum Job {
     Fir(FirRequest, Sender<Result<FirBlock>>),
     Snr(SnrRequest, Sender<Result<SnrAccum>>),
     Power(PowerRequest, Sender<Result<PowerReport>>),
+    Gemm(GemmRequest, Sender<Result<GemmBlock>>),
     Shutdown,
 }
 
@@ -311,6 +315,38 @@ impl DspServer {
         Pending::new(rrx)
     }
 
+    /// Submit one GEMM tile (blocks when the queue is full). The
+    /// high-level [`DspServer::gemm`] row-shards large requests across
+    /// the pool; this is the raw single-tile path.
+    pub fn submit_gemm(&self, req: GemmRequest) -> Pending<GemmBlock> {
+        let (rtx, rrx) = channel();
+        self.submit_job(Job::Gemm(req, rtx));
+        Pending::new(rrx)
+    }
+
+    /// Non-blocking GEMM submission: `Err(QueueFull)` hands the request
+    /// back when the bounded queue is at capacity.
+    pub fn try_submit_gemm(
+        &self,
+        req: GemmRequest,
+    ) -> std::result::Result<Pending<GemmBlock>, QueueFull<GemmRequest>> {
+        let (rtx, rrx) = channel();
+        match self.tx.try_send(Job::Gemm(req, rtx)) {
+            Ok(()) => {
+                self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Pending::new(rrx))
+            }
+            Err(TrySendError::Full(Job::Gemm(req, _))) => {
+                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                Err(QueueFull(req))
+            }
+            Err(TrySendError::Full(_)) => unreachable!("submitted job variant"),
+            // Treat like the blocking path: the dead reply channel
+            // surfaces the termination at `wait`.
+            Err(TrySendError::Disconnected(_)) => Ok(Pending::new(rrx)),
+        }
+    }
+
     // -- high-level request APIs -----------------------------------------
 
     /// Stream a real-valued signal through the FIR datapath: quantize
@@ -426,6 +462,56 @@ impl DspServer {
         Ok(crate::util::stats::db(pr / pe.max(1e-300)))
     }
 
+    /// Served approximate GEMM: `C[m×n] = A·B` through the backend's
+    /// product kernels, returned as the row-major accumulator block.
+    ///
+    /// Multi-worker pools shard `A` into row tiles (about two jobs per
+    /// worker, at least [`crate::nn::TILE_ROWS`] rows each, every tile
+    /// carrying its own copy of `B`) and concatenate the replies in
+    /// submission order. Accumulation is exact `i64` addition inside
+    /// each output element and rows never split across tiles, so the
+    /// result is bit-identical to the single-job path at any worker
+    /// count — the GEMM analog of the sharded exhaustive sweep.
+    pub fn gemm(&self, req: GemmRequest) -> Result<Vec<i64>> {
+        // Shape-check before slicing rows; sub-requests are validated
+        // again by the backend like any other job.
+        anyhow::ensure!(
+            req.m > 0 && req.a.len() == req.m * req.k && req.b.len() == req.k * req.n,
+            "gemm operand lengths {} / {} disagree with dims m={} k={} n={}",
+            req.a.len(),
+            req.b.len(),
+            req.m,
+            req.k,
+            req.n
+        );
+        if self.workers() <= 1 || req.m < 2 * crate::nn::TILE_ROWS {
+            return Ok(self.submit_gemm(req).wait()?.c);
+        }
+        let target_jobs = self.workers() * 2;
+        let rows_per_tile = req.m.div_ceil(target_jobs).max(crate::nn::TILE_ROWS);
+        let mut replies = Vec::with_capacity(req.m.div_ceil(rows_per_tile));
+        let mut row = 0;
+        while row < req.m {
+            let end = (row + rows_per_tile).min(req.m);
+            replies.push(self.submit_gemm(GemmRequest {
+                kind: req.kind,
+                wl: req.wl,
+                level: req.level,
+                m: end - row,
+                k: req.k,
+                n: req.n,
+                a: req.a[row * req.k..end * req.k].to_vec(),
+                b: req.b.clone(),
+            }));
+            row = end;
+        }
+        let mut c = Vec::with_capacity(req.m * req.n);
+        for pending in replies {
+            c.extend(pending.wait()?.c);
+        }
+        Ok(c)
+    }
+
     /// Graceful shutdown (drains outstanding jobs first). Equivalent to
     /// dropping the handle; provided for explicitness at call sites.
     pub fn shutdown(self) {
@@ -500,6 +586,14 @@ fn serve_job(backend: &dyn Backend, job: Job, metrics: &Metrics) {
         Job::Power(req, reply) => {
             let n = req.nvec;
             let res = backend.power(&req).map_err(anyhow::Error::from);
+            metrics.executions.fetch_add(1, Ordering::Relaxed);
+            metrics.record_job(t0.elapsed(), n);
+            let _ = reply.send(res);
+        }
+        Job::Gemm(req, reply) => {
+            // Item count = output elements of the tile.
+            let n = (req.m * req.n) as u64;
+            let res = backend.gemm(&req).map_err(anyhow::Error::from);
             metrics.executions.fetch_add(1, Ordering::Relaxed);
             metrics.record_job(t0.elapsed(), n);
             let _ = reply.send(res);

@@ -27,11 +27,17 @@
 //! * [`error`] — exhaustive/random error sweeps and statistics
 //!   (in-process, multi-threaded).
 //! * [`backend`] — **the execution-backend API**: typed request/response
-//!   pairs for the five paper workloads (batched multiply, error
+//!   pairs for the six paper workloads (batched multiply, error
 //!   moments, FIR blocks, SNR accumulation, gate-level power
-//!   characterization) behind the [`backend::Backend`] trait;
-//!   [`backend::NativeBackend`] (default) and [`backend::PjrtBackend`]
-//!   (`--features pjrt`) implement it. See `src/backend/README.md`.
+//!   characterization, approximate GEMM tiles) behind the
+//!   [`backend::Backend`] trait; [`backend::NativeBackend`] (default)
+//!   and [`backend::PjrtBackend`] (`--features pjrt`) implement it. See
+//!   `src/backend/README.md`.
+//! * [`nn`] — approximate quantized-DNN layer: blocked int8 GEMM over
+//!   the [`arith`] product kernels ([`nn::gemm`]) and a fixed quantized
+//!   MLP classifier with a synthetic labeled set ([`nn::model`]) — the
+//!   accuracy-vs-power application study (paper Table IV / Fig. 6
+//!   analog) served end to end through the coordinator.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
 //!   (compiled only with `--features pjrt`; the default build never
 //!   references the `xla` crate).
@@ -58,6 +64,7 @@ pub mod coordinator;
 pub mod dsp;
 pub mod error;
 pub mod gate;
+pub mod nn;
 pub mod repro;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

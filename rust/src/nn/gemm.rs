@@ -1,0 +1,198 @@
+//! Blocked approximate integer GEMM over the compiled product kernels.
+//!
+//! [`gemm`] computes `C[m×n] = A[m×k] · B[k×n]` (row-major, signed
+//! WL-bit lanes) with every scalar product routed through one multiplier
+//! design point: the memoized [`ProductTable`] LUT at
+//! `wl ≤ MAX_TABLE_WL`, the digit-level model above it. [`gemm_digit`]
+//! forces the digit path and is the oracle the LUT path is checked
+//! against bit for bit. Accumulation is exact `i64` addition —
+//! commutative and associative — so any row tiling (the coordinator
+//! shards served GEMMs into [`TILE_ROWS`]-row tiles across pool workers)
+//! reproduces the untiled result exactly.
+//!
+//! Families with an unsigned operand convention (BAM/Kulkarni/ETM) are
+//! wrapped sign-magnitude: `p = sign(a)·sign(b) · kind(|a|, |b|)`. The
+//! magnitude of a signed WL-bit value is at most `2^(WL−1)`, inside the
+//! unsigned WL-bit operand field, so the same compiled tables serve.
+
+use std::sync::Arc;
+
+use crate::arith::{product_table, MultKind, Multiplier, ProductTable};
+
+/// Row-tile height the coordinator shards served GEMMs at.
+pub const TILE_ROWS: usize = 32;
+
+/// Row-major GEMM dimensions: `C[m×n] = A[m×k] · B[k×n]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Output rows.
+    pub m: usize,
+    /// Reduction (inner) dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+}
+
+/// The scalar-product engine a GEMM runs on.
+enum Kernel {
+    Lut(Arc<ProductTable>),
+    Digit(Box<dyn Multiplier>),
+}
+
+impl Kernel {
+    #[inline]
+    fn product(&self, x: i64, y: i64) -> i64 {
+        match self {
+            Kernel::Lut(table) => table.lookup(x, y),
+            Kernel::Digit(model) => model.multiply(x, y),
+        }
+    }
+}
+
+/// `true` for families whose models take two's-complement operands
+/// directly; the rest go through the sign-magnitude wrapper.
+fn family_signed(kind: MultKind) -> bool {
+    matches!(kind, MultKind::ExactBooth | MultKind::BbmType0 | MultKind::BbmType1)
+}
+
+/// Approximate GEMM on the best kernel for the design point (compiled
+/// LUT at `wl ≤ 8`, digit-level model above).
+///
+/// Panics when operand lengths disagree with `dims` or `(kind, wl,
+/// level)` is outside the family bounds — the served path validates
+/// first (`backend::validate_gemm`); in-process callers own the
+/// contract like they do with the `arith` constructors.
+pub fn gemm(kind: MultKind, wl: u32, level: u32, dims: GemmDims, a: &[i32], b: &[i32]) -> Vec<i64> {
+    let kernel = match product_table(kind, wl, level) {
+        Some(table) => Kernel::Lut(table),
+        None => Kernel::Digit(kind.build(wl, level)),
+    };
+    gemm_on(&kernel, family_signed(kind), dims, a, b)
+}
+
+/// Digit-level oracle GEMM: the same contract as [`gemm`], always on the
+/// digit model and never the LUT — the baseline side of every
+/// LUT-vs-model equivalence test and bench.
+pub fn gemm_digit(
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    dims: GemmDims,
+    a: &[i32],
+    b: &[i32],
+) -> Vec<i64> {
+    let kernel = Kernel::Digit(kind.build(wl, level));
+    gemm_on(&kernel, family_signed(kind), dims, a, b)
+}
+
+fn gemm_on(kernel: &Kernel, signed: bool, dims: GemmDims, a: &[i32], b: &[i32]) -> Vec<i64> {
+    if signed {
+        gemm_loop(dims, a, b, |x, y| kernel.product(x, y))
+    } else {
+        gemm_loop(dims, a, b, |x, y| {
+            let sign = if (x < 0) != (y < 0) { -1 } else { 1 };
+            sign * kernel.product(x.abs(), y.abs())
+        })
+    }
+}
+
+/// The blocked accumulation loop, monomorphized per product kernel (the
+/// same shape as the native backend's FIR accumulator).
+fn gemm_loop(dims: GemmDims, a: &[i32], b: &[i32], mul: impl Fn(i64, i64) -> i64) -> Vec<i64> {
+    let GemmDims { m, k, n } = dims;
+    assert_eq!(a.len(), m * k, "gemm: a length disagrees with dims");
+    assert_eq!(b.len(), k * n, "gemm: b length disagrees with dims");
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        let row_a = &a[i * k..(i + 1) * k];
+        let row_c = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in row_a.iter().enumerate() {
+            let row_b = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in row_c.iter_mut().zip(row_b) {
+                *cv += mul(av as i64, bv as i64);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn draw_signed(wl: u32, len: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..len).map(|_| rng.operand(wl) as i32).collect()
+    }
+
+    #[test]
+    fn exact_gemm_matches_integer_reference() {
+        let dims = GemmDims { m: 5, k: 7, n: 3 };
+        let a = draw_signed(8, dims.m * dims.k, 1);
+        let b = draw_signed(8, dims.k * dims.n, 2);
+        let c = gemm(MultKind::ExactBooth, 8, 0, dims, &a, &b);
+        for i in 0..dims.m {
+            for j in 0..dims.n {
+                let want: i64 = (0..dims.k)
+                    .map(|kk| a[i * dims.k + kk] as i64 * b[kk * dims.n + j] as i64)
+                    .sum();
+                assert_eq!(c[i * dims.n + j], want, "({i}, {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_and_digit_paths_agree_exhaustively_wl4_all_families() {
+        // A 16×1 · 1×16 gemm enumerates every wl=4 operand pair exactly
+        // once: c[i*16 + j] = product(a[i], b[j]).
+        let all: Vec<i32> = (-8..8).collect();
+        let dims = GemmDims { m: 16, k: 1, n: 16 };
+        for (kind, level) in [
+            (MultKind::ExactBooth, 0u32),
+            (MultKind::BbmType0, 3),
+            (MultKind::BbmType1, 3),
+            (MultKind::Bam, 3),
+            (MultKind::Kulkarni, 2),
+            (MultKind::Etm, 2),
+        ] {
+            let via_lut = gemm(kind, 4, level, dims, &all, &all);
+            let via_digit = gemm_digit(kind, 4, level, dims, &all, &all);
+            assert_eq!(via_lut, via_digit, "{kind} level={level}");
+        }
+    }
+
+    #[test]
+    fn sign_magnitude_wrapper_is_exact_for_exact_models() {
+        // At level 0 BAM is the exact array multiplier, so the wrapper
+        // must reproduce plain integer products on signed lanes.
+        let dims = GemmDims { m: 16, k: 1, n: 16 };
+        let all: Vec<i32> = (-8..8).collect();
+        let c = gemm(MultKind::Bam, 4, 0, dims, &all, &all);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(c[i * 16 + j], (all[i] * all[j]) as i64, "({i}, {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn row_tiling_is_bit_identical() {
+        let dims = GemmDims { m: 8, k: 6, n: 5 };
+        let a = draw_signed(8, dims.m * dims.k, 3);
+        let b = draw_signed(8, dims.k * dims.n, 4);
+        for (kind, level) in [(MultKind::BbmType0, 5u32), (MultKind::Kulkarni, 4)] {
+            let full = gemm(kind, 8, level, dims, &a, &b);
+            let top = gemm(kind, 8, level, GemmDims { m: 3, ..dims }, &a[..3 * dims.k], &b);
+            let bot = gemm(kind, 8, level, GemmDims { m: 5, ..dims }, &a[3 * dims.k..], &b);
+            assert_eq!(full, [top, bot].concat(), "{kind}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disagrees with dims")]
+    fn length_mismatch_panics() {
+        let dims = GemmDims { m: 2, k: 2, n: 2 };
+        let _ = gemm(MultKind::ExactBooth, 8, 0, dims, &[1, 2, 3], &[1, 2, 3, 4]);
+    }
+}

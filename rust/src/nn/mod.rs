@@ -1,0 +1,27 @@
+//! Approximate quantized-DNN layer: the application-level stress test
+//! for the paper's multipliers.
+//!
+//! The paper proves the Broken-Booth multiplier on a 30-tap FIR filter
+//! (§III.C); the modern equivalent of that accuracy-vs-power study is
+//! quantized DNN inference, where every multiply-accumulate runs on the
+//! approximate datapath. This module supplies both halves:
+//!
+//! * [`gemm`] — blocked int8×int8→i64 matrix multiply whose scalar
+//!   products route through the memoized [`crate::arith::table`] LUT
+//!   kernels at `wl ≤ 8` (digit-level models above), with exact `i64`
+//!   accumulation so results are bit-identical under any tiling.
+//! * [`model`] — a small fixed quantized MLP classifier plus a synthetic
+//!   labeled set, deterministic from seeds, used by the `bbm dnn` driver
+//!   to sweep every multiplier family × approximation level and pair
+//!   inference accuracy with gate-level power (Table IV / Fig. 6
+//!   analog).
+//!
+//! The served path enters through [`crate::backend::GemmRequest`] and
+//! the coordinator's `Job::Gemm`, which tile-shards rows across
+//! executor-pool workers.
+
+pub mod gemm;
+pub mod model;
+
+pub use gemm::{GemmDims, TILE_ROWS};
+pub use model::QuantMlp;

@@ -1,0 +1,322 @@
+//! A small fixed quantized MLP classifier and its synthetic labeled
+//! set — the DNN inference workload of the accuracy-vs-power study.
+//!
+//! Training is out of scope offline, so the network is a *matched
+//! filter* whose weights are constructed, not learned: each of the
+//! [`CLASSES`] classes gets a random ±[`CENTER_AMP`] prototype vector
+//! (drawn via [`Pcg64::split`] from the model seed); the first hidden
+//! layer correlates the input against every prototype and its negation,
+//! ReLU keeps the positive correlations, and the output layer takes
+//! prototype-minus-antiprototype differences as logits. On
+//! exact arithmetic this classifies the noisy synthetic set perfectly;
+//! as the approximate multipliers discard product columns the
+//! correlations blur and top-1 accuracy decays toward chance — the
+//! same accuracy-for-power trade the paper measures on the FIR testbed
+//! (§III.C), at the application layer.
+//!
+//! Everything is deterministic from two seeds, and every multiply runs
+//! through [`super::gemm`], so LUT/digit/served paths are bit-identical
+//! by construction and testable as such.
+
+use crate::arith::MultKind;
+use crate::backend::GemmRequest;
+use crate::coordinator::DspServer;
+use crate::util::Pcg64;
+
+use super::gemm::{gemm, gemm_digit, GemmDims};
+
+/// Input features per sample.
+pub const FEATURES: usize = 16;
+/// Output classes.
+pub const CLASSES: usize = 4;
+/// Hidden width (one unit per prototype and per anti-prototype).
+pub const HIDDEN: usize = 8;
+/// Operand word length of activations and weights.
+pub const MODEL_WL: u32 = 8;
+/// Default model (weight) seed.
+pub const MODEL_SEED: u64 = 0xB00;
+/// Default dataset seed.
+pub const DATA_SEED: u64 = 0xDA7A;
+/// Gaussian feature-noise sigma of the synthetic set.
+pub const NOISE_SIGMA: f64 = 25.0;
+
+/// Prototype amplitude (absolute feature value of a class center).
+const CENTER_AMP: i32 = 60;
+/// First-layer weight amplitude (odd, so low product columns carry
+/// information and breaking them measurably perturbs the logits).
+const W1_AMP: i32 = 29;
+/// Output-layer weight amplitude (odd, same reason).
+const W2_AMP: i32 = 51;
+/// Requantization arithmetic right-shift after the hidden layer.
+const SHIFT1: u32 = 8;
+
+/// One quantized fully-connected layer, stored as the GEMM `B` operand.
+pub struct QuantLayer {
+    /// Row-major `in_dim × out_dim` weights, signed [`MODEL_WL`]-bit.
+    pub w: Vec<i32>,
+    /// Input width.
+    pub in_dim: usize,
+    /// Output width.
+    pub out_dim: usize,
+    /// Requantization right-shift applied between layers.
+    pub shift: u32,
+    /// Whether ReLU precedes the requantization.
+    pub relu: bool,
+}
+
+/// The fixed quantized MLP: `FEATURES → HIDDEN (ReLU) → CLASSES`.
+pub struct QuantMlp {
+    /// Operand word length of every GEMM lane.
+    pub wl: u32,
+    /// Layers in execution order; the last one emits raw `i64` logits.
+    pub layers: Vec<QuantLayer>,
+}
+
+impl QuantMlp {
+    /// Build the matched-filter classifier and return it together with
+    /// the class prototype vectors the dataset is drawn around.
+    pub fn classifier(seed: u64) -> (QuantMlp, Vec<Vec<i32>>) {
+        let mut root = Pcg64::seeded(seed);
+        let mut crng = root.split();
+        let centers: Vec<Vec<i32>> = (0..CLASSES)
+            .map(|_| {
+                (0..FEATURES)
+                    .map(|_| if crng.next_u64() & 1 == 1 { CENTER_AMP } else { -CENTER_AMP })
+                    .collect()
+            })
+            .collect();
+        // Hidden unit h < CLASSES correlates with prototype h; unit
+        // CLASSES + h with its negation.
+        let mut w1 = vec![0i32; FEATURES * HIDDEN];
+        for h in 0..HIDDEN {
+            let (proto, dir) = if h < CLASSES { (h, 1) } else { (h - CLASSES, -1) };
+            for f in 0..FEATURES {
+                let sign = if centers[proto][f] > 0 { 1 } else { -1 };
+                w1[f * HIDDEN + h] = dir * sign * W1_AMP;
+            }
+        }
+        // logit c = W2_AMP · (act_c − act_{CLASSES+c}).
+        let mut w2 = vec![0i32; HIDDEN * CLASSES];
+        for c in 0..CLASSES {
+            w2[c * CLASSES + c] = W2_AMP;
+            w2[(CLASSES + c) * CLASSES + c] = -W2_AMP;
+        }
+        let layers = vec![
+            QuantLayer {
+                w: w1,
+                in_dim: FEATURES,
+                out_dim: HIDDEN,
+                shift: SHIFT1,
+                relu: true,
+            },
+            QuantLayer { w: w2, in_dim: HIDDEN, out_dim: CLASSES, shift: 0, relu: false },
+        ];
+        (QuantMlp { wl: MODEL_WL, layers }, centers)
+    }
+
+    /// Run `batch` samples through the network with a pluggable GEMM
+    /// engine (`layer, activations, batch → accumulators`); returns raw
+    /// `i64` logits, row-major `batch × CLASSES`.
+    pub fn infer_with<F>(&self, x: &[i32], batch: usize, mut engine: F) -> crate::Result<Vec<i64>>
+    where
+        F: FnMut(&QuantLayer, &[i32], usize) -> crate::Result<Vec<i64>>,
+    {
+        anyhow::ensure!(!self.layers.is_empty(), "model has no layers");
+        let mut acts = x.to_vec();
+        let mut logits = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                acts.len() == batch * layer.in_dim,
+                "layer {li}: activation length {} != batch {batch} × in_dim {}",
+                acts.len(),
+                layer.in_dim
+            );
+            let acc = engine(layer, &acts, batch)?;
+            if li + 1 == self.layers.len() {
+                logits = acc;
+            } else {
+                acts = requantize(&acc, layer.shift, layer.relu, self.wl);
+            }
+        }
+        Ok(logits)
+    }
+
+    /// In-process inference on the best kernels (LUT at `wl ≤ 8`).
+    pub fn infer(
+        &self,
+        kind: MultKind,
+        level: u32,
+        x: &[i32],
+        batch: usize,
+    ) -> crate::Result<Vec<i64>> {
+        self.infer_with(x, batch, |layer, acts, m| {
+            let dims = GemmDims { m, k: layer.in_dim, n: layer.out_dim };
+            Ok(gemm(kind, self.wl, level, dims, acts, &layer.w))
+        })
+    }
+
+    /// In-process inference forced onto the digit-level oracle models.
+    pub fn infer_digit(
+        &self,
+        kind: MultKind,
+        level: u32,
+        x: &[i32],
+        batch: usize,
+    ) -> crate::Result<Vec<i64>> {
+        self.infer_with(x, batch, |layer, acts, m| {
+            let dims = GemmDims { m, k: layer.in_dim, n: layer.out_dim };
+            Ok(gemm_digit(kind, self.wl, level, dims, acts, &layer.w))
+        })
+    }
+
+    /// Served inference: every layer GEMM goes through the coordinator
+    /// (tile-sharded across pool workers on multi-worker servers).
+    pub fn infer_served(
+        &self,
+        srv: &DspServer,
+        kind: MultKind,
+        level: u32,
+        x: &[i32],
+        batch: usize,
+    ) -> crate::Result<Vec<i64>> {
+        self.infer_with(x, batch, |layer, acts, m| {
+            srv.gemm(GemmRequest {
+                kind,
+                wl: self.wl,
+                level,
+                m,
+                k: layer.in_dim,
+                n: layer.out_dim,
+                a: acts.to_vec(),
+                b: layer.w.clone(),
+            })
+        })
+    }
+}
+
+/// ReLU (optional) + arithmetic right-shift + clamp back into the
+/// signed `wl`-bit activation range — the inter-layer requantizer.
+pub fn requantize(acc: &[i64], shift: u32, relu: bool, wl: u32) -> Vec<i32> {
+    let hi = (1i64 << (wl - 1)) - 1;
+    let lo = -hi - 1;
+    acc.iter()
+        .map(|&v| {
+            let v = if relu && v < 0 { 0 } else { v };
+            ((v >> shift).clamp(lo, hi)) as i32
+        })
+        .collect()
+}
+
+/// Draw the synthetic labeled set: `samples` rows of `FEATURES` signed
+/// 8-bit features, sample `i` labeled `i % CLASSES` and drawn as its
+/// class prototype plus rounded Gaussian noise, clamped to ±127.
+pub fn synth_dataset(
+    centers: &[Vec<i32>],
+    samples: usize,
+    sigma: f64,
+    seed: u64,
+) -> (Vec<i32>, Vec<usize>) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = Vec::with_capacity(samples * FEATURES);
+    let mut labels = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let label = i % centers.len();
+        labels.push(label);
+        for f in 0..FEATURES {
+            let noise = (sigma * rng.gaussian()).round() as i64;
+            x.push((centers[label][f] as i64 + noise).clamp(-127, 127) as i32);
+        }
+    }
+    (x, labels)
+}
+
+/// Top-1 accuracy of row-major `batch × classes` logits (ties resolve
+/// to the lowest class index, deterministically).
+pub fn top1_accuracy(logits: &[i64], labels: &[usize], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes, "logit shape mismatch");
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|&(i, &label)| {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            best == label
+        })
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Mean squared logit error between two equally-shaped logit blocks.
+pub fn logit_mse(approx: &[i64], exact: &[i64]) -> f64 {
+    assert_eq!(approx.len(), exact.len(), "logit shape mismatch");
+    let se: f64 = approx
+        .iter()
+        .zip(exact)
+        .map(|(&a, &e)| {
+            let d = (a - e) as f64;
+            d * d
+        })
+        .sum();
+    se / approx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_inference_classifies_the_synthetic_set() {
+        let (mlp, centers) = QuantMlp::classifier(MODEL_SEED);
+        let (x, labels) = synth_dataset(&centers, 256, NOISE_SIGMA, DATA_SEED);
+        let logits = mlp.infer(MultKind::ExactBooth, 0, &x, 256).unwrap();
+        let acc = top1_accuracy(&logits, &labels, CLASSES);
+        assert!(acc >= 0.95, "exact top-1 accuracy {acc} below the design floor");
+    }
+
+    #[test]
+    fn lut_and_digit_inference_are_bit_identical() {
+        let (mlp, centers) = QuantMlp::classifier(MODEL_SEED);
+        let (x, _labels) = synth_dataset(&centers, 64, NOISE_SIGMA, DATA_SEED);
+        for (kind, level) in [
+            (MultKind::BbmType0, 7u32),
+            (MultKind::BbmType1, 5),
+            (MultKind::Bam, 9),
+            (MultKind::Kulkarni, 6),
+            (MultKind::Etm, 4),
+        ] {
+            let a = mlp.infer(kind, level, &x, 64).unwrap();
+            let b = mlp.infer_digit(kind, level, &x, 64).unwrap();
+            assert_eq!(a, b, "{kind} level={level}");
+        }
+    }
+
+    #[test]
+    fn aggressive_breaking_degrades_toward_chance() {
+        let (mlp, centers) = QuantMlp::classifier(MODEL_SEED);
+        let (x, labels) = synth_dataset(&centers, 256, NOISE_SIGMA, DATA_SEED);
+        let exact = mlp.infer(MultKind::ExactBooth, 0, &x, 256).unwrap();
+        let broken = mlp.infer(MultKind::BbmType0, 12, &x, 256).unwrap();
+        let acc = top1_accuracy(&broken, &labels, CLASSES);
+        assert!(acc <= 0.5, "vbl=12 should collapse accuracy, got {acc}");
+        assert!(logit_mse(&broken, &exact) > 0.0);
+    }
+
+    #[test]
+    fn requantize_clamps_shifts_and_relus() {
+        let acc = [-1000i64, -1, 0, 255, 256, 1 << 20];
+        assert_eq!(requantize(&acc, 8, true, 8), vec![0, 0, 0, 0, 1, 127]);
+        assert_eq!(requantize(&acc, 0, false, 8), vec![-128, -1, 0, 127, 127, 127]);
+    }
+
+    #[test]
+    fn top1_breaks_ties_toward_the_lowest_class() {
+        let logits = [0i64, 0, 0, 0, 5, 9, 9, 1];
+        assert_eq!(top1_accuracy(&logits, &[0, 1], 4), 1.0);
+        assert_eq!(top1_accuracy(&logits, &[1, 2], 4), 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! `bbm dnn`: quantized-MLP inference accuracy vs gate-level power —
+//! the paper's accuracy-for-power trade (Table IV / Fig. 6 analog) at
+//! the application layer, on the served approximate-GEMM workload.
+//!
+//! For every multiplier family and study level (level 0 plus the five
+//! `repro::pdp::levels_for` settings) the driver:
+//!
+//! 1. runs the fixed [`QuantMlp`] classifier over the synthetic labeled
+//!    set with every layer GEMM served through the coordinator
+//!    ([`crate::backend::GemmRequest`], tile-sharded on pools),
+//! 2. pairs the config with a gate-level `Tmin` [`PowerRequest`] on the
+//!    same server (families without a gate model report `-`),
+//! 3. prints top-1 accuracy and logit MSE against the exact-arithmetic
+//!    logits next to power/delay/PDP.
+//!
+//! A preflight proves the GEMM paths bit-identical: LUT vs digit-level
+//! oracle in-process, served vs in-process, and — on pools — the
+//! multi-worker server vs a dedicated single-worker server.
+//!
+//! `--backend pjrt` fails with `Unsupported`: no GEMM artifact is
+//! compiled (see `crate::backend::pjrt`).
+
+use crate::arith::MultKind;
+use crate::backend::{BackendKind, PowerRequest};
+use crate::coordinator::DspServer;
+use crate::nn::model::{
+    self, QuantMlp, CLASSES, DATA_SEED, MODEL_SEED, MODEL_WL, NOISE_SIGMA,
+};
+use crate::util::cli::Args;
+use crate::util::report::Table;
+
+use super::verify::verify_levels;
+
+/// Representative config for the preflight bit-identity proof.
+const PROOF_KIND: MultKind = MultKind::BbmType0;
+const PROOF_LEVEL: u32 = 5;
+
+/// Prove the acceptance-criteria identities on the real dataset: the
+/// LUT and digit-level kernels agree, the served path reproduces the
+/// in-process result, and worker count does not change a single bit.
+fn prove_bit_identity(
+    srv: &DspServer,
+    mlp: &QuantMlp,
+    x: &[i32],
+    samples: usize,
+) -> anyhow::Result<()> {
+    let lut = mlp.infer(PROOF_KIND, PROOF_LEVEL, x, samples)?;
+    let digit = mlp.infer_digit(PROOF_KIND, PROOF_LEVEL, x, samples)?;
+    anyhow::ensure!(lut == digit, "LUT and digit-level GEMM kernels disagree");
+    let served = mlp.infer_served(srv, PROOF_KIND, PROOF_LEVEL, x, samples)?;
+    anyhow::ensure!(served == lut, "served GEMM disagrees with the in-process kernels");
+    if srv.workers() > 1 {
+        let solo = DspServer::native(8)?;
+        let one_worker = mlp.infer_served(&solo, PROOF_KIND, PROOF_LEVEL, x, samples)?;
+        solo.shutdown();
+        anyhow::ensure!(
+            one_worker == served,
+            "GEMM differs between 1 and {} pool workers",
+            srv.workers()
+        );
+        println!(
+            "bit-identity: lut == digit == served({} workers) == served(1 worker) \
+             [{PROOF_KIND} level={PROOF_LEVEL}]",
+            srv.workers()
+        );
+    } else {
+        println!("bit-identity: lut == digit == served [{PROOF_KIND} level={PROOF_LEVEL}]");
+    }
+    Ok(())
+}
+
+/// The `dnn` subcommand: accuracy-vs-power over every family × level.
+pub fn dnn(args: &Args) -> anyhow::Result<()> {
+    let samples = args.get_or("samples", 512usize)?;
+    let nvec = args.get_or("nvec", 20_000u64)?;
+    let threads = args.get_or("threads", 0usize)?;
+    let backend = if args.flag("pjrt") {
+        BackendKind::Pjrt
+    } else {
+        args.get_or("backend", BackendKind::Native)?
+    };
+    let srv = match backend {
+        BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
+        kind => DspServer::start_kind(kind, 8)?,
+    };
+    println!(
+        "dnn inference served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
+
+    let (mlp, centers) = QuantMlp::classifier(MODEL_SEED);
+    let (x, labels) = model::synth_dataset(&centers, samples, NOISE_SIGMA, DATA_SEED);
+    let exact = mlp.infer(MultKind::ExactBooth, 0, &x, samples)?;
+    prove_bit_identity(&srv, &mlp, &x, samples)?;
+
+    let mut t = Table::new(
+        &format!(
+            "DNN — quantized MLP (WL={MODEL_WL}, {samples} samples): \
+             top-1 / logit MSE vs gate-level power"
+        ),
+        &["family", "level", "top1", "logit_MSE", "P_mW", "Tmin_ps", "PDP_pJ"],
+    );
+    for kind in MultKind::ALL {
+        for level in verify_levels(kind, MODEL_WL) {
+            // Pipeline this config's Tmin characterization behind the
+            // inference GEMMs: power runs on the executor(s) while the
+            // logits come back.
+            let power = srv.submit_power(PowerRequest {
+                kind,
+                wl: MODEL_WL,
+                level,
+                constraint_ps: 0.0,
+                nvec,
+                seed: 11,
+            });
+            let logits = mlp.infer_served(&srv, kind, level, &x, samples)?;
+            let acc = model::top1_accuracy(&logits, &labels, CLASSES);
+            let mse = model::logit_mse(&logits, &exact);
+            // Families/backends without a gate-level model (ETM, PJRT)
+            // still have accuracy; their power columns stay blank.
+            let (p_mw, tmin_ps, pdp_pj) = match power.wait() {
+                Ok(r) => (
+                    format!("{:.3}", r.total_mw()),
+                    format!("{:.0}", r.delay_ps),
+                    format!("{:.3}", r.pdp_pj()),
+                ),
+                Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
+            };
+            t.row(vec![
+                kind.to_string(),
+                level.to_string(),
+                format!("{acc:.3}"),
+                format!("{mse:.3e}"),
+                p_mw,
+                tmin_ps,
+                pdp_pj,
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper analog (Table IV / Fig. 6): accuracy holds at low breaking levels while \
+         power falls, then collapses toward chance (top1 = {:.2})",
+        1.0 / CLASSES as f64
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dnn_runs_end_to_end_single_worker() {
+        // Tiny sample/vector counts keep the full family × level grid
+        // cheap; the driver itself asserts the bit-identity proofs.
+        let args = Args::parse(
+            &["--samples".into(), "64".into(), "--nvec".into(), "640".into()],
+            &["pjrt"],
+        )
+        .unwrap();
+        dnn(&args).unwrap();
+    }
+
+    #[test]
+    fn dnn_runs_on_a_native_pool() {
+        // 128 samples ≥ 2 × TILE_ROWS rows, so the served GEMMs shard
+        // across the pool and the preflight compares 1 vs 4 workers.
+        let args = Args::parse(
+            &[
+                "--samples".into(),
+                "128".into(),
+                "--nvec".into(),
+                "640".into(),
+                "--backend".into(),
+                "native".into(),
+                "--threads".into(),
+                "4".into(),
+            ],
+            &["pjrt"],
+        )
+        .unwrap();
+        dnn(&args).unwrap();
+    }
+}

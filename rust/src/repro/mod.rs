@@ -11,6 +11,7 @@
 //! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
 //! bbm fig7 / fig8a / fig8b [--samples N]
 //! bbm table4 [--samples 8192 --cycles 8192]
+//! bbm dnn    [--samples 512 --nvec 20000 --backend native --threads N]
 //! bbm verify [--seed 1 --backend native|pjrt]
 //! bbm ablation [adders|dct|reducers]
 //! bbm all    (everything, paper-scale parameters)
@@ -22,6 +23,7 @@
 //! flag is kept as a back-compat alias for `--backend pjrt`.
 
 pub mod ablation;
+pub mod dnn;
 pub mod errors;
 pub mod filter_app;
 pub mod pdp;
@@ -56,6 +58,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "fig8a" => filter_app::fig8a(args),
         "fig8b" => filter_app::fig8b(args),
         "table4" => filter_app::table4(args),
+        "dnn" => dnn::dnn(args),
         "verify" => verify::verify(args),
         "ablation" => match args.positional.first().map(|s| s.as_str()) {
             Some("adders") => ablation::adders(args),
@@ -70,7 +73,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "all" => {
             for c in [
                 "verify", "table1", "fig2", "fig3", "table2", "table3", "fig5", "fig6",
-                "fig7", "fig8a", "fig8b", "table4",
+                "fig7", "fig8a", "fig8b", "table4", "dnn",
             ] {
                 println!("\n================ {c} ================");
                 dispatch(c, args)?;
@@ -88,9 +91,11 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
 fn print_help() {
     println!(
         "bbm — Broken-Booth Multiplier reproduction\n\
-         commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 verify all\n\
+         commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 dnn\n\
+         \x20         verify all\n\
          options: --backend native|pjrt selects the execution engine (default native);\n\
-         \x20        --threads N sets sweep parallelism on table1/fig2 (native pool size)\n\
+         \x20        --threads N sizes the native executor pool (table1/fig2 sweeps,\n\
+         \x20        fig3/table2/table3/fig5/fig6 power serving, dnn inference)\n\
          see DESIGN.md §7 for the experiment index and options"
     );
 }

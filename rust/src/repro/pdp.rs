@@ -115,18 +115,32 @@ pub fn measure_family(
 const FAMILIES: [MultKind; 4] =
     [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni];
 
-fn power_server(args: &Args) -> anyhow::Result<DspServer> {
+/// Build the serving stack for a power-workload command: `--backend`
+/// picks the engine, `--threads N` (with the native backend) sizes an
+/// executor pool so the pipelined [`PowerRequest`]s characterize
+/// concurrently — the same routing `table1` gives its sweeps.
+pub(super) fn power_server(args: &Args) -> anyhow::Result<DspServer> {
     let kind = args.get_or("backend", BackendKind::Native)?;
-    DspServer::start_kind(kind, 8)
+    let threads = args.get_or("threads", 0usize)?;
+    match kind {
+        BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16),
+        kind => DspServer::start_kind(kind, 8),
+    }
 }
 
 /// Fig. 5: per-family PDP (min-delay and relaxed) vs log10 MSE.
+/// `--threads N` with `--backend native` spreads the pipelined power
+/// requests over an N-worker executor pool.
 pub fn fig5(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 8u32)?;
     let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
     let nvec = args.get_or("nvec", 50_000u64)?;
     let srv = power_server(args)?;
-    println!("power workload served by backend `{}`", srv.backend_name());
+    println!(
+        "power workload served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
     for kind in FAMILIES {
         let pts = measure_family(&srv, kind, wl, relaxed_ns * 1e3, nvec)?;
         let mut t = Table::new(
@@ -149,12 +163,18 @@ pub fn fig5(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Fig. 6: the averaged PDP of all four families in one series.
+/// `--threads N` with `--backend native` spreads the pipelined power
+/// requests over an N-worker executor pool.
 pub fn fig6(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 8u32)?;
     let relaxed_ns = args.get_or("relaxed-ns", 1.75f64)?;
     let nvec = args.get_or("nvec", 50_000u64)?;
     let srv = power_server(args)?;
-    println!("power workload served by backend `{}`", srv.backend_name());
+    println!(
+        "power workload served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
     let mut s = Series::new(
         &format!("Fig. 6 — average PDP vs log10 MSE (WL={wl})"),
         "log10_mse",
@@ -213,6 +233,29 @@ mod tests {
                 assert!(mse >= prev, "{kind} level {level}");
                 prev = mse;
             }
+        }
+    }
+
+    #[test]
+    fn power_server_routes_threads_to_a_native_pool() {
+        let args = Args::parse(
+            &["--backend".into(), "native".into(), "--threads".into(), "3".into()],
+            &[],
+        )
+        .unwrap();
+        let srv = power_server(&args).unwrap();
+        assert_eq!(srv.workers(), 3);
+        // The pooled server must reproduce the single-executor numbers:
+        // power reports are bit-identical by the sharded-grid design.
+        let pooled = measure_family(&srv, MultKind::BbmType1, 6, 2000.0, 640).unwrap();
+        srv.shutdown();
+        let solo = DspServer::native(8).unwrap();
+        let single = measure_family(&solo, MultKind::BbmType1, 6, 2000.0, 640).unwrap();
+        solo.shutdown();
+        for (p, s) in pooled.iter().zip(&single) {
+            assert_eq!(p.level, s.level);
+            assert_eq!(p.pdp_min_pj, s.pdp_min_pj);
+            assert_eq!(p.pdp_relaxed_pj, s.pdp_relaxed_pj);
         }
     }
 

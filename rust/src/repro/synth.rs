@@ -1,15 +1,30 @@
 //! Fig. 3 and Tables II/III regenerators: synthesized power/area of the
 //! Broken-Booth multiplier vs the accurate Booth multiplier across delay
 //! constraints (the paper's §III.A study).
+//!
+//! Every design point is served: the comparison pipelines
+//! [`PowerRequest`]s through the coordinator (`--backend` selects the
+//! engine, `--threads N` sizes a native executor pool), so the whole
+//! relaxation grid characterizes concurrently on pools while producing
+//! numbers bit-identical to the old in-process path — the native power
+//! workload *is* `gate::characterize` behind the trait.
 
-use crate::arith::BbmType;
+use crate::arith::{BbmType, MultKind};
+use crate::backend::{PowerReport, PowerRequest};
+use crate::coordinator::DspServer;
 use crate::gate::builders::build_broken_booth;
-use crate::gate::{characterize, find_tmin};
 use crate::util::cli::Args;
 use crate::util::report::{Series, Table};
 
+use super::pdp::power_server;
+
 /// The paper's relaxation grid.
 pub const RELAX: [f64; 5] = [1.0, 1.25, 1.5, 1.75, 2.0];
+
+/// Stimulus count for the `Tmin`-hunting requests: their activity
+/// numbers are discarded (only the achieved delay is used), so the
+/// simulation runs one lane block.
+const TMIN_NVEC: u64 = 64;
 
 /// One (accurate, approximate) comparison at a WL.
 pub struct WlComparison {
@@ -21,33 +36,53 @@ pub struct WlComparison {
     pub tmin_acc_ps: f64,
     /// Tmin of the approximate design, ps.
     pub tmin_apx_ps: f64,
-    /// (constraint multiple, accurate char, approximate char).
-    pub points: Vec<(f64, crate::gate::Characterization, crate::gate::Characterization)>,
+    /// (constraint multiple, accurate report, approximate report).
+    pub points: Vec<(f64, PowerReport, PowerReport)>,
 }
 
-/// Run the paper's §III.A methodology for one WL:
-/// find `Tmin` of the accurate multiplier, then synthesize both designs
-/// at `{1, 1.25, 1.5, 1.75, 2}×Tmin` and measure power with `nvec`
-/// random vectors.
-pub fn compare_at_wl(wl: u32, vbl: u32, ty: BbmType, nvec: u64, seed: u64) -> WlComparison {
-    let tmin_acc = {
-        let mut nl = build_broken_booth(wl, 0, ty);
-        find_tmin(&mut nl).delay_ps
+/// Run the paper's §III.A methodology for one WL through the served
+/// power workload: find `Tmin` of both designs, then synthesize both at
+/// `{1, 1.25, 1.5, 1.75, 2}×Tmin(accurate)` and measure power with
+/// `nvec` random vectors. The ten grid requests are pipelined, so an
+/// executor pool characterizes them concurrently.
+pub fn compare_at_wl(
+    srv: &DspServer,
+    wl: u32,
+    vbl: u32,
+    ty: BbmType,
+    nvec: u64,
+    seed: u64,
+) -> anyhow::Result<WlComparison> {
+    let kind = match ty {
+        BbmType::Type0 => MultKind::BbmType0,
+        BbmType::Type1 => MultKind::BbmType1,
     };
-    let tmin_apx = {
-        let mut nl = build_broken_booth(wl, vbl, ty);
-        find_tmin(&mut nl).delay_ps
+    let req = |level: u32, constraint_ps: f64, nvec: u64| PowerRequest {
+        kind,
+        wl,
+        level,
+        constraint_ps,
+        nvec,
+        seed,
     };
-    let mut points = Vec::new();
+    let tmin_acc_pending = srv.submit_power(req(0, 0.0, TMIN_NVEC));
+    let tmin_apx_pending = srv.submit_power(req(vbl, 0.0, TMIN_NVEC));
+    let tmin_acc = tmin_acc_pending.wait()?.delay_ps;
+    let tmin_apx = tmin_apx_pending.wait()?.delay_ps;
+    let mut pending = Vec::new();
     for &mult in &RELAX {
         let constraint = tmin_acc * mult;
-        let mut acc = build_broken_booth(wl, 0, ty);
-        let ca = characterize(&mut acc, constraint, nvec, seed);
-        let mut apx = build_broken_booth(wl, vbl, ty);
-        let cb = characterize(&mut apx, constraint, nvec, seed);
-        points.push((mult, ca, cb));
+        pending.push((
+            mult,
+            srv.submit_power(req(0, constraint, nvec)),
+            srv.submit_power(req(vbl, constraint, nvec)),
+        ));
     }
-    WlComparison { wl, vbl, tmin_acc_ps: tmin_acc, tmin_apx_ps: tmin_apx, points }
+    let mut points = Vec::new();
+    for (mult, acc, apx) in pending {
+        points.push((mult, acc.wait()?, apx.wait()?));
+    }
+    Ok(WlComparison { wl, vbl, tmin_acc_ps: tmin_acc, tmin_apx_ps: tmin_apx, points })
 }
 
 /// Fig. 3: total power vs delay for the accurate (VBL=0) and broken
@@ -56,14 +91,20 @@ pub fn fig3(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 16u32)?;
     let vbl = args.get_or("vbl", wl - 1)?;
     let nvec = args.get_or("nvec", 100_000u64)?;
-    let cmp = compare_at_wl(wl, vbl, BbmType::Type0, nvec, 42);
+    let srv = power_server(args)?;
+    println!(
+        "power workload served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
+    let cmp = compare_at_wl(&srv, wl, vbl, BbmType::Type0, nvec, 42)?;
     let mut s = Series::new(
         &format!("Fig. 3 — total power vs delay, WL={wl} (VBL={vbl})"),
         "delay_ns",
         &["accurate_mW", "broken_mW"],
     );
     for (mult, ca, cb) in &cmp.points {
-        s.point(cmp.tmin_acc_ps * mult * 1e-3, &[ca.power.total_mw(), cb.power.total_mw()]);
+        s.point(cmp.tmin_acc_ps * mult * 1e-3, &[ca.total_mw(), cb.total_mw()]);
     }
     s.print();
     let speedup = (cmp.tmin_acc_ps - cmp.tmin_apx_ps) / cmp.tmin_acc_ps * 100.0;
@@ -72,6 +113,7 @@ pub fn fig3(args: &Args) -> anyhow::Result<()> {
         cmp.tmin_acc_ps * 1e-3,
         cmp.tmin_apx_ps * 1e-3,
     );
+    srv.shutdown();
     Ok(())
 }
 
@@ -81,6 +123,12 @@ pub fn tables23(args: &Args, area: bool) -> anyhow::Result<()> {
     let wls = args.list_or("wls", &[4u32, 8, 12, 16])?;
     let nvec = args.get_or("nvec", 50_000u64)?;
     let ty = BbmType::Type0;
+    let srv = power_server(args)?;
+    println!(
+        "power workload served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
     let what = if area { "AREA" } else { "POWER" };
     let mut t = Table::new(
         &format!("Table {} — % {what} reduction (Broken-Booth vs accurate)",
@@ -89,14 +137,14 @@ pub fn tables23(args: &Args, area: bool) -> anyhow::Result<()> {
     );
     for &wl in &wls {
         let vbl = wl - 1;
-        let cmp = compare_at_wl(wl, vbl, ty, nvec, 7);
+        let cmp = compare_at_wl(&srv, wl, vbl, ty, nvec, 7)?;
         let mut cells = vec![format!("WL={wl},VBL={vbl}")];
         let mut sum = 0.0;
         for (_, ca, cb) in &cmp.points {
             let red = if area {
                 100.0 * (1.0 - cb.area_um2 / ca.area_um2)
             } else {
-                100.0 * (1.0 - cb.power.total_mw() / ca.power.total_mw())
+                100.0 * (1.0 - cb.total_mw() / ca.total_mw())
             };
             sum += red;
             cells.push(format!("{red:.1}"));
@@ -110,6 +158,7 @@ pub fn tables23(args: &Args, area: bool) -> anyhow::Result<()> {
     } else {
         println!("paper means: WL4 28.0 | WL8 56.3 | WL12 58.6 | WL16 57.4");
     }
+    srv.shutdown();
     Ok(())
 }
 
@@ -143,16 +192,36 @@ mod tests {
 
     #[test]
     fn comparison_shape_wl8() {
-        let cmp = compare_at_wl(8, 7, BbmType::Type0, 6400, 1);
+        let srv = DspServer::native(8).unwrap();
+        let cmp = compare_at_wl(&srv, 8, 7, BbmType::Type0, 6400, 1).unwrap();
+        srv.shutdown();
         assert!(cmp.tmin_apx_ps <= cmp.tmin_acc_ps * 1.02, "broken no slower at Tmin");
         for (_, ca, cb) in &cmp.points {
             assert!(cb.area_um2 < ca.area_um2);
-            assert!(cb.power.total_mw() < ca.power.total_mw());
+            assert!(cb.total_mw() < ca.total_mw());
         }
         // Power drops as the constraint relaxes (paper Fig. 3 shape).
-        let p_first = cmp.points.first().unwrap().1.power.total_mw();
-        let p_last = cmp.points.last().unwrap().1.power.total_mw();
+        let p_first = cmp.points.first().unwrap().1.total_mw();
+        let p_last = cmp.points.last().unwrap().1.total_mw();
         assert!(p_last < p_first * 0.75, "relaxed {p_last} vs tight {p_first}");
+    }
+
+    #[test]
+    fn comparison_is_pool_invariant_wl8() {
+        // The pipelined grid lands on different workers in a pool, but
+        // the sharded activity engine keeps every report bit-identical.
+        let srv = DspServer::native(8).unwrap();
+        let solo = compare_at_wl(&srv, 8, 7, BbmType::Type0, 640, 5).unwrap();
+        srv.shutdown();
+        let pool = DspServer::native_pool(4, 16).unwrap();
+        let pooled = compare_at_wl(&pool, 8, 7, BbmType::Type0, 640, 5).unwrap();
+        pool.shutdown();
+        assert_eq!(solo.tmin_acc_ps, pooled.tmin_acc_ps);
+        for ((ma, ca, cb), (mb, pa, pb)) in solo.points.iter().zip(&pooled.points) {
+            assert_eq!(ma, mb);
+            assert_eq!(ca, pa);
+            assert_eq!(cb, pb);
+        }
     }
 
     #[test]
@@ -171,7 +240,9 @@ mod tests {
     fn tmin_improves_over_unsized() {
         let nl = build_broken_booth(12, 0, BbmType::Type0);
         let base = crate::gate::analyze(&nl).critical;
-        let cmp = compare_at_wl(12, 11, BbmType::Type0, 6400, 3);
+        let srv = DspServer::native(8).unwrap();
+        let cmp = compare_at_wl(&srv, 12, 11, BbmType::Type0, 6400, 3).unwrap();
+        srv.shutdown();
         assert!(cmp.tmin_acc_ps <= base);
     }
 }

@@ -9,8 +9,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::backend::{
-    Backend, BackendResult, ErrorMoments, FirBlock, FirRequest, MomentsRequest, MultiplyRequest,
-    PowerReport, PowerRequest, ProductBlock, SnrAccum, SnrRequest,
+    Backend, BackendResult, ErrorMoments, FirBlock, FirRequest, GemmBlock, GemmRequest,
+    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
+    SnrRequest,
 };
 
 /// Shared call counters, readable from the test thread while the
@@ -27,6 +28,8 @@ pub struct MockState {
     pub snrs: AtomicU64,
     /// Power-characterization requests served.
     pub powers: AtomicU64,
+    /// GEMM tile requests served.
+    pub gemms: AtomicU64,
 }
 
 impl MockState {
@@ -35,13 +38,14 @@ impl MockState {
         Arc::new(MockState::default())
     }
 
-    /// Total requests served across all five endpoints.
+    /// Total requests served across all six endpoints.
     pub fn total(&self) -> u64 {
         self.multiplies.load(Ordering::SeqCst)
             + self.moments.load(Ordering::SeqCst)
             + self.firs.load(Ordering::SeqCst)
             + self.snrs.load(Ordering::SeqCst)
             + self.powers.load(Ordering::SeqCst)
+            + self.gemms.load(Ordering::SeqCst)
     }
 }
 
@@ -170,6 +174,24 @@ impl Backend for MockBackend {
             // activity runner's grid).
             vectors: crate::gate::sim::sharded_vectors(req.nvec),
         })
+    }
+
+    fn gemm(&self, req: &GemmRequest) -> BackendResult<GemmBlock> {
+        self.gate.wait();
+        self.state.gemms.fetch_add(1, Ordering::SeqCst);
+        // Exact integer GEMM — the mock ignores the approximation knobs.
+        let mut c = vec![0i64; req.m * req.n];
+        for i in 0..req.m {
+            let row_c = &mut c[i * req.n..(i + 1) * req.n];
+            for kk in 0..req.k {
+                let av = req.a[i * req.k + kk] as i64;
+                let row_b = &req.b[kk * req.n..(kk + 1) * req.n];
+                for (cv, &bv) in row_c.iter_mut().zip(row_b) {
+                    *cv += av * bv as i64;
+                }
+            }
+        }
+        Ok(GemmBlock { c })
     }
 }
 

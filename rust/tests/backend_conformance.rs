@@ -13,12 +13,17 @@
 //!    `testkit::MockBackend`: bounded-queue backpressure
 //!    (`try_submit` → `QueueFull`) and `MetricsSnapshot` counters —
 //!    no artifacts, no timing races.
+//! 4. GEMM workload conformance: exhaustive WL=8 LUT-vs-digit-oracle
+//!    bit-identity per tile, row-tiled pool dispatch bit-identical to a
+//!    single worker, and `try_submit_gemm` backpressure on the mock.
 
 use std::sync::Arc;
 
 use bbm::arith::MultKind;
-use bbm::backend::{Backend, MultiplyRequest, NativeBackend, PowerRequest};
+use bbm::backend::{Backend, GemmRequest, MultiplyRequest, NativeBackend, PowerRequest};
 use bbm::coordinator::DspServer;
+use bbm::nn::gemm::{gemm, gemm_digit};
+use bbm::nn::GemmDims;
 use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels, verify_power};
 use bbm::testkit::{Gate, MockBackend, MockState};
 use bbm::util::Pcg64;
@@ -261,6 +266,119 @@ fn metrics_counters_track_mock_traffic() {
     assert_eq!(m.items, 15, "3 lanes x 5 jobs");
     assert_eq!(state.multiplies.load(std::sync::atomic::Ordering::SeqCst), 5);
     assert!(m.throughput() >= 0.0);
+    srv.shutdown();
+}
+
+#[test]
+fn gemm_lut_matches_digit_oracle_exhaustively_wl8() {
+    // One 256×1 · 1×256 tile enumerates every signed WL=8 operand pair,
+    // so C holds all 2^16 scalar products of the family: the memoized
+    // ProductTable kernel must agree with the digit-level oracle on
+    // every single one (and with plain integer products when exact).
+    let all: Vec<i32> = (-128..=127).collect();
+    let dims = GemmDims { m: all.len(), k: 1, n: all.len() };
+    for (kind, level) in [
+        (MultKind::ExactBooth, 0u32),
+        (MultKind::BbmType0, 5),
+        (MultKind::BbmType1, 7),
+        (MultKind::Bam, 9),
+        (MultKind::Kulkarni, 6),
+        (MultKind::Etm, 4),
+    ] {
+        let lut = gemm(kind, 8, level, dims, &all, &all);
+        let digit = gemm_digit(kind, 8, level, dims, &all, &all);
+        assert_eq!(lut, digit, "{kind} level={level}");
+        if kind == MultKind::ExactBooth {
+            for (i, &a) in all.iter().enumerate() {
+                for (j, &b) in all.iter().enumerate() {
+                    assert_eq!(lut[i * all.len() + j], a as i64 * b as i64, "{a}*{b}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_pool_bit_identical_to_single_worker() {
+    // 80 rows ≥ 2 × TILE_ROWS, so the 4-worker server row-tiles the
+    // multiply across its pool; exact i64 accumulation makes the result
+    // bit-identical to the single-worker (one-job) path and to the
+    // in-process kernels.
+    let single = DspServer::native(8).unwrap();
+    let pool = DspServer::native_pool(4, 8).unwrap();
+    let (m, k, n) = (80usize, 16usize, 12usize);
+    let mut rng = Pcg64::seeded(21);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.operand(8) as i32).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.operand(8) as i32).collect();
+    for (kind, level) in [(MultKind::BbmType0, 5u32), (MultKind::Bam, 6), (MultKind::Etm, 3)] {
+        let req = GemmRequest { kind, wl: 8, level, m, k, n, a: a.clone(), b: b.clone() };
+        let via_single = single.gemm(req.clone()).unwrap();
+        let via_pool = pool.gemm(req.clone()).unwrap();
+        assert_eq!(via_single, via_pool, "{kind}: worker count changed the product");
+        let in_process = gemm(kind, 8, level, GemmDims { m, k, n }, &a, &b);
+        assert_eq!(via_pool, in_process, "{kind}: served vs in-process");
+        // The unsharded submit path agrees too.
+        let one_job = pool.submit_gemm(req).wait().unwrap().c;
+        assert_eq!(one_job, in_process, "{kind}: single-job submit");
+    }
+    pool.shutdown();
+    single.shutdown();
+}
+
+fn tiny_gemm(tag: i32) -> GemmRequest {
+    GemmRequest {
+        kind: MultKind::ExactBooth,
+        wl: 8,
+        level: 0,
+        m: 1,
+        k: 2,
+        n: 1,
+        a: vec![tag, 2],
+        b: vec![3, 4],
+    }
+}
+
+#[test]
+fn gemm_backpressure_and_mock_counting() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (state.clone(), gate.clone());
+    let srv = DspServer::start(
+        move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>),
+        1,
+    )
+    .unwrap();
+
+    // Gate closed: the executor wedges, the bounded queue fills, and
+    // `try_submit_gemm` hands the request back intact.
+    let mut pendings = Vec::new();
+    let rejected;
+    let mut tag = 0i32;
+    loop {
+        match srv.try_submit_gemm(tiny_gemm(tag)) {
+            Ok(p) => {
+                pendings.push(p);
+                tag += 1;
+                assert!(tag <= 2, "queue depth 1 must reject by the third submit");
+            }
+            Err(full) => {
+                rejected = full.0;
+                break;
+            }
+        }
+    }
+    assert!((1..=2).contains(&tag), "accepted {tag}");
+    assert_eq!(rejected.a[0], tag, "rejected request must come back intact");
+    assert_eq!(state.total(), 0, "gate closed: nothing served yet");
+
+    gate.open();
+    for (i, p) in pendings.into_iter().enumerate() {
+        // Mock serves exact products: tag*3 + 2*4.
+        assert_eq!(p.wait().unwrap().c, vec![i as i64 * 3 + 8]);
+    }
+    let served = tag as u64;
+    assert_eq!(state.gemms.load(std::sync::atomic::Ordering::SeqCst), served);
+    assert_eq!(state.total(), served, "gemms count into the endpoint total");
     srv.shutdown();
 }
 

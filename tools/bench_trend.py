@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Perf-trend gate over the BENCH_*.json trajectory.
+
+Compares the freshly written bench JSON (``make bench-json``) against
+the newest baseline artifact from a previous PR and fails when any
+benchmark shared by both files regressed by more than ``--max-ratio``
+in ns/op. Benches that exist on only one side (new workloads, retired
+workloads) are reported but never fail the gate; a missing baseline is
+a clean skip so the very first run of a new artifact name stays green.
+
+Usage:
+    python3 tools/bench_trend.py --new BENCH_6.json \
+        --baseline-dir baseline [--max-ratio 1.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load(path: pathlib.Path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def benches(doc: dict) -> dict[str, float]:
+    return {b["name"]: float(b["ns_per_op"]) for b in doc.get("benches", [])}
+
+
+def find_baseline(dirpath: pathlib.Path, new_path: pathlib.Path) -> pathlib.Path | None:
+    """Newest BENCH_*.json under ``dirpath`` (highest "pr"), excluding
+    the file under test itself."""
+    best, best_pr = None, -1
+    for cand in sorted(dirpath.rglob("BENCH_*.json")):
+        if cand.resolve() == new_path.resolve():
+            continue
+        try:
+            pr = int(load(cand).get("pr", 0))
+        except (OSError, ValueError, json.JSONDecodeError):
+            continue
+        if pr > best_pr:
+            best, best_pr = cand, pr
+    return best
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--new", required=True, type=pathlib.Path,
+                    help="bench JSON produced by this checkout")
+    ap.add_argument("--baseline-dir", required=True, type=pathlib.Path,
+                    help="directory holding previous BENCH_*.json artifacts")
+    ap.add_argument("--max-ratio", type=float, default=1.25,
+                    help="fail when new/old ns_per_op exceeds this (default 1.25)")
+    args = ap.parse_args()
+
+    if not args.new.exists():
+        print(f"error: {args.new} not found — run `make bench-json` first")
+        return 2
+    new_doc = load(args.new)
+    if not args.baseline_dir.is_dir():
+        print(f"no baseline directory {args.baseline_dir} — trend gate skipped")
+        return 0
+    base_path = find_baseline(args.baseline_dir, args.new)
+    if base_path is None:
+        print(f"no BENCH_*.json under {args.baseline_dir} — trend gate skipped")
+        return 0
+    base_doc = load(base_path)
+
+    new_b, old_b = benches(new_doc), benches(base_doc)
+    print(f"baseline: {base_path} (pr {base_doc.get('pr', '?')}, "
+          f"mode {base_doc.get('mode', '?')}) vs new pr {new_doc.get('pr', '?')} "
+          f"(mode {new_doc.get('mode', '?')})")
+    if new_doc.get("mode") != base_doc.get("mode"):
+        print("mode mismatch (smoke vs full) — ns/op not comparable, trend gate skipped")
+        return 0
+
+    regressions = []
+    for name in sorted(new_b):
+        if name not in old_b:
+            print(f"  {name:<32} NEW        {new_b[name]:>12.3f} ns/op")
+            continue
+        ratio = new_b[name] / old_b[name] if old_b[name] > 0 else float("inf")
+        flag = "REGRESSED" if ratio > args.max_ratio else "ok"
+        print(f"  {name:<32} {flag:<10} {new_b[name]:>12.3f} ns/op "
+              f"(was {old_b[name]:.3f}, ratio {ratio:.2f})")
+        if ratio > args.max_ratio:
+            regressions.append((name, ratio))
+    for name in sorted(set(old_b) - set(new_b)):
+        print(f"  {name:<32} RETIRED    (was {old_b[name]:.3f} ns/op)")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} bench(es) regressed beyond "
+              f"{args.max_ratio:.2f}x:")
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x")
+        return 1
+    print(f"\nOK: no ns/op regression beyond {args.max_ratio:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
