@@ -1,10 +1,11 @@
 //! Machine-readable perf trajectory: a smoke-scale run of the headline
-//! benchmarks (PR-5 kernels plus the PR-6 GEMM workload), written as
-//! JSON to `BENCH_6.json` at the repo root (override with
-//! `BENCH_OUT=/path`). Runs in seconds so CI can execute it on every
-//! PR — set `BENCH_FULL=1` for paper-scale vector counts.
-//! `tools/bench_trend.py` diffs this file against the previous PR's
-//! artifact and fails CI on large ns/op regressions.
+//! benchmarks (PR-5 kernels, the PR-6 GEMM workload, and the PR-7
+//! WL=12/16 compiled quadrant/row-table kernels), written as JSON to
+//! `BENCH_7.json` at the repo root (override with `BENCH_OUT=/path`).
+//! Runs in seconds so CI can execute it on every PR — set
+//! `BENCH_FULL=1` for paper-scale vector counts. `tools/bench_trend.py`
+//! diffs this file against the previous PR's artifact and fails CI on
+//! large ns/op regressions.
 //!
 //! Self-contained on purpose (no `include!("harness.rs")`): it wants
 //! structured results, not console lines, and pulling the shared
@@ -12,8 +13,11 @@
 
 use std::time::Instant;
 
-use bbm::arith::{BbmType, BrokenBooth, MultKind};
-use bbm::backend::{GemmRequest, MomentsRequest, SWEEP_BATCH};
+use bbm::arith::{compiled_kernel, BbmType, BrokenBooth, MultKind, Multiplier};
+use bbm::backend::{
+    Backend, FirRequest, GemmRequest, MomentsRequest, NativeBackend, FIR_BLOCK, FIR_TAPS,
+    SWEEP_BATCH,
+};
 use bbm::coordinator::DspServer;
 use bbm::error::{exhaustive_stats, SweepConfig};
 use bbm::gate::builders::build_broken_booth;
@@ -21,7 +25,7 @@ use bbm::gate::ir::Levelized;
 use bbm::gate::{run_random, run_random_sharded};
 use bbm::nn::gemm::{gemm, gemm_digit};
 use bbm::nn::GemmDims;
-use bbm::testkit::DigitLevel;
+use bbm::testkit::{draw_operands, DigitLevel};
 use bbm::util::Pcg64;
 
 /// Minimum over `iters` timed runs after one warm-up, in seconds.
@@ -37,7 +41,7 @@ fn time_min<F: FnMut()>(iters: u32, mut f: F) -> f64 {
 }
 
 struct Entry {
-    name: &'static str,
+    name: String,
     secs: f64,
     items: f64,
 }
@@ -66,8 +70,8 @@ fn main() {
     let digit = time_min(iters, || {
         std::hint::black_box(exhaustive_stats(&DigitLevel(m8), one_thread).stats.mse());
     });
-    entries.push(Entry { name: "exhaustive_wl8_lut", secs: lut, items: pairs8 });
-    entries.push(Entry { name: "exhaustive_wl8_digit", secs: digit, items: pairs8 });
+    entries.push(Entry { name: "exhaustive_wl8_lut".into(), secs: lut, items: pairs8 });
+    entries.push(Entry { name: "exhaustive_wl8_digit".into(), secs: digit, items: pairs8 });
 
     // 2. Executor-pool scaling: pipelined WL=12 moments batches.
     let mut rng = Pcg64::seeded(5);
@@ -97,8 +101,8 @@ fn main() {
     let items = (jobs * SWEEP_BATCH) as f64;
     let pool1 = pool_secs(1);
     let pool4 = pool_secs(4);
-    entries.push(Entry { name: "pool_moments_1worker", secs: pool1, items });
-    entries.push(Entry { name: "pool_moments_4workers", secs: pool4, items });
+    entries.push(Entry { name: "pool_moments_1worker".into(), secs: pool1, items });
+    entries.push(Entry { name: "pool_moments_4workers".into(), secs: pool4, items });
 
     // 3. Gate activity run: 64-lane single-thread vs blocked sharded.
     let nl = build_broken_booth(8, 0, BbmType::Type0);
@@ -110,8 +114,12 @@ fn main() {
     let sharded = time_min(3, || {
         std::hint::black_box(run_random_sharded(&prog, nvec, 1, 0).total_toggles());
     });
-    entries.push(Entry { name: "gate_sim_64lane", secs: base, items: nvec as f64 });
-    entries.push(Entry { name: "gate_sim_blocked_sharded", secs: sharded, items: nvec as f64 });
+    entries.push(Entry { name: "gate_sim_64lane".into(), secs: base, items: nvec as f64 });
+    entries.push(Entry {
+        name: "gate_sim_blocked_sharded".into(),
+        secs: sharded,
+        items: nvec as f64,
+    });
 
     // 4. Approximate GEMM tiles (WL=8): memoized LUT kernel vs the
     // digit-level oracle, one in-process blocked multiply each.
@@ -127,8 +135,8 @@ fn main() {
     let gdigit = time_min(3, || {
         std::hint::black_box(gemm_digit(MultKind::BbmType0, 8, 5, dims, &ga, &gb)[0]);
     });
-    entries.push(Entry { name: "gemm_wl8_lut", secs: glut, items: macs });
-    entries.push(Entry { name: "gemm_wl8_digit", secs: gdigit, items: macs });
+    entries.push(Entry { name: "gemm_wl8_lut".into(), secs: glut, items: macs });
+    entries.push(Entry { name: "gemm_wl8_digit".into(), secs: gdigit, items: macs });
 
     // 5. Served GEMM: the coordinator's row-tiled dispatch, 1 worker vs
     // a 4-worker pool (bit-identical results, measured wall clock).
@@ -156,14 +164,141 @@ fn main() {
     };
     let gemm1 = gemm_secs(1);
     let gemm4 = gemm_secs(4);
-    entries.push(Entry { name: "gemm_served_1worker", secs: gemm1, items: macs });
-    entries.push(Entry { name: "gemm_served_4workers", secs: gemm4, items: macs });
+    entries.push(Entry { name: "gemm_served_1worker".into(), secs: gemm1, items: macs });
+    entries.push(Entry { name: "gemm_served_4workers".into(), secs: gemm4, items: macs });
+
+    // 6. WL > 8 compiled kernels (PR 7): the quadrant (BAM) and
+    // Booth-row-table (Type0) kernels vs the digit oracle at the
+    // paper's 12- and 16-bit design points, for each served workload
+    // shape. time_min's warm-up call absorbs the one-off kernel
+    // compile, so the ns/op rows measure steady-state lookups.
+    let mut ratios: Vec<(String, f64)> = vec![
+        ("lut_vs_digit_exhaustive_wl8".into(), digit / lut),
+        ("pool4_vs_pool1_moments".into(), pool1 / pool4),
+        ("blocked_sharded_vs_64lane_sim".into(), base / sharded),
+        ("gemm_lut_vs_digit_wl8".into(), gdigit / glut),
+        ("gemm_pool4_vs_pool1".into(), gemm1 / gemm4),
+    ];
+    let backend = NativeBackend::new();
+    let lanes = if full { 1usize << 20 } else { 1 << 16 };
+    for (wl, level) in [(12u32, 9u32), (16, 13)] {
+        // Batched multiply — BAM exercises the quadrant composition.
+        let (bx, by) = draw_operands(MultKind::Bam, wl, lanes, 31 + wl as u64);
+        let quad = compiled_kernel(MultKind::Bam, wl, level).expect("quadrant kernel");
+        let bam_digit = MultKind::Bam.build(wl, level);
+        let mul_kern = time_min(iters, || {
+            let mut acc = 0i64;
+            for (&a, &b) in bx.iter().zip(&by) {
+                acc = acc.wrapping_add(quad.lookup(a as i64, b as i64));
+            }
+            std::hint::black_box(acc);
+        });
+        let mul_digit = time_min(3, || {
+            let mut acc = 0i64;
+            for (&a, &b) in bx.iter().zip(&by) {
+                acc = acc.wrapping_add(bam_digit.multiply(a as i64, b as i64));
+            }
+            std::hint::black_box(acc);
+        });
+        entries.push(Entry {
+            name: format!("multiply_wl{wl}_kernel"),
+            secs: mul_kern,
+            items: lanes as f64,
+        });
+        entries.push(Entry {
+            name: format!("multiply_wl{wl}_digit"),
+            secs: mul_digit,
+            items: lanes as f64,
+        });
+        ratios.push((format!("multiply_kernel_vs_digit_wl{wl}"), mul_digit / mul_kern));
+
+        // Moments fold — Type0 exercises the Booth row tables; the
+        // backend endpoint is the kernel side, a digit fold of the
+        // same lanes the oracle side.
+        let (mx, my) = draw_operands(MultKind::BbmType0, wl, lanes, 47 + wl as u64);
+        let mreq = MomentsRequest {
+            kind: MultKind::BbmType0,
+            wl,
+            level,
+            x: mx.clone(),
+            y: my.clone(),
+        };
+        let mom_kern = time_min(iters, || {
+            std::hint::black_box(backend.moments(&mreq).unwrap().sum);
+        });
+        let t0_digit = MultKind::BbmType0.build(wl, level);
+        let mom_digit = time_min(3, || {
+            let mut sum = 0i64;
+            for (&a, &b) in mx.iter().zip(&my) {
+                sum += t0_digit.multiply(a as i64, b as i64) - a as i64 * b as i64;
+            }
+            std::hint::black_box(sum);
+        });
+        entries.push(Entry {
+            name: format!("moments_wl{wl}_kernel"),
+            secs: mom_kern,
+            items: lanes as f64,
+        });
+        entries.push(Entry {
+            name: format!("moments_wl{wl}_digit"),
+            secs: mom_digit,
+            items: lanes as f64,
+        });
+        ratios.push((format!("moments_kernel_vs_digit_wl{wl}"), mom_digit / mom_kern));
+
+        // Streaming FIR block (Type0 tap products at `level`).
+        let mut frng = Pcg64::seeded(wl as u64 + 90);
+        let fx: Vec<i32> =
+            (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| frng.operand(wl) as i32).collect();
+        let fh: Vec<i32> = (0..FIR_TAPS).map(|_| frng.operand(wl) as i32).collect();
+        let freq = FirRequest { wl, x: fx.clone(), h: fh.clone(), vbl: level };
+        let fir_kern = time_min(iters, || {
+            std::hint::black_box(backend.fir(&freq).unwrap().y[0]);
+        });
+        let fir_digit = time_min(3, || {
+            let mut acc = 0i64;
+            for n in 0..FIR_BLOCK {
+                for (k, &c) in fh.iter().enumerate() {
+                    acc = acc.wrapping_add(
+                        t0_digit.multiply(fx[n + FIR_TAPS - 1 - k] as i64, c as i64),
+                    );
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        let fir_macs = (FIR_BLOCK * FIR_TAPS) as f64;
+        entries.push(Entry {
+            name: format!("fir_wl{wl}_kernel"),
+            secs: fir_kern,
+            items: fir_macs,
+        });
+        entries.push(Entry {
+            name: format!("fir_wl{wl}_digit"),
+            secs: fir_digit,
+            items: fir_macs,
+        });
+        ratios.push((format!("fir_kernel_vs_digit_wl{wl}"), fir_digit / fir_kern));
+
+        // GEMM tile (Type0).
+        let mut wrng = Pcg64::seeded(wl as u64 + 91);
+        let wa: Vec<i32> = (0..gm * gk).map(|_| wrng.operand(wl) as i32).collect();
+        let wb: Vec<i32> = (0..gk * gn).map(|_| wrng.operand(wl) as i32).collect();
+        let g_kern = time_min(iters, || {
+            std::hint::black_box(gemm(MultKind::BbmType0, wl, level, dims, &wa, &wb)[0]);
+        });
+        let g_digit = time_min(3, || {
+            std::hint::black_box(gemm_digit(MultKind::BbmType0, wl, level, dims, &wa, &wb)[0]);
+        });
+        entries.push(Entry { name: format!("gemm_wl{wl}_kernel"), secs: g_kern, items: macs });
+        entries.push(Entry { name: format!("gemm_wl{wl}_digit"), secs: g_digit, items: macs });
+        ratios.push((format!("gemm_kernel_vs_digit_wl{wl}"), g_digit / g_kern));
+    }
 
     // Emit JSON (no serde offline; the shape is flat enough to format
     // by hand).
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 6,\n");
+    json.push_str("  \"pr\": 7,\n");
     json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     json.push_str("  \"benches\": [\n");
     for (i, e) in entries.iter().enumerate() {
@@ -177,22 +312,17 @@ fn main() {
     }
     json.push_str("  ],\n");
     json.push_str("  \"ratios\": {\n");
-    json.push_str(&format!(
-        "    \"lut_vs_digit_exhaustive_wl8\": {:.3},\n",
-        digit / lut
-    ));
-    json.push_str(&format!("    \"pool4_vs_pool1_moments\": {:.3},\n", pool1 / pool4));
-    json.push_str(&format!(
-        "    \"blocked_sharded_vs_64lane_sim\": {:.3},\n",
-        base / sharded
-    ));
-    json.push_str(&format!("    \"gemm_lut_vs_digit_wl8\": {:.3},\n", gdigit / glut));
-    json.push_str(&format!("    \"gemm_pool4_vs_pool1\": {:.3}\n", gemm1 / gemm4));
+    for (i, (name, v)) in ratios.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{name}\": {v:.3}{}\n",
+            if i + 1 < ratios.len() { "," } else { "" }
+        ));
+    }
     json.push_str("  }\n");
     json.push_str("}\n");
 
     let path = std::env::var("BENCH_OUT")
-        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json").to_string());
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json").to_string());
     std::fs::write(&path, &json).expect("write bench json");
     println!("{json}");
     println!("wrote {path}");

@@ -140,6 +140,37 @@ impl BrokenBooth {
         }
         self.sign_extend(acc & pmask)
     }
+
+    /// The masked P-bit field value row `row` contributes for Booth
+    /// triple `t = (b_{2i+1} << 2) | (b_{2i} << 1) | b_{2i-1}` applied
+    /// to multiplicand `x` — exactly the term [`Self::approx_product`]
+    /// accumulates for that row. Exposed so the WL > 8 row-table
+    /// kernels (`arith::kernel`) compile each `2^3 × 2^WL` recode table
+    /// from the same formula instead of duplicating it.
+    #[inline]
+    pub(crate) fn row_field(&self, x: i64, row: usize, triple: u8) -> u64 {
+        let d = ((triple & 1) + ((triple >> 1) & 1)) as i8 - 2 * ((triple >> 2) & 1) as i8;
+        let shift = 2 * row as u32;
+        let vmask = self.vbl_mask();
+        match self.ty {
+            BbmType::Type0 => {
+                let v = ((d as i64) * x) as u64;
+                (v << shift) & vmask
+            }
+            BbmType::Type1 => {
+                if d >= 0 {
+                    let v = ((d as i64) * x) as u64;
+                    (v << shift) & vmask
+                } else {
+                    let m = ((-(d as i64)) * x) as u64;
+                    let hi = (self.pmask() >> shift) << shift;
+                    let dots = !(m << shift) & hi & vmask;
+                    let s = if shift >= self.vbl { 1u64 << shift } else { 0 };
+                    dots.wrapping_add(s)
+                }
+            }
+        }
+    }
 }
 
 /// All-ones mask of the low `bits` bits.
@@ -344,6 +375,29 @@ mod tests {
         for _ in 0..1000 {
             let (x, y) = (rng.operand(8), rng.operand(8));
             assert_eq!(m.multiply(x, y), 0);
+        }
+    }
+
+    #[test]
+    fn row_field_sums_to_approx_product_sampled_wl10() {
+        // `row_field` is the row-table compiler's entry point; summing it
+        // over the Booth triples of `y` must reproduce `approx_product`.
+        let mut rng = Pcg64::seeded(6);
+        for ty in [BbmType::Type0, BbmType::Type1] {
+            for vbl in [0u32, 3, 7, 12, 20] {
+                let m = BrokenBooth::new(10, vbl, ty);
+                for _ in 0..2_000 {
+                    let (x, y) = (rng.operand(10), rng.operand(10));
+                    let yu2 = ((y as u64) & 0x3FF) << 1;
+                    let mut acc = 0u64;
+                    for i in 0..5usize {
+                        let t = ((yu2 >> (2 * i)) & 7) as u8;
+                        acc = acc.wrapping_add(m.row_field(x, i, t));
+                    }
+                    let got = m.sign_extend(acc & m.pmask());
+                    assert_eq!(got, m.approx_product(x, y), "{ty} vbl={vbl} x={x} y={y}");
+                }
+            }
         }
     }
 

@@ -1,0 +1,709 @@
+//! Compiled multiplier kernels for the paper's large word lengths
+//! (`8 < WL ≤ 16`), plus the process-wide byte-budgeted kernel cache
+//! shared with the WL ≤ 8 [`ProductTable`] LUTs.
+//!
+//! A flat `2^WL × 2^WL` LUT stops being viable past `MAX_TABLE_WL`
+//! (WL = 12 would be 64 MiB, WL = 16 would be 16 GiB), yet Fig. 3,
+//! Tables II–IV and the 30-tap FIR of Figs. 7–8 all run at WL = 12/16.
+//! Two compiled shapes cover every family the paper sweeps there, both
+//! proven bit-identical to the digit-level oracles (exhaustively at
+//! WL = 9/10 in the tests below, dense-sampled at WL = 12/16 here and
+//! in `tests/backend_conformance.rs`):
+//!
+//! * **Quadrant composition** ([`QuadrantKernel`]) — for the
+//!   *positionally* broken unsigned schemes (BAM truncation, Kulkarni's
+//!   2×2 recursion). Splitting both operands at `h = 8` tiles the dot
+//!   diagram into four quadrants whose dots sit at global column
+//!   `c = c_q + 8·s` (`s = qx + qy ∈ {0, 1, 2}` is the quadrant's shift
+//!   group). BAM masks a dot iff `c < vbl`, i.e. iff the quadrant's own
+//!   column satisfies `c_q < vbl − 8s`; Kulkarni approximates a 2×2
+//!   block iff its LHS `2(c+r)+3 < k`, i.e. `2(c_q+r_q)+3 < k − 8s`.
+//!   Either way each quadrant is *exactly* an 8-bit instance of the
+//!   same family at the clamped sub-level `min(max(level − 8s, 0), 16)`
+//!   (≥ 16 masks every sub-dot/block, so the clamp is lossless), and a
+//!   WL ≤ 16 product is four LUT gathers plus shifted exact i64 adds:
+//!   `t0[xl,yl] + ((t1[xl,yh] + t1[xh,yl]) << 8) + (t2[xh,yh] << 16)`.
+//!   The three sub-tables are ordinary memoized [`ProductTable`]s.
+//!
+//! * **Per-Booth-digit row tables** ([`BoothRowKernel`]) — for the
+//!   signed Booth families (exact, Broken-Booth Type0/Type1), whose
+//!   row-wise masking does *not* tile across operand halves (each row
+//!   spans the full product field). Row `i` of the `WL/2`-row diagram
+//!   depends only on the Booth triple `t` of `y` at position `i` and on
+//!   the full multiplicand `x`, so one `2^3 × 2^WL` recode table per
+//!   row captures it completely. Entries store the masked row field
+//!   value mod `2^P` (`P = 2·WL ≤ 32` fits `u32`); a product is `WL/2`
+//!   gathers summed in `u64` (≤ 8·(2^32−1) < 2^35, no overflow) and
+//!   sign-extended — the same exact reduction as the digit model. Each
+//!   table row is compiled from `BrokenBooth::row_field`, the oracle's
+//!   own row formula.
+//!
+//! [`CompiledKernel`] is the facade over both shapes (and over the
+//! WL ≤ 8 LUTs): `compiled_kernel(kind, wl, level)` is the single
+//! dispatch ladder — LUT ≤ 8 → compiled ≤ 16 → `None` (digit model) —
+//! used by `backend::native`, `error::sweep` and `nn::gemm`. ETM's
+//! segment selection is neither positional nor row-wise, so it stays
+//! digit-level above WL = 8 (it is outside the paper's large-WL grid).
+//!
+//! ## The kernel cache
+//!
+//! Row-table sets are big (WL = 16: 8 rows × 2^19 entries × 4 B =
+//! 16 MiB per design point), so the process-wide memoization that
+//! previously backed `product_table` alone now lives here, with **byte
+//! accounting and LRU eviction** under [`set_kernel_cache_budget`]
+//! (default 256 MiB ≈ sixteen WL = 16 row-table sets). `product_table`
+//! delegates to the same cache; [`kernel_cache_stats`] exposes
+//! entries/bytes/hits/misses/evictions. Quadrant kernels are a few
+//! hundred bytes of `Arc`s and are rebuilt on demand — only their
+//! wl = 8 sub-tables occupy budget.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::bbm::{BbmType, BrokenBooth};
+use super::table::{product_table, ProductTable, MAX_TABLE_WL};
+use super::{MultKind, Multiplier};
+
+/// Largest word length served by a compiled kernel; above this the
+/// digit-level models are the only execution path (the paper's study
+/// grid stops at WL = 16).
+pub const MAX_KERNEL_WL: u32 = 16;
+
+/// Default kernel-cache byte budget: sixteen WL = 16 Booth row-table
+/// design points (the whole Table IV / Fig. 8b sweep stays resident).
+pub const DEFAULT_KERNEL_CACHE_BUDGET: usize = 256 << 20;
+
+/// Quadrant-composed kernel for the positional unsigned schemes (BAM,
+/// Kulkarni) at `8 < WL ≤ 16`: three memoized 8-bit sub-product LUTs
+/// at clamped levels, combined with shifted exact i64 adds.
+pub struct QuadrantKernel {
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    name: String,
+    /// Sub-product tables per shift group `s = qx + qy ∈ {0, 1, 2}`
+    /// (the LH and HL quadrants share `s = 1`).
+    subs: [Arc<ProductTable>; 3],
+}
+
+impl QuadrantKernel {
+    fn build(kind: MultKind, wl: u32, level: u32) -> Option<QuadrantKernel> {
+        let sub = |s: u32| {
+            let sub_level = level.saturating_sub(MAX_TABLE_WL * s).min(2 * MAX_TABLE_WL);
+            product_table(kind, MAX_TABLE_WL, sub_level)
+        };
+        Some(QuadrantKernel {
+            kind,
+            wl,
+            level,
+            name: format!("{}+quad", kind.build(wl, level).name()),
+            subs: [sub(0)?, sub(1)?, sub(2)?],
+        })
+    }
+
+    /// The composed product. Operands are the family's unsigned values
+    /// in `[0, 2^WL)`.
+    #[inline]
+    pub fn lookup(&self, x: i64, y: i64) -> i64 {
+        let h = MAX_TABLE_WL;
+        let lo = (1i64 << h) - 1;
+        let (xl, xh) = (x & lo, x >> h);
+        let (yl, yh) = (y & lo, y >> h);
+        self.subs[0].lookup(xl, yl)
+            + ((self.subs[1].lookup(xl, yh) + self.subs[1].lookup(xh, yl)) << h)
+            + (self.subs[2].lookup(xh, yh) << (2 * h))
+    }
+}
+
+/// Per-Booth-digit row-table kernel for the signed Booth families
+/// (exact, Broken-Booth Type0/Type1) at `8 < WL ≤ 16`.
+pub struct BoothRowKernel {
+    kind: MultKind,
+    wl: u32,
+    level: u32,
+    name: String,
+    /// One flat recode table per partial-product row: entry
+    /// `(t << wl) | xu` is row `i`'s masked field value (mod `2^P`,
+    /// `P = 2·WL ≤ 32`) for Booth triple `t` and the wl-bit unsigned
+    /// image `xu` of the multiplicand.
+    rows: Vec<Vec<u32>>,
+}
+
+impl BoothRowKernel {
+    fn compile(kind: MultKind, wl: u32, level: u32) -> BoothRowKernel {
+        debug_assert!(wl > MAX_TABLE_WL && wl <= MAX_KERNEL_WL && wl % 2 == 0);
+        let ty = if kind == MultKind::BbmType1 { BbmType::Type1 } else { BbmType::Type0 };
+        let model = BrokenBooth::new(wl, level, ty);
+        let side = 1usize << wl;
+        let half = (side >> 1) as i64;
+        let pmask = (1u64 << (2 * wl)) - 1;
+        let rows = (0..(wl / 2) as usize)
+            .map(|i| {
+                let mut row = vec![0u32; 8 * side];
+                for (t, chunk) in row.chunks_exact_mut(side).enumerate() {
+                    for (xu, slot) in chunk.iter_mut().enumerate() {
+                        let x = xu as i64 - if xu as i64 >= half { side as i64 } else { 0 };
+                        *slot = (model.row_field(x, i, t as u8) & pmask) as u32;
+                    }
+                }
+                row
+            })
+            .collect();
+        BoothRowKernel {
+            kind,
+            wl,
+            level,
+            name: format!("{}+rows", kind.build(wl, level).name()),
+            rows,
+        }
+    }
+
+    /// Table bytes held by this kernel (cache accounting).
+    fn bytes(&self) -> usize {
+        self.rows.iter().map(|r| r.len() * std::mem::size_of::<u32>()).sum()
+    }
+
+    /// The recoded product: one gather per row, exact u64 reduction,
+    /// sign-extended from the P-bit field — bit-identical to
+    /// `BrokenBooth::approx_product` by construction.
+    #[inline]
+    pub fn lookup(&self, x: i64, y: i64) -> i64 {
+        let wl = self.wl;
+        let mask = (1u64 << wl) - 1;
+        let xu = (x as u64 & mask) as usize;
+        // Bit 0 of `yu << 1` is the implicit y_{-1} = 0 of the first
+        // Booth triple; row i reads bits [2i, 2i+2] of the shifted word.
+        let yu2 = ((y as u64) & mask) << 1;
+        let mut acc = 0u64;
+        for (i, row) in self.rows.iter().enumerate() {
+            let t = ((yu2 >> (2 * i)) & 7) as usize;
+            acc += row[(t << wl) | xu] as u64;
+        }
+        let p = 2 * wl;
+        let v = acc & ((1u64 << p) - 1);
+        ((v << (64 - p)) as i64) >> (64 - p)
+    }
+}
+
+/// Facade over every compiled multiplier shape — the value
+/// [`compiled_kernel`] dispatches to per `(family, WL, level)`.
+#[derive(Clone)]
+pub enum CompiledKernel {
+    /// Flat product LUT (WL ≤ [`MAX_TABLE_WL`]).
+    Table(Arc<ProductTable>),
+    /// Quadrant composition (BAM / Kulkarni, 8 < WL ≤ 16).
+    Quadrant(Arc<QuadrantKernel>),
+    /// Booth row-table recode (exact / Type0 / Type1, 8 < WL ≤ 16).
+    BoothRows(Arc<BoothRowKernel>),
+}
+
+impl CompiledKernel {
+    /// The compiled product (bit-identical to the digit oracle).
+    #[inline]
+    pub fn lookup(&self, x: i64, y: i64) -> i64 {
+        match self {
+            CompiledKernel::Table(t) => t.lookup(x, y),
+            CompiledKernel::Quadrant(q) => q.lookup(x, y),
+            CompiledKernel::BoothRows(r) => r.lookup(x, y),
+        }
+    }
+
+    /// Batched multiply over parallel operand lanes — the kernel the
+    /// native backend's `MultiplyRequest` path runs on.
+    pub fn multiply_slice(&self, x: &[i32], y: &[i32]) -> Vec<i64> {
+        match self {
+            CompiledKernel::Table(t) => t.multiply_slice(x, y),
+            _ => x.iter().zip(y).map(|(&a, &b)| self.lookup(a as i64, b as i64)).collect(),
+        }
+    }
+
+    fn meta(&self) -> (MultKind, u32, u32) {
+        match self {
+            CompiledKernel::Table(t) => {
+                t.descriptor().expect("product tables always carry a descriptor")
+            }
+            CompiledKernel::Quadrant(q) => (q.kind, q.wl, q.level),
+            CompiledKernel::BoothRows(r) => (r.kind, r.wl, r.level),
+        }
+    }
+}
+
+impl Multiplier for CompiledKernel {
+    fn wl(&self) -> u32 {
+        self.meta().1
+    }
+
+    fn signed(&self) -> bool {
+        match self {
+            CompiledKernel::Table(t) => t.signed(),
+            CompiledKernel::Quadrant(_) => false,
+            CompiledKernel::BoothRows(_) => true,
+        }
+    }
+
+    fn multiply(&self, x: i64, y: i64) -> i64 {
+        self.lookup(x, y)
+    }
+
+    fn name(&self) -> String {
+        match self {
+            CompiledKernel::Table(t) => t.name(),
+            CompiledKernel::Quadrant(q) => q.name.clone(),
+            CompiledKernel::BoothRows(r) => r.name.clone(),
+        }
+    }
+
+    fn descriptor(&self) -> Option<(MultKind, u32, u32)> {
+        Some(self.meta())
+    }
+}
+
+/// The WL dispatch ladder: flat LUT at `WL ≤ 8`, quadrant/row-table
+/// kernel at `8 < WL ≤ 16`, `None` above (or for invalid parameters,
+/// or for ETM past the LUT range) — callers fall back to the
+/// digit-level model, which remains the oracle everywhere.
+pub fn compiled_kernel(kind: MultKind, wl: u32, level: u32) -> Option<CompiledKernel> {
+    if !kind.valid_params(wl, level) {
+        return None;
+    }
+    if wl <= MAX_TABLE_WL {
+        return product_table(kind, wl, level).map(CompiledKernel::Table);
+    }
+    if wl > MAX_KERNEL_WL {
+        return None;
+    }
+    match kind {
+        MultKind::Bam | MultKind::Kulkarni => {
+            QuadrantKernel::build(kind, wl, level).map(|q| CompiledKernel::Quadrant(Arc::new(q)))
+        }
+        MultKind::ExactBooth | MultKind::BbmType0 | MultKind::BbmType1 => {
+            // The exact multiplier ignores the level knob; canonicalize
+            // (as `descriptor()` does) so nominal levels share one kernel.
+            let level = if kind == MultKind::ExactBooth { 0 } else { level };
+            Some(CompiledKernel::BoothRows(cached_rows(kind, wl, level)))
+        }
+        MultKind::Etm => None,
+    }
+}
+
+/// Resolve the compiled kernel for any model that reports its study
+/// coordinates (see [`Multiplier::descriptor`]).
+pub fn kernel_for<M: Multiplier + ?Sized>(model: &M) -> Option<CompiledKernel> {
+    let (kind, wl, level) = model.descriptor()?;
+    compiled_kernel(kind, wl, level)
+}
+
+// ---------------------------------------------------------------------------
+// The process-wide byte-budgeted kernel cache.
+// ---------------------------------------------------------------------------
+
+type KernelKey = (MultKind, u32, u32);
+
+/// A cached compiled artifact. WL ≤ 8 keys only ever hold `Table`s and
+/// WL > 8 keys only ever hold `Rows`, so the keyspaces cannot collide.
+#[derive(Clone)]
+enum Cached {
+    Table(Arc<ProductTable>),
+    Rows(Arc<BoothRowKernel>),
+}
+
+impl Cached {
+    fn bytes(&self) -> usize {
+        match self {
+            Cached::Table(t) => t.side() * t.side() * std::mem::size_of::<i32>(),
+            Cached::Rows(r) => r.bytes(),
+        }
+    }
+}
+
+/// Observability snapshot of the kernel cache ([`kernel_cache_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCacheStats {
+    /// Resident compiled design points.
+    pub entries: usize,
+    /// Resident table bytes.
+    pub bytes: usize,
+    /// Current byte budget.
+    pub budget: usize,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that required a compile.
+    pub misses: u64,
+    /// Entries dropped to stay under budget.
+    pub evictions: u64,
+}
+
+/// LRU cache with byte accounting. Kept budget-bounded so sixteen
+/// WL = 16 row-table sets (plus every WL ≤ 8 LUT) can coexist but a
+/// level sweep over many large design points cannot grow unbounded.
+struct KernelCache {
+    budget: usize,
+    bytes: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    map: HashMap<KernelKey, (u64, Cached)>,
+}
+
+impl KernelCache {
+    fn new(budget: usize) -> KernelCache {
+        KernelCache {
+            budget,
+            bytes: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    fn get(&mut self, key: &KernelKey) -> Option<Cached> {
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some((stamp, v)) => {
+                *stamp = self.clock;
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert under the byte budget (evicting least-recently-used
+    /// entries as needed) and return the resident value. A racing
+    /// duplicate compile resolves first-insert-wins; an entry larger
+    /// than the whole budget is handed back uncached rather than
+    /// flushing everything for nothing.
+    fn insert(&mut self, key: KernelKey, value: Cached) -> Cached {
+        self.clock += 1;
+        if let Some((stamp, existing)) = self.map.get_mut(&key) {
+            *stamp = self.clock;
+            return existing.clone();
+        }
+        let size = value.bytes();
+        if size > self.budget {
+            return value;
+        }
+        while self.bytes + size > self.budget && !self.map.is_empty() {
+            self.evict_lru();
+        }
+        self.bytes += size;
+        self.map.insert(key, (self.clock, value.clone()));
+        value
+    }
+
+    fn evict_lru(&mut self) {
+        let oldest = self.map.iter().min_by_key(|(_, (stamp, _))| *stamp).map(|(k, _)| *k);
+        if let Some(key) = oldest {
+            if let Some((_, v)) = self.map.remove(&key) {
+                self.bytes -= v.bytes();
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn set_budget(&mut self, budget: usize) {
+        self.budget = budget;
+        while self.bytes > self.budget && !self.map.is_empty() {
+            self.evict_lru();
+        }
+    }
+
+    fn stats(&self) -> KernelCacheStats {
+        KernelCacheStats {
+            entries: self.map.len(),
+            bytes: self.bytes,
+            budget: self.budget,
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+        }
+    }
+}
+
+fn global() -> &'static Mutex<KernelCache> {
+    static CACHE: OnceLock<Mutex<KernelCache>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(KernelCache::new(DEFAULT_KERNEL_CACHE_BUDGET)))
+}
+
+/// Re-budget the process-wide kernel cache (evicting down immediately
+/// if the new budget is smaller than the resident bytes).
+pub fn set_kernel_cache_budget(bytes: usize) {
+    global().lock().expect("kernel cache poisoned").set_budget(bytes);
+}
+
+/// Snapshot the process-wide kernel-cache counters.
+pub fn kernel_cache_stats() -> KernelCacheStats {
+    global().lock().expect("kernel cache poisoned").stats()
+}
+
+/// Memoized WL ≤ 8 product LUT — the backing store of
+/// [`super::table::product_table`], which validates and canonicalizes
+/// the key before calling here.
+pub(crate) fn cached_table(kind: MultKind, wl: u32, level: u32) -> Option<Arc<ProductTable>> {
+    let key = (kind, wl, level);
+    if let Some(Cached::Table(t)) = global().lock().expect("kernel cache poisoned").get(&key) {
+        return Some(t);
+    }
+    // Compile outside the lock so distinct design points compile
+    // concurrently on a cold cache (a racing duplicate compile is
+    // harmless: the first insert wins, the loser is dropped).
+    let t = Arc::new(ProductTable::compile(kind, wl, level)?);
+    match global().lock().expect("kernel cache poisoned").insert(key, Cached::Table(t)) {
+        Cached::Table(t) => Some(t),
+        Cached::Rows(_) => unreachable!("a WL <= 8 key can never hold a row kernel"),
+    }
+}
+
+/// Memoized Booth row-table kernel (callers pass a validated,
+/// canonicalized key with `8 < wl ≤ 16`).
+fn cached_rows(kind: MultKind, wl: u32, level: u32) -> Arc<BoothRowKernel> {
+    let key = (kind, wl, level);
+    if let Some(Cached::Rows(r)) = global().lock().expect("kernel cache poisoned").get(&key) {
+        return r;
+    }
+    let r = Arc::new(BoothRowKernel::compile(kind, wl, level));
+    match global().lock().expect("kernel cache poisoned").insert(key, Cached::Rows(r)) {
+        Cached::Rows(r) => r,
+        Cached::Table(_) => unreachable!("a WL > 8 key can never hold a flat LUT"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::draw_operands;
+
+    #[test]
+    fn quadrant_matches_digit_oracle_exhaustive_wl9_bam() {
+        // BAM is valid at odd word lengths, giving an exhaustive grid
+        // (2^18 pairs) one notch past the LUT limit, for every level.
+        for vbl in 0..=18u32 {
+            let k = compiled_kernel(MultKind::Bam, 9, vbl).expect("wl=9 has a quadrant kernel");
+            let m = MultKind::Bam.build(9, vbl);
+            for x in 0..512i64 {
+                for y in 0..512i64 {
+                    assert_eq!(k.lookup(x, y), m.multiply(x, y), "vbl={vbl} x={x} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadrant_matches_digit_oracle_exhaustive_wl10_kulkarni() {
+        for klevel in [0u32, 3, 7, 8, 9, 13, 17, 22] {
+            let k = compiled_kernel(MultKind::Kulkarni, 10, klevel).unwrap();
+            let m = MultKind::Kulkarni.build(10, klevel);
+            for x in 0..1024i64 {
+                for y in 0..1024i64 {
+                    assert_eq!(k.lookup(x, y), m.multiply(x, y), "k={klevel} x={x} y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_tables_match_digit_oracle_exhaustive_wl10_both_types() {
+        for kind in [MultKind::BbmType0, MultKind::BbmType1] {
+            for vbl in [0u32, 1, 6, 11, 20] {
+                let k = compiled_kernel(kind, 10, vbl).unwrap();
+                let m = kind.build(10, vbl);
+                for x in -512i64..512 {
+                    for y in -512i64..512 {
+                        assert_eq!(
+                            k.lookup(x, y),
+                            m.multiply(x, y),
+                            "{kind} vbl={vbl} x={x} y={y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_wl12_wl16_kernels_match_oracles_all_families() {
+        // Levels chosen to bound the row-table compile footprint (five
+        // WL = 16 row kernels = 80 MiB, well under the default budget so
+        // the memoization tests below stay deterministic in-process).
+        let grid: [(MultKind, &[u32]); 5] = [
+            (MultKind::ExactBooth, &[0]),
+            (MultKind::BbmType0, &[13, 29]),
+            (MultKind::BbmType1, &[9, 21]),
+            (MultKind::Bam, &[0, 5, 11, 19, 27, 32]),
+            (MultKind::Kulkarni, &[0, 6, 14, 23, 31]),
+        ];
+        for wl in [12u32, 16] {
+            for (kind, levels) in grid {
+                for &level in levels {
+                    if !kind.valid_params(wl, level) {
+                        continue;
+                    }
+                    let k = compiled_kernel(kind, wl, level).expect("paper grid has kernels");
+                    let m = kind.build(wl, level);
+                    let (x, y) = draw_operands(kind, wl, 4096, 0x5EED ^ ((wl as u64) << 8));
+                    for (&a, &b) in x.iter().zip(&y) {
+                        assert_eq!(
+                            k.lookup(a as i64, b as i64),
+                            m.multiply(a as i64, b as i64),
+                            "{kind} wl={wl} level={level} x={a} y={b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_ladder_picks_the_expected_shape() {
+        assert!(matches!(
+            compiled_kernel(MultKind::BbmType0, 8, 5),
+            Some(CompiledKernel::Table(_))
+        ));
+        assert!(matches!(
+            compiled_kernel(MultKind::Bam, 12, 7),
+            Some(CompiledKernel::Quadrant(_))
+        ));
+        assert!(matches!(
+            compiled_kernel(MultKind::Kulkarni, 16, 9),
+            Some(CompiledKernel::Quadrant(_))
+        ));
+        assert!(matches!(
+            compiled_kernel(MultKind::BbmType1, 12, 5),
+            Some(CompiledKernel::BoothRows(_))
+        ));
+        // Above the kernel ceiling, for ETM past the LUT range, and for
+        // invalid parameters the digit model is the only path.
+        assert!(compiled_kernel(MultKind::Bam, 18, 0).is_none());
+        assert!(compiled_kernel(MultKind::Etm, 12, 5).is_none());
+        assert!(compiled_kernel(MultKind::BbmType0, 12, 25).is_none());
+        assert!(compiled_kernel(MultKind::BbmType0, 13, 5).is_none());
+    }
+
+    #[test]
+    fn exact_booth_levels_share_one_row_kernel() {
+        let a = compiled_kernel(MultKind::ExactBooth, 12, 0).unwrap();
+        let b = compiled_kernel(MultKind::ExactBooth, 12, 9).unwrap();
+        match (a, b) {
+            (CompiledKernel::BoothRows(a), CompiledKernel::BoothRows(b)) => {
+                assert!(Arc::ptr_eq(&a, &b), "nominal levels must share one cached kernel");
+                for (x, y) in [(100i64, -2000i64), (-2048, 2047), (0, -1)] {
+                    assert_eq!(a.lookup(x, y), x * y, "exact rows must be exact");
+                }
+            }
+            _ => panic!("exact booth at wl=12 must compile to row tables"),
+        }
+    }
+
+    #[test]
+    fn kernel_for_resolves_study_models_only() {
+        let m = BrokenBooth::new(12, 5, BbmType::Type0);
+        let k = kernel_for(&m).expect("wl=12 study point has a kernel");
+        assert_eq!(k.lookup(-100, 1000), m.multiply(-100, 1000));
+        assert_eq!(k.wl(), 12);
+        assert!(k.signed());
+        assert_eq!(k.descriptor(), Some((MultKind::BbmType0, 12, 5)));
+        // Off-grid models stay digit-level.
+        let bam_hbl = crate::arith::Bam::new(12, 3, 2);
+        assert!(kernel_for(&bam_hbl).is_none(), "hbl != 0 is not a MultKind point");
+    }
+
+    #[test]
+    fn multiply_slice_matches_scalar_lookup_wl12() {
+        let k = compiled_kernel(MultKind::Bam, 12, 9).unwrap();
+        let (x, y) = draw_operands(MultKind::Bam, 12, 1024, 77);
+        let p = k.multiply_slice(&x, &y);
+        for i in 0..x.len() {
+            assert_eq!(p[i], k.lookup(x[i] as i64, y[i] as i64));
+        }
+        assert_eq!(k.name(), "bam(wl=12,vbl=9,hbl=0)+quad".to_string());
+    }
+
+    // -- cache-policy tests run on private instances so they cannot
+    //    perturb (or be perturbed by) the global cache shared with the
+    //    other parallel unit tests.
+
+    fn table_entry(level: u32) -> (KernelKey, Cached) {
+        let t = Arc::new(ProductTable::compile(MultKind::Bam, 8, level).unwrap());
+        ((MultKind::Bam, 8, level), Cached::Table(t))
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_under_byte_budget() {
+        const TABLE_BYTES: usize = 256 * 256 * 4;
+        let mut c = KernelCache::new(2 * TABLE_BYTES + 1);
+        let (ka, va) = table_entry(0);
+        let (kb, vb) = table_entry(1);
+        let (kc, vc) = table_entry(2);
+        c.insert(ka, va);
+        c.insert(kb, vb);
+        assert_eq!(c.stats().bytes, 2 * TABLE_BYTES);
+        c.get(&ka); // refresh A so B is the LRU entry
+        c.insert(kc, vc);
+        let s = c.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= s.budget);
+        assert!(c.get(&ka).is_some(), "refreshed entry must survive");
+        assert!(c.get(&kb).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&kc).is_some());
+    }
+
+    #[test]
+    fn cache_serves_oversized_entries_uncached() {
+        let mut c = KernelCache::new(1000);
+        let (ka, va) = table_entry(3);
+        let got = c.insert(ka, va);
+        assert!(matches!(got, Cached::Table(_)), "the value is still served");
+        let s = c.stats();
+        assert_eq!((s.entries, s.bytes, s.evictions), (0, 0, 0));
+    }
+
+    #[test]
+    fn cache_budget_shrink_evicts_down() {
+        const TABLE_BYTES: usize = 256 * 256 * 4;
+        let mut c = KernelCache::new(4 * TABLE_BYTES);
+        for level in 0..4 {
+            let (k, v) = table_entry(level);
+            c.insert(k, v);
+        }
+        assert_eq!(c.stats().entries, 4);
+        c.set_budget(TABLE_BYTES);
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 3);
+        assert!(s.bytes <= s.budget);
+    }
+
+    #[test]
+    fn cache_insert_resolves_races_first_wins() {
+        let mut c = KernelCache::new(10 << 20);
+        let (k, v1) = table_entry(4);
+        let (_, v2) = table_entry(4);
+        let r1 = c.insert(k, v1);
+        let r2 = c.insert(k, v2); // losing duplicate compile
+        match (r1, r2) {
+            (Cached::Table(a), Cached::Table(b)) => {
+                assert!(Arc::ptr_eq(&a, &b), "both callers must see the first insert");
+            }
+            _ => panic!("table entries expected"),
+        }
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn global_cache_reports_activity() {
+        // Only monotone/bounded properties: the lib-test process shares
+        // one global cache across parallel tests.
+        let _ = compiled_kernel(MultKind::BbmType0, 10, 5).unwrap();
+        let s = kernel_cache_stats();
+        assert!(s.entries > 0);
+        assert!(s.bytes <= s.budget);
+        assert!(s.hits + s.misses > 0);
+    }
+}

@@ -15,17 +15,24 @@
 //! * Every product is an exact integer in an `i64`, so all error
 //!   arithmetic is exact.
 //!
-//! For `WL ≤ 8` the [`table`] module compiles each `(family, WL,
-//! level)` design point into a memoized flat product LUT
-//! ([`ProductTable`]); hot sweep/serving paths execute on the LUT while
-//! the digit-level models here remain the oracle (and the `WL > 8`
-//! execution path).
+//! Hot sweep/serving paths execute on compiled kernels, with the
+//! digit-level models here remaining the oracle everywhere: for
+//! `WL ≤ 8` the [`table`] module compiles each `(family, WL, level)`
+//! design point into a memoized flat product LUT ([`ProductTable`]);
+//! for `8 < WL ≤ 16` (the paper's 12/16-bit configurations) the
+//! [`kernel`] module composes quadrant LUTs (BAM/Kulkarni) or
+//! per-Booth-digit row tables (exact/Type0/Type1) behind the
+//! [`CompiledKernel`] facade. `WL > 16` — and ETM above the LUT range —
+//! always execute digit-level. Both caches share one process-wide
+//! byte-budgeted store ([`kernel_cache_stats`],
+//! [`set_kernel_cache_budget`]).
 
 pub mod adders;
 pub mod bam;
 pub mod bbm;
 pub mod booth;
 pub mod etm;
+pub mod kernel;
 pub mod kulkarni;
 pub mod table;
 
@@ -34,6 +41,10 @@ pub use bam::Bam;
 pub use bbm::{BrokenBooth, BbmType};
 pub use booth::{booth_digits, exact_booth, ExactBooth};
 pub use etm::Etm;
+pub use kernel::{
+    compiled_kernel, kernel_cache_stats, kernel_for, set_kernel_cache_budget, CompiledKernel,
+    KernelCacheStats, MAX_KERNEL_WL,
+};
 pub use kulkarni::Kulkarni;
 pub use table::{product_table, table_for, ProductTable, MAX_TABLE_WL};
 

@@ -14,20 +14,20 @@
 //!   its full operand range, so the table is bit-identical to the
 //!   oracle by construction (proved exhaustively in the tests below and
 //!   in `tests/backend_conformance.rs`).
-//! * [`product_table`] memoizes compiled tables in a process-wide
-//!   cache keyed on `(MultKind, wl, level)` — the coordinator's
-//!   executor pool and the sweep engine share one copy per design
-//!   point.
+//! * [`product_table`] memoizes compiled tables in the process-wide
+//!   byte-budgeted kernel cache (`arith::kernel`) keyed on
+//!   `(MultKind, wl, level)` — the coordinator's executor pool and the
+//!   sweep engine share one copy per design point.
 //! * [`table_for`] resolves a table from any [`Multiplier`] that
 //!   reports a study [`Multiplier::descriptor`]; models outside the
 //!   study grid (e.g. BAM with a nonzero HBL) stay digit-level.
 //!
-//! `WL > MAX_TABLE_WL` always falls back to the digit-level model: a
-//! WL=10 table would already be 4 MiB per design point and the paper's
-//! larger word lengths (12/16) are far past cache-resident sizes.
+//! `WL > MAX_TABLE_WL` is *not* flat-LUT territory (a WL=10 table
+//! would already be 4 MiB per design point, WL=16 would be 16 GiB);
+//! the paper's 12/16-bit configurations are served by the composed
+//! kernels in `arith::kernel` instead.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::Arc;
 
 use super::{MultKind, Multiplier};
 
@@ -145,17 +145,13 @@ impl Multiplier for ProductTable {
     }
 }
 
-type TableKey = (MultKind, u32, u32);
-
-fn cache() -> &'static Mutex<HashMap<TableKey, Arc<ProductTable>>> {
-    static CACHE: OnceLock<Mutex<HashMap<TableKey, Arc<ProductTable>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
-}
-
-/// Memoized process-wide kernel cache: compile once per `(family, wl,
+/// Memoized process-wide product LUTs: compile once per `(family, wl,
 /// level)`, share the `Arc` with every sweep thread and executor-pool
 /// worker. `None` when the design point has no LUT (wl too large or
-/// invalid parameters) — callers fall back to the digit-level model.
+/// invalid parameters) — callers fall back to the composed kernels
+/// (`arith::kernel::compiled_kernel`) or the digit-level model. The
+/// backing store is the byte-budgeted LRU cache in `arith::kernel`,
+/// shared with the WL > 8 row-table kernels.
 pub fn product_table(kind: MultKind, wl: u32, level: u32) -> Option<Arc<ProductTable>> {
     if wl > MAX_TABLE_WL || !kind.valid_params(wl, level) {
         return None;
@@ -164,16 +160,7 @@ pub fn product_table(kind: MultKind, wl: u32, level: u32) -> Option<Arc<ProductT
     // (as `descriptor()` does) so requests at different nominal levels
     // share one table instead of compiling duplicates.
     let level = if kind == MultKind::ExactBooth { 0 } else { level };
-    if let Some(t) = cache().lock().expect("product-table cache poisoned").get(&(kind, wl, level))
-    {
-        return Some(Arc::clone(t));
-    }
-    // Compile outside the lock so distinct design points compile
-    // concurrently on a cold cache (a racing duplicate compile is
-    // harmless: first insert wins, the loser is dropped).
-    let t = Arc::new(ProductTable::compile(kind, wl, level)?);
-    let mut map = cache().lock().expect("product-table cache poisoned");
-    Some(Arc::clone(map.entry((kind, wl, level)).or_insert(t)))
+    super::kernel::cached_table(kind, wl, level)
 }
 
 /// Resolve the compiled kernel for any model that reports its study

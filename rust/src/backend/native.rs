@@ -2,11 +2,13 @@
 //! [`crate::arith`] oracles, no external dependencies.
 //!
 //! Each request resolves its multiplier *kernel* once and streams every
-//! operand lane through it in flat loops. For `WL ≤ 8` the kernel is a
-//! compiled [`crate::arith::ProductTable`] from the process-wide
-//! memoized cache (one indexed load per lane instead of a digit-level
-//! recoding); larger word lengths build the digit-level oracle, which
-//! computes the identical function (the LUT is compiled *from* it).
+//! operand lane through it in flat loops. For `WL ≤ 16` the kernel is a
+//! [`crate::arith::CompiledKernel`] from the process-wide byte-budgeted
+//! cache — a flat [`crate::arith::ProductTable`] LUT at `WL ≤ 8`, a
+//! quadrant-composed or Booth-row-table kernel at `8 < WL ≤ 16` (the
+//! paper's 12/16-bit configurations); larger word lengths build the
+//! digit-level oracle, which computes the identical function everywhere
+//! (the kernels are compiled *from* it).
 //! The moments reduction accumulates Σerr and Σerr² exactly in `i128`,
 //! so no chunking is ever needed for correctness. (The PJRT artifacts'
 //! per-[`super::SWEEP_BATCH`]-chunk `f64` contract is strictly looser:
@@ -15,7 +17,7 @@
 //! to send [`super::SWEEP_BATCH`]-sized chunks because that is what the
 //! PJRT engine requires.
 
-use crate::arith::{product_table, Multiplier, MultKind};
+use crate::arith::{compiled_kernel, Multiplier, MultKind};
 use crate::gate;
 
 use super::{
@@ -45,8 +47,8 @@ impl Backend for NativeBackend {
         validate_pair(&req.x, &req.y, req.wl)?;
         validate_family(req.kind, req.wl, req.level)?;
         validate_operands(req.kind, req.wl, &req.x, &req.y)?;
-        let p = match product_table(req.kind, req.wl, req.level) {
-            Some(t) => t.multiply_slice(&req.x, &req.y),
+        let p = match compiled_kernel(req.kind, req.wl, req.level) {
+            Some(k) => k.multiply_slice(&req.x, &req.y),
             None => {
                 let m = req.kind.build(req.wl, req.level);
                 req.x
@@ -78,11 +80,11 @@ impl Backend for NativeBackend {
                     min = e;
                 }
             };
-            match product_table(req.kind, req.wl, req.level) {
-                Some(t) => {
+            match compiled_kernel(req.kind, req.wl, req.level) {
+                Some(k) => {
                     for (&x, &y) in req.x.iter().zip(&req.y) {
                         let (x, y) = (x as i64, y as i64);
-                        fold(t.lookup(x, y) - x * y);
+                        fold(k.lookup(x, y) - x * y);
                     }
                 }
                 None => {
@@ -109,8 +111,8 @@ impl Backend for NativeBackend {
         // filters. Same operand order as the Pallas kernel and the
         // behavioural FixedFilter: multiply(sample, tap).
         let out_len = req.x.len() - FIR_TAPS + 1;
-        let y = match product_table(MultKind::BbmType0, req.wl, req.vbl) {
-            Some(t) => fir_accumulate(&req.x, &req.h, out_len, |x, h| t.lookup(x, h)),
+        let y = match compiled_kernel(MultKind::BbmType0, req.wl, req.vbl) {
+            Some(k) => fir_accumulate(&req.x, &req.h, out_len, |x, h| k.lookup(x, h)),
             None => {
                 let m = MultKind::BbmType0.build(req.wl, req.vbl);
                 fir_accumulate(&req.x, &req.h, out_len, |x, h| m.multiply(x, h))

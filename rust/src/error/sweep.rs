@@ -1,17 +1,19 @@
 //! Sharded exhaustive / randomized error sweeps.
 //!
-//! `WL ≤ 8` models that report a study descriptor execute on the
-//! memoized compiled kernels of [`crate::arith::table`]: the exhaustive
-//! paths regenerate their statistics from one flat LUT scan (the whole
-//! operand square is at most 64 Ki entries), and the randomized sweep
-//! replaces each digit-level recoding with an indexed load. All
+//! Models that report a study descriptor execute on the memoized
+//! compiled kernels of [`crate::arith`]: `WL ≤ 8` exhaustive paths
+//! regenerate their statistics from one flat LUT scan (the whole
+//! operand square is at most 64 Ki entries), the threaded paths route
+//! each product through the `8 < WL ≤ 16` quadrant/row-table kernels
+//! ([`crate::arith::compiled_kernel`]), and the randomized sweep
+//! replaces each digit-level recoding with indexed loads. All
 //! accumulators are exact integers, so every path produces bit-identical
 //! statistics to the digit-level engine it replaces.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::arith::{table, Multiplier};
+use crate::arith::{kernel_for, table, Multiplier};
 use crate::util::stats::{ErrorStats, Histogram};
 use crate::util::Pcg64;
 
@@ -73,6 +75,9 @@ pub fn exhaustive_stats<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> S
         }
         return SweepResult { name: mult.name(), wl: mult.wl(), pairs: span * span, stats };
     }
+    // WL > 8 study models still get a compiled kernel (quadrant or row
+    // tables) inside the threaded fan-out; off-grid models stay digit.
+    let kern = kernel_for(mult);
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = cfg.resolved_threads();
     let chunk = cfg.resolved_chunk(span, nthreads);
@@ -81,6 +86,7 @@ pub fn exhaustive_stats<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> S
         let mut handles = Vec::new();
         for _ in 0..nthreads {
             let next = Arc::clone(&next);
+            let kern = &kern;
             handles.push(scope.spawn(move || {
                 let mut local = ErrorStats::new();
                 loop {
@@ -92,7 +98,11 @@ pub fn exhaustive_stats<M: Multiplier + ?Sized>(mult: &M, cfg: SweepConfig) -> S
                     for xi in start..end {
                         let x = lo + xi as i64;
                         for y in lo..=hi {
-                            local.push(mult.multiply(x, y) - x * y);
+                            let p = match kern {
+                                Some(k) => k.lookup(x, y),
+                                None => mult.multiply(x, y),
+                            };
+                            local.push(p - x * y);
                         }
                     }
                 }
@@ -139,6 +149,7 @@ pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
         }
         return h;
     }
+    let kern = kernel_for(mult);
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = cfg.resolved_threads();
     let chunk = cfg.resolved_chunk(span, nthreads);
@@ -147,6 +158,7 @@ pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
         let mut handles = Vec::new();
         for _ in 0..nthreads {
             let next = Arc::clone(&next);
+            let kern = &kern;
             handles.push(scope.spawn(move || {
                 let mut local = Histogram::new(bins, scale);
                 loop {
@@ -158,7 +170,11 @@ pub fn exhaustive_histogram<M: Multiplier + ?Sized>(
                     for xi in start..end {
                         let x = lo + xi as i64;
                         for y in lo..=hi {
-                            local.push(mult.multiply(x, y) - x * y);
+                            let p = match kern {
+                                Some(k) => k.lookup(x, y),
+                                None => mult.multiply(x, y),
+                            };
+                            local.push(p - x * y);
                         }
                     }
                 }
@@ -195,9 +211,10 @@ pub fn random_stats<M: Multiplier + ?Sized>(mult: &M, n: u64, seed: u64) -> Swee
         })
         .collect();
     let (lo, hi) = mult.operand_range();
-    // Compiled kernel when available (identical products by
-    // construction, so the drawn streams and statistics are unchanged).
-    let lut = table::table_for(mult);
+    // Compiled kernel when available — flat LUT at WL ≤ 8, quadrant or
+    // row tables up to WL = 16 (identical products by construction, so
+    // the drawn streams and statistics are unchanged).
+    let lut = kernel_for(mult);
     let next = Arc::new(AtomicU64::new(0));
     let nthreads = std::thread::available_parallelism()
         .map(|t| t.get())
@@ -314,6 +331,29 @@ mod tests {
         assert_eq!(hf.bins, hs.bins);
         let rf = random_stats(&m, 5_000, 9);
         let rs = random_stats(&DigitLevel(m), 5_000, 9);
+        assert_eq!(rf.stats.sum, rs.stats.sum);
+        assert_eq!(rf.stats.sum_sq, rs.stats.sum_sq);
+        assert_eq!(rf.stats.min, rs.stats.min);
+    }
+
+    #[test]
+    fn kernel_path_bit_identical_to_digit_path_wl10_wl12() {
+        // The threaded exhaustive loop resolves a WL > 8 compiled
+        // kernel; `DigitLevel` hides the descriptor to force the digit
+        // oracle on the baseline side.
+        let m = BrokenBooth::new(10, 5, BbmType::Type0);
+        let fast = exhaustive_stats(&m, SweepConfig::default());
+        let slow = exhaustive_stats(&DigitLevel(m), SweepConfig::default());
+        assert_eq!(fast.stats.n, slow.stats.n);
+        assert_eq!(fast.stats.sum, slow.stats.sum);
+        assert_eq!(fast.stats.sum_sq, slow.stats.sum_sq);
+        assert_eq!(fast.stats.nonzero, slow.stats.nonzero);
+        assert_eq!(fast.stats.min, slow.stats.min);
+        assert_eq!(fast.stats.max, slow.stats.max);
+        // Randomized sweep at WL = 12 through the quadrant kernel.
+        let k = crate::arith::Kulkarni::new(12, 9);
+        let rf = random_stats(&k, 20_000, 4);
+        let rs = random_stats(&DigitLevel(k), 20_000, 4);
         assert_eq!(rf.stats.sum, rs.stats.sum);
         assert_eq!(rf.stats.sum_sq, rs.stats.sum_sq);
         assert_eq!(rf.stats.min, rs.stats.min);

@@ -16,8 +16,12 @@
 //!
 //! * [`arith`] — bit-accurate integer models of every multiplier (the
 //!   oracle ground truth every other layer is checked against), plus
-//!   [`arith::table`]: memoized compiled product-LUT kernels serving
-//!   every WL ≤ 8 hot path.
+//!   the compiled-kernel tier serving every WL ≤ 16 hot path:
+//!   [`arith::table`] (flat product LUTs, WL ≤ 8) and [`arith::kernel`]
+//!   (quadrant-composed LUTs for BAM/Kulkarni and Booth-row recode
+//!   tables for exact/Type0/Type1 at 8 < WL ≤ 16, all behind the
+//!   [`arith::CompiledKernel`] facade and one byte-budgeted
+//!   process-wide cache).
 //! * [`gate`] — structural netlists compiled to a levelized IR
 //!   ([`gate::ir::Levelized`]), a 64-lane bitsliced toggle simulator
 //!   with a scalar reference oracle, power/area/timing models, and

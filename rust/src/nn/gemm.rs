@@ -2,10 +2,12 @@
 //!
 //! [`gemm`] computes `C[m×n] = A[m×k] · B[k×n]` (row-major, signed
 //! WL-bit lanes) with every scalar product routed through one multiplier
-//! design point: the memoized [`ProductTable`] LUT at
-//! `wl ≤ MAX_TABLE_WL`, the digit-level model above it. [`gemm_digit`]
-//! forces the digit path and is the oracle the LUT path is checked
-//! against bit for bit. Accumulation is exact `i64` addition —
+//! design point: a memoized [`CompiledKernel`] at `wl ≤ 16` (flat LUT
+//! at `wl ≤ 8`, quadrant/row-table kernels above — the paper's 12/16-bit
+//! configurations are kernel-speed), the digit-level model past that.
+//! [`gemm_digit`] forces the digit path and is the oracle the kernel
+//! path is checked against bit for bit. Accumulation is exact `i64`
+//! addition —
 //! commutative and associative — so any row tiling (the coordinator
 //! shards served GEMMs into [`TILE_ROWS`]-row tiles across pool workers)
 //! reproduces the untiled result exactly.
@@ -15,9 +17,7 @@
 //! magnitude of a signed WL-bit value is at most `2^(WL−1)`, inside the
 //! unsigned WL-bit operand field, so the same compiled tables serve.
 
-use std::sync::Arc;
-
-use crate::arith::{product_table, MultKind, Multiplier, ProductTable};
+use crate::arith::{compiled_kernel, CompiledKernel, MultKind, Multiplier};
 
 /// Row-tile height the coordinator shards served GEMMs at.
 pub const TILE_ROWS: usize = 32;
@@ -35,7 +35,7 @@ pub struct GemmDims {
 
 /// The scalar-product engine a GEMM runs on.
 enum Kernel {
-    Lut(Arc<ProductTable>),
+    Compiled(CompiledKernel),
     Digit(Box<dyn Multiplier>),
 }
 
@@ -43,7 +43,7 @@ impl Kernel {
     #[inline]
     fn product(&self, x: i64, y: i64) -> i64 {
         match self {
-            Kernel::Lut(table) => table.lookup(x, y),
+            Kernel::Compiled(k) => k.lookup(x, y),
             Kernel::Digit(model) => model.multiply(x, y),
         }
     }
@@ -56,15 +56,16 @@ fn family_signed(kind: MultKind) -> bool {
 }
 
 /// Approximate GEMM on the best kernel for the design point (compiled
-/// LUT at `wl ≤ 8`, digit-level model above).
+/// LUT/quadrant/row-table kernel at `wl ≤ 16`, digit-level model
+/// above).
 ///
 /// Panics when operand lengths disagree with `dims` or `(kind, wl,
 /// level)` is outside the family bounds — the served path validates
 /// first (`backend::validate_gemm`); in-process callers own the
 /// contract like they do with the `arith` constructors.
 pub fn gemm(kind: MultKind, wl: u32, level: u32, dims: GemmDims, a: &[i32], b: &[i32]) -> Vec<i64> {
-    let kernel = match product_table(kind, wl, level) {
-        Some(table) => Kernel::Lut(table),
+    let kernel = match compiled_kernel(kind, wl, level) {
+        Some(k) => Kernel::Compiled(k),
         None => Kernel::Digit(kind.build(wl, level)),
     };
     gemm_on(&kernel, family_signed(kind), dims, a, b)
@@ -186,6 +187,27 @@ mod tests {
             let top = gemm(kind, 8, level, GemmDims { m: 3, ..dims }, &a[..3 * dims.k], &b);
             let bot = gemm(kind, 8, level, GemmDims { m: 5, ..dims }, &a[3 * dims.k..], &b);
             assert_eq!(full, [top, bot].concat(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn kernel_and_digit_paths_agree_sampled_wl12_all_families() {
+        // WL = 12 runs on the quadrant/row-table kernels; ETM has no
+        // compiled shape there and exercises the digit-vs-digit no-op.
+        let dims = GemmDims { m: 12, k: 9, n: 7 };
+        let a = draw_signed(12, dims.m * dims.k, 21);
+        let b = draw_signed(12, dims.k * dims.n, 22);
+        for (kind, level) in [
+            (MultKind::ExactBooth, 0u32),
+            (MultKind::BbmType0, 9),
+            (MultKind::BbmType1, 13),
+            (MultKind::Bam, 11),
+            (MultKind::Kulkarni, 8),
+            (MultKind::Etm, 5),
+        ] {
+            let via_kernel = gemm(kind, 12, level, dims, &a, &b);
+            let via_digit = gemm_digit(kind, 12, level, dims, &a, &b);
+            assert_eq!(via_kernel, via_digit, "{kind} level={level}");
         }
     }
 

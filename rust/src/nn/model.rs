@@ -3,8 +3,10 @@
 //!
 //! Training is out of scope offline, so the network is a *matched
 //! filter* whose weights are constructed, not learned: each of the
-//! [`CLASSES`] classes gets a random ±[`CENTER_AMP`] prototype vector
-//! (drawn via [`Pcg64::split`] from the model seed); the first hidden
+//! [`CLASSES`] classes gets a random ± prototype vector (amplitudes per
+//! word length from the `design` table, WL ∈ {8, 12, 16} now that the
+//! compiled kernels make WL > 8 inference kernel-speed; drawn via
+//! [`Pcg64::split`] from the model seed); the first hidden
 //! layer correlates the input against every prototype and its negation,
 //! ReLU keeps the positive correlations, and the output layer takes
 //! prototype-minus-antiprototype differences as logits. On
@@ -31,24 +33,37 @@ pub const FEATURES: usize = 16;
 pub const CLASSES: usize = 4;
 /// Hidden width (one unit per prototype and per anti-prototype).
 pub const HIDDEN: usize = 8;
-/// Operand word length of activations and weights.
+/// Default operand word length of activations and weights.
 pub const MODEL_WL: u32 = 8;
 /// Default model (weight) seed.
 pub const MODEL_SEED: u64 = 0xB00;
 /// Default dataset seed.
 pub const DATA_SEED: u64 = 0xDA7A;
-/// Gaussian feature-noise sigma of the synthetic set.
+/// Gaussian feature-noise sigma of the synthetic set at [`MODEL_WL`].
 pub const NOISE_SIGMA: f64 = 25.0;
 
-/// Prototype amplitude (absolute feature value of a class center).
-const CENTER_AMP: i32 = 60;
-/// First-layer weight amplitude (odd, so low product columns carry
-/// information and breaking them measurably perturbs the logits).
-const W1_AMP: i32 = 29;
-/// Output-layer weight amplitude (odd, same reason).
-const W2_AMP: i32 = 51;
-/// Requantization arithmetic right-shift after the hidden layer.
-const SHIFT1: u32 = 8;
+/// Matched-filter design constants per supported word length:
+/// `(center_amp, w1_amp, w2_amp, noise_sigma)`. The prototype and
+/// weight amplitudes scale with the activation range (≈ 2^(wl−8) over
+/// the WL = 8 point, keeping the same ≈ 4σ class-separation margin);
+/// the weight amplitudes stay odd so low product columns carry
+/// information and breaking them measurably perturbs the logits. The
+/// inter-layer requantization shift is `wl` (the larger accumulators
+/// scale quadratically with the amplitudes).
+fn design(wl: u32) -> Option<(i32, i32, i32, f64)> {
+    match wl {
+        8 => Some((60, 29, 51, 25.0)),
+        12 => Some((960, 467, 819, 400.0)),
+        16 => Some((15_360, 7_471, 13_107, 6_400.0)),
+        _ => None,
+    }
+}
+
+/// The dataset noise sigma matched to `design(wl)`'s prototype
+/// amplitude (falls back to the [`MODEL_WL`] sigma off-grid).
+pub fn noise_sigma(wl: u32) -> f64 {
+    design(wl).map(|d| d.3).unwrap_or(NOISE_SIGMA)
+}
 
 /// One quantized fully-connected layer, stored as the GEMM `B` operand.
 pub struct QuantLayer {
@@ -73,15 +88,27 @@ pub struct QuantMlp {
 }
 
 impl QuantMlp {
-    /// Build the matched-filter classifier and return it together with
-    /// the class prototype vectors the dataset is drawn around.
+    /// Build the matched-filter classifier at the default [`MODEL_WL`]
+    /// and return it together with the class prototype vectors the
+    /// dataset is drawn around.
     pub fn classifier(seed: u64) -> (QuantMlp, Vec<Vec<i32>>) {
+        Self::classifier_wl(seed, MODEL_WL).expect("the default word length is on the design grid")
+    }
+
+    /// Build the matched-filter classifier at word length `wl` (8, 12
+    /// or 16 — the amplitudes come from the per-WL `design` table; the
+    /// prototype coin flips consume the same RNG stream at every WL, so
+    /// designs at different word lengths share class geometry).
+    pub fn classifier_wl(seed: u64, wl: u32) -> crate::Result<(QuantMlp, Vec<Vec<i32>>)> {
+        let Some((center_amp, w1_amp, w2_amp, _)) = design(wl) else {
+            anyhow::bail!("no matched-filter design for WL={wl} (supported: 8, 12, 16)");
+        };
         let mut root = Pcg64::seeded(seed);
         let mut crng = root.split();
         let centers: Vec<Vec<i32>> = (0..CLASSES)
             .map(|_| {
                 (0..FEATURES)
-                    .map(|_| if crng.next_u64() & 1 == 1 { CENTER_AMP } else { -CENTER_AMP })
+                    .map(|_| if crng.next_u64() & 1 == 1 { center_amp } else { -center_amp })
                     .collect()
             })
             .collect();
@@ -92,26 +119,29 @@ impl QuantMlp {
             let (proto, dir) = if h < CLASSES { (h, 1) } else { (h - CLASSES, -1) };
             for f in 0..FEATURES {
                 let sign = if centers[proto][f] > 0 { 1 } else { -1 };
-                w1[f * HIDDEN + h] = dir * sign * W1_AMP;
+                w1[f * HIDDEN + h] = dir * sign * w1_amp;
             }
         }
-        // logit c = W2_AMP · (act_c − act_{CLASSES+c}).
+        // logit c = w2_amp · (act_c − act_{CLASSES+c}).
         let mut w2 = vec![0i32; HIDDEN * CLASSES];
         for c in 0..CLASSES {
-            w2[c * CLASSES + c] = W2_AMP;
-            w2[(CLASSES + c) * CLASSES + c] = -W2_AMP;
+            w2[c * CLASSES + c] = w2_amp;
+            w2[(CLASSES + c) * CLASSES + c] = -w2_amp;
         }
         let layers = vec![
             QuantLayer {
                 w: w1,
                 in_dim: FEATURES,
                 out_dim: HIDDEN,
-                shift: SHIFT1,
+                // The hidden accumulators scale with wl (amplitudes ×
+                // activations both grow), so the requantization shift
+                // does too — `wl` recovers the WL = 8 design exactly.
+                shift: wl,
                 relu: true,
             },
             QuantLayer { w: w2, in_dim: HIDDEN, out_dim: CLASSES, shift: 0, relu: false },
         ];
-        (QuantMlp { wl: MODEL_WL, layers }, centers)
+        Ok((QuantMlp { wl, layers }, centers))
     }
 
     /// Run `batch` samples through the network with a pluggable GEMM
@@ -207,15 +237,29 @@ pub fn requantize(acc: &[i64], shift: u32, relu: bool, wl: u32) -> Vec<i32> {
         .collect()
 }
 
-/// Draw the synthetic labeled set: `samples` rows of `FEATURES` signed
-/// 8-bit features, sample `i` labeled `i % CLASSES` and drawn as its
-/// class prototype plus rounded Gaussian noise, clamped to ±127.
+/// Draw the synthetic labeled set at the default [`MODEL_WL`]: see
+/// [`synth_dataset_wl`].
 pub fn synth_dataset(
     centers: &[Vec<i32>],
     samples: usize,
     sigma: f64,
     seed: u64,
 ) -> (Vec<i32>, Vec<usize>) {
+    synth_dataset_wl(centers, samples, sigma, seed, MODEL_WL)
+}
+
+/// Draw the synthetic labeled set: `samples` rows of `FEATURES` signed
+/// `wl`-bit features, sample `i` labeled `i % CLASSES` and drawn as its
+/// class prototype plus rounded Gaussian noise, clamped to
+/// `±(2^(wl−1) − 1)`.
+pub fn synth_dataset_wl(
+    centers: &[Vec<i32>],
+    samples: usize,
+    sigma: f64,
+    seed: u64,
+    wl: u32,
+) -> (Vec<i32>, Vec<usize>) {
+    let hi = (1i64 << (wl - 1)) - 1;
     let mut rng = Pcg64::seeded(seed);
     let mut x = Vec::with_capacity(samples * FEATURES);
     let mut labels = Vec::with_capacity(samples);
@@ -224,7 +268,7 @@ pub fn synth_dataset(
         labels.push(label);
         for f in 0..FEATURES {
             let noise = (sigma * rng.gaussian()).round() as i64;
-            x.push((centers[label][f] as i64 + noise).clamp(-127, 127) as i32);
+            x.push((centers[label][f] as i64 + noise).clamp(-hi, hi) as i32);
         }
     }
     (x, labels)
@@ -304,6 +348,51 @@ mod tests {
         let acc = top1_accuracy(&broken, &labels, CLASSES);
         assert!(acc <= 0.5, "vbl=12 should collapse accuracy, got {acc}");
         assert!(logit_mse(&broken, &exact) > 0.0);
+    }
+
+    #[test]
+    fn exact_inference_classifies_at_wl12() {
+        let (mlp, centers) = QuantMlp::classifier_wl(MODEL_SEED, 12).unwrap();
+        let (x, labels) = synth_dataset_wl(&centers, 256, noise_sigma(12), DATA_SEED, 12);
+        let logits = mlp.infer(MultKind::ExactBooth, 0, &x, 256).unwrap();
+        let acc = top1_accuracy(&logits, &labels, CLASSES);
+        assert!(acc >= 0.95, "exact WL=12 top-1 accuracy {acc} below the design floor");
+    }
+
+    #[test]
+    fn kernel_and_digit_inference_bit_identical_at_wl12() {
+        let (mlp, centers) = QuantMlp::classifier_wl(MODEL_SEED, 12).unwrap();
+        let (x, _labels) = synth_dataset_wl(&centers, 64, noise_sigma(12), DATA_SEED, 12);
+        for (kind, level) in [
+            (MultKind::BbmType0, 9u32),
+            (MultKind::BbmType1, 7),
+            (MultKind::Bam, 13),
+            (MultKind::Kulkarni, 10),
+        ] {
+            let a = mlp.infer(kind, level, &x, 64).unwrap();
+            let b = mlp.infer_digit(kind, level, &x, 64).unwrap();
+            assert_eq!(a, b, "{kind} level={level}");
+        }
+    }
+
+    #[test]
+    fn full_break_collapses_to_chance_at_wl12() {
+        // VBL = 2·WL masks the whole product field: every logit is 0,
+        // ties resolve to class 0, and labels are uniform — exactly
+        // 1/CLASSES accuracy by construction.
+        let (mlp, centers) = QuantMlp::classifier_wl(MODEL_SEED, 12).unwrap();
+        let (x, labels) = synth_dataset_wl(&centers, 256, noise_sigma(12), DATA_SEED, 12);
+        let exact = mlp.infer(MultKind::ExactBooth, 0, &x, 256).unwrap();
+        let broken = mlp.infer(MultKind::BbmType0, 24, &x, 256).unwrap();
+        let acc = top1_accuracy(&broken, &labels, CLASSES);
+        assert_eq!(acc, 1.0 / CLASSES as f64, "full break must hit exact chance");
+        assert!(logit_mse(&broken, &exact) > 0.0);
+    }
+
+    #[test]
+    fn classifier_rejects_off_grid_word_lengths() {
+        assert!(QuantMlp::classifier_wl(MODEL_SEED, 10).is_err());
+        assert!(QuantMlp::classifier_wl(MODEL_SEED, 16).is_ok());
     }
 
     #[test]

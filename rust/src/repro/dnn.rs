@@ -2,8 +2,13 @@
 //! the paper's accuracy-for-power trade (Table IV / Fig. 6 analog) at
 //! the application layer, on the served approximate-GEMM workload.
 //!
-//! For every multiplier family and study level (level 0 plus the five
-//! `repro::pdp::levels_for` settings) the driver:
+//! `--wls` selects the matched-filter design points (default `8,12`;
+//! 16 is also on the grid) — WL > 8 GEMMs run on the quadrant/row-table
+//! compiled kernels rather than the flat LUT. `--families` restricts
+//! the multiplier families swept (comma-separated CLI spellings,
+//! default all six). For every word length, family and study level
+//! (level 0 plus the five `repro::pdp::levels_for` settings) the
+//! driver:
 //!
 //! 1. runs the fixed [`QuantMlp`] classifier over the synthetic labeled
 //!    set with every layer GEMM served through the coordinator
@@ -23,9 +28,7 @@
 use crate::arith::MultKind;
 use crate::backend::{BackendKind, PowerRequest};
 use crate::coordinator::DspServer;
-use crate::nn::model::{
-    self, QuantMlp, CLASSES, DATA_SEED, MODEL_SEED, MODEL_WL, NOISE_SIGMA,
-};
+use crate::nn::model::{self, QuantMlp, CLASSES, DATA_SEED, MODEL_SEED, MODEL_WL};
 use crate::util::cli::Args;
 use crate::util::report::Table;
 
@@ -74,6 +77,16 @@ pub fn dnn(args: &Args) -> anyhow::Result<()> {
     let samples = args.get_or("samples", 512usize)?;
     let nvec = args.get_or("nvec", 20_000u64)?;
     let threads = args.get_or("threads", 0usize)?;
+    let wls = args.list_or("wls", &[MODEL_WL, 12])?;
+    let families = match args.get("families") {
+        None => MultKind::ALL.to_vec(),
+        Some(spec) => spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(MultKind::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    anyhow::ensure!(!families.is_empty(), "--families selected no multiplier family");
     let backend = if args.flag("pjrt") {
         BackendKind::Pjrt
     } else {
@@ -89,56 +102,59 @@ pub fn dnn(args: &Args) -> anyhow::Result<()> {
         srv.workers()
     );
 
-    let (mlp, centers) = QuantMlp::classifier(MODEL_SEED);
-    let (x, labels) = model::synth_dataset(&centers, samples, NOISE_SIGMA, DATA_SEED);
-    let exact = mlp.infer(MultKind::ExactBooth, 0, &x, samples)?;
-    prove_bit_identity(&srv, &mlp, &x, samples)?;
+    for &wl in &wls {
+        let (mlp, centers) = QuantMlp::classifier_wl(MODEL_SEED, wl)?;
+        let (x, labels) =
+            model::synth_dataset_wl(&centers, samples, model::noise_sigma(wl), DATA_SEED, wl);
+        let exact = mlp.infer(MultKind::ExactBooth, 0, &x, samples)?;
+        prove_bit_identity(&srv, &mlp, &x, samples)?;
 
-    let mut t = Table::new(
-        &format!(
-            "DNN — quantized MLP (WL={MODEL_WL}, {samples} samples): \
-             top-1 / logit MSE vs gate-level power"
-        ),
-        &["family", "level", "top1", "logit_MSE", "P_mW", "Tmin_ps", "PDP_pJ"],
-    );
-    for kind in MultKind::ALL {
-        for level in verify_levels(kind, MODEL_WL) {
-            // Pipeline this config's Tmin characterization behind the
-            // inference GEMMs: power runs on the executor(s) while the
-            // logits come back.
-            let power = srv.submit_power(PowerRequest {
-                kind,
-                wl: MODEL_WL,
-                level,
-                constraint_ps: 0.0,
-                nvec,
-                seed: 11,
-            });
-            let logits = mlp.infer_served(&srv, kind, level, &x, samples)?;
-            let acc = model::top1_accuracy(&logits, &labels, CLASSES);
-            let mse = model::logit_mse(&logits, &exact);
-            // Families/backends without a gate-level model (ETM, PJRT)
-            // still have accuracy; their power columns stay blank.
-            let (p_mw, tmin_ps, pdp_pj) = match power.wait() {
-                Ok(r) => (
-                    format!("{:.3}", r.total_mw()),
-                    format!("{:.0}", r.delay_ps),
-                    format!("{:.3}", r.pdp_pj()),
-                ),
-                Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
-            };
-            t.row(vec![
-                kind.to_string(),
-                level.to_string(),
-                format!("{acc:.3}"),
-                format!("{mse:.3e}"),
-                p_mw,
-                tmin_ps,
-                pdp_pj,
-            ]);
+        let mut t = Table::new(
+            &format!(
+                "DNN — quantized MLP (WL={wl}, {samples} samples): \
+                 top-1 / logit MSE vs gate-level power"
+            ),
+            &["family", "level", "top1", "logit_MSE", "P_mW", "Tmin_ps", "PDP_pJ"],
+        );
+        for &kind in &families {
+            for level in verify_levels(kind, wl) {
+                // Pipeline this config's Tmin characterization behind the
+                // inference GEMMs: power runs on the executor(s) while the
+                // logits come back.
+                let power = srv.submit_power(PowerRequest {
+                    kind,
+                    wl,
+                    level,
+                    constraint_ps: 0.0,
+                    nvec,
+                    seed: 11,
+                });
+                let logits = mlp.infer_served(&srv, kind, level, &x, samples)?;
+                let acc = model::top1_accuracy(&logits, &labels, CLASSES);
+                let mse = model::logit_mse(&logits, &exact);
+                // Families/backends without a gate-level model (ETM, PJRT)
+                // still have accuracy; their power columns stay blank.
+                let (p_mw, tmin_ps, pdp_pj) = match power.wait() {
+                    Ok(r) => (
+                        format!("{:.3}", r.total_mw()),
+                        format!("{:.0}", r.delay_ps),
+                        format!("{:.3}", r.pdp_pj()),
+                    ),
+                    Err(_) => ("-".to_string(), "-".to_string(), "-".to_string()),
+                };
+                t.row(vec![
+                    kind.to_string(),
+                    level.to_string(),
+                    format!("{acc:.3}"),
+                    format!("{mse:.3e}"),
+                    p_mw,
+                    tmin_ps,
+                    pdp_pj,
+                ]);
+            }
         }
+        t.print();
     }
-    t.print();
     println!(
         "paper analog (Table IV / Fig. 6): accuracy holds at low breaking levels while \
          power falls, then collapses toward chance (top1 = {:.2})",
@@ -157,7 +173,14 @@ mod tests {
         // Tiny sample/vector counts keep the full family × level grid
         // cheap; the driver itself asserts the bit-identity proofs.
         let args = Args::parse(
-            &["--samples".into(), "64".into(), "--nvec".into(), "640".into()],
+            &[
+                "--samples".into(),
+                "64".into(),
+                "--nvec".into(),
+                "640".into(),
+                "--wls".into(),
+                "8".into(),
+            ],
             &["pjrt"],
         )
         .unwrap();
@@ -178,10 +201,46 @@ mod tests {
                 "native".into(),
                 "--threads".into(),
                 "4".into(),
+                "--wls".into(),
+                "8".into(),
             ],
             &["pjrt"],
         )
         .unwrap();
         dnn(&args).unwrap();
+    }
+
+    #[test]
+    fn dnn_runs_at_wl12_single_family() {
+        // The WL = 12 design point: inference GEMMs run on the compiled
+        // row-table kernels, and the preflight proves them bit-identical
+        // to the digit oracle and the served path on the real dataset.
+        let args = Args::parse(
+            &[
+                "--samples".into(),
+                "64".into(),
+                "--nvec".into(),
+                "320".into(),
+                "--wls".into(),
+                "12".into(),
+                "--families".into(),
+                "type0".into(),
+            ],
+            &["pjrt"],
+        )
+        .unwrap();
+        dnn(&args).unwrap();
+    }
+
+    #[test]
+    fn dnn_rejects_unknown_family_and_empty_selection() {
+        for spec in ["nope", ","] {
+            let args = Args::parse(
+                &["--families".into(), spec.into(), "--wls".into(), "8".into()],
+                &["pjrt"],
+            )
+            .unwrap();
+            assert!(dnn(&args).is_err(), "--families {spec} must be rejected");
+        }
     }
 }

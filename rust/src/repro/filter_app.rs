@@ -1,12 +1,54 @@
 //! Fig. 7, Fig. 8 and Table IV regenerators: the FIR-filter application
 //! study (§III.C).
+//!
+//! Every driver here accepts `--backend`/`--threads` (and the legacy
+//! `--pjrt` flag) and rides the coordinator: fig7 serves its SNR
+//! variance reductions, fig8a/fig8b and the Table IV behavioural column
+//! serve the quantized filter itself (`DspServer::filter_signal`) for
+//! `WL ≤ 16` — on the compiled quadrant/row-table kernels above WL 8 —
+//! and fall back to the in-process digit datapath past the served-FIR
+//! word-length cap. Gate-level synthesis and workload power stay
+//! in-process: the streamed testbed drive is not a `PowerRequest`
+//! shape.
 
-use crate::arith::{BbmType, BrokenBooth, ExactBooth};
-use crate::dsp::{evaluate, paper_lowpass, Testbed};
+use crate::arith::{BbmType, BrokenBooth, ExactBooth, MAX_KERNEL_WL};
+use crate::backend::BackendKind;
+use crate::coordinator::DspServer;
+use crate::dsp::{evaluate, fir_f64, fractional_delay, paper_lowpass, snr_out_db, Testbed};
 use crate::gate::builders::{build_fir, FirSpec};
 use crate::gate::{average_power, find_tmin, recover_power, run_stream};
 use crate::util::cli::Args;
 use crate::util::report::{Series, Table};
+
+/// Spin up the DSP server selected by `--backend`/`--threads` (and the
+/// legacy bare `--pjrt` flag) — the same ladder as `bbm dnn`.
+fn server_from(args: &Args) -> anyhow::Result<DspServer> {
+    let threads = args.get_or("threads", 0usize)?;
+    let backend = if args.flag("pjrt") {
+        BackendKind::Pjrt
+    } else {
+        args.get_or("backend", BackendKind::Native)?
+    };
+    Ok(match backend {
+        BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
+        kind => DspServer::start_kind(kind, 8)?,
+    })
+}
+
+/// [`snr_out_db`] with the variance accumulations served through the
+/// coordinator: the same fractional-delay alignment and transient skip,
+/// with `SnrRequest` moments instead of the in-process accumulator.
+fn served_snr_out(
+    srv: &DspServer,
+    tb: &Testbed,
+    y: &[f64],
+    group_delay: f64,
+) -> anyhow::Result<f64> {
+    let d1d = fractional_delay(&tb.d1, group_delay);
+    let n = y.len().min(d1d.len());
+    let skip = (256usize.max(2 * group_delay.ceil() as usize)).min(n);
+    srv.snr_db(&d1d[skip..n], &y[skip..n])
+}
 
 /// Fig. 7: the testbed — filter frequency response and signal placement,
 /// plus the double-precision SNR baseline.
@@ -28,10 +70,22 @@ pub fn fig7(args: &Args) -> anyhow::Result<()> {
     let tb = Testbed::generate(n, seed);
     let snr_in = tb.snr_in_db();
     let snr_out = evaluate(&tb, &d.taps, None);
+    // Same double-precision output, SNR moments served: the filter runs
+    // in-process (f64 is not a served-FIR lane), the variance
+    // accumulations ride the backend.
+    let srv = server_from(args)?;
+    let gd = (d.taps.len() as f64 - 1.0) / 2.0;
+    let served = served_snr_out(&srv, &tb, &fir_f64(&tb.x, &d.taps), gd)?;
     println!("ripple delta = {:.4} ({} Remez iterations)", d.delta, d.iterations);
     println!("SNR_in  = {snr_in:.2} dB   (paper: -3.47 dB)");
     println!("SNR_out = {snr_out:.2} dB   (paper: 25.7 dB, double precision)");
+    println!(
+        "SNR_out = {served:.2} dB   (moments served by `{}`, {} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
     println!("SNR gain = {:.2} dB  (paper: 29.1 dB)", snr_out - snr_in);
+    srv.shutdown();
     Ok(())
 }
 
@@ -42,14 +96,29 @@ pub fn fig8a(args: &Args) -> anyhow::Result<()> {
     let tb = Testbed::generate(n, 42);
     let d = paper_lowpass(30)?;
     let dbl = evaluate(&tb, &d.taps, None);
+    let srv = server_from(args)?;
+    let gd = (d.taps.len() as f64 - 1.0) / 2.0;
     let mut s = Series::new("Fig. 8a — SNR_out vs WL (VBL=0)", "WL", &["SNR_out_dB"]);
     for &wl in &wls {
-        let m = ExactBooth::new(wl);
-        let snr = evaluate(&tb, &d.taps, Some((&m, wl)));
+        // Served quantized filter up to the served-FIR word-length cap
+        // (VBL = 0 Type0 ≡ exact Booth); the longer word lengths keep
+        // the in-process digit datapath.
+        let snr = if wl <= MAX_KERNEL_WL {
+            let y = srv.filter_signal(&tb.x, &d.taps, wl, 0)?;
+            snr_out_db(&tb, &y, gd)
+        } else {
+            let m = ExactBooth::new(wl);
+            evaluate(&tb, &d.taps, Some((&m, wl)))
+        };
         s.point(wl as f64, &[snr]);
     }
     s.print();
-    println!("double precision: {dbl:.2} dB (paper: 25.7); paper picks WL=16 at 25.4 dB");
+    println!(
+        "double precision: {dbl:.2} dB (paper: 25.7); paper picks WL=16 at 25.4 dB \
+         [WL ≤ {MAX_KERNEL_WL} served by `{}`]",
+        srv.backend_name()
+    );
+    srv.shutdown();
     Ok(())
 }
 
@@ -60,18 +129,33 @@ pub fn fig8b(args: &Args) -> anyhow::Result<()> {
     let vbls = args.list_or("vbls", &[0u32, 3, 5, 7, 9, 11, 13, 15, 17, 19, 21])?;
     let tb = Testbed::generate(n, 42);
     let d = paper_lowpass(30)?;
+    let srv = server_from(args)?;
+    let gd = (d.taps.len() as f64 - 1.0) / 2.0;
     let mut s = Series::new(
         &format!("Fig. 8b — SNR_out vs VBL (WL={wl}, Type0)"),
         "VBL",
         &["SNR_out_dB"],
     );
     for &vbl in &vbls {
-        let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
-        let snr = evaluate(&tb, &d.taps, Some((&m, wl)));
+        // The paper's WL = 16 sweep rides the served row-table kernels;
+        // --wl past the served-FIR cap falls back to the digit model.
+        let snr = if wl <= MAX_KERNEL_WL {
+            let y = srv.filter_signal(&tb.x, &d.taps, wl, vbl)?;
+            snr_out_db(&tb, &y, gd)
+        } else {
+            let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
+            evaluate(&tb, &d.taps, Some((&m, wl)))
+        };
         s.point(vbl as f64, &[snr]);
     }
     s.print();
-    println!("paper: steady reduction with VBL; operating point VBL=13 at 25.0 dB (-0.4 dB)");
+    println!(
+        "paper: steady reduction with VBL; operating point VBL=13 at 25.0 dB (-0.4 dB) \
+         [served by `{}`, {} workers]",
+        srv.backend_name(),
+        srv.workers()
+    );
+    srv.shutdown();
     Ok(())
 }
 
@@ -91,6 +175,10 @@ pub struct FirCase {
 
 /// Synthesize + measure one FIR case at a given clock (ps), driving the
 /// netlist with the quantized testbed signal.
+///
+/// With a server the behavioural SNR column is computed on the served
+/// quantized filter (compiled kernels at `WL ≤ 16`); gate-level
+/// synthesis and the streamed workload power always run in-process.
 pub fn run_fir_case(
     wl: u32,
     vbl: u32,
@@ -98,14 +186,22 @@ pub fn run_fir_case(
     tb: &Testbed,
     taps: &[f64],
     cycles: u64,
+    srv: Option<&DspServer>,
 ) -> anyhow::Result<FirCase> {
     // Behavioural SNR.
-    let snr = if vbl == 0 {
-        let m = ExactBooth::new(wl);
-        evaluate(tb, taps, Some((&m, wl)))
-    } else {
-        let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
-        evaluate(tb, taps, Some((&m, wl)))
+    let snr = match srv {
+        Some(srv) if wl <= MAX_KERNEL_WL => {
+            let y = srv.filter_signal(&tb.x, taps, wl, vbl)?;
+            snr_out_db(tb, &y, (taps.len() as f64 - 1.0) / 2.0)
+        }
+        _ if vbl == 0 => {
+            let m = ExactBooth::new(wl);
+            evaluate(tb, taps, Some((&m, wl)))
+        }
+        _ => {
+            let m = BrokenBooth::new(wl, vbl, BbmType::Type0);
+            evaluate(tb, taps, Some((&m, wl)))
+        }
     };
     // Gate-level synthesis at the clock constraint.
     let mut nl = build_fir(FirSpec { taps: taps.len() as u32, wl, vbl, ty: BbmType::Type0 });
@@ -148,6 +244,12 @@ pub fn table4(args: &Args) -> anyhow::Result<()> {
     let cycles = args.get_or("cycles", 8192u64)?;
     let tb = Testbed::generate(n, 42);
     let d = paper_lowpass(30)?;
+    let srv = server_from(args)?;
+    println!(
+        "behavioural SNR column served by backend `{}` ({} workers)",
+        srv.backend_name(),
+        srv.workers()
+    );
     // The paper clocks all three cases at 4.78 ns — the accurate WL=16
     // filter's achievable clock. We use our own equivalent.
     let clock_ps = {
@@ -162,7 +264,7 @@ pub fn table4(args: &Args) -> anyhow::Result<()> {
     ];
     let mut rows = Vec::new();
     for (wl, vbl) in cases {
-        rows.push(run_fir_case(wl, vbl, clock_ps, &tb, &d.taps, cycles)?);
+        rows.push(run_fir_case(wl, vbl, clock_ps, &tb, &d.taps, cycles, Some(&srv))?);
     }
     let base = &rows[0];
     let mut t = Table::new(
@@ -198,6 +300,7 @@ pub fn table4(args: &Args) -> anyhow::Result<()> {
         "paper: case1 25.35 dB / 1.22e5 um2 / 3.63 mW; case2 25.0 dB, -17.1% power, QUAP 13.1; \
          case3 23.1 dB, -19.8% power, QUAP 7.73 (case2 QUAP ~1.7x case3)"
     );
+    srv.shutdown();
     Ok(())
 }
 
@@ -243,7 +346,7 @@ mod tests {
         let d = paper_lowpass(30).unwrap();
         let mut nl = build_fir(FirSpec { taps: 30, wl: 8, vbl: 0, ty: BbmType::Type0 });
         let t = find_tmin(&mut nl).delay_ps;
-        let case = run_fir_case(8, 0, t * 1.2, &tb, &d.taps, 512).unwrap();
+        let case = run_fir_case(8, 0, t * 1.2, &tb, &d.taps, 512, None).unwrap();
         assert!(case.power_mw > 0.0 && case.area_um2 > 0.0);
     }
 
@@ -255,9 +358,50 @@ mod tests {
             let mut nl = build_fir(FirSpec { taps: 30, wl: 8, vbl: 0, ty: BbmType::Type0 });
             find_tmin(&mut nl).delay_ps * 1.1
         };
-        let acc = run_fir_case(8, 0, clock, &tb, &d.taps, 512).unwrap();
-        let brk = run_fir_case(8, 6, clock, &tb, &d.taps, 512).unwrap();
+        let acc = run_fir_case(8, 0, clock, &tb, &d.taps, 512, None).unwrap();
+        let brk = run_fir_case(8, 6, clock, &tb, &d.taps, 512, None).unwrap();
         assert!(brk.power_mw < acc.power_mw, "{} vs {}", brk.power_mw, acc.power_mw);
         assert!(brk.area_um2 < acc.area_um2);
+    }
+
+    #[test]
+    fn fir_case_served_snr_tracks_in_process() {
+        // The served behavioural column (Table IV path) against the
+        // in-process datapath: the SNR must track closely, and the
+        // gate-level synthesis/power side is deterministic — identical.
+        let tb = Testbed::generate(4096, 1);
+        let d = paper_lowpass(30).unwrap();
+        let clock = {
+            let mut nl = build_fir(FirSpec { taps: 30, wl: 8, vbl: 6, ty: BbmType::Type0 });
+            find_tmin(&mut nl).delay_ps * 1.2
+        };
+        let srv = DspServer::native(8).unwrap();
+        let served = run_fir_case(8, 6, clock, &tb, &d.taps, 256, Some(&srv)).unwrap();
+        let local = run_fir_case(8, 6, clock, &tb, &d.taps, 256, None).unwrap();
+        srv.shutdown();
+        assert!(
+            (served.snr_db - local.snr_db).abs() < 0.5,
+            "served {} vs in-process {}",
+            served.snr_db,
+            local.snr_db
+        );
+        assert_eq!(served.power_mw, local.power_mw);
+        assert_eq!(served.area_um2, local.area_um2);
+    }
+
+    #[test]
+    fn served_snr_out_matches_in_process_alignment() {
+        // Identical slicing to `snr_out_db`: the served moments see the
+        // same aligned/trimmed pairs, so the dB values agree to fp
+        // accumulation order.
+        let tb = Testbed::generate(4096, 7);
+        let d = paper_lowpass(30).unwrap();
+        let y = fir_f64(&tb.x, &d.taps);
+        let gd = (d.taps.len() as f64 - 1.0) / 2.0;
+        let srv = DspServer::native(8).unwrap();
+        let served = served_snr_out(&srv, &tb, &y, gd).unwrap();
+        srv.shutdown();
+        let local = snr_out_db(&tb, &y, gd);
+        assert!((served - local).abs() < 1e-6, "served {served} vs local {local}");
     }
 }

@@ -16,16 +16,23 @@
 //! 4. GEMM workload conformance: exhaustive WL=8 LUT-vs-digit-oracle
 //!    bit-identity per tile, row-tiled pool dispatch bit-identical to a
 //!    single worker, and `try_submit_gemm` backpressure on the mock.
+//! 5. The WL > 8 acceptance bar: sampled WL=12/16 multiply, moments,
+//!    FIR and GEMM on the compiled quadrant/row-table kernels
+//!    (`arith::kernel`), bit-identical to the digit-level oracles both
+//!    in-process and through the served path.
 
 use std::sync::Arc;
 
-use bbm::arith::MultKind;
-use bbm::backend::{Backend, GemmRequest, MultiplyRequest, NativeBackend, PowerRequest};
+use bbm::arith::{BbmType, BrokenBooth, MultKind, Multiplier};
+use bbm::backend::{
+    Backend, ErrorMoments, FirRequest, GemmRequest, MomentsRequest, MultiplyRequest,
+    NativeBackend, PowerRequest, FIR_BLOCK, FIR_TAPS,
+};
 use bbm::coordinator::DspServer;
 use bbm::nn::gemm::{gemm, gemm_digit};
 use bbm::nn::GemmDims;
 use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels, verify_power};
-use bbm::testkit::{Gate, MockBackend, MockState};
+use bbm::testkit::{draw_operands, Gate, MockBackend, MockState};
 use bbm::util::Pcg64;
 
 #[test]
@@ -379,6 +386,107 @@ fn gemm_backpressure_and_mock_counting() {
     let served = tag as u64;
     assert_eq!(state.gemms.load(std::sync::atomic::Ordering::SeqCst), served);
     assert_eq!(state.total(), served, "gemms count into the endpoint total");
+    srv.shutdown();
+}
+
+#[test]
+fn native_matches_oracles_sampled_wl12_wl16_compiled_kernels() {
+    // The paper's 12/16-bit configurations run on the compiled
+    // quadrant (BAM/Kulkarni) and Booth-row-table (exact/Type0/Type1)
+    // kernels; 4096 sampled lanes per design point must be
+    // bit-identical to the digit-level oracle for batched multiply and
+    // the moments fold, in-process and served.
+    let backend = NativeBackend::new();
+    let srv = DspServer::native(8).unwrap();
+    let kinds = [
+        MultKind::ExactBooth,
+        MultKind::BbmType0,
+        MultKind::BbmType1,
+        MultKind::Bam,
+        MultKind::Kulkarni,
+    ];
+    for wl in [12u32, 16] {
+        for kind in kinds {
+            let levels = verify_levels(kind, wl);
+            let picks = [levels[0], levels[levels.len() / 2], levels[levels.len() - 1]];
+            for level in picks {
+                let seed = 0xC0DE ^ ((wl as u64) << 16) ^ level as u64;
+                let (x, y) = draw_operands(kind, wl, 4096, seed);
+                let model = kind.build(wl, level);
+                let want: Vec<i64> = x
+                    .iter()
+                    .zip(&y)
+                    .map(|(&a, &b)| model.multiply(a as i64, b as i64))
+                    .collect();
+                let req = MultiplyRequest { kind, wl, level, x: x.clone(), y: y.clone() };
+                let got = backend.multiply(&req).unwrap().p;
+                assert_eq!(got, want, "{kind} wl={wl} level={level}: in-process multiply");
+                let served = srv.submit_multiply(req).wait().unwrap().p;
+                assert_eq!(served, want, "{kind} wl={wl} level={level}: served multiply");
+                let mut want_m = ErrorMoments::default();
+                for ((&a, &b), &p) in x.iter().zip(&y).zip(&want) {
+                    let e = p - a as i64 * b as i64;
+                    want_m.sum += e;
+                    want_m.sum_sq += (e as f64) * (e as f64);
+                    want_m.min = want_m.min.min(e);
+                    want_m.nonzero += (e != 0) as i64;
+                }
+                let got_m = backend
+                    .moments(&MomentsRequest { kind, wl, level, x, y })
+                    .unwrap();
+                assert_eq!(got_m, want_m, "{kind} wl={wl} level={level}: moments");
+            }
+        }
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn fir_block_on_row_kernels_matches_digit_convolution_wl16() {
+    // A full streaming FIR block at the paper's WL=16/VBL=13 operating
+    // point: the backend's row-table tap products vs a direct
+    // digit-level convolution, and the served path on top.
+    let mut rng = Pcg64::seeded(77);
+    let x: Vec<i32> = (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| rng.operand(16) as i32).collect();
+    let h: Vec<i32> = (0..FIR_TAPS).map(|_| rng.operand(16) as i32).collect();
+    let m = BrokenBooth::new(16, 13, BbmType::Type0);
+    let want: Vec<i64> = (0..FIR_BLOCK)
+        .map(|n| {
+            (0..FIR_TAPS)
+                .map(|k| m.multiply(x[n + FIR_TAPS - 1 - k] as i64, h[k] as i64))
+                .sum()
+        })
+        .collect();
+    let req = FirRequest { wl: 16, x, h, vbl: 13 };
+    let backend = NativeBackend::new();
+    assert_eq!(backend.fir(&req).unwrap().y, want, "in-process FIR block");
+    let srv = DspServer::native(4).unwrap();
+    assert_eq!(srv.submit_fir(req).wait().unwrap().y, want, "served FIR block");
+    srv.shutdown();
+}
+
+#[test]
+fn gemm_kernel_matches_digit_oracle_sampled_wl12_wl16() {
+    // Served + in-process GEMM tiles above the flat-LUT range: the
+    // compiled kernels must reproduce the digit oracle bit for bit.
+    let srv = DspServer::native(8).unwrap();
+    let (m, k, n) = (24usize, 11usize, 9usize);
+    for wl in [12u32, 16] {
+        let mut rng = Pcg64::seeded(wl as u64);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.operand(wl) as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.operand(wl) as i32).collect();
+        for kind in MultKind::ALL {
+            let levels = verify_levels(kind, wl);
+            let level = levels[levels.len() / 2];
+            let via_kernel = gemm(kind, wl, level, GemmDims { m, k, n }, &a, &b);
+            let via_digit = gemm_digit(kind, wl, level, GemmDims { m, k, n }, &a, &b);
+            assert_eq!(via_kernel, via_digit, "{kind} wl={wl} level={level}");
+            let req =
+                GemmRequest { kind, wl, level, m, k, n, a: a.clone(), b: b.clone() };
+            let served = srv.gemm(req).unwrap();
+            assert_eq!(served, via_digit, "{kind} wl={wl} level={level}: served");
+        }
+    }
     srv.shutdown();
 }
 
