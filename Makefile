@@ -30,17 +30,20 @@ bench:
 	cargo bench
 
 # Smoke-mode perf trajectory: runs the headline benches in seconds and
-# writes machine-readable BENCH_6.json at the repo root (CI uploads it
-# as an artifact on every PR, so the benches can never rot unnoticed).
+# writes machine-readable BENCH.json at the repo root (PR-agnostic name
+# so CI's artifact pins never rot when the PR number advances; the
+# embedded "pr" field still records the producer). CI uploads it as an
+# artifact on every PR, so the benches can never rot unnoticed.
 # BENCH_FULL=1 switches to paper-scale vector counts.
 bench-json:
 	cargo bench --bench bench_json
 
-# Perf-trend gate: diff BENCH_6.json against the previous PR's artifact
-# (downloaded into baseline/ by CI) and fail on >25% ns/op regressions.
-# Skips cleanly when no baseline is present.
+# Perf-trend gate: diff BENCH.json against the newest prior artifact
+# (downloaded into baseline/ by CI; legacy BENCH_<pr>.json baselines
+# still match) and fail on >25% ns/op regressions. Skips cleanly when
+# no baseline is present.
 bench-trend: bench-json
-	python3 tools/bench_trend.py --new BENCH_6.json --baseline-dir baseline --max-ratio 1.25
+	python3 tools/bench_trend.py --new BENCH.json --baseline-dir baseline --max-ratio 1.25
 
 clean:
 	cargo clean

@@ -1,16 +1,21 @@
 //! Backend-API batching baseline: NativeBackend batched multiply
 //! throughput vs progressively finer request granularities, down to the
 //! degenerate one-lane-per-request loop, plus compiled-kernel (LUT)
-//! batches and executor-pool scaling on batched moments jobs. Future
-//! SIMD/GPU backends are measured against the 64k-batched native line;
-//! the per-element line bounds the request-framing overhead batching
+//! batches, the SIMD wide-lane engine against the 64k-batched native
+//! line, executor-pool scaling on batched moments jobs, and
+//! work-stealing scheduler scaling on a mixed
+//! multiply/moments/GEMM stream (`submit_mixed`) at 1/2/4/8 workers.
+//! The per-element line bounds the request-framing overhead batching
 //! amortizes away.
 
 include!("harness.rs");
 
 use bbm::arith::{MultKind, Multiplier};
-use bbm::backend::{Backend, MomentsRequest, MultiplyRequest, NativeBackend, SWEEP_BATCH};
-use bbm::coordinator::DspServer;
+use bbm::backend::{
+    Backend, GemmRequest, MomentsRequest, MultiplyRequest, NativeBackend, SimdBackend,
+    SWEEP_BATCH,
+};
+use bbm::coordinator::{DspServer, MixedRequest};
 use bbm::util::Pcg64;
 
 /// Wall-clock seconds to drain `jobs` pipelined moments batches
@@ -103,6 +108,17 @@ fn main() {
         std::hint::black_box(backend.multiply(&lut_req).unwrap().p.len());
     });
 
+    // SIMD wide-lane engine on the same 64k request shapes: the 8-wide
+    // unrolled gathers against the native line above (bit-identical
+    // results, ns/op is the whole point).
+    let simd = SimdBackend::new();
+    report("simd batched multiply, one 64k request", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(simd.multiply(&batched).unwrap().p.len());
+    });
+    report("simd batched multiply, 64k lut (wl8)", 10, SWEEP_BATCH as f64, || {
+        std::hint::black_box(simd.multiply(&lut_req).unwrap().p.len());
+    });
+
     // Executor-pool scaling on batched moments jobs (WL=12 keeps the
     // work digit-level and CPU-bound so scaling is visible).
     let mut rng12 = Pcg64::seeded(5);
@@ -124,4 +140,57 @@ fn main() {
         report_line(name, dt, dt, items);
     }
     println!("  executor pool: 4 workers {:.2}x over 1 worker on batched moments", t1 / t4);
+
+    // Work-stealing scheduler scaling on mixed traffic: one
+    // `submit_mixed` call cuts a multiply + moments + GEMM stream into
+    // per-worker sub-jobs and reassembles the replies bit-identically;
+    // the row set shows whether throughput keeps improving past 4
+    // workers (the old shared-queue pool's plateau).
+    let mut rngm = Pcg64::seeded(6);
+    let (gm, gk, gn) = (96usize, 64usize, 32usize);
+    let ga: Vec<i32> = (0..gm * gk).map(|_| rngm.operand(12) as i32).collect();
+    let gb: Vec<i32> = (0..gk * gn).map(|_| rngm.operand(12) as i32).collect();
+    let traffic = vec![
+        MixedRequest::Multiply(batched.clone()),
+        MixedRequest::Moments(req12.clone()),
+        MixedRequest::Gemm(GemmRequest {
+            kind,
+            wl: 12,
+            level: 9,
+            m: gm,
+            k: gk,
+            n: gn,
+            a: ga,
+            b: gb,
+        }),
+    ];
+    let reps = 4usize;
+    let mixed_items = (reps * (2 * SWEEP_BATCH + gm * gn)) as f64;
+    let mixed_secs = |workers: usize| {
+        let srv = DspServer::native_pool(workers, 16).unwrap();
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(srv.submit_mixed(traffic.clone()).unwrap().len());
+        }
+        let dt = t.elapsed().as_secs_f64();
+        srv.shutdown();
+        dt
+    };
+    let m1 = mixed_secs(1);
+    let m2 = mixed_secs(2);
+    let m4 = mixed_secs(4);
+    let m8 = mixed_secs(8);
+    for (name, dt) in [
+        ("mixed traffic via submit_mixed, 1 worker", m1),
+        ("mixed traffic via submit_mixed, 2 workers", m2),
+        ("mixed traffic via submit_mixed, 4 workers", m4),
+        ("mixed traffic via submit_mixed, 8 workers", m8),
+    ] {
+        report_line(name, dt, dt, mixed_items);
+    }
+    println!(
+        "  work stealing: 1→4 workers {:.2}x, 4→8 workers {:.2}x on mixed traffic",
+        m1 / m4,
+        m4 / m8
+    );
 }

@@ -1,11 +1,13 @@
 //! Machine-readable perf trajectory: a smoke-scale run of the headline
-//! benchmarks (PR-5 kernels, the PR-6 GEMM workload, and the PR-7
-//! WL=12/16 compiled quadrant/row-table kernels), written as JSON to
-//! `BENCH_7.json` at the repo root (override with `BENCH_OUT=/path`).
-//! Runs in seconds so CI can execute it on every PR — set
-//! `BENCH_FULL=1` for paper-scale vector counts. `tools/bench_trend.py`
-//! diffs this file against the previous PR's artifact and fails CI on
-//! large ns/op regressions.
+//! benchmarks (PR-5 kernels, the PR-6 GEMM workload, the PR-7 WL=12/16
+//! compiled quadrant/row-table kernels, and the PR-8 SIMD backend +
+//! work-stealing scheduler), written as JSON to the PR-agnostic
+//! `BENCH.json` at the repo root (override with `BENCH_OUT=/path`; the
+//! embedded `"pr"` field still records which PR produced it). Runs in
+//! seconds so CI can execute it on every PR — set `BENCH_FULL=1` for
+//! paper-scale vector counts. `tools/bench_trend.py` diffs this file
+//! against the previous PR's artifact and fails CI on large ns/op
+//! regressions.
 //!
 //! Self-contained on purpose (no `include!("harness.rs")`): it wants
 //! structured results, not console lines, and pulling the shared
@@ -15,10 +17,10 @@ use std::time::Instant;
 
 use bbm::arith::{compiled_kernel, BbmType, BrokenBooth, MultKind, Multiplier};
 use bbm::backend::{
-    Backend, FirRequest, GemmRequest, MomentsRequest, NativeBackend, FIR_BLOCK, FIR_TAPS,
-    SWEEP_BATCH,
+    Backend, FirRequest, GemmRequest, MomentsRequest, MultiplyRequest, NativeBackend,
+    SimdBackend, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
 };
-use bbm::coordinator::DspServer;
+use bbm::coordinator::{DspServer, MixedRequest};
 use bbm::error::{exhaustive_stats, SweepConfig};
 use bbm::gate::builders::build_broken_booth;
 use bbm::gate::ir::Levelized;
@@ -212,6 +214,26 @@ fn main() {
         });
         ratios.push((format!("multiply_kernel_vs_digit_wl{wl}"), mul_digit / mul_kern));
 
+        // SIMD wide-lane backend on the same lanes: 8-wide unrolled
+        // gathers vs the scalar-lookup loop above (bit-identical).
+        let simd = SimdBackend::new();
+        let simd_req = MultiplyRequest {
+            kind: MultKind::Bam,
+            wl,
+            level,
+            x: bx.clone(),
+            y: by.clone(),
+        };
+        let mul_simd = time_min(iters, || {
+            std::hint::black_box(simd.multiply(&simd_req).unwrap().p[0]);
+        });
+        entries.push(Entry {
+            name: format!("multiply_wl{wl}_simd"),
+            secs: mul_simd,
+            items: lanes as f64,
+        });
+        ratios.push((format!("simd_vs_scalar_multiply_wl{wl}"), mul_kern / mul_simd));
+
         // Moments fold — Type0 exercises the Booth row tables; the
         // backend endpoint is the kernel side, a digit fold of the
         // same lanes the oracle side.
@@ -294,11 +316,73 @@ fn main() {
         ratios.push((format!("gemm_kernel_vs_digit_wl{wl}"), g_digit / g_kern));
     }
 
+    // 7. Work-stealing scheduler (PR 8): the same mixed
+    // multiply/moments/GEMM stream through an 8-worker pool, round
+    // robin placement (stealing balances residual skew) vs every piece
+    // pinned to one hot queue (the degenerate shared-queue shape,
+    // drained purely by steals). Replies are bit-identical; the rows
+    // measure scheduling, not arithmetic.
+    let (sx, sy) = draw_operands(MultKind::Bam, 12, lanes, 77);
+    let (tx, ty) = draw_operands(MultKind::BbmType0, 12, lanes, 78);
+    let mtraffic = vec![
+        MixedRequest::Multiply(MultiplyRequest {
+            kind: MultKind::Bam,
+            wl: 12,
+            level: 9,
+            x: sx,
+            y: sy,
+        }),
+        MixedRequest::Moments(MomentsRequest {
+            kind: MultKind::BbmType0,
+            wl: 12,
+            level: 9,
+            x: tx,
+            y: ty,
+        }),
+        MixedRequest::Gemm(GemmRequest {
+            kind: MultKind::BbmType0,
+            wl: 12,
+            level: 9,
+            m: gm,
+            k: gk,
+            n: gn,
+            a: ga.clone(),
+            b: gb.clone(),
+        }),
+    ];
+    let mixed_items = (2 * lanes + gm * gn) as f64;
+    let mixed_secs = |pinned: bool| {
+        let srv = DspServer::native_pool(8, 16).unwrap();
+        let dt = time_min(if full { 10 } else { 5 }, || {
+            let replies = if pinned {
+                srv.submit_mixed_at(0, mtraffic.clone())
+            } else {
+                srv.submit_mixed(mtraffic.clone())
+            };
+            std::hint::black_box(replies.unwrap().len());
+        });
+        srv.shutdown();
+        dt
+    };
+    let steal8 = mixed_secs(false);
+    let pinned8 = mixed_secs(true);
+    entries.push(Entry {
+        name: "mixed_8workers_stealing".into(),
+        secs: steal8,
+        items: mixed_items,
+    });
+    entries.push(Entry {
+        name: "mixed_8workers_single_queue".into(),
+        secs: pinned8,
+        items: mixed_items,
+    });
+    ratios.push(("steal_vs_single_queue_mixed".into(), pinned8 / steal8));
+
     // Emit JSON (no serde offline; the shape is flat enough to format
     // by hand).
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 7,\n");
+    json.push_str("  \"pr\": 8,\n");
     json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     json.push_str("  \"benches\": [\n");
     for (i, e) in entries.iter().enumerate() {
@@ -322,7 +406,7 @@ fn main() {
     json.push_str("}\n");
 
     let path = std::env::var("BENCH_OUT")
-        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json").to_string());
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH.json").to_string());
     std::fs::write(&path, &json).expect("write bench json");
     println!("{json}");
     println!("wrote {path}");

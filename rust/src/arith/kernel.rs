@@ -183,6 +183,75 @@ impl BoothRowKernel {
         let v = acc & ((1u64 << p) - 1);
         ((v << (64 - p)) as i64) >> (64 - p)
     }
+
+    /// Batched row-outer gather: one pass over all lanes per Booth row,
+    /// keeping that row's `2^3 × 2^WL` recode table cache-hot, with the
+    /// lane walk hand-unrolled in 8-wide blocks. Row fields accumulate
+    /// with wrapping i64 adds — identical mod 2^64 to the u64 reduction
+    /// of [`BoothRowKernel::lookup`], and only the low `2·WL` bits
+    /// survive the final mask + sign-extension, so every lane is
+    /// bit-identical to the scalar path.
+    pub fn multiply_into(&self, x: &[i32], y: &[i32], out: &mut [i64]) {
+        let wl = self.wl;
+        let mask = (1u64 << wl) - 1;
+        out.fill(0);
+        let main = x.len() - x.len() % 8;
+        for (i, row) in self.rows.iter().enumerate() {
+            let sh = 2 * i as u32;
+            let gather = |xv: i32, yv: i32, o: &mut i64| {
+                let xu = (xv as u64 & mask) as usize;
+                let t = (((((yv as u64) & mask) << 1) >> sh) & 7) as usize;
+                *o = o.wrapping_add(row[(t << wl) | xu] as i64);
+            };
+            let blocks = x[..main]
+                .chunks_exact(8)
+                .zip(y[..main].chunks_exact(8))
+                .zip(out[..main].chunks_exact_mut(8));
+            for ((xs, ys), os) in blocks {
+                gather(xs[0], ys[0], &mut os[0]);
+                gather(xs[1], ys[1], &mut os[1]);
+                gather(xs[2], ys[2], &mut os[2]);
+                gather(xs[3], ys[3], &mut os[3]);
+                gather(xs[4], ys[4], &mut os[4]);
+                gather(xs[5], ys[5], &mut os[5]);
+                gather(xs[6], ys[6], &mut os[6]);
+                gather(xs[7], ys[7], &mut os[7]);
+            }
+            for ((&a, &b), o) in x[main..].iter().zip(&y[main..]).zip(&mut out[main..]) {
+                gather(a, b, o);
+            }
+        }
+        let p = 2 * wl;
+        for o in out.iter_mut() {
+            let v = (*o as u64) & ((1u64 << p) - 1);
+            *o = ((v << (64 - p)) as i64) >> (64 - p);
+        }
+    }
+}
+
+/// Shared 8-wide unrolled lane walk for the gather-style kernels
+/// (flat LUT, quadrant composition): eight independent gathers per
+/// block keep that many loads in flight — the same lane-blocking trick
+/// `gate::sim` uses for its bitsliced passes.
+fn gather8(x: &[i32], y: &[i32], out: &mut [i64], f: impl Fn(i64, i64) -> i64) {
+    let main = x.len() - x.len() % 8;
+    let blocks = x[..main]
+        .chunks_exact(8)
+        .zip(y[..main].chunks_exact(8))
+        .zip(out[..main].chunks_exact_mut(8));
+    for ((xs, ys), os) in blocks {
+        os[0] = f(xs[0] as i64, ys[0] as i64);
+        os[1] = f(xs[1] as i64, ys[1] as i64);
+        os[2] = f(xs[2] as i64, ys[2] as i64);
+        os[3] = f(xs[3] as i64, ys[3] as i64);
+        os[4] = f(xs[4] as i64, ys[4] as i64);
+        os[5] = f(xs[5] as i64, ys[5] as i64);
+        os[6] = f(xs[6] as i64, ys[6] as i64);
+        os[7] = f(xs[7] as i64, ys[7] as i64);
+    }
+    for ((&a, &b), o) in x[main..].iter().zip(&y[main..]).zip(&mut out[main..]) {
+        *o = f(a as i64, b as i64);
+    }
 }
 
 /// Facade over every compiled multiplier shape — the value
@@ -211,9 +280,24 @@ impl CompiledKernel {
     /// Batched multiply over parallel operand lanes — the kernel the
     /// native backend's `MultiplyRequest` path runs on.
     pub fn multiply_slice(&self, x: &[i32], y: &[i32]) -> Vec<i64> {
+        let mut out = vec![0i64; x.len()];
+        self.multiply_into(x, y, &mut out);
+        out
+    }
+
+    /// Batched multiply into a caller-provided output slice, the
+    /// wide-lane entry point the SIMD backend runs on: the lane walk is
+    /// hand-unrolled in 8-wide blocks (flat-LUT and quadrant shapes
+    /// keep eight gathers in flight; the Booth-row shape walks all
+    /// lanes row-outer so each recode table stays cache-hot). Every
+    /// lane's value is bit-identical to [`CompiledKernel::lookup`].
+    pub fn multiply_into(&self, x: &[i32], y: &[i32], out: &mut [i64]) {
+        assert_eq!(x.len(), y.len(), "operand lanes must pair up");
+        assert_eq!(x.len(), out.len(), "output slice must match the lane count");
         match self {
-            CompiledKernel::Table(t) => t.multiply_slice(x, y),
-            _ => x.iter().zip(y).map(|(&a, &b)| self.lookup(a as i64, b as i64)).collect(),
+            CompiledKernel::Table(t) => gather8(x, y, out, |a, b| t.lookup(a, b)),
+            CompiledKernel::Quadrant(q) => gather8(x, y, out, |a, b| q.lookup(a, b)),
+            CompiledKernel::BoothRows(r) => r.multiply_into(x, y, out),
         }
     }
 
@@ -622,6 +706,33 @@ mod tests {
             assert_eq!(p[i], k.lookup(x[i] as i64, y[i] as i64));
         }
         assert_eq!(k.name(), "bam(wl=12,vbl=9,hbl=0)+quad".to_string());
+    }
+
+    #[test]
+    fn multiply_into_matches_scalar_lookup_all_shapes_and_tails() {
+        // One design point per compiled shape; lengths straddle the
+        // 8-wide block boundary so the unrolled main loop and the
+        // scalar tail are both exercised (including the empty batch).
+        let shapes = [
+            (MultKind::BbmType0, 8u32, 5u32),  // flat LUT
+            (MultKind::Bam, 12, 9),            // quadrant composition
+            (MultKind::BbmType1, 12, 7),       // Booth row tables
+        ];
+        for (kind, wl, level) in shapes {
+            let k = compiled_kernel(kind, wl, level).expect("paper grid has kernels");
+            for n in [0usize, 1, 7, 8, 9, 16, 1023] {
+                let (x, y) = draw_operands(kind, wl, n, 0xABC ^ n as u64);
+                let mut out = vec![i64::MIN; n];
+                k.multiply_into(&x, &y, &mut out);
+                for i in 0..n {
+                    assert_eq!(
+                        out[i],
+                        k.lookup(x[i] as i64, y[i] as i64),
+                        "{kind} wl={wl} n={n} lane {i}"
+                    );
+                }
+            }
+        }
     }
 
     // -- cache-policy tests run on private instances so they cannot

@@ -22,6 +22,11 @@
 //!   the levelized-IR bitsliced gate engine (`crate::gate`) for the
 //!   power workload. Supports every [`MultKind`] family and arbitrary
 //!   batch lengths.
+//! * [`SimdBackend`] (always available) — wide-lane kernel execution:
+//!   hand-unrolled 8-wide blocks over the compiled LUT/row-table
+//!   gathers for multiply/moments/FIR/GEMM, exact accumulators keeping
+//!   every result bit-identical to the native engine; SNR and power
+//!   delegate to it.
 //! * [`PjrtBackend`] (`--features pjrt`) — the AOT artifact path through
 //!   [`crate::runtime`]. Supports the Broken-Booth families the
 //!   artifacts were compiled for.
@@ -34,10 +39,12 @@
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod simd;
 
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use simd::SimdBackend;
 
 use crate::arith::MultKind;
 
@@ -485,25 +492,30 @@ pub(crate) fn validate_snr(req: &SnrRequest) -> BackendResult<()> {
 }
 
 /// Enumeration of the execution backends, with `MultKind`-style CLI
-/// parsing for drivers, examples and benches (`--backend native|pjrt`).
+/// parsing for drivers, examples and benches
+/// (`--backend native|simd|pjrt`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BackendKind {
     /// Bit-accurate batched loops over the `arith` oracles (default).
     Native,
+    /// Wide-lane (8-wide unrolled) kernel execution, bit-identical to
+    /// native.
+    Simd,
     /// AOT artifacts through the PJRT runtime (`--features pjrt`).
     Pjrt,
 }
 
 impl BackendKind {
     /// All kinds in presentation order.
-    pub const ALL: [BackendKind; 2] = [BackendKind::Native, BackendKind::Pjrt];
+    pub const ALL: [BackendKind; 3] = [BackendKind::Native, BackendKind::Simd, BackendKind::Pjrt];
 
     /// Parse from the CLI spelling.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "native" | "rust" => BackendKind::Native,
+            "simd" => BackendKind::Simd,
             "pjrt" | "xla" => BackendKind::Pjrt,
-            other => anyhow::bail!("unknown backend kind: {other} (expected native|pjrt)"),
+            other => anyhow::bail!("unknown backend kind: {other} (expected native|simd|pjrt)"),
         })
     }
 
@@ -513,6 +525,7 @@ impl BackendKind {
     pub fn create(self) -> anyhow::Result<Box<dyn Backend>> {
         match self {
             BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+            BackendKind::Simd => Ok(Box::new(SimdBackend::new())),
             BackendKind::Pjrt => create_pjrt(),
         }
     }
@@ -547,6 +560,7 @@ impl std::fmt::Display for BackendKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             BackendKind::Native => "native",
+            BackendKind::Simd => "simd",
             BackendKind::Pjrt => "pjrt",
         })
     }
@@ -590,6 +604,12 @@ mod tests {
     fn native_kind_creates() {
         let b = BackendKind::Native.create().unwrap();
         assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn simd_kind_creates() {
+        let b = BackendKind::Simd.create().unwrap();
+        assert_eq!(b.name(), "simd");
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,383 @@
+//! The SIMD-batched execution backend: wide-lane kernel execution over
+//! the compiled [`crate::arith::CompiledKernel`] gathers.
+//!
+//! "SIMD" here is the software flavor the rest of the crate already
+//! uses (`gate::sim`'s 64-lane bitslices, the blocked GEMM): hand
+//! unrolled 8-wide lane blocks that keep eight independent gathers in
+//! flight per iteration, with exact accumulators so every reduction is
+//! bit-identical to [`NativeBackend`] and the digit oracles.
+//!
+//! Per workload:
+//!
+//! * **multiply** — [`CompiledKernel::multiply_into`] batched gathers
+//!   (flat LUT / quadrant / Booth-row shapes); families without a
+//!   compiled kernel (ETM above WL = 8, WL > 16) fall back to the digit
+//!   model streamed through the same 8-wide blocks.
+//! * **moments** — the products run through the batched gather, then an
+//!   8-lane fold with independent exact accumulators (`i128` Σerr and
+//!   Σerr², `i64` min, count). Integer addition is associative and min
+//!   is order-free, so the merged moments are bit-identical to the
+//!   native backend's sequential fold.
+//! * **fir** — eight output samples per block, each with its own exact
+//!   `i64` accumulator; per-output tap order matches the native loop.
+//! * **gemm** — j-inner 8-wide blocks over the row tiles with exact
+//!   `i64` accumulation, the same kernel selection and sign-magnitude
+//!   wrapper as `nn::gemm`.
+//! * **snr / power** — delegated to [`NativeBackend`]: the SNR fold is
+//!   a *sequential* `f64` sum whose value is part of the bit-identity
+//!   contract (reassociating it would change results), and the power
+//!   workload is already lane-blocked inside `gate::sim`.
+
+use crate::arith::{compiled_kernel, MultKind, Multiplier};
+
+use super::{
+    validate_family, validate_fir, validate_gemm, validate_operands, validate_pair, Backend,
+    BackendResult, ErrorMoments, FirBlock, FirRequest, GemmBlock, GemmRequest, MomentsRequest,
+    MultiplyRequest, NativeBackend, PowerReport, PowerRequest, ProductBlock, SnrAccum,
+    SnrRequest, FIR_TAPS,
+};
+
+/// Wide-lane engine over the compiled kernel gathers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimdBackend {
+    /// Workloads with no lane-parallel shape (the sequential `f64` SNR
+    /// fold, the gate-level power loop) delegate here, sharing the
+    /// native code so they stay bit-identical by construction.
+    native: NativeBackend,
+}
+
+impl SimdBackend {
+    /// The SIMD engine (stateless; construction is free).
+    pub fn new() -> SimdBackend {
+        SimdBackend { native: NativeBackend::new() }
+    }
+}
+
+impl Backend for SimdBackend {
+    fn name(&self) -> String {
+        "simd".to_string()
+    }
+
+    fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
+        let mut p = vec![0i64; req.x.len()];
+        products_into(req.kind, req.wl, req.level, &req.x, &req.y, &mut p);
+        Ok(ProductBlock { p })
+    }
+
+    fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
+        validate_pair(&req.x, &req.y, req.wl)?;
+        validate_family(req.kind, req.wl, req.level)?;
+        validate_operands(req.kind, req.wl, &req.x, &req.y)?;
+        let n = req.x.len();
+        let mut p = vec![0i64; n];
+        products_into(req.kind, req.wl, req.level, &req.x, &req.y, &mut p);
+        // Eight independent exact accumulator lanes over the product
+        // block, merged exactly afterwards: i128 addition is
+        // associative and min is order-free, so the result is
+        // bit-identical to the native backend's sequential fold.
+        let mut lanes = [MomentLane::default(); 8];
+        let main = n - n % 8;
+        let blocks = req.x[..main]
+            .chunks_exact(8)
+            .zip(req.y[..main].chunks_exact(8))
+            .zip(p[..main].chunks_exact(8));
+        for ((xs, ys), ps) in blocks {
+            for ((lane, (&x, &y)), &pv) in lanes.iter_mut().zip(xs.iter().zip(ys)).zip(ps) {
+                lane.fold(x, y, pv);
+            }
+        }
+        for ((&x, &y), &pv) in req.x[main..].iter().zip(&req.y[main..]).zip(&p[main..]) {
+            lanes[0].fold(x, y, pv);
+        }
+        let mut sum = 0i128;
+        let mut sum_sq = 0i128;
+        let mut min = i64::MAX;
+        let mut nonzero = 0i64;
+        for lane in lanes {
+            sum += lane.sum;
+            sum_sq += lane.sum_sq;
+            min = min.min(lane.min);
+            nonzero += lane.nonzero;
+        }
+        if n == 0 {
+            min = 0;
+        }
+        // Same single i128 → f64 fold as the native backend (exact
+        // below 2^53 — every paper configuration).
+        Ok(ErrorMoments { sum: sum as i64, sum_sq: sum_sq as f64, min, nonzero })
+    }
+
+    fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock> {
+        validate_fir(req)?;
+        // Same kernel selection as the native path: Broken-Booth Type0
+        // with VBL = 0 is the exact modified-Booth multiplier.
+        let out_len = req.x.len() - FIR_TAPS + 1;
+        let y = match compiled_kernel(MultKind::BbmType0, req.wl, req.vbl) {
+            Some(k) => fir_blocked(&req.x, &req.h, out_len, |x, h| k.lookup(x, h)),
+            None => {
+                let m = MultKind::BbmType0.build(req.wl, req.vbl);
+                fir_blocked(&req.x, &req.h, out_len, |x, h| m.multiply(x, h))
+            }
+        };
+        Ok(FirBlock { y })
+    }
+
+    fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum> {
+        self.native.snr(req)
+    }
+
+    fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport> {
+        self.native.power(req)
+    }
+
+    fn gemm(&self, req: &GemmRequest) -> BackendResult<GemmBlock> {
+        validate_gemm(req)?;
+        // Same family split as `nn::gemm`: signed Booth families take
+        // the kernel directly, unsigned families get the sign-magnitude
+        // wrapper around their non-negative product function.
+        let signed = matches!(
+            req.kind,
+            MultKind::ExactBooth | MultKind::BbmType0 | MultKind::BbmType1
+        );
+        let mut c = vec![0i64; req.m * req.n];
+        match compiled_kernel(req.kind, req.wl, req.level) {
+            Some(k) => gemm_blocked(req, signed, &mut c, |a, b| k.lookup(a, b)),
+            None => {
+                let m = req.kind.build(req.wl, req.level);
+                gemm_blocked(req, signed, &mut c, |a, b| m.multiply(a, b));
+            }
+        }
+        Ok(GemmBlock { c })
+    }
+}
+
+/// One of the eight independent exact accumulator lanes of the wide
+/// moments fold.
+#[derive(Clone, Copy)]
+struct MomentLane {
+    sum: i128,
+    sum_sq: i128,
+    min: i64,
+    nonzero: i64,
+}
+
+impl Default for MomentLane {
+    fn default() -> MomentLane {
+        MomentLane { sum: 0, sum_sq: 0, min: i64::MAX, nonzero: 0 }
+    }
+}
+
+impl MomentLane {
+    #[inline]
+    fn fold(&mut self, x: i32, y: i32, p: i64) {
+        let e = p - x as i64 * y as i64;
+        self.sum += e as i128;
+        self.sum_sq += e as i128 * e as i128;
+        if e != 0 {
+            self.nonzero += 1;
+        }
+        if e < self.min {
+            self.min = e;
+        }
+    }
+}
+
+/// Fill `p` with the family's products: the compiled kernel's batched
+/// gather when one exists, otherwise the digit model streamed through
+/// the same 8-wide lane blocks.
+fn products_into(kind: MultKind, wl: u32, level: u32, x: &[i32], y: &[i32], p: &mut [i64]) {
+    if let Some(k) = compiled_kernel(kind, wl, level) {
+        k.multiply_into(x, y, p);
+        return;
+    }
+    let m = kind.build(wl, level);
+    let main = x.len() - x.len() % 8;
+    let blocks = x[..main]
+        .chunks_exact(8)
+        .zip(y[..main].chunks_exact(8))
+        .zip(p[..main].chunks_exact_mut(8));
+    for ((xs, ys), ps) in blocks {
+        ps[0] = m.multiply(xs[0] as i64, ys[0] as i64);
+        ps[1] = m.multiply(xs[1] as i64, ys[1] as i64);
+        ps[2] = m.multiply(xs[2] as i64, ys[2] as i64);
+        ps[3] = m.multiply(xs[3] as i64, ys[3] as i64);
+        ps[4] = m.multiply(xs[4] as i64, ys[4] as i64);
+        ps[5] = m.multiply(xs[5] as i64, ys[5] as i64);
+        ps[6] = m.multiply(xs[6] as i64, ys[6] as i64);
+        ps[7] = m.multiply(xs[7] as i64, ys[7] as i64);
+    }
+    for ((&a, &b), o) in x[main..].iter().zip(&y[main..]).zip(&mut p[main..]) {
+        *o = m.multiply(a as i64, b as i64);
+    }
+}
+
+/// The blocked FIR loop: eight output samples at a time, each with its
+/// own exact `i64` accumulator. The per-output tap order is k-ascending
+/// exactly like the native `fir_accumulate`, so the integer sums are
+/// identical term for term.
+fn fir_blocked(x: &[i32], h: &[i32], out_len: usize, mul: impl Fn(i64, i64) -> i64) -> Vec<i64> {
+    let mut y = vec![0i64; out_len];
+    let main = out_len - out_len % 8;
+    for (blk, ys) in y[..main].chunks_exact_mut(8).enumerate() {
+        let n0 = blk * 8;
+        for (k, &hk) in h.iter().enumerate() {
+            let hk = hk as i64;
+            let xs = &x[n0 + FIR_TAPS - 1 - k..n0 + FIR_TAPS - 1 - k + 8];
+            ys[0] += mul(xs[0] as i64, hk);
+            ys[1] += mul(xs[1] as i64, hk);
+            ys[2] += mul(xs[2] as i64, hk);
+            ys[3] += mul(xs[3] as i64, hk);
+            ys[4] += mul(xs[4] as i64, hk);
+            ys[5] += mul(xs[5] as i64, hk);
+            ys[6] += mul(xs[6] as i64, hk);
+            ys[7] += mul(xs[7] as i64, hk);
+        }
+    }
+    for (n, o) in (main..out_len).zip(&mut y[main..]) {
+        let mut acc = 0i64;
+        for (k, &hk) in h.iter().enumerate() {
+            acc += mul(x[n + FIR_TAPS - 1 - k] as i64, hk as i64);
+        }
+        *o = acc;
+    }
+    y
+}
+
+/// The blocked GEMM loop: i-outer / k-middle / j-inner like
+/// `nn::gemm::gemm_loop`, with the j walk unrolled in 8-wide blocks.
+/// Accumulation is exact `i64` addition per output element in the same
+/// k-ascending order, so the tile is bit-identical to the native path.
+fn gemm_blocked(req: &GemmRequest, signed: bool, c: &mut [i64], mul: impl Fn(i64, i64) -> i64) {
+    let prod = |a: i64, b: i64| {
+        if signed {
+            mul(a, b)
+        } else {
+            let sign = if (a < 0) != (b < 0) { -1 } else { 1 };
+            sign * mul(a.abs(), b.abs())
+        }
+    };
+    let (k_dim, n_dim) = (req.k, req.n);
+    let main = n_dim - n_dim % 8;
+    for i in 0..req.m {
+        let row_a = &req.a[i * k_dim..(i + 1) * k_dim];
+        let row_c = &mut c[i * n_dim..(i + 1) * n_dim];
+        for (kk, &av) in row_a.iter().enumerate() {
+            let row_b = &req.b[kk * n_dim..(kk + 1) * n_dim];
+            let a = av as i64;
+            let blocks =
+                row_c[..main].chunks_exact_mut(8).zip(row_b[..main].chunks_exact(8));
+            for (cs, bs) in blocks {
+                cs[0] += prod(a, bs[0] as i64);
+                cs[1] += prod(a, bs[1] as i64);
+                cs[2] += prod(a, bs[2] as i64);
+                cs[3] += prod(a, bs[3] as i64);
+                cs[4] += prod(a, bs[4] as i64);
+                cs[5] += prod(a, bs[5] as i64);
+                cs[6] += prod(a, bs[6] as i64);
+                cs[7] += prod(a, bs[7] as i64);
+            }
+            for (cv, &bv) in row_c[main..].iter_mut().zip(&row_b[main..]) {
+                *cv += prod(a, bv as i64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::FIR_BLOCK;
+    use crate::testkit::draw_operands;
+    use crate::util::Pcg64;
+
+    /// Lane/block lengths that straddle the 8-wide unroll boundary.
+    const LENS: [usize; 5] = [0, 5, 8, 33, 1000];
+
+    #[test]
+    fn multiply_bitwise_matches_native_all_kinds_and_tails() {
+        let (simd, native) = (SimdBackend::new(), NativeBackend::new());
+        // wl=10 covers the LUT-less digit fallback for ETM and the
+        // compiled shapes for every other family.
+        for kind in MultKind::ALL {
+            for &n in &LENS {
+                let (wl, level) = (10u32, 5u32);
+                let (x, y) = draw_operands(kind, wl, n, 0x51D ^ n as u64);
+                let req = MultiplyRequest { kind, wl, level, x, y };
+                let got = simd.multiply(&req).unwrap();
+                let want = native.multiply(&req).unwrap();
+                assert_eq!(got.p, want.p, "{kind} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn moments_bitwise_match_native_wl12_and_empty() {
+        let (simd, native) = (SimdBackend::new(), NativeBackend::new());
+        for (kind, level) in [(MultKind::BbmType0, 9u32), (MultKind::Bam, 13), (MultKind::Etm, 6)]
+        {
+            for &n in &LENS {
+                let (x, y) = draw_operands(kind, 12, n, 0xE44 ^ n as u64);
+                let req = MomentsRequest { kind, wl: 12, level, x, y };
+                let got = simd.moments(&req).unwrap();
+                let want = native.moments(&req).unwrap();
+                assert_eq!(got.sum, want.sum, "{kind} n={n}");
+                assert_eq!(got.sum_sq.to_bits(), want.sum_sq.to_bits(), "{kind} n={n}");
+                assert_eq!(got.min, want.min, "{kind} n={n}");
+                assert_eq!(got.nonzero, want.nonzero, "{kind} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fir_block_bitwise_matches_native() {
+        let (simd, native) = (SimdBackend::new(), NativeBackend::new());
+        let mut rng = Pcg64::seeded(41);
+        let x: Vec<i32> = (0..FIR_BLOCK + FIR_TAPS - 1).map(|_| rng.operand(16) as i32).collect();
+        let h: Vec<i32> = (0..FIR_TAPS).map(|_| rng.operand(16) as i32).collect();
+        for vbl in [0u32, 13] {
+            let req = FirRequest { wl: 16, x: x.clone(), h: h.clone(), vbl };
+            assert_eq!(simd.fir(&req).unwrap().y, native.fir(&req).unwrap().y, "vbl={vbl}");
+        }
+    }
+
+    #[test]
+    fn gemm_bitwise_matches_native_signed_and_unsigned() {
+        let (simd, native) = (SimdBackend::new(), NativeBackend::new());
+        let mut rng = Pcg64::seeded(99);
+        // n=12 exercises the 8-wide j-blocks plus a 4-lane tail.
+        let (m, k, n) = (17usize, 9usize, 12usize);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.operand(8) as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.operand(8) as i32).collect();
+        for (kind, level) in
+            [(MultKind::BbmType0, 5u32), (MultKind::Bam, 6), (MultKind::Etm, 3)]
+        {
+            let req =
+                GemmRequest { kind, wl: 8, level, m, k, n, a: a.clone(), b: b.clone() };
+            assert_eq!(simd.gemm(&req).unwrap().c, native.gemm(&req).unwrap().c, "{kind}");
+        }
+    }
+
+    #[test]
+    fn snr_and_shape_errors_delegate() {
+        let simd = SimdBackend::new();
+        let mut rng = Pcg64::seeded(5);
+        let reference: Vec<f64> = (0..FIR_BLOCK).map(|_| rng.gaussian()).collect();
+        let signal: Vec<f64> = (0..FIR_BLOCK).map(|_| rng.gaussian() * 0.1).collect();
+        let req = SnrRequest { reference, signal };
+        let (got, want) = (simd.snr(&req).unwrap(), NativeBackend::new().snr(&req).unwrap());
+        assert_eq!(got.ref_power.to_bits(), want.ref_power.to_bits());
+        assert_eq!(got.err_power.to_bits(), want.err_power.to_bits());
+        // Validation errors are typed, same as native.
+        let bad = MultiplyRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            x: vec![1, 2],
+            y: vec![3],
+        };
+        assert!(simd.multiply(&bad).is_err());
+    }
+}

@@ -5,8 +5,21 @@
 //! vLLM-router-style batching policy scaled down to this paper's
 //! request shapes. A [`PackedBatch`] becomes one
 //! [`crate::backend::MultiplyRequest`] through the server.
+//!
+//! The inverse direction lives here too: [`Batcher::cut_mixed`] takes a
+//! *mixed* multiply/moments/power/GEMM stream ([`MixedRequest`]) and
+//! cuts it into per-worker [`SubJob`]s — lane workloads split into
+//! contiguous chunks, GEMM requests into whole-row tiles, power jobs
+//! kept atomic — in strict submission order, so the server can fan the
+//! pieces across the executor pool and reassemble each reply with
+//! exact merges ([`crate::coordinator::DspServer::submit_mixed`]).
 
 use std::time::{Duration, Instant};
+
+use crate::backend::{
+    ErrorMoments, GemmBlock, GemmRequest, MomentsRequest, MultiplyRequest, PowerReport,
+    PowerRequest, ProductBlock,
+};
 
 /// One pending request: caller-tagged id plus its operand pairs.
 #[derive(Clone, Debug)]
@@ -101,6 +114,166 @@ impl Batcher {
         self.oldest = None;
         Some(PackedBatch { x, y, extents })
     }
+
+    /// Cut a mixed multiply/moments/power/GEMM stream into per-worker
+    /// sub-batches:
+    ///
+    /// * lane workloads (multiply, moments) split into up to
+    ///   `2 × workers` contiguous chunks of at least
+    ///   [`MIN_SPLIT_LANES`] lanes each;
+    /// * GEMM requests split into whole-row tiles of at least
+    ///   [`crate::nn::TILE_ROWS`] rows — a row is never split across
+    ///   tiles, mirroring [`crate::coordinator::DspServer::gemm`];
+    /// * power jobs pass through atomically (a design point is one
+    ///   gate-level simulation).
+    ///
+    /// The cut is deterministic in `(traffic, workers)` and preserves
+    /// submission order: every piece of request *i* precedes every
+    /// piece of request *i + 1*, and pieces of one request appear in
+    /// operand order — so replies reassemble by concatenation (lanes,
+    /// row tiles) or exact integer merge (moments) in collection
+    /// order. Requests whose operand lengths disagree with their
+    /// declared shape pass through uncut for the backend to reject
+    /// with a typed error.
+    pub fn cut_mixed(traffic: Vec<MixedRequest>, workers: usize) -> Vec<SubJob> {
+        let workers = workers.max(1);
+        let mut out = Vec::with_capacity(traffic.len());
+        for (index, req) in traffic.into_iter().enumerate() {
+            match req {
+                MixedRequest::Multiply(r) => {
+                    let chunk = lane_chunk(r.x.len(), workers);
+                    if r.x.len() != r.y.len() || chunk >= r.x.len() {
+                        out.push(SubJob { index, req: MixedRequest::Multiply(r) });
+                        continue;
+                    }
+                    let mut base = 0;
+                    while base < r.x.len() {
+                        let end = (base + chunk).min(r.x.len());
+                        out.push(SubJob {
+                            index,
+                            req: MixedRequest::Multiply(MultiplyRequest {
+                                kind: r.kind,
+                                wl: r.wl,
+                                level: r.level,
+                                x: r.x[base..end].to_vec(),
+                                y: r.y[base..end].to_vec(),
+                            }),
+                        });
+                        base = end;
+                    }
+                }
+                MixedRequest::Moments(r) => {
+                    let chunk = lane_chunk(r.x.len(), workers);
+                    if r.x.len() != r.y.len() || chunk >= r.x.len() {
+                        out.push(SubJob { index, req: MixedRequest::Moments(r) });
+                        continue;
+                    }
+                    let mut base = 0;
+                    while base < r.x.len() {
+                        let end = (base + chunk).min(r.x.len());
+                        out.push(SubJob {
+                            index,
+                            req: MixedRequest::Moments(MomentsRequest {
+                                kind: r.kind,
+                                wl: r.wl,
+                                level: r.level,
+                                x: r.x[base..end].to_vec(),
+                                y: r.y[base..end].to_vec(),
+                            }),
+                        });
+                        base = end;
+                    }
+                }
+                MixedRequest::Power(r) => {
+                    out.push(SubJob { index, req: MixedRequest::Power(r) });
+                }
+                MixedRequest::Gemm(r) => {
+                    let tile = crate::nn::TILE_ROWS;
+                    let splittable = workers > 1
+                        && r.m >= 2 * tile
+                        && r.a.len() == r.m * r.k
+                        && r.b.len() == r.k * r.n;
+                    if !splittable {
+                        out.push(SubJob { index, req: MixedRequest::Gemm(r) });
+                        continue;
+                    }
+                    let rows_per_tile = r.m.div_ceil(workers * 2).max(tile);
+                    let mut row = 0;
+                    while row < r.m {
+                        let end = (row + rows_per_tile).min(r.m);
+                        out.push(SubJob {
+                            index,
+                            req: MixedRequest::Gemm(GemmRequest {
+                                kind: r.kind,
+                                wl: r.wl,
+                                level: r.level,
+                                m: end - row,
+                                k: r.k,
+                                n: r.n,
+                                a: r.a[row * r.k..end * r.k].to_vec(),
+                                b: r.b.clone(),
+                            }),
+                        });
+                        row = end;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Smallest lane chunk [`Batcher::cut_mixed`] will split multiply or
+/// moments traffic into — below this the per-sub-job reply/merge
+/// overhead outweighs any parallelism win.
+pub const MIN_SPLIT_LANES: usize = 1024;
+
+/// Lane-chunk size for splitting a lane workload across `workers`:
+/// about two chunks per worker, floored at [`MIN_SPLIT_LANES`] (and at
+/// the whole request for small batches or single-worker pools).
+fn lane_chunk(lanes: usize, workers: usize) -> usize {
+    if workers <= 1 || lanes <= MIN_SPLIT_LANES {
+        return lanes.max(1);
+    }
+    lanes.div_ceil(workers * 2).max(MIN_SPLIT_LANES)
+}
+
+/// One request of a mixed workload stream
+/// ([`crate::coordinator::DspServer::submit_mixed`]).
+#[derive(Clone, Debug)]
+pub enum MixedRequest {
+    /// Batched multiply lanes (splittable by contiguous lane chunks).
+    Multiply(MultiplyRequest),
+    /// Error-moment reduction lanes (splittable; chunk moments merge
+    /// exactly).
+    Moments(MomentsRequest),
+    /// One gate-level power characterization (always atomic).
+    Power(PowerRequest),
+    /// One GEMM request (splittable by whole-row tiles only).
+    Gemm(GemmRequest),
+}
+
+/// The reassembled reply to one [`MixedRequest`].
+#[derive(Clone, Debug)]
+pub enum MixedReply {
+    /// Concatenated product lanes.
+    Multiply(ProductBlock),
+    /// Exactly merged chunk moments.
+    Moments(ErrorMoments),
+    /// The single power report.
+    Power(PowerReport),
+    /// Concatenated row tiles.
+    Gemm(GemmBlock),
+}
+
+/// One piece of a cut mixed stream: the index of the originating
+/// request plus the sub-request covering a contiguous slice of it.
+#[derive(Clone, Debug)]
+pub struct SubJob {
+    /// Index into the traffic vector handed to [`Batcher::cut_mixed`].
+    pub index: usize,
+    /// The piece (the whole request when no split applied).
+    pub req: MixedRequest,
 }
 
 #[cfg(test)]
@@ -164,6 +337,131 @@ mod tests {
         let batch = b.poll().expect("linger expired");
         assert_eq!(batch.extents.len(), 1);
         assert!(b.poll().is_none());
+    }
+
+    #[test]
+    fn cut_mixed_preserves_order_and_concatenates_lanes() {
+        use crate::arith::MultKind;
+        let lanes = 5000usize;
+        let x: Vec<i32> = (0..lanes as i32).collect();
+        let y: Vec<i32> = (0..lanes as i32).map(|v| v + 1).collect();
+        let traffic = vec![
+            MixedRequest::Multiply(MultiplyRequest {
+                kind: MultKind::Bam,
+                wl: 8,
+                level: 5,
+                x: x.clone(),
+                y: y.clone(),
+            }),
+            MixedRequest::Power(PowerRequest {
+                kind: MultKind::BbmType0,
+                wl: 8,
+                level: 0,
+                constraint_ps: 0.0,
+                nvec: 64,
+                seed: 1,
+            }),
+            MixedRequest::Moments(MomentsRequest {
+                kind: MultKind::BbmType0,
+                wl: 12,
+                level: 9,
+                x: x.clone(),
+                y: y.clone(),
+            }),
+        ];
+        let subs = Batcher::cut_mixed(traffic, 4);
+        // Indices are non-decreasing and contiguous: order is preserved.
+        let idx: Vec<usize> = subs.iter().map(|s| s.index).collect();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(idx, sorted, "cut must never reorder requests");
+        assert!(idx.windows(2).all(|w| w[1] - w[0] <= 1), "indices must be contiguous");
+        // 5000 lanes at 4 workers: chunks of MIN_SPLIT_LANES, several
+        // pieces, concatenating back to the original operands.
+        for (variant, want_x) in [(0usize, &x), (2, &x)] {
+            let mut got = Vec::new();
+            for s in subs.iter().filter(|s| s.index == variant) {
+                match &s.req {
+                    MixedRequest::Multiply(r) => got.extend_from_slice(&r.x),
+                    MixedRequest::Moments(r) => got.extend_from_slice(&r.x),
+                    other => panic!("unexpected piece {other:?}"),
+                }
+            }
+            assert_eq!(&got, want_x, "request {variant} lanes must concatenate back");
+        }
+        assert!(subs.iter().filter(|s| s.index == 0).count() > 1, "large batch must split");
+        // The power job is atomic.
+        assert_eq!(subs.iter().filter(|s| s.index == 1).count(), 1);
+    }
+
+    #[test]
+    fn cut_mixed_gemm_tiles_are_whole_rows() {
+        use crate::arith::MultKind;
+        let tile = crate::nn::TILE_ROWS;
+        let (m, k, n) = (100usize, 3usize, 2usize);
+        let a: Vec<i32> = (0..(m * k) as i32).collect();
+        let b: Vec<i32> = (0..(k * n) as i32).collect();
+        let traffic = vec![MixedRequest::Gemm(GemmRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            m,
+            k,
+            n,
+            a: a.clone(),
+            b: b.clone(),
+        })];
+        let subs = Batcher::cut_mixed(traffic, 4);
+        assert!(subs.len() > 1, "m = 100 at 4 workers must tile");
+        let mut rows = 0usize;
+        let mut got_a = Vec::new();
+        for (i, s) in subs.iter().enumerate() {
+            let MixedRequest::Gemm(r) = &s.req else { panic!("gemm piece expected") };
+            // Whole rows only: the operand slab length matches m·k, and
+            // every tile except the last carries at least TILE_ROWS rows.
+            assert_eq!(r.a.len(), r.m * r.k, "tile {i} must hold whole rows");
+            assert_eq!((r.k, r.n), (k, n));
+            assert_eq!(r.b, b, "every tile carries the full B");
+            if i + 1 < subs.len() {
+                assert!(r.m >= tile, "tile {i} below TILE_ROWS");
+            }
+            rows += r.m;
+            got_a.extend_from_slice(&r.a);
+        }
+        assert_eq!(rows, m);
+        assert_eq!(got_a, a, "row tiles must concatenate back to A");
+    }
+
+    #[test]
+    fn cut_mixed_passes_through_when_unsplittable() {
+        use crate::arith::MultKind;
+        let mk = |n: usize| {
+            MixedRequest::Multiply(MultiplyRequest {
+                kind: MultKind::Bam,
+                wl: 8,
+                level: 5,
+                x: vec![1; n],
+                y: vec![2; n],
+            })
+        };
+        // Single worker: one piece per request, in order.
+        let subs = Batcher::cut_mixed(vec![mk(5000), mk(10)], 1);
+        assert_eq!(subs.len(), 2);
+        assert_eq!((subs[0].index, subs[1].index), (0, 1));
+        // Small batches stay whole even on a wide pool.
+        let subs = Batcher::cut_mixed(vec![mk(MIN_SPLIT_LANES)], 8);
+        assert_eq!(subs.len(), 1);
+        // Malformed operand lengths pass through for the backend's
+        // typed rejection rather than panicking the cutter.
+        let bad = MixedRequest::Multiply(MultiplyRequest {
+            kind: MultKind::Bam,
+            wl: 8,
+            level: 5,
+            x: vec![1; 4096],
+            y: vec![2; 7],
+        });
+        let subs = Batcher::cut_mixed(vec![bad], 8);
+        assert_eq!(subs.len(), 1);
     }
 
     #[test]

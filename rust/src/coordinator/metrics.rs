@@ -26,6 +26,9 @@ pub struct Metrics {
     pub max_latency_ns: AtomicU64,
     /// Times a producer blocked on the bounded queue (backpressure).
     pub backpressure_events: AtomicU64,
+    /// Jobs this worker took from a *sibling's* queue (work stealing;
+    /// always zero on the submit-side hub).
+    pub steals: AtomicU64,
 }
 
 impl Metrics {
@@ -53,6 +56,10 @@ impl Metrics {
             busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
             max_latency: Duration::from_nanos(self.max_latency_ns.load(Ordering::Relaxed)),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            // The hub cannot see its queue; `DspServer::metrics` /
+            // `worker_metrics` fill the live depth in per worker.
+            queue_depth: 0,
         }
     }
 }
@@ -74,6 +81,11 @@ pub struct MetricsSnapshot {
     pub max_latency: Duration,
     /// Producer stalls on the bounded queue.
     pub backpressure_events: u64,
+    /// Jobs taken from sibling queues (work stealing).
+    pub steals: u64,
+    /// Jobs waiting in this worker's queue at snapshot time (summed
+    /// across workers in the folded pool snapshot).
+    pub queue_depth: u64,
 }
 
 impl MetricsSnapshot {
@@ -91,6 +103,8 @@ impl MetricsSnapshot {
         self.busy += other.busy;
         self.max_latency = self.max_latency.max(other.max_latency);
         self.backpressure_events += other.backpressure_events;
+        self.steals += other.steals;
+        self.queue_depth += other.queue_depth;
     }
 
     /// Items per second of executor busy time.
@@ -117,7 +131,8 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs {}/{} | execs {} | items {} | {:.1} items/s | mean {:?} max {:?} | stalls {}",
+            "jobs {}/{} | execs {} | items {} | {:.1} items/s | mean {:?} max {:?} | \
+             stalls {} | steals {} | queued {}",
             self.completed,
             self.submitted,
             self.executions,
@@ -126,6 +141,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_latency(),
             self.max_latency,
             self.backpressure_events,
+            self.steals,
+            self.queue_depth,
         )
     }
 }
@@ -161,16 +178,23 @@ mod tests {
         let a = Metrics::new();
         a.submitted.fetch_add(2, Ordering::Relaxed);
         a.record_job(Duration::from_millis(4), 10);
+        a.steals.fetch_add(1, Ordering::Relaxed);
         let b = Metrics::new();
         b.record_job(Duration::from_millis(6), 30);
         b.record_job(Duration::from_millis(2), 5);
+        b.steals.fetch_add(2, Ordering::Relaxed);
         let mut snap = a.snapshot();
-        snap.merge(&b.snapshot());
+        snap.queue_depth = 3;
+        let mut bs = b.snapshot();
+        bs.queue_depth = 4;
+        snap.merge(&bs);
         assert_eq!(snap.submitted, 2);
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.items, 45);
         assert_eq!(snap.busy, Duration::from_millis(12));
         assert_eq!(snap.max_latency, Duration::from_millis(6));
         assert_eq!(snap.mean_latency(), Duration::from_millis(4));
+        assert_eq!(snap.steals, 3);
+        assert_eq!(snap.queue_depth, 7);
     }
 }

@@ -1,19 +1,25 @@
 //! Layer-3 coordinator: the streaming DSP pipeline server.
 //!
 //! The paper's contribution is an arithmetic unit, so (per the
-//! architecture rules) L3 is a lean but real serving layer: a bounded
-//! job queue in front of an executor *pool* whose workers each own a
-//! pluggable execution [`crate::backend::Backend`] instance
+//! architecture rules) L3 is a lean but real serving layer: a
+//! work-stealing executor *pool* — per-worker bounded deques, round
+//! robin or pinned placement, idle workers stealing from siblings —
+//! whose workers each own a pluggable execution
+//! [`crate::backend::Backend`] instance
 //! ([`server::DspServer::start_pool`]; PJRT keeps the classic single
 //! executor of [`server::DspServer::start`]), an overlap-save block
-//! planner for streaming FIR requests, a dynamic micro-batcher for
-//! multiply traffic, and per-worker metrics folded into one snapshot.
-//! Exhaustive-sweep and SNR submissions shard into sub-jobs fanned
-//! across the workers and merge with exact accumulators, so results
-//! are bit-identical at any worker count. The coordinator itself never
-//! names a concrete engine — callers pick one via
-//! [`crate::backend::BackendKind`] (native by default, PJRT behind the
-//! `pjrt` feature). See [`server::DspServer`] for the public API;
+//! planner for streaming FIR requests, a dynamic micro-batcher that
+//! packs multiply lanes *and* cuts heterogeneous
+//! multiply/moments/power/GEMM traffic into per-worker sub-jobs
+//! ([`batcher::Batcher::cut_mixed`]), and per-worker metrics — steal
+//! and queue-depth counters included — folded into one snapshot.
+//! Exhaustive-sweep, SNR, GEMM and mixed-traffic submissions shard
+//! into sub-jobs fanned across the workers and merge with exact
+//! accumulators, so results are bit-identical at any worker count. The
+//! coordinator itself never names a concrete engine — callers pick one
+//! via [`crate::backend::BackendKind`] (native by default, the SIMD
+//! wide-lane engine via `simd`, PJRT behind the `pjrt` feature). See
+//! [`server::DspServer`] for the public API;
 //! `examples/serve_pipeline.rs` drives the full loop.
 
 pub mod batcher;
@@ -21,7 +27,9 @@ pub mod blocks;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batcher, LaneRequest, PackedBatch};
+pub use batcher::{
+    Batcher, LaneRequest, MixedReply, MixedRequest, PackedBatch, SubJob, MIN_SPLIT_LANES,
+};
 pub use blocks::{block_input, pad_signal, plan_blocks, BlockPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{DspServer, Pending, QueueFull};

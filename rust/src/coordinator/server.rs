@@ -1,28 +1,37 @@
-//! The L3 coordinator server: an executor *pool* behind one bounded
-//! job queue, generic over the execution [`Backend`], with streaming
-//! FIR filtering, exhaustive error sweeps and SNR accumulation as the
-//! request types.
+//! The L3 coordinator server: a work-stealing executor *pool* behind
+//! per-worker bounded queues, generic over the execution [`Backend`],
+//! with streaming FIR filtering, exhaustive error sweeps, SNR
+//! accumulation and mixed-traffic batches as the request types.
 //!
 //! Topology (one box = one thread):
 //!
 //! ```text
-//!  callers ──▶ [bounded sync_channel] ──▶ executor 0 (owns Box<dyn Backend>)
-//!     ▲            backpressure      └──▶ executor 1 (own backend instance)
-//!     │                              └──▶ …          (N = `start_pool`)
+//!  callers ──▶ place() ──▶ [queue 0] ◀─▶ executor 0 (owns Box<dyn Backend>)
+//!     ▲     (round-robin   [queue 1] ◀─▶ executor 1 (own backend instance)
+//!     │      or pinned)    [queue N] ◀─▶ …          (N = `start_pool`)
+//!     │                        ▲ steal: idle workers pop siblings' queues
 //!     └──────────── per-job reply channels ◀──┘
 //! ```
+//!
+//! The old single shared `Mutex<Receiver>` queue is gone: every worker
+//! owns a deque, submissions are placed round-robin (or pinned via the
+//! `submit_*_at` affinity variants), and an idle worker first drains
+//! its own queue, then *steals* from siblings — so one slow job never
+//! strands work behind it. Admission is still globally bounded: a
+//! single `queued` count across all queues caps outstanding jobs at
+//! the configured depth, producers block (or get [`QueueFull`] from
+//! `try_submit_*`) beyond it, and stealing is invisible to callers
+//! because every job carries its own reply channel. Steal counts and
+//! live queue depths surface per worker through
+//! [`DspServer::worker_metrics`].
 //!
 //! Each backend is constructed *inside* its executor thread from a
 //! `Send` factory (PJRT client handles cannot cross threads; the
 //! native backend does not care). [`DspServer::start`] spawns the
 //! classic single executor — the only shape PJRT supports, since its
 //! factory can construct exactly one engine. [`DspServer::start_pool`]
-//! spawns N workers draining the shared queue, one backend instance
-//! per worker — the shape a vLLM-style router uses with one engine per
-//! device. The bounded queue provides backpressure to producers either
-//! way. Callers never see the backend: they submit typed requests
-//! ([`MultiplyRequest`] → [`ProductBlock`], …) and wait on [`Pending`]
-//! replies.
+//! spawns N workers, one backend instance per worker — the shape a
+//! vLLM-style router uses with one engine per device.
 //!
 //! High-level sweep/SNR/GEMM submissions are *sharded*:
 //! [`DspServer::exhaustive_sweep`] splits the operand space into
@@ -33,11 +42,15 @@
 //! pipelines every block before collecting, in submission order; and
 //! [`DspServer::gemm`] row-tiles large matrix multiplies across the
 //! pool, with exact `i64` accumulation keeping the merged block
-//! bit-identical to the single-job path.
+//! bit-identical to the single-job path. [`DspServer::submit_mixed`]
+//! generalizes this to heterogeneous traffic: the [`Batcher`] cuts a
+//! mixed multiply/moments/power/GEMM stream into per-worker sub-jobs
+//! and the server reassembles replies in strict submission order.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -51,6 +64,7 @@ use crate::backend::{
 use crate::dsp::fixed;
 use crate::util::stats::ErrorStats;
 
+use super::batcher::{Batcher, MixedReply, MixedRequest};
 use super::blocks::{block_input, pad_signal, plan_blocks};
 use super::metrics::{Metrics, MetricsSnapshot};
 
@@ -63,7 +77,6 @@ enum Job {
     Snr(SnrRequest, Sender<Result<SnrAccum>>),
     Power(PowerRequest, Sender<Result<PowerReport>>),
     Gemm(GemmRequest, Sender<Result<GemmBlock>>),
-    Shutdown,
 }
 
 /// A reply that has not arrived yet; `wait` blocks for it.
@@ -95,12 +108,197 @@ impl<T> std::fmt::Display for QueueFull<T> {
 
 impl<T: std::fmt::Debug> std::error::Error for QueueFull<T> {}
 
+/// What happened to a job handed to [`PoolShared::push`].
+enum PushOutcome {
+    /// Enqueued on a worker's deque; its reply will arrive.
+    Queued,
+    /// The pool is shutting down; the job (and its reply sender) was
+    /// dropped, so the caller's [`Pending::wait`] reports termination.
+    Closed,
+}
+
+/// Admission state shared by every producer and worker: one global
+/// count of queued-but-unclaimed jobs (the bounded-queue semantics)
+/// plus the shutdown flag.
+struct PoolInner {
+    /// Jobs pushed but not yet claimed by any worker.
+    queued: usize,
+    /// Set once by [`PoolShared::close`]; workers drain `queued` to
+    /// zero before exiting.
+    shutdown: bool,
+}
+
+/// The work-stealing scheduler state: per-worker deques, the admission
+/// lock, and the two condvars (`work` wakes idle workers, `space`
+/// wakes producers blocked on the depth bound).
+///
+/// Lock order is strictly `inner` → `queues[w]`: producers enqueue the
+/// physical job *while holding* the admission lock (so `queued > 0`
+/// always implies a physically present job), and workers release the
+/// admission lock *before* scanning queues. Dequeue is claim-first: a
+/// worker decrements `queued` under `inner`, which reserves it one
+/// physical job somewhere, then pops its own deque and falls back to
+/// stealing a sibling's head.
+struct PoolShared {
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    inner: Mutex<PoolInner>,
+    work: Condvar,
+    space: Condvar,
+    /// Maximum outstanding (unclaimed) jobs across all queues.
+    depth: usize,
+    /// Round-robin placement cursor for unpinned submissions.
+    cursor: AtomicUsize,
+}
+
+impl PoolShared {
+    fn new(workers: usize, depth: usize) -> PoolShared {
+        PoolShared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            inner: Mutex::new(PoolInner { queued: 0, shutdown: false }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            depth,
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// Home queue for a submission: pinned target (wrapped into range)
+    /// or the next round-robin slot.
+    fn place(&self, target: Option<usize>) -> usize {
+        let n = self.queues.len();
+        match target {
+            Some(w) => w % n,
+            None => self.cursor.fetch_add(1, Ordering::Relaxed) % n,
+        }
+    }
+
+    /// Enqueue under the already-held admission lock. The physical push
+    /// and the `queued` increment happen in one critical section, which
+    /// is what lets claimants trust the count.
+    fn enqueue(
+        &self,
+        mut g: MutexGuard<'_, PoolInner>,
+        job: Job,
+        target: Option<usize>,
+    ) -> PushOutcome {
+        let w = self.place(target);
+        let Ok(mut q) = self.queues[w].lock() else { return PushOutcome::Closed };
+        q.push_back(job);
+        g.queued += 1;
+        drop(q);
+        drop(g);
+        self.work.notify_one();
+        PushOutcome::Queued
+    }
+
+    /// Blocking admission: waits on `space` while the pool is at depth,
+    /// counting one backpressure event for the stall.
+    fn push(&self, job: Job, target: Option<usize>, submit: &Metrics) -> PushOutcome {
+        let Ok(mut g) = self.inner.lock() else { return PushOutcome::Closed };
+        if g.shutdown {
+            return PushOutcome::Closed;
+        }
+        if g.queued >= self.depth {
+            submit.backpressure_events.fetch_add(1, Ordering::Relaxed);
+            while g.queued >= self.depth && !g.shutdown {
+                g = match self.space.wait(g) {
+                    Ok(g) => g,
+                    Err(_) => return PushOutcome::Closed,
+                };
+            }
+            if g.shutdown {
+                return PushOutcome::Closed;
+            }
+        }
+        self.enqueue(g, job, target)
+    }
+
+    /// Non-blocking admission: `Err(job)` hands the job back when the
+    /// pool is at depth.
+    fn try_push(&self, job: Job, target: Option<usize>) -> std::result::Result<PushOutcome, Job> {
+        let Ok(g) = self.inner.lock() else { return Ok(PushOutcome::Closed) };
+        if g.shutdown {
+            return Ok(PushOutcome::Closed);
+        }
+        if g.queued >= self.depth {
+            return Err(job);
+        }
+        Ok(self.enqueue(g, job, target))
+    }
+
+    /// Worker `w`'s blocking dequeue: claim a job under the admission
+    /// lock (freeing one producer slot), then take a physical job —
+    /// own queue first, then steal. `None` means shut down and drained.
+    fn next_job(&self, w: usize, metrics: &Metrics) -> Option<Job> {
+        let mut g = self.inner.lock().ok()?;
+        loop {
+            if g.queued > 0 {
+                g.queued -= 1;
+                drop(g);
+                self.space.notify_one();
+                return self.take_claimed(w, metrics);
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.work.wait(g).ok()?;
+        }
+    }
+
+    /// Redeem a claim for a physical job. The claim guarantees one
+    /// exists (pushes are count-coupled under the admission lock), but
+    /// a concurrent claimant may pop "our" job from the queue we just
+    /// scanned while a new push lands behind us — so scan own-first,
+    /// then siblings, and rescan until a pop lands. Sibling pops count
+    /// as steals. Bails out (losing the claim) only if a queue mutex is
+    /// poisoned, which already means the pool is dying.
+    fn take_claimed(&self, w: usize, metrics: &Metrics) -> Option<Job> {
+        let n = self.queues.len();
+        loop {
+            let mut poisoned = false;
+            for i in 0..n {
+                let q = (w + i) % n;
+                match self.queues[q].lock() {
+                    Ok(mut deque) => {
+                        if let Some(job) = deque.pop_front() {
+                            if q != w {
+                                metrics.steals.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Some(job);
+                        }
+                    }
+                    Err(_) => poisoned = true,
+                }
+            }
+            if poisoned {
+                return None;
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Begin shutdown: claims keep draining `queued` to zero, then
+    /// workers exit; blocked producers give up with [`PushOutcome::Closed`].
+    fn close(&self) {
+        if let Ok(mut g) = self.inner.lock() {
+            g.shutdown = true;
+        }
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Live length of worker `w`'s deque (metrics only; racy by nature).
+    fn queue_depth(&self, w: usize) -> u64 {
+        self.queues[w].lock().map(|q| q.len() as u64).unwrap_or(0)
+    }
+}
+
 /// One worker's backend constructor, run inside its executor thread.
 type BoxedFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
 
 /// Handle to a running coordinator (one executor thread, or a pool).
 pub struct DspServer {
-    tx: SyncSender<Job>,
+    shared: Arc<PoolShared>,
     /// Submit-side counters (`submitted`, `backpressure_events`).
     submit_metrics: Arc<Metrics>,
     /// Execution-side counters, one hub per worker.
@@ -122,13 +320,14 @@ impl DspServer {
         Self::start_workers(vec![Box::new(factory) as BoxedFactory], depth)
     }
 
-    /// Start a pool of `workers` executor threads draining one shared
-    /// bounded queue of `depth` jobs. The factory runs once *per
-    /// worker*, inside that worker's thread, so every worker owns an
-    /// independent backend instance — which is why it must be `Fn`
-    /// (callable N times) and `Sync` (shared across the spawns), and
-    /// why PJRT stays on the single-executor [`DspServer::start`]
-    /// path. Any construction failure aborts the whole pool.
+    /// Start a pool of `workers` executor threads, each with its own
+    /// deque, sharing one bounded admission window of `depth` jobs.
+    /// The factory runs once *per worker*, inside that worker's
+    /// thread, so every worker owns an independent backend instance —
+    /// which is why it must be `Fn` (callable N times) and `Sync`
+    /// (shared across the spawns), and why PJRT stays on the
+    /// single-executor [`DspServer::start`] path. Any construction
+    /// failure aborts the whole pool.
     pub fn start_pool<F>(factory: F, workers: usize, depth: usize) -> Result<DspServer>
     where
         F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
@@ -146,14 +345,13 @@ impl DspServer {
 
     fn start_workers(factories: Vec<BoxedFactory>, depth: usize) -> Result<DspServer> {
         let workers = factories.len();
-        let (tx, rx) = sync_channel::<Job>(depth.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared::new(workers, depth.max(1)));
         let submit_metrics = Arc::new(Metrics::new());
         let (init_tx, init_rx) = sync_channel::<Result<String>>(workers);
         let mut worker_metrics = Vec::with_capacity(workers);
         let mut join = Vec::with_capacity(workers);
         for (w, factory) in factories.into_iter().enumerate() {
-            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
             let metrics = Arc::new(Metrics::new());
             worker_metrics.push(Arc::clone(&metrics));
             let init_tx = init_tx.clone();
@@ -171,7 +369,7 @@ impl DspServer {
                                 return;
                             }
                         };
-                        executor_loop(backend, &rx, &metrics);
+                        executor_loop(backend, &shared, w, &metrics);
                     })
                     .expect("spawn executor"),
             );
@@ -179,11 +377,22 @@ impl DspServer {
         drop(init_tx);
         let mut backend_name = String::new();
         for _ in 0..workers {
-            // On any init failure `tx` is dropped with the error return,
-            // disconnecting the queue; already-started siblings exit.
-            backend_name = init_rx.recv().map_err(|_| anyhow!("executor died during init"))??;
+            let res = init_rx.recv().map_err(|_| anyhow!("executor died during init"));
+            match res.and_then(|r| r) {
+                Ok(name) => backend_name = name,
+                Err(e) => {
+                    // No disconnect edge kills siblings in this
+                    // topology: close the pool and join everyone
+                    // before surfacing the first failure.
+                    shared.close();
+                    for j in join {
+                        let _ = j.join();
+                    }
+                    return Err(e);
+                }
+            }
         }
-        Ok(DspServer { tx, submit_metrics, worker_metrics, join, backend_name })
+        Ok(DspServer { shared, submit_metrics, worker_metrics, join, backend_name })
     }
 
     /// Start over a named backend kind (CLI selection).
@@ -206,6 +415,16 @@ impl DspServer {
         )
     }
 
+    /// A pool of `workers` SIMD-batched executors (wide-lane kernel
+    /// gathers, bit-identical to the native backend).
+    pub fn simd_pool(workers: usize, depth: usize) -> Result<DspServer> {
+        Self::start_pool(
+            || Ok(Box::new(crate::backend::SimdBackend::new()) as Box<dyn Backend>),
+            workers,
+            depth,
+        )
+    }
+
     /// Default server: the native backend. (The PJRT artifact path is
     /// opt-in via [`DspServer::start_kind`] with `BackendKind::Pjrt`.)
     pub fn start_default(depth: usize) -> Result<DspServer> {
@@ -217,48 +436,70 @@ impl DspServer {
         &self.backend_name
     }
 
-    /// Number of executor threads draining the queue.
+    /// Number of executor threads in the pool.
     pub fn workers(&self) -> usize {
         self.join.len()
     }
 
     /// Current metrics: the submit-side hub folded together with every
-    /// worker's execution hub.
+    /// worker's execution hub (including live queue depths).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.submit_metrics.snapshot();
-        for m in &self.worker_metrics {
-            snap.merge(&m.snapshot());
+        for (w, m) in self.worker_metrics.iter().enumerate() {
+            let mut ws = m.snapshot();
+            ws.queue_depth = self.shared.queue_depth(w);
+            snap.merge(&ws);
         }
         snap
     }
 
     /// Per-worker execution snapshots (pool introspection; a single
-    /// server reports one entry).
+    /// server reports one entry). Each snapshot carries that worker's
+    /// steal count and live queue depth.
     pub fn worker_metrics(&self) -> Vec<MetricsSnapshot> {
-        self.worker_metrics.iter().map(|m| m.snapshot()).collect()
+        self.worker_metrics
+            .iter()
+            .enumerate()
+            .map(|(w, m)| {
+                let mut s = m.snapshot();
+                s.queue_depth = self.shared.queue_depth(w);
+                s
+            })
+            .collect()
     }
 
     // -- typed submission --------------------------------------------------
 
     fn submit_job(&self, job: Job) {
+        self.submit_job_at(job, None);
+    }
+
+    fn submit_job_at(&self, job: Job, target: Option<usize>) {
         self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(job) {
-            Ok(()) => {}
-            Err(TrySendError::Full(job)) => {
-                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                // Block until the executor drains a slot.
-                let _ = self.tx.send(job);
-            }
-            // Executor gone: dropping the job drops its reply sender,
-            // so the caller's `Pending::wait` reports the termination.
-            Err(TrySendError::Disconnected(_)) => {}
-        }
+        // On a closed pool the job (and its reply sender) is dropped
+        // inside `push`, so the caller's `Pending::wait` reports the
+        // termination.
+        self.shared.push(job, target, &self.submit_metrics);
     }
 
     /// Submit a batched multiply (blocks when the queue is full).
     pub fn submit_multiply(&self, req: MultiplyRequest) -> Pending<ProductBlock> {
+        self.submit_multiply_placed(req, None)
+    }
+
+    /// Submit a batched multiply pinned to `worker`'s queue (affinity;
+    /// idle siblings may still steal it).
+    pub fn submit_multiply_at(&self, worker: usize, req: MultiplyRequest) -> Pending<ProductBlock> {
+        self.submit_multiply_placed(req, Some(worker))
+    }
+
+    fn submit_multiply_placed(
+        &self,
+        req: MultiplyRequest,
+        target: Option<usize>,
+    ) -> Pending<ProductBlock> {
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Multiply(req, rtx));
+        self.submit_job_at(Job::Multiply(req, rtx), target);
         Pending::new(rrx)
     }
 
@@ -269,26 +510,39 @@ impl DspServer {
         req: MultiplyRequest,
     ) -> std::result::Result<Pending<ProductBlock>, QueueFull<MultiplyRequest>> {
         let (rtx, rrx) = channel();
-        match self.tx.try_send(Job::Multiply(req, rtx)) {
-            Ok(()) => {
+        match self.shared.try_push(Job::Multiply(req, rtx), None) {
+            Ok(PushOutcome::Queued) => {
                 self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(Pending::new(rrx))
             }
-            Err(TrySendError::Full(Job::Multiply(req, _))) => {
+            // Pool closed: the dead reply channel surfaces the
+            // termination at `wait`, like the blocking path.
+            Ok(PushOutcome::Closed) => Ok(Pending::new(rrx)),
+            Err(Job::Multiply(req, _)) => {
                 self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 Err(QueueFull(req))
             }
-            Err(TrySendError::Full(_)) => unreachable!("submitted job variant"),
-            // Treat like the blocking path: the dead reply channel
-            // surfaces the termination at `wait`.
-            Err(TrySendError::Disconnected(_)) => Ok(Pending::new(rrx)),
+            Err(_) => unreachable!("submitted job variant"),
         }
     }
 
     /// Submit an error-moment reduction (blocks when the queue is full).
     pub fn submit_moments(&self, req: MomentsRequest) -> Pending<ErrorMoments> {
+        self.submit_moments_placed(req, None)
+    }
+
+    /// Submit an error-moment reduction pinned to `worker`'s queue.
+    pub fn submit_moments_at(&self, worker: usize, req: MomentsRequest) -> Pending<ErrorMoments> {
+        self.submit_moments_placed(req, Some(worker))
+    }
+
+    fn submit_moments_placed(
+        &self,
+        req: MomentsRequest,
+        target: Option<usize>,
+    ) -> Pending<ErrorMoments> {
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Moments(req, rtx));
+        self.submit_job_at(Job::Moments(req, rtx), target);
         Pending::new(rrx)
     }
 
@@ -310,8 +564,21 @@ impl DspServer {
     /// queue is full). Sweep drivers pipeline one request per design
     /// point and collect the reports in order.
     pub fn submit_power(&self, req: PowerRequest) -> Pending<PowerReport> {
+        self.submit_power_placed(req, None)
+    }
+
+    /// Submit a power characterization pinned to `worker`'s queue.
+    pub fn submit_power_at(&self, worker: usize, req: PowerRequest) -> Pending<PowerReport> {
+        self.submit_power_placed(req, Some(worker))
+    }
+
+    fn submit_power_placed(
+        &self,
+        req: PowerRequest,
+        target: Option<usize>,
+    ) -> Pending<PowerReport> {
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Power(req, rtx));
+        self.submit_job_at(Job::Power(req, rtx), target);
         Pending::new(rrx)
     }
 
@@ -319,8 +586,17 @@ impl DspServer {
     /// high-level [`DspServer::gemm`] row-shards large requests across
     /// the pool; this is the raw single-tile path.
     pub fn submit_gemm(&self, req: GemmRequest) -> Pending<GemmBlock> {
+        self.submit_gemm_placed(req, None)
+    }
+
+    /// Submit one GEMM tile pinned to `worker`'s queue.
+    pub fn submit_gemm_at(&self, worker: usize, req: GemmRequest) -> Pending<GemmBlock> {
+        self.submit_gemm_placed(req, Some(worker))
+    }
+
+    fn submit_gemm_placed(&self, req: GemmRequest, target: Option<usize>) -> Pending<GemmBlock> {
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Gemm(req, rtx));
+        self.submit_job_at(Job::Gemm(req, rtx), target);
         Pending::new(rrx)
     }
 
@@ -331,19 +607,19 @@ impl DspServer {
         req: GemmRequest,
     ) -> std::result::Result<Pending<GemmBlock>, QueueFull<GemmRequest>> {
         let (rtx, rrx) = channel();
-        match self.tx.try_send(Job::Gemm(req, rtx)) {
-            Ok(()) => {
+        match self.shared.try_push(Job::Gemm(req, rtx), None) {
+            Ok(PushOutcome::Queued) => {
                 self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(Pending::new(rrx))
             }
-            Err(TrySendError::Full(Job::Gemm(req, _))) => {
+            // Pool closed: the dead reply channel surfaces the
+            // termination at `wait`, like the blocking path.
+            Ok(PushOutcome::Closed) => Ok(Pending::new(rrx)),
+            Err(Job::Gemm(req, _)) => {
                 self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
                 Err(QueueFull(req))
             }
-            Err(TrySendError::Full(_)) => unreachable!("submitted job variant"),
-            // Treat like the blocking path: the dead reply channel
-            // surfaces the termination at `wait`.
-            Err(TrySendError::Disconnected(_)) => Ok(Pending::new(rrx)),
+            Err(_) => unreachable!("submitted job variant"),
         }
     }
 
@@ -512,6 +788,96 @@ impl DspServer {
         Ok(c)
     }
 
+    /// Serve a heterogeneous request stream: the [`Batcher`] cuts the
+    /// traffic into per-worker sub-jobs ([`Batcher::cut_mixed`] — lane
+    /// chunks for multiply/moments, whole-row tiles for GEMM, power
+    /// jobs atomic), every piece is submitted before the first reply
+    /// is collected, and replies reassemble in strict submission
+    /// order: product/GEMM lanes concatenate, moment pieces merge with
+    /// the same exact accumulators the sharded sweep uses. One reply
+    /// per input request, bit-identical at any worker count.
+    pub fn submit_mixed(&self, traffic: Vec<MixedRequest>) -> Result<Vec<MixedReply>> {
+        self.submit_mixed_placed(traffic, None)
+    }
+
+    /// [`DspServer::submit_mixed`] with every sub-job pinned to
+    /// `worker`'s queue — the degenerate single-hot-queue placement.
+    /// Idle siblings drain it by stealing; benchmarks use this as the
+    /// shared-queue baseline against round-robin placement.
+    pub fn submit_mixed_at(
+        &self,
+        worker: usize,
+        traffic: Vec<MixedRequest>,
+    ) -> Result<Vec<MixedReply>> {
+        self.submit_mixed_placed(traffic, Some(worker))
+    }
+
+    fn submit_mixed_placed(
+        &self,
+        traffic: Vec<MixedRequest>,
+        target: Option<usize>,
+    ) -> Result<Vec<MixedReply>> {
+        enum Sub {
+            Multiply(Pending<ProductBlock>),
+            Moments(Pending<ErrorMoments>),
+            Power(Pending<PowerReport>),
+            Gemm(Pending<GemmBlock>),
+        }
+        let pieces = Batcher::cut_mixed(traffic, self.workers());
+        // Pipeline: submit every piece, then collect in order.
+        let mut pending = Vec::with_capacity(pieces.len());
+        for piece in pieces {
+            let sub = match piece.req {
+                MixedRequest::Multiply(r) => Sub::Multiply(self.submit_multiply_placed(r, target)),
+                MixedRequest::Moments(r) => Sub::Moments(self.submit_moments_placed(r, target)),
+                MixedRequest::Power(r) => Sub::Power(self.submit_power_placed(r, target)),
+                MixedRequest::Gemm(r) => Sub::Gemm(self.submit_gemm_placed(r, target)),
+            };
+            pending.push((piece.index, sub));
+        }
+        // Reassemble: piece indices are contiguous and non-decreasing,
+        // so a piece either opens reply `index` or extends the last one.
+        let mut out: Vec<MixedReply> = Vec::new();
+        for (index, sub) in pending {
+            let fresh = out.len() <= index;
+            match sub {
+                Sub::Multiply(p) => {
+                    let blk = p.wait()?;
+                    if fresh {
+                        out.push(MixedReply::Multiply(blk));
+                    } else if let Some(MixedReply::Multiply(acc)) = out.last_mut() {
+                        acc.p.extend(blk.p);
+                    } else {
+                        unreachable!("pieces of one request share a variant");
+                    }
+                }
+                Sub::Moments(p) => {
+                    let m = p.wait()?;
+                    if fresh {
+                        out.push(MixedReply::Moments(m));
+                    } else if let Some(MixedReply::Moments(acc)) = out.last_mut() {
+                        *acc = merge_moments(*acc, m);
+                    } else {
+                        unreachable!("pieces of one request share a variant");
+                    }
+                }
+                // Power jobs are never split.
+                Sub::Power(p) => out.push(MixedReply::Power(p.wait()?)),
+                Sub::Gemm(p) => {
+                    let blk = p.wait()?;
+                    if fresh {
+                        out.push(MixedReply::Gemm(blk));
+                    } else if let Some(MixedReply::Gemm(acc)) = out.last_mut() {
+                        acc.c.extend(blk.c);
+                    } else {
+                        unreachable!("pieces of one request share a variant");
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Graceful shutdown (drains outstanding jobs first). Equivalent to
     /// dropping the handle; provided for explicitness at call sites.
     pub fn shutdown(self) {
@@ -521,32 +887,33 @@ impl DspServer {
 
 impl Drop for DspServer {
     fn drop(&mut self) {
-        // One shutdown marker per worker; outstanding jobs drain first
-        // (FIFO), and each worker consumes exactly one marker.
-        for _ in 0..self.join.len() {
-            let _ = self.tx.send(Job::Shutdown);
-        }
+        // Close admission; workers drain every already-queued job
+        // before exiting (claims are granted while `queued > 0` even
+        // after shutdown), then join.
+        self.shared.close();
         for j in self.join.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-/// One worker's drain loop over the shared queue. The mutex only guards
-/// the *dequeue* — a worker blocked in `recv` releases it as soon as a
-/// job arrives, so siblings keep draining while it executes.
-fn executor_loop(backend: Box<dyn Backend>, rx: &Mutex<Receiver<Job>>, metrics: &Metrics) {
-    loop {
-        let job = match rx.lock() {
-            Ok(guard) => guard.recv(),
-            // A sibling panicked while holding the dequeue lock; treat
-            // the pool as shutting down.
-            Err(_) => return,
-        };
-        let Ok(job) = job else { return };
-        if matches!(job, Job::Shutdown) {
-            return;
-        }
+/// Merge two moment pieces of one cut request. Bit-identical to the
+/// uncut reduction under the sweep contract: the `i64` sum cast
+/// distributes over addition mod 2^64, and each piece's `f64` Σerr² is
+/// an exact integer below 2^53.
+fn merge_moments(a: ErrorMoments, b: ErrorMoments) -> ErrorMoments {
+    ErrorMoments {
+        sum: a.sum.wrapping_add(b.sum),
+        sum_sq: a.sum_sq + b.sum_sq,
+        min: a.min.min(b.min),
+        nonzero: a.nonzero + b.nonzero,
+    }
+}
+
+/// One worker's drain loop: claim-first dequeue over the per-worker
+/// deques (own queue, then steal), until shutdown *and* drained.
+fn executor_loop(backend: Box<dyn Backend>, shared: &PoolShared, w: usize, metrics: &Metrics) {
+    while let Some(job) = shared.next_job(w, metrics) {
         serve_job(backend.as_ref(), job, metrics);
     }
 }
@@ -554,7 +921,6 @@ fn executor_loop(backend: Box<dyn Backend>, rx: &Mutex<Receiver<Job>>, metrics: 
 fn serve_job(backend: &dyn Backend, job: Job, metrics: &Metrics) {
     let t0 = Instant::now();
     match job {
-        Job::Shutdown => {}
         Job::Multiply(req, reply) => {
             let n = req.x.len() as u64;
             let res = backend.multiply(&req).map_err(anyhow::Error::from);

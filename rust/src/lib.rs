@@ -34,9 +34,10 @@
 //!   pairs for the six paper workloads (batched multiply, error
 //!   moments, FIR blocks, SNR accumulation, gate-level power
 //!   characterization, approximate GEMM tiles) behind the
-//!   [`backend::Backend`] trait; [`backend::NativeBackend`] (default)
-//!   and [`backend::PjrtBackend`] (`--features pjrt`) implement it. See
-//!   `src/backend/README.md`.
+//!   [`backend::Backend`] trait; [`backend::NativeBackend`] (default),
+//!   [`backend::SimdBackend`] (wide-lane 8-at-a-time kernel gathers,
+//!   bit-identical to native) and [`backend::PjrtBackend`]
+//!   (`--features pjrt`) implement it. See `src/backend/README.md`.
 //! * [`nn`] — approximate quantized-DNN layer: blocked int8 GEMM over
 //!   the [`arith`] product kernels ([`nn::gemm`]) and a fixed quantized
 //!   MLP classifier with a synthetic labeled set ([`nn::model`]) — the
@@ -45,13 +46,15 @@
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
 //!   (compiled only with `--features pjrt`; the default build never
 //!   references the `xla` crate).
-//! * [`coordinator`] — streaming DSP pipeline server (bounded queue,
-//!   executor *pool* whose workers each own a `Box<dyn Backend>`,
-//!   sharded sweep/SNR fan-out with bit-identical merging, overlap-save
-//!   block planner, dynamic micro-batcher, backpressure, per-worker
-//!   metrics).
+//! * [`coordinator`] — streaming DSP pipeline server (work-stealing
+//!   executor *pool*: per-worker bounded deques with round-robin or
+//!   pinned placement, each worker owning a `Box<dyn Backend>`;
+//!   sharded sweep/SNR/GEMM and mixed-traffic fan-out with
+//!   bit-identical merging, overlap-save block planner, dynamic
+//!   micro-batcher with mixed-stream cutting, backpressure, per-worker
+//!   steal/queue-depth metrics).
 //! * [`repro`] — one driver per paper table/figure, with
-//!   `--backend native|pjrt` selection.
+//!   `--backend native|simd|pjrt` selection.
 //! * [`util`] — self-contained PRNG, CLI, stats and report helpers.
 //! * [`testkit`] — minimal property-based testing engine plus the
 //!   instrumented [`testkit::MockBackend`] (offline stand-ins for

@@ -94,6 +94,7 @@ pub fn dnn(args: &Args) -> anyhow::Result<()> {
     };
     let srv = match backend {
         BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
+        BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
         kind => DspServer::start_kind(kind, 8)?,
     };
     println!(

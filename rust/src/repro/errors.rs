@@ -10,7 +10,7 @@ use crate::util::report::{sci, Series, Table};
 /// Table I: MSE, error mean/probability and minimum error of Type0 with
 /// WL = 12 over VBL ∈ {3, 6, 9, 12} — all 2^24 input pairs.
 ///
-/// `--backend native|pjrt` routes the sweep through the coordinator's
+/// `--backend native|simd|pjrt` routes the sweep through the coordinator's
 /// moments pipeline on the selected execution backend instead of the
 /// in-process multi-threaded sweep engine (same numbers, exercises the
 /// serving path). `--pjrt` is a back-compat alias for `--backend pjrt`.
@@ -38,6 +38,9 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
     let server = match backend {
         Some(BackendKind::Native) if threads > 1 => {
             Some(crate::coordinator::DspServer::native_pool(threads, 16)?)
+        }
+        Some(BackendKind::Simd) if threads > 1 => {
+            Some(crate::coordinator::DspServer::simd_pool(threads, 16)?)
         }
         Some(kind) => Some(crate::coordinator::DspServer::start_kind(kind, 8)?),
         None => None,

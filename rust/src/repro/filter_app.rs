@@ -31,6 +31,7 @@ fn server_from(args: &Args) -> anyhow::Result<DspServer> {
     };
     Ok(match backend {
         BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
+        BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
         kind => DspServer::start_kind(kind, 8)?,
     })
 }

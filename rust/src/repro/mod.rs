@@ -4,16 +4,16 @@
 //! (see DESIGN.md §7 for the experiment index):
 //!
 //! ```text
-//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --backend native|pjrt --threads N]
+//! bbm table1 [--wl 12 --vbls 3,6,9,12 --type 0 --backend native|simd|pjrt --threads N]
 //! bbm fig2   [--wl 10 --vbl 9 --bins 41 --threads N]
 //! bbm fig3   [--wl 16 --vbl 15 --nvec 100000]
 //! bbm table2 / table3 [--wls 4,8,12,16 --nvec 50000]
 //! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
-//! bbm fig7 / fig8a / fig8b [--samples N --backend native|pjrt --threads N]
-//! bbm table4 [--samples 8192 --cycles 8192 --backend native|pjrt --threads N]
+//! bbm fig7 / fig8a / fig8b [--samples N --backend native|simd|pjrt --threads N]
+//! bbm table4 [--samples 8192 --cycles 8192 --backend native|simd|pjrt --threads N]
 //! bbm dnn    [--samples 512 --nvec 20000 --wls 8,12 --families type0,bam
 //!             --backend native --threads N]
-//! bbm verify [--seed 1 --backend native|pjrt]
+//! bbm verify [--seed 1 --backend native|simd|pjrt]
 //! bbm ablation [adders|dct|reducers]
 //! bbm all    (everything, paper-scale parameters)
 //! ```
@@ -94,7 +94,7 @@ fn print_help() {
         "bbm — Broken-Booth Multiplier reproduction\n\
          commands: table1 fig2 fig3 table2 table3 fig5 fig6 fig7 fig8a fig8b table4 dnn\n\
          \x20         verify all\n\
-         options: --backend native|pjrt selects the execution engine (default native);\n\
+         options: --backend native|simd|pjrt selects the execution engine (default native);\n\
          \x20        --threads N sizes the native executor pool (table1/fig2 sweeps,\n\
          \x20        fig3/table2/table3/fig5/fig6 power serving, fig7/fig8a/fig8b/table4\n\
          \x20        filter serving, dnn inference); dnn --wls 8,12 --families type0,bam\n\

@@ -116,14 +116,16 @@ const FAMILIES: [MultKind; 4] =
     [MultKind::BbmType0, MultKind::BbmType1, MultKind::Bam, MultKind::Kulkarni];
 
 /// Build the serving stack for a power-workload command: `--backend`
-/// picks the engine, `--threads N` (with the native backend) sizes an
-/// executor pool so the pipelined [`PowerRequest`]s characterize
-/// concurrently — the same routing `table1` gives its sweeps.
+/// picks the engine, `--threads N` (with a poolable backend — native
+/// or simd) sizes an executor pool so the pipelined [`PowerRequest`]s
+/// characterize concurrently — the same routing `table1` gives its
+/// sweeps.
 pub(super) fn power_server(args: &Args) -> anyhow::Result<DspServer> {
     let kind = args.get_or("backend", BackendKind::Native)?;
     let threads = args.get_or("threads", 0usize)?;
     match kind {
         BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16),
+        BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16),
         kind => DspServer::start_kind(kind, 8),
     }
 }

@@ -20,15 +20,24 @@
 //!    FIR and GEMM on the compiled quadrant/row-table kernels
 //!    (`arith::kernel`), bit-identical to the digit-level oracles both
 //!    in-process and through the served path.
+//! 6. The SIMD backend runs the same exhaustive WL=8 bar as native
+//!    (wide-lane gathers must be bit-identical to the digit oracles).
+//! 7. Work-stealing scheduler conformance: a mixed
+//!    multiply/moments/power/GEMM stream through `submit_mixed` is
+//!    bit-identical to a single-worker server at every pool size and
+//!    placement (round-robin and single-hot-queue pinned), for both
+//!    the native and SIMD backends — CI's pool-scaling smoke job
+//!    re-runs this at `BBM_POOL_WORKERS` ∈ {1, 4, 8} — plus a
+//!    deterministic steal/queue-depth metrics check on the gated mock.
 
 use std::sync::Arc;
 
 use bbm::arith::{BbmType, BrokenBooth, MultKind, Multiplier};
 use bbm::backend::{
     Backend, ErrorMoments, FirRequest, GemmRequest, MomentsRequest, MultiplyRequest,
-    NativeBackend, PowerRequest, FIR_BLOCK, FIR_TAPS,
+    NativeBackend, PowerRequest, SimdBackend, FIR_BLOCK, FIR_TAPS,
 };
-use bbm::coordinator::DspServer;
+use bbm::coordinator::{DspServer, MixedReply, MixedRequest};
 use bbm::nn::gemm::{gemm, gemm_digit};
 use bbm::nn::GemmDims;
 use bbm::repro::verify::{verify_exhaustive_wl8, verify_levels, verify_power};
@@ -487,6 +496,203 @@ fn gemm_kernel_matches_digit_oracle_sampled_wl12_wl16() {
             assert_eq!(served, via_digit, "{kind} wl={wl} level={level}: served");
         }
     }
+    srv.shutdown();
+}
+
+#[test]
+fn simd_matches_oracles_exhaustively_wl8_all_families() {
+    let backend = SimdBackend::new();
+    for kind in MultKind::ALL {
+        for level in verify_levels(kind, 8) {
+            let bad = verify_exhaustive_wl8(&backend, kind, level)
+                .unwrap()
+                .expect("simd backend supports every family");
+            assert_eq!(bad, 0, "{kind} level={level}: {bad} mismatches");
+        }
+    }
+}
+
+/// Pool sizes for the mixed-traffic conformance run: CI's pool-scaling
+/// smoke job pins one size per shard via `BBM_POOL_WORKERS`; local
+/// runs cover 2/4/8.
+fn pool_sizes() -> Vec<usize> {
+    match std::env::var("BBM_POOL_WORKERS") {
+        Ok(s) => s
+            .split(',')
+            .map(|v| v.trim().parse().expect("BBM_POOL_WORKERS must be worker counts"))
+            .collect(),
+        Err(_) => vec![2, 4, 8],
+    }
+}
+
+fn assert_mixed_eq(want: &[MixedReply], got: &[MixedReply], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: reply count");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        match (a, b) {
+            (MixedReply::Multiply(p), MixedReply::Multiply(q)) => {
+                assert_eq!(p.p, q.p, "{ctx}[{i}]: multiply lanes");
+            }
+            (MixedReply::Moments(p), MixedReply::Moments(q)) => {
+                assert_eq!(p.sum, q.sum, "{ctx}[{i}]: moments sum");
+                assert_eq!(p.sum_sq.to_bits(), q.sum_sq.to_bits(), "{ctx}[{i}]: moments sum_sq");
+                assert_eq!(p.min, q.min, "{ctx}[{i}]: moments min");
+                assert_eq!(p.nonzero, q.nonzero, "{ctx}[{i}]: moments nonzero");
+            }
+            (MixedReply::Power(p), MixedReply::Power(q)) => {
+                assert_eq!(p, q, "{ctx}[{i}]: power report");
+            }
+            (MixedReply::Gemm(p), MixedReply::Gemm(q)) => {
+                assert_eq!(p.c, q.c, "{ctx}[{i}]: gemm block");
+            }
+            _ => panic!("{ctx}[{i}]: reply variant mismatch"),
+        }
+    }
+}
+
+#[test]
+fn mixed_traffic_bit_identical_across_worker_counts_and_backends() {
+    // An interleaved multiply/moments/power/GEMM stream: large lane
+    // batches split across workers, the GEMM row-tiles, the power job
+    // stays atomic. Every pool size, backend and placement must match
+    // the single-worker native baseline bit for bit.
+    let lanes = 20_000usize;
+    // Family-aware operands: BAM is unsigned, the Booth families signed.
+    let (x0, y0) = draw_operands(MultKind::Bam, 8, lanes, 0xA11C);
+    let (x1, y1) = draw_operands(MultKind::BbmType0, 12, lanes, 0xA11D);
+    let (x2, y2) = draw_operands(MultKind::BbmType1, 16, 6000, 0xA11E);
+    let (m, k, n) = (96usize, 8usize, 6usize); // m ≥ 2·TILE_ROWS: tiles
+    let mut rng = Pcg64::seeded(0xA11F);
+    let ga: Vec<i32> = (0..m * k).map(|_| rng.operand(8) as i32).collect();
+    let gb: Vec<i32> = (0..k * n).map(|_| rng.operand(8) as i32).collect();
+    let traffic = vec![
+        MixedRequest::Multiply(MultiplyRequest {
+            kind: MultKind::Bam,
+            wl: 8,
+            level: 5,
+            x: x0.clone(),
+            y: y0.clone(),
+        }),
+        MixedRequest::Moments(MomentsRequest {
+            kind: MultKind::BbmType0,
+            wl: 12,
+            level: 9,
+            x: x1,
+            y: y1,
+        }),
+        MixedRequest::Power(PowerRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 7,
+            constraint_ps: 0.0,
+            nvec: 64 * 4,
+            seed: 9,
+        }),
+        MixedRequest::Gemm(GemmRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 5,
+            m,
+            k,
+            n,
+            a: ga.clone(),
+            b: gb.clone(),
+        }),
+        MixedRequest::Multiply(MultiplyRequest {
+            kind: MultKind::BbmType1,
+            wl: 16,
+            level: 13,
+            x: x2,
+            y: y2,
+        }),
+    ];
+
+    // Single-worker native server: the uncut baseline.
+    let single = DspServer::native(8).unwrap();
+    let baseline = single.submit_mixed(traffic.clone()).unwrap();
+    single.shutdown();
+    assert_eq!(baseline.len(), traffic.len(), "one reply per request");
+
+    // Ground the baseline itself in the digit oracles.
+    let model = MultKind::Bam.build(8, 5);
+    let MixedReply::Multiply(blk) = &baseline[0] else { panic!("multiply reply expected") };
+    let want: Vec<i64> =
+        x0.iter().zip(&y0).map(|(&a, &b)| model.multiply(a as i64, b as i64)).collect();
+    assert_eq!(blk.p, want, "baseline multiply vs digit oracle");
+    let MixedReply::Gemm(gblk) = &baseline[3] else { panic!("gemm reply expected") };
+    let gwant = gemm_digit(MultKind::BbmType0, 8, 5, GemmDims { m, k, n }, &ga, &gb);
+    assert_eq!(gblk.c, gwant, "baseline gemm vs digit oracle");
+
+    for w in pool_sizes() {
+        let pools = [
+            ("native", DspServer::native_pool(w, 8).unwrap()),
+            ("simd", DspServer::simd_pool(w, 8).unwrap()),
+        ];
+        for (label, srv) in pools {
+            assert_eq!(srv.workers(), w);
+            let got = srv.submit_mixed(traffic.clone()).unwrap();
+            assert_mixed_eq(&baseline, &got, &format!("{label} pool w={w}"));
+            // Single-hot-queue placement: every piece pinned to worker
+            // 0, siblings drain by stealing — bits must not move.
+            let got = srv.submit_mixed_at(0, traffic.clone()).unwrap();
+            assert_mixed_eq(&baseline, &got, &format!("{label} pool w={w} pinned"));
+            let snap = srv.metrics();
+            assert_eq!(snap.submitted, snap.completed, "{label} w={w}: pool drained");
+            if w > 1 {
+                let per = srv.worker_metrics();
+                assert_eq!(per.len(), w);
+                assert_eq!(
+                    per.iter().map(|s| s.steals).sum::<u64>(),
+                    snap.steals,
+                    "{label} w={w}: steal counters fold into the aggregate"
+                );
+            }
+            srv.shutdown();
+        }
+    }
+}
+
+#[test]
+fn work_stealing_counts_steals_and_queue_depth_deterministically() {
+    // Two gated mock workers, three jobs pinned to worker 0's queue:
+    // each worker claims exactly one job and wedges on the closed gate
+    // (worker 1's pop is by construction a steal), the third job sits
+    // queued. That makes the steal count and the live queue depth
+    // deterministic while the gate is closed.
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (state.clone(), gate.clone());
+    let srv = DspServer::start_pool(
+        move || Ok(Box::new(MockBackend::gated(s2.clone(), g2.clone())) as Box<dyn Backend>),
+        2,
+        8,
+    )
+    .unwrap();
+    let pendings: Vec<_> = (0..3).map(|t| srv.submit_multiply_at(0, tiny_req(t))).collect();
+
+    let t0 = std::time::Instant::now();
+    while srv.metrics().queue_depth != 1 {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "pool never wedged with one job queued: {}",
+            srv.metrics()
+        );
+        std::thread::yield_now();
+    }
+    let per = srv.worker_metrics();
+    assert_eq!(per.iter().map(|s| s.steals).sum::<u64>(), 1, "exactly one wedged pop stole");
+    assert_eq!(per[0].queue_depth, 1, "the third job waits on worker 0's queue");
+    assert_eq!(per[1].queue_depth, 0);
+    assert_eq!(state.total(), 0, "gate closed: nothing served yet");
+
+    gate.open();
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    let m = srv.metrics();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.queue_depth, 0, "drained");
+    assert!((1..=2).contains(&m.steals), "third job may drain on either worker: {m}");
+    assert_eq!(state.total(), 3);
     srv.shutdown();
 }
 

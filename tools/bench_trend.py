@@ -1,15 +1,21 @@
 #!/usr/bin/env python3
-"""Perf-trend gate over the BENCH_*.json trajectory.
+"""Perf-trend gate over the BENCH*.json trajectory.
 
-Compares the freshly written bench JSON (``make bench-json``) against
-the newest baseline artifact from a previous PR and fails when any
-benchmark shared by both files regressed by more than ``--max-ratio``
-in ns/op. Benches that exist on only one side (new workloads, retired
+Compares the freshly written bench JSON (``make bench-json``, now the
+PR-agnostic ``BENCH.json``) against the newest baseline artifact from a
+previous run and fails when any benchmark shared by both files
+regressed by more than ``--max-ratio`` in ns/op. The baseline search is
+recursive over the whole ``--baseline-dir`` tree (CI's ``gh run
+download`` nests each artifact in its own subdirectory) and matches
+both the current ``BENCH.json`` name and the legacy per-PR
+``BENCH_<pr>.json`` names, so the gate self-heals across the rename:
+the first run after it finds the old artifact, and later runs find the
+new one. Benches that exist on only one side (new workloads, retired
 workloads) are reported but never fail the gate; a missing baseline is
 a clean skip so the very first run of a new artifact name stays green.
 
 Usage:
-    python3 tools/bench_trend.py --new BENCH_6.json \
+    python3 tools/bench_trend.py --new BENCH.json \
         --baseline-dir baseline [--max-ratio 1.25]
 """
 
@@ -31,10 +37,11 @@ def benches(doc: dict) -> dict[str, float]:
 
 
 def find_baseline(dirpath: pathlib.Path, new_path: pathlib.Path) -> pathlib.Path | None:
-    """Newest BENCH_*.json under ``dirpath`` (highest "pr"), excluding
-    the file under test itself."""
+    """Newest BENCH*.json anywhere under ``dirpath`` (highest embedded
+    "pr"), excluding the file under test itself. Matches the current
+    PR-agnostic ``BENCH.json`` and legacy ``BENCH_<pr>.json`` names."""
     best, best_pr = None, -1
-    for cand in sorted(dirpath.rglob("BENCH_*.json")):
+    for cand in sorted(dirpath.rglob("BENCH*.json")):
         if cand.resolve() == new_path.resolve():
             continue
         try:
@@ -65,7 +72,7 @@ def main() -> int:
         return 0
     base_path = find_baseline(args.baseline_dir, args.new)
     if base_path is None:
-        print(f"no BENCH_*.json under {args.baseline_dir} — trend gate skipped")
+        print(f"no BENCH*.json under {args.baseline_dir} — trend gate skipped")
         return 0
     base_doc = load(base_path)
 
