@@ -1,7 +1,8 @@
 //! Machine-readable perf trajectory: a smoke-scale run of the headline
 //! benchmarks (PR-5 kernels, the PR-6 GEMM workload, the PR-7 WL=12/16
-//! compiled quadrant/row-table kernels, and the PR-8 SIMD backend +
-//! work-stealing scheduler), written as JSON to the PR-agnostic
+//! compiled quadrant/row-table kernels, the PR-8 SIMD backend +
+//! work-stealing scheduler, and the PR-9 `catch_unwind` dispatch-guard
+//! overhead probe), written as JSON to the PR-agnostic
 //! `BENCH.json` at the repo root (override with `BENCH_OUT=/path`; the
 //! embedded `"pr"` field still records which PR produced it). Runs in
 //! seconds so CI can execute it on every PR — set `BENCH_FULL=1` for
@@ -378,11 +379,37 @@ fn main() {
     });
     ratios.push(("steal_vs_single_queue_mixed".into(), pinned8 / steal8));
 
+    // 8. Resilience guard (PR 9): the per-job `catch_unwind` wrapper
+    // the pool's dispatch puts around every backend call, measured on
+    // the WL=8 batched-multiply hot path. The ratio should stay within
+    // noise of 1.0 (< 2% overhead target): when nothing panics the
+    // guard is a handful of stack bookkeeping writes per job.
+    let (px, py) = draw_operands(MultKind::BbmType0, 8, lanes, 101);
+    let preq = MultiplyRequest { kind: MultKind::BbmType0, wl: 8, level: 5, x: px, y: py };
+    let raw = time_min(iters, || {
+        std::hint::black_box(backend.multiply(&preq).unwrap().p[0]);
+    });
+    let guarded = time_min(iters, || {
+        let guard = std::panic::AssertUnwindSafe(|| backend.multiply(&preq));
+        std::hint::black_box(std::panic::catch_unwind(guard).unwrap().unwrap().p[0]);
+    });
+    entries.push(Entry {
+        name: "multiply_wl8_unguarded".into(),
+        secs: raw,
+        items: lanes as f64,
+    });
+    entries.push(Entry {
+        name: "multiply_wl8_catch_unwind".into(),
+        secs: guarded,
+        items: lanes as f64,
+    });
+    ratios.push(("catch_unwind_vs_raw_multiply_wl8".into(), guarded / raw));
+
     // Emit JSON (no serde offline; the shape is flat enough to format
     // by hand).
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 8,\n");
+    json.push_str("  \"pr\": 9,\n");
     json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     json.push_str("  \"benches\": [\n");
     for (i, e) in entries.iter().enumerate() {

@@ -58,6 +58,58 @@ pub const FIR_BLOCK: usize = 4096;
 /// FIR tap count (the paper's 30-tap Parks-McClellan low-pass).
 pub const FIR_TAPS: usize = 30;
 
+/// The six served workload kinds, as a plain tag. Used by the
+/// resilience layer to label which workload a failure happened on
+/// (panic isolation, deadline shedding, executor-death context) without
+/// carrying the request payload around.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Batched multiply ([`MultiplyRequest`]).
+    Multiply,
+    /// Error-moment reduction ([`MomentsRequest`]).
+    Moments,
+    /// Streaming FIR block ([`FirRequest`]).
+    Fir,
+    /// SNR power accumulation ([`SnrRequest`]).
+    Snr,
+    /// Gate-level power characterization ([`PowerRequest`]).
+    Power,
+    /// Blocked approximate GEMM tile ([`GemmRequest`]).
+    Gemm,
+}
+
+impl Workload {
+    /// All workloads in [`Backend`] trait order. `w as usize` indexes
+    /// this array (the chaos harness keys per-workload call counters
+    /// off it).
+    pub const ALL: [Workload; 6] = [
+        Workload::Multiply,
+        Workload::Moments,
+        Workload::Fir,
+        Workload::Snr,
+        Workload::Power,
+        Workload::Gemm,
+    ];
+
+    /// Lower-case workload name (stable — used in error text and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Multiply => "multiply",
+            Workload::Moments => "moments",
+            Workload::Fir => "fir",
+            Workload::Snr => "snr",
+            Workload::Power => "power",
+            Workload::Gemm => "gemm",
+        }
+    }
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Typed error for backend operations.
 ///
 /// Hand-implements `std::error::Error` (the offline build cannot carry
@@ -76,6 +128,24 @@ pub enum BackendError {
     Shape(String),
     /// The engine accepted the request but failed executing it.
     Execution(String),
+    /// The backend panicked mid-call. The executor catches the unwind,
+    /// replies with this, and the supervisor decides whether the worker
+    /// gets a fresh backend instance (see `coordinator/server.rs`).
+    Panicked {
+        /// Executor worker index the panic happened on.
+        worker: usize,
+        /// Workload being served when the backend panicked.
+        workload: Workload,
+        /// Panic payload text (`&str`/`String` payloads; a placeholder
+        /// otherwise).
+        message: String,
+    },
+    /// The request's deadline had already passed when a worker dequeued
+    /// it, so it was shed without touching the backend.
+    Expired {
+        /// Workload the shed request carried.
+        workload: Workload,
+    },
 }
 
 impl std::fmt::Display for BackendError {
@@ -86,6 +156,12 @@ impl std::fmt::Display for BackendError {
             }
             BackendError::Shape(what) => write!(f, "invalid request: {what}"),
             BackendError::Execution(what) => write!(f, "execution failed: {what}"),
+            BackendError::Panicked { worker, workload, message } => {
+                write!(f, "backend panicked serving {workload} on worker {worker}: {message}")
+            }
+            BackendError::Expired { workload } => {
+                write!(f, "deadline expired before the {workload} request started executing")
+            }
         }
     }
 }
@@ -732,5 +808,24 @@ mod tests {
         assert!(e.to_string().contains("pjrt"));
         let e: anyhow::Error = BackendError::Shape("nope".into()).into();
         assert!(e.to_string().contains("nope"));
+        let e = BackendError::Panicked {
+            worker: 3,
+            workload: Workload::Gemm,
+            message: "boom".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("worker 3") && s.contains("gemm") && s.contains("boom"), "{s}");
+        let e = BackendError::Expired { workload: Workload::Power };
+        assert!(e.to_string().contains("deadline") && e.to_string().contains("power"));
+    }
+
+    #[test]
+    fn workload_names_are_stable_and_index_all() {
+        for (i, w) in Workload::ALL.into_iter().enumerate() {
+            assert_eq!(w as usize, i, "Workload::ALL must be declaration-ordered");
+            assert_eq!(w.to_string(), w.name());
+        }
+        assert_eq!(Workload::Multiply.name(), "multiply");
+        assert_eq!(Workload::Gemm.name(), "gemm");
     }
 }

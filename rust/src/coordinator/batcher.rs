@@ -13,6 +13,10 @@
 //! kept atomic — in strict submission order, so the server can fan the
 //! pieces across the executor pool and reassemble each reply with
 //! exact merges ([`crate::coordinator::DspServer::submit_mixed`]).
+//! Reassembly is failure-safe: a sub-job lost to a panicked or dying
+//! worker resolves with a typed error (its reply sender is dropped by
+//! the pool), so the merge loop surfaces a typed failure for the batch
+//! instead of deadlocking on a reply that will never arrive.
 
 use std::time::{Duration, Instant};
 

@@ -29,6 +29,15 @@ pub struct Metrics {
     /// Jobs this worker took from a *sibling's* queue (work stealing;
     /// always zero on the submit-side hub).
     pub steals: AtomicU64,
+    /// Backend panics caught by this worker's dispatch guard (each one
+    /// became a typed `BackendError::Panicked` reply, never a hang).
+    pub panics: AtomicU64,
+    /// Times the supervisor rebuilt this worker's backend after a panic
+    /// (bounded by the restart budget).
+    pub respawns: AtomicU64,
+    /// Jobs shed at dequeue because their deadline had already expired
+    /// (replied `BackendError::Expired` without touching the backend).
+    pub shed: AtomicU64,
 }
 
 impl Metrics {
@@ -57,6 +66,9 @@ impl Metrics {
             max_latency: Duration::from_nanos(self.max_latency_ns.load(Ordering::Relaxed)),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             // The hub cannot see its queue; `DspServer::metrics` /
             // `worker_metrics` fill the live depth in per worker.
             queue_depth: 0,
@@ -83,6 +95,12 @@ pub struct MetricsSnapshot {
     pub backpressure_events: u64,
     /// Jobs taken from sibling queues (work stealing).
     pub steals: u64,
+    /// Backend panics caught and converted into typed replies.
+    pub panics: u64,
+    /// Supervised backend rebuilds after panics.
+    pub respawns: u64,
+    /// Deadline-expired jobs shed at dequeue.
+    pub shed: u64,
     /// Jobs waiting in this worker's queue at snapshot time (summed
     /// across workers in the folded pool snapshot).
     pub queue_depth: u64,
@@ -104,6 +122,9 @@ impl MetricsSnapshot {
         self.max_latency = self.max_latency.max(other.max_latency);
         self.backpressure_events += other.backpressure_events;
         self.steals += other.steals;
+        self.panics += other.panics;
+        self.respawns += other.respawns;
+        self.shed += other.shed;
         self.queue_depth += other.queue_depth;
     }
 
@@ -132,7 +153,7 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "jobs {}/{} | execs {} | items {} | {:.1} items/s | mean {:?} max {:?} | \
-             stalls {} | steals {} | queued {}",
+             stalls {} | steals {} | panics {} | respawns {} | shed {} | queued {}",
             self.completed,
             self.submitted,
             self.executions,
@@ -142,6 +163,9 @@ impl std::fmt::Display for MetricsSnapshot {
             self.max_latency,
             self.backpressure_events,
             self.steals,
+            self.panics,
+            self.respawns,
+            self.shed,
             self.queue_depth,
         )
     }
@@ -196,5 +220,25 @@ mod tests {
         assert_eq!(snap.mean_latency(), Duration::from_millis(4));
         assert_eq!(snap.steals, 3);
         assert_eq!(snap.queue_depth, 7);
+    }
+
+    #[test]
+    fn resilience_counters_snapshot_and_merge() {
+        let a = Metrics::new();
+        a.panics.fetch_add(2, Ordering::Relaxed);
+        a.respawns.fetch_add(1, Ordering::Relaxed);
+        let b = Metrics::new();
+        b.panics.fetch_add(1, Ordering::Relaxed);
+        b.shed.fetch_add(4, Ordering::Relaxed);
+        let mut snap = a.snapshot();
+        snap.merge(&b.snapshot());
+        assert_eq!(snap.panics, 3);
+        assert_eq!(snap.respawns, 1);
+        assert_eq!(snap.shed, 4);
+        let text = snap.to_string();
+        assert!(
+            text.contains("panics 3") && text.contains("respawns 1") && text.contains("shed 4"),
+            "{text}"
+        );
     }
 }

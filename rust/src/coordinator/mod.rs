@@ -21,6 +21,18 @@
 //! wide-lane engine via `simd`, PJRT behind the `pjrt` feature). See
 //! [`server::DspServer`] for the public API;
 //! `examples/serve_pipeline.rs` drives the full loop.
+//!
+//! The pool is service-grade resilient: per-job dispatch is
+//! panic-isolated behind `catch_unwind` (a panicking backend becomes a
+//! typed reply, never a hung caller), workers supervise and respawn
+//! their own backend up to a bounded restart budget, requests carry
+//! optional deadlines shed at dequeue ([`server::SubmitOpts`]),
+//! [`server::Pending::wait_timeout`] bounds the caller side, and
+//! [`server::DspServer::submit_with_retry`] retries backpressure
+//! rejections with deterministically-jittered exponential backoff
+//! ([`server::RetryPolicy`]). `panics` / `respawns` / `shed` counters
+//! surface on [`MetricsSnapshot`]; `testkit::FaultBackend` drives the
+//! chaos conformance suite over all of it.
 
 pub mod batcher;
 pub mod blocks;
@@ -32,4 +44,7 @@ pub use batcher::{
 };
 pub use blocks::{block_input, pad_signal, plan_blocks, BlockPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{DspServer, Pending, QueueFull};
+pub use server::{
+    DspServer, Pending, QueueFull, RetryPolicy, ServeError, SubmitOpts, SubmitRequest,
+    RESTART_BUDGET,
+};

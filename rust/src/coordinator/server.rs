@@ -46,52 +46,171 @@
 //! generalizes this to heterogeneous traffic: the [`Batcher`] cuts a
 //! mixed multiply/moments/power/GEMM stream into per-worker sub-jobs
 //! and the server reassembles replies in strict submission order.
+//!
+//! **Resilience.** Per-job backend dispatch runs under
+//! `std::panic::catch_unwind`: a panicking backend becomes a typed
+//! [`BackendError::Panicked`] reply (the caller's [`Pending`] resolves,
+//! never hangs) and the worker survives. Pool workers supervise their
+//! own backend: after a panic the instance is considered poisoned and
+//! is rebuilt from the pool factory, up to [`RESTART_BUDGET`] respawns
+//! per worker; past the budget (or if the rebuild itself fails) the
+//! worker fail-stops, its queued jobs drain to surviving siblings via
+//! the work-stealing scan, and the *last* worker out fails the whole
+//! pool — dropping queued jobs so every waiter gets a typed
+//! [`ServeError::ExecutorGone`] instead of a deadlock. Requests may
+//! carry a deadline ([`SubmitOpts`] / [`DspServer::set_default_deadline`]):
+//! workers shed already-expired jobs at dequeue with a typed
+//! [`BackendError::Expired`] reply, and `panics` / `respawns` / `shed`
+//! all surface on [`MetricsSnapshot`]. On the producer side,
+//! [`Pending::wait_timeout`] / [`Pending::wait_deadline`] bound the
+//! wait and [`DspServer::submit_with_retry`] retries [`QueueFull`]
+//! admission with bounded, deterministically-jittered (Pcg64-seeded)
+//! exponential backoff.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::arith::{MultKind, Multiplier};
 use crate::backend::{
-    Backend, BackendKind, ErrorMoments, FirBlock, FirRequest, GemmBlock, GemmRequest,
-    MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock, SnrAccum,
-    SnrRequest, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
+    Backend, BackendError, BackendKind, BackendResult, ErrorMoments, FirBlock, FirRequest,
+    GemmBlock, GemmRequest, MomentsRequest, MultiplyRequest, PowerReport, PowerRequest,
+    ProductBlock, SnrAccum, SnrRequest, Workload, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
 };
 use crate::dsp::fixed;
+use crate::util::rng::Pcg64;
 use crate::util::stats::ErrorStats;
 
 use super::batcher::{Batcher, MixedReply, MixedRequest};
 use super::blocks::{block_input, pad_signal, plan_blocks};
 use super::metrics::{Metrics, MetricsSnapshot};
 
-/// One queued unit of work: a typed request plus its reply channel.
-/// Private — callers use the typed `submit_*` APIs.
+/// Backend rebuilds a pool worker may perform after backend panics
+/// before it fail-stops (its queue then drains to surviving siblings).
+pub const RESTART_BUDGET: u32 = 3;
+
+/// One queued unit of work: a typed request, an optional deadline
+/// (expired jobs are shed at dequeue) and the reply channel. Private —
+/// callers use the typed `submit_*` APIs.
 enum Job {
-    Multiply(MultiplyRequest, Sender<Result<ProductBlock>>),
-    Moments(MomentsRequest, Sender<Result<ErrorMoments>>),
-    Fir(FirRequest, Sender<Result<FirBlock>>),
-    Snr(SnrRequest, Sender<Result<SnrAccum>>),
-    Power(PowerRequest, Sender<Result<PowerReport>>),
-    Gemm(GemmRequest, Sender<Result<GemmBlock>>),
+    Multiply(MultiplyRequest, Option<Instant>, Sender<Result<ProductBlock>>),
+    Moments(MomentsRequest, Option<Instant>, Sender<Result<ErrorMoments>>),
+    Fir(FirRequest, Option<Instant>, Sender<Result<FirBlock>>),
+    Snr(SnrRequest, Option<Instant>, Sender<Result<SnrAccum>>),
+    Power(PowerRequest, Option<Instant>, Sender<Result<PowerReport>>),
+    Gemm(GemmRequest, Option<Instant>, Sender<Result<GemmBlock>>),
 }
+
+/// Typed coordinator-side failures: what went wrong *around* the
+/// backend call (the backend's own failures are [`BackendError`]).
+/// Converts into `anyhow::Error` at the `Pending` boundary like every
+/// other typed error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every executor terminated (or the pool failed) before this
+    /// request was answered; its reply channel died with them.
+    ExecutorGone {
+        /// Workload the lost request carried.
+        workload: Workload,
+    },
+    /// The coordinator's admission lock was poisoned, so the request
+    /// was dropped at submission instead of queued.
+    LockPoisoned {
+        /// Workload the dropped request carried.
+        workload: Workload,
+    },
+    /// [`Pending::wait_timeout`] / [`Pending::wait_deadline`] gave up
+    /// before the reply arrived (the job may still complete; only this
+    /// handle stopped waiting).
+    WaitTimeout {
+        /// Workload the reply was expected for.
+        workload: Workload,
+        /// How long the caller waited.
+        waited: Duration,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ExecutorGone { workload } => {
+                write!(f, "executor terminated before replying to the {workload} request")
+            }
+            ServeError::LockPoisoned { workload } => {
+                write!(f, "coordinator admission lock poisoned; {workload} request dropped")
+            }
+            ServeError::WaitTimeout { workload, waited } => {
+                write!(f, "gave up waiting for the {workload} reply after {waited:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// A reply that has not arrived yet; `wait` blocks for it.
 pub struct Pending<T> {
     rx: Receiver<Result<T>>,
+    workload: Workload,
+    /// A submission-time failure to report instead of waiting (the
+    /// admission lock was poisoned and the job never queued).
+    early: Option<ServeError>,
 }
 
 impl<T> Pending<T> {
-    fn new(rx: Receiver<Result<T>>) -> Pending<T> {
-        Pending { rx }
+    /// Wrap a submission outcome. `Closed` needs no `early` error: the
+    /// job's reply sender was dropped inside the pool, so the dead
+    /// channel itself surfaces [`ServeError::ExecutorGone`] at `wait`.
+    fn from_outcome(rx: Receiver<Result<T>>, workload: Workload, outcome: PushOutcome) -> Self {
+        let early = match outcome {
+            PushOutcome::Poisoned => Some(ServeError::LockPoisoned { workload }),
+            PushOutcome::Queued | PushOutcome::Closed => None,
+        };
+        Pending { rx, workload, early }
+    }
+
+    /// Workload this reply is for.
+    pub fn workload(&self) -> Workload {
+        self.workload
     }
 
     /// Block until the executor answers (or terminates).
     pub fn wait(self) -> Result<T> {
-        self.rx.recv().map_err(|_| anyhow!("executor terminated before replying"))?
+        if let Some(e) = self.early {
+            return Err(e.into());
+        }
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::ExecutorGone { workload: self.workload }.into()),
+        }
+    }
+
+    /// Block for at most `timeout`, then give up with a typed
+    /// [`ServeError::WaitTimeout`]. Giving up abandons only this
+    /// handle — an already-queued job still runs to completion.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<T> {
+        if let Some(e) = self.early {
+            return Err(e.into());
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(res) => res,
+            Err(RecvTimeoutError::Timeout) => {
+                Err(ServeError::WaitTimeout { workload: self.workload, waited: timeout }.into())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(ServeError::ExecutorGone { workload: self.workload }.into())
+            }
+        }
+    }
+
+    /// [`Pending::wait_timeout`] against an absolute deadline.
+    pub fn wait_deadline(self, deadline: Instant) -> Result<T> {
+        self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }
 }
 
@@ -108,6 +227,109 @@ impl<T> std::fmt::Display for QueueFull<T> {
 
 impl<T: std::fmt::Debug> std::error::Error for QueueFull<T> {}
 
+/// Per-submission options: queue affinity and a request deadline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Pin to this worker's queue (idle siblings may still steal);
+    /// `None` places round-robin.
+    pub worker: Option<usize>,
+    /// Shed the job (typed [`BackendError::Expired`] reply) if it is
+    /// still queued past this instant; `None` falls back to the
+    /// server's default deadline.
+    pub deadline: Option<Instant>,
+}
+
+impl SubmitOpts {
+    /// Pin to `worker`'s queue.
+    pub fn pinned(worker: usize) -> Self {
+        SubmitOpts { worker: Some(worker), deadline: None }
+    }
+
+    /// Deadline `timeout` from now.
+    pub fn deadline_in(timeout: Duration) -> Self {
+        SubmitOpts { worker: None, deadline: Some(Instant::now() + timeout) }
+    }
+}
+
+/// Bounded-retry policy for [`DspServer::submit_with_retry`]:
+/// exponential backoff from `base` capped at `max_backoff`, each sleep
+/// jittered into `[50%, 100%]` of the exponential step by a seeded
+/// Pcg64 stream — deterministic for a given policy, so retry schedules
+/// reproduce exactly in tests and replays.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total admission attempts (clamped to at least one).
+    pub attempts: u32,
+    /// Backoff step before the second attempt; doubles per retry.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seed of the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 8,
+            base: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(5),
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered sleep after failed attempt number `attempt`
+    /// (0-based). Pure given the rng state — the whole schedule is a
+    /// deterministic function of `seed`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let step = self.base.saturating_mul(1u32 << attempt.min(20)).min(self.max_backoff);
+        let ns = step.as_nanos().min(u64::MAX as u128) as u64;
+        Duration::from_nanos(ns / 2 + rng.below(ns / 2 + 1))
+    }
+}
+
+/// A request type submittable through the coordinator — the uniform
+/// face `submit_with_retry` retries over, implemented by all six
+/// workload requests.
+pub trait SubmitRequest: Sized {
+    /// Reply carried by the resolved [`Pending`].
+    type Reply;
+
+    /// The workload tag this request maps to.
+    const WORKLOAD: Workload;
+
+    /// Non-blocking submission ([`QueueFull`] hands the request back).
+    fn try_submit(
+        self,
+        srv: &DspServer,
+    ) -> std::result::Result<Pending<Self::Reply>, QueueFull<Self>>;
+}
+
+macro_rules! impl_submit_request {
+    ($req:ty, $reply:ty, $workload:expr, $method:ident) => {
+        impl SubmitRequest for $req {
+            type Reply = $reply;
+            const WORKLOAD: Workload = $workload;
+
+            fn try_submit(
+                self,
+                srv: &DspServer,
+            ) -> std::result::Result<Pending<Self::Reply>, QueueFull<Self>> {
+                srv.$method(self)
+            }
+        }
+    };
+}
+
+impl_submit_request!(MultiplyRequest, ProductBlock, Workload::Multiply, try_submit_multiply);
+impl_submit_request!(MomentsRequest, ErrorMoments, Workload::Moments, try_submit_moments);
+impl_submit_request!(FirRequest, FirBlock, Workload::Fir, try_submit_fir);
+impl_submit_request!(SnrRequest, SnrAccum, Workload::Snr, try_submit_snr);
+impl_submit_request!(PowerRequest, PowerReport, Workload::Power, try_submit_power);
+impl_submit_request!(GemmRequest, GemmBlock, Workload::Gemm, try_submit_gemm);
+
 /// What happened to a job handed to [`PoolShared::push`].
 enum PushOutcome {
     /// Enqueued on a worker's deque; its reply will arrive.
@@ -115,6 +337,9 @@ enum PushOutcome {
     /// The pool is shutting down; the job (and its reply sender) was
     /// dropped, so the caller's [`Pending::wait`] reports termination.
     Closed,
+    /// A coordinator lock was poisoned; the job was dropped and the
+    /// caller gets a typed [`ServeError::LockPoisoned`].
+    Poisoned,
 }
 
 /// Admission state shared by every producer and worker: one global
@@ -126,6 +351,12 @@ struct PoolInner {
     /// Set once by [`PoolShared::close`]; workers drain `queued` to
     /// zero before exiting.
     shutdown: bool,
+    /// Workers still running their executor loop. A fail-stopped
+    /// worker's queue keeps draining through sibling steals; when the
+    /// *last* worker retires with jobs still queued, nobody is left to
+    /// serve them, so [`PoolShared::retire`] fails the pool instead of
+    /// letting waiters hang.
+    live: usize,
 }
 
 /// The work-stealing scheduler state: per-worker deques, the admission
@@ -154,7 +385,7 @@ impl PoolShared {
     fn new(workers: usize, depth: usize) -> PoolShared {
         PoolShared {
             queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
-            inner: Mutex::new(PoolInner { queued: 0, shutdown: false }),
+            inner: Mutex::new(PoolInner { queued: 0, shutdown: false, live: workers }),
             work: Condvar::new(),
             space: Condvar::new(),
             depth,
@@ -182,7 +413,7 @@ impl PoolShared {
         target: Option<usize>,
     ) -> PushOutcome {
         let w = self.place(target);
-        let Ok(mut q) = self.queues[w].lock() else { return PushOutcome::Closed };
+        let Ok(mut q) = self.queues[w].lock() else { return PushOutcome::Poisoned };
         q.push_back(job);
         g.queued += 1;
         drop(q);
@@ -194,7 +425,7 @@ impl PoolShared {
     /// Blocking admission: waits on `space` while the pool is at depth,
     /// counting one backpressure event for the stall.
     fn push(&self, job: Job, target: Option<usize>, submit: &Metrics) -> PushOutcome {
-        let Ok(mut g) = self.inner.lock() else { return PushOutcome::Closed };
+        let Ok(mut g) = self.inner.lock() else { return PushOutcome::Poisoned };
         if g.shutdown {
             return PushOutcome::Closed;
         }
@@ -203,7 +434,7 @@ impl PoolShared {
             while g.queued >= self.depth && !g.shutdown {
                 g = match self.space.wait(g) {
                     Ok(g) => g,
-                    Err(_) => return PushOutcome::Closed,
+                    Err(_) => return PushOutcome::Poisoned,
                 };
             }
             if g.shutdown {
@@ -216,7 +447,7 @@ impl PoolShared {
     /// Non-blocking admission: `Err(job)` hands the job back when the
     /// pool is at depth.
     fn try_push(&self, job: Job, target: Option<usize>) -> std::result::Result<PushOutcome, Job> {
-        let Ok(g) = self.inner.lock() else { return Ok(PushOutcome::Closed) };
+        let Ok(g) = self.inner.lock() else { return Ok(PushOutcome::Poisoned) };
         if g.shutdown {
             return Ok(PushOutcome::Closed);
         }
@@ -287,6 +518,37 @@ impl PoolShared {
         self.space.notify_all();
     }
 
+    /// A worker's executor loop is exiting (normal shutdown drain or a
+    /// fail-stop after exhausting its restart budget). While siblings
+    /// survive, the dead worker's deque keeps draining into the pool
+    /// through the claim-then-steal scan — no jobs are lost or stuck.
+    /// The *last* worker out fails the pool: admission closes, every
+    /// still-queued job is dropped (its reply sender with it, resolving
+    /// the caller's [`Pending`] as [`ServeError::ExecutorGone`]), and
+    /// blocked producers wake to [`PushOutcome::Closed`]. Recovers
+    /// poisoned locks — this teardown must run even while the pool is
+    /// dying of panics.
+    fn retire(&self) {
+        let mut g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        g.live = g.live.saturating_sub(1);
+        if g.live == 0 && (g.queued > 0 || !g.shutdown) {
+            g.shutdown = true;
+            g.queued = 0;
+            for q in &self.queues {
+                match q.lock() {
+                    Ok(mut deque) => deque.clear(),
+                    Err(p) => p.into_inner().clear(),
+                }
+            }
+        }
+        drop(g);
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
     /// Live length of worker `w`'s deque (metrics only; racy by nature).
     fn queue_depth(&self, w: usize) -> u64 {
         self.queues[w].lock().map(|q| q.len() as u64).unwrap_or(0)
@@ -295,6 +557,35 @@ impl PoolShared {
 
 /// One worker's backend constructor, run inside its executor thread.
 type BoxedFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// A re-callable pool constructor: shared across worker spawns *and*
+/// kept by each worker for supervised respawn after a backend panic.
+type SharedFactory = dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync;
+
+/// How a worker builds (and possibly rebuilds) its backend.
+enum WorkerFactory {
+    /// One-shot constructor ([`DspServer::start`], the only shape PJRT
+    /// supports): exactly one instance, no respawn — after a panic the
+    /// worker keeps serving the same instance, best-effort.
+    Once(BoxedFactory),
+    /// Pool constructor ([`DspServer::start_pool`]): also the respawn
+    /// source for the worker's supervisor.
+    Pool(Arc<SharedFactory>),
+}
+
+impl WorkerFactory {
+    /// Build the initial backend; pool factories additionally hand the
+    /// worker its respawn handle.
+    fn build(self) -> (Result<Box<dyn Backend>>, Option<Arc<SharedFactory>>) {
+        match self {
+            WorkerFactory::Once(f) => (f(), None),
+            WorkerFactory::Pool(f) => {
+                let backend = f();
+                (backend, Some(f))
+            }
+        }
+    }
+}
 
 /// Handle to a running coordinator (one executor thread, or a pool).
 pub struct DspServer {
@@ -305,6 +596,9 @@ pub struct DspServer {
     worker_metrics: Vec<Arc<Metrics>>,
     join: Vec<std::thread::JoinHandle<()>>,
     backend_name: String,
+    /// Default request deadline in milliseconds (0 = none), applied to
+    /// submissions that don't carry their own [`SubmitOpts::deadline`].
+    default_deadline_ms: AtomicU64,
 }
 
 impl DspServer {
@@ -317,7 +611,7 @@ impl DspServer {
     where
         F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
     {
-        Self::start_workers(vec![Box::new(factory) as BoxedFactory], depth)
+        Self::start_workers(vec![WorkerFactory::Once(Box::new(factory))], depth)
     }
 
     /// Start a pool of `workers` executor threads, each with its own
@@ -327,23 +621,22 @@ impl DspServer {
     /// which is why it must be `Fn` (callable N times) and `Sync`
     /// (shared across the spawns), and why PJRT stays on the
     /// single-executor [`DspServer::start`] path. Any construction
-    /// failure aborts the whole pool.
+    /// failure aborts the whole pool. Each worker keeps the factory as
+    /// its respawn source: a panicking backend instance is rebuilt in
+    /// place, up to [`RESTART_BUDGET`] times per worker.
     pub fn start_pool<F>(factory: F, workers: usize, depth: usize) -> Result<DspServer>
     where
         F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         anyhow::ensure!(workers >= 1, "executor pool needs at least one worker");
-        let factory = Arc::new(factory);
-        let factories: Vec<BoxedFactory> = (0..workers)
-            .map(|_| {
-                let f = Arc::clone(&factory);
-                Box::new(move || f()) as BoxedFactory
-            })
+        let factory: Arc<SharedFactory> = Arc::new(factory);
+        let factories = (0..workers)
+            .map(|_| WorkerFactory::Pool(Arc::clone(&factory)))
             .collect();
         Self::start_workers(factories, depth)
     }
 
-    fn start_workers(factories: Vec<BoxedFactory>, depth: usize) -> Result<DspServer> {
+    fn start_workers(factories: Vec<WorkerFactory>, depth: usize) -> Result<DspServer> {
         let workers = factories.len();
         let shared = Arc::new(PoolShared::new(workers, depth.max(1)));
         let submit_metrics = Arc::new(Metrics::new());
@@ -359,17 +652,19 @@ impl DspServer {
                 std::thread::Builder::new()
                     .name(format!("bbm-executor-{w}"))
                     .spawn(move || {
-                        let backend = match factory() {
+                        let (built, respawn) = factory.build();
+                        let backend = match built {
                             Ok(b) => {
                                 let _ = init_tx.send(Ok(b.name()));
                                 b
                             }
                             Err(e) => {
                                 let _ = init_tx.send(Err(e));
+                                shared.retire();
                                 return;
                             }
                         };
-                        executor_loop(backend, &shared, w, &metrics);
+                        executor_loop(backend, respawn, &shared, w, &metrics);
                     })
                     .expect("spawn executor"),
             );
@@ -392,7 +687,14 @@ impl DspServer {
                 }
             }
         }
-        Ok(DspServer { shared, submit_metrics, worker_metrics, join, backend_name })
+        Ok(DspServer {
+            shared,
+            submit_metrics,
+            worker_metrics,
+            join,
+            backend_name,
+            default_deadline_ms: AtomicU64::new(0),
+        })
     }
 
     /// Start over a named backend kind (CLI selection).
@@ -441,6 +743,28 @@ impl DspServer {
         self.join.len()
     }
 
+    /// Set (or clear, with `None`) the default request deadline:
+    /// submissions without an explicit [`SubmitOpts::deadline`] get
+    /// `now + deadline` stamped at admission, and workers shed them
+    /// with a typed [`BackendError::Expired`] reply if they are still
+    /// queued when it passes. Sub-millisecond durations round up to
+    /// 1 ms (0 is the "no deadline" sentinel).
+    pub fn set_default_deadline(&self, deadline: Option<Duration>) {
+        let ms = match deadline {
+            Some(d) => d.as_millis().clamp(1, u64::MAX as u128) as u64,
+            None => 0,
+        };
+        self.default_deadline_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Explicit per-request deadline, else the server default.
+    fn resolve_deadline(&self, opts: SubmitOpts) -> Option<Instant> {
+        opts.deadline.or_else(|| {
+            let ms = self.default_deadline_ms.load(Ordering::Relaxed);
+            (ms > 0).then(|| Instant::now() + Duration::from_millis(ms))
+        })
+    }
+
     /// Current metrics: the submit-side hub folded together with every
     /// worker's execution hub (including live queue depths).
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -470,37 +794,56 @@ impl DspServer {
 
     // -- typed submission --------------------------------------------------
 
-    fn submit_job(&self, job: Job) {
-        self.submit_job_at(job, None);
+    /// Blocking admission. On a closed pool the job (and its reply
+    /// sender) is dropped inside `push`, so the caller's
+    /// [`Pending::wait`] reports the termination; a poisoned admission
+    /// lock surfaces as a typed early error on the `Pending`.
+    fn submit_job_at(&self, job: Job, target: Option<usize>) -> PushOutcome {
+        self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.push(job, target, &self.submit_metrics)
     }
 
-    fn submit_job_at(&self, job: Job, target: Option<usize>) {
-        self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        // On a closed pool the job (and its reply sender) is dropped
-        // inside `push`, so the caller's `Pending::wait` reports the
-        // termination.
-        self.shared.push(job, target, &self.submit_metrics);
+    /// Non-blocking admission shared by the `try_submit_*` fronts:
+    /// counts `submitted` on success and `backpressure_events` on a
+    /// full queue; the caller destructures its own job variant back out
+    /// of `Err`.
+    fn try_submit_job(&self, job: Job) -> std::result::Result<PushOutcome, Job> {
+        match self.shared.try_push(job, None) {
+            Ok(outcome) => {
+                if matches!(outcome, PushOutcome::Queued) {
+                    self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(outcome)
+            }
+            Err(job) => {
+                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
+                Err(job)
+            }
+        }
     }
 
     /// Submit a batched multiply (blocks when the queue is full).
     pub fn submit_multiply(&self, req: MultiplyRequest) -> Pending<ProductBlock> {
-        self.submit_multiply_placed(req, None)
+        self.submit_multiply_opts(req, SubmitOpts::default())
     }
 
     /// Submit a batched multiply pinned to `worker`'s queue (affinity;
     /// idle siblings may still steal it).
     pub fn submit_multiply_at(&self, worker: usize, req: MultiplyRequest) -> Pending<ProductBlock> {
-        self.submit_multiply_placed(req, Some(worker))
+        self.submit_multiply_opts(req, SubmitOpts::pinned(worker))
     }
 
-    fn submit_multiply_placed(
+    /// Submit a batched multiply with explicit placement/deadline
+    /// options (blocks when the queue is full).
+    pub fn submit_multiply_opts(
         &self,
         req: MultiplyRequest,
-        target: Option<usize>,
+        opts: SubmitOpts,
     ) -> Pending<ProductBlock> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        self.submit_job_at(Job::Multiply(req, rtx), target);
-        Pending::new(rrx)
+        let outcome = self.submit_job_at(Job::Multiply(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Multiply, outcome)
     }
 
     /// Non-blocking multiply submission: `Err(QueueFull)` hands the
@@ -509,95 +852,161 @@ impl DspServer {
         &self,
         req: MultiplyRequest,
     ) -> std::result::Result<Pending<ProductBlock>, QueueFull<MultiplyRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
         let (rtx, rrx) = channel();
-        match self.shared.try_push(Job::Multiply(req, rtx), None) {
-            Ok(PushOutcome::Queued) => {
-                self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(Pending::new(rrx))
-            }
-            // Pool closed: the dead reply channel surfaces the
-            // termination at `wait`, like the blocking path.
-            Ok(PushOutcome::Closed) => Ok(Pending::new(rrx)),
-            Err(Job::Multiply(req, _)) => {
-                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                Err(QueueFull(req))
-            }
+        match self.try_submit_job(Job::Multiply(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Multiply, outcome)),
+            Err(Job::Multiply(req, _, _)) => Err(QueueFull(req)),
             Err(_) => unreachable!("submitted job variant"),
         }
     }
 
     /// Submit an error-moment reduction (blocks when the queue is full).
     pub fn submit_moments(&self, req: MomentsRequest) -> Pending<ErrorMoments> {
-        self.submit_moments_placed(req, None)
+        self.submit_moments_opts(req, SubmitOpts::default())
     }
 
     /// Submit an error-moment reduction pinned to `worker`'s queue.
     pub fn submit_moments_at(&self, worker: usize, req: MomentsRequest) -> Pending<ErrorMoments> {
-        self.submit_moments_placed(req, Some(worker))
+        self.submit_moments_opts(req, SubmitOpts::pinned(worker))
     }
 
-    fn submit_moments_placed(
+    /// Submit an error-moment reduction with explicit options.
+    pub fn submit_moments_opts(
         &self,
         req: MomentsRequest,
-        target: Option<usize>,
+        opts: SubmitOpts,
     ) -> Pending<ErrorMoments> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        self.submit_job_at(Job::Moments(req, rtx), target);
-        Pending::new(rrx)
+        let outcome = self.submit_job_at(Job::Moments(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Moments, outcome)
+    }
+
+    /// Non-blocking moments submission: `Err(QueueFull)` hands the
+    /// request back when the bounded queue is at capacity.
+    pub fn try_submit_moments(
+        &self,
+        req: MomentsRequest,
+    ) -> std::result::Result<Pending<ErrorMoments>, QueueFull<MomentsRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
+        let (rtx, rrx) = channel();
+        match self.try_submit_job(Job::Moments(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Moments, outcome)),
+            Err(Job::Moments(req, _, _)) => Err(QueueFull(req)),
+            Err(_) => unreachable!("submitted job variant"),
+        }
     }
 
     /// Submit one FIR block (blocks when the queue is full).
     pub fn submit_fir(&self, req: FirRequest) -> Pending<FirBlock> {
+        self.submit_fir_opts(req, SubmitOpts::default())
+    }
+
+    /// Submit one FIR block with explicit options.
+    pub fn submit_fir_opts(&self, req: FirRequest, opts: SubmitOpts) -> Pending<FirBlock> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Fir(req, rtx));
-        Pending::new(rrx)
+        let outcome = self.submit_job_at(Job::Fir(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Fir, outcome)
+    }
+
+    /// Non-blocking FIR submission: `Err(QueueFull)` hands the request
+    /// back when the bounded queue is at capacity.
+    pub fn try_submit_fir(
+        &self,
+        req: FirRequest,
+    ) -> std::result::Result<Pending<FirBlock>, QueueFull<FirRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
+        let (rtx, rrx) = channel();
+        match self.try_submit_job(Job::Fir(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Fir, outcome)),
+            Err(Job::Fir(req, _, _)) => Err(QueueFull(req)),
+            Err(_) => unreachable!("submitted job variant"),
+        }
     }
 
     /// Submit an SNR accumulation (blocks when the queue is full).
     pub fn submit_snr(&self, req: SnrRequest) -> Pending<SnrAccum> {
+        self.submit_snr_opts(req, SubmitOpts::default())
+    }
+
+    /// Submit an SNR accumulation with explicit options.
+    pub fn submit_snr_opts(&self, req: SnrRequest, opts: SubmitOpts) -> Pending<SnrAccum> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        self.submit_job(Job::Snr(req, rtx));
-        Pending::new(rrx)
+        let outcome = self.submit_job_at(Job::Snr(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Snr, outcome)
+    }
+
+    /// Non-blocking SNR submission: `Err(QueueFull)` hands the request
+    /// back when the bounded queue is at capacity.
+    pub fn try_submit_snr(
+        &self,
+        req: SnrRequest,
+    ) -> std::result::Result<Pending<SnrAccum>, QueueFull<SnrRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
+        let (rtx, rrx) = channel();
+        match self.try_submit_job(Job::Snr(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Snr, outcome)),
+            Err(Job::Snr(req, _, _)) => Err(QueueFull(req)),
+            Err(_) => unreachable!("submitted job variant"),
+        }
     }
 
     /// Submit a gate-level power characterization (blocks when the
     /// queue is full). Sweep drivers pipeline one request per design
     /// point and collect the reports in order.
     pub fn submit_power(&self, req: PowerRequest) -> Pending<PowerReport> {
-        self.submit_power_placed(req, None)
+        self.submit_power_opts(req, SubmitOpts::default())
     }
 
     /// Submit a power characterization pinned to `worker`'s queue.
     pub fn submit_power_at(&self, worker: usize, req: PowerRequest) -> Pending<PowerReport> {
-        self.submit_power_placed(req, Some(worker))
+        self.submit_power_opts(req, SubmitOpts::pinned(worker))
     }
 
-    fn submit_power_placed(
+    /// Submit a power characterization with explicit options.
+    pub fn submit_power_opts(&self, req: PowerRequest, opts: SubmitOpts) -> Pending<PowerReport> {
+        let deadline = self.resolve_deadline(opts);
+        let (rtx, rrx) = channel();
+        let outcome = self.submit_job_at(Job::Power(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Power, outcome)
+    }
+
+    /// Non-blocking power submission: `Err(QueueFull)` hands the
+    /// request back when the bounded queue is at capacity.
+    pub fn try_submit_power(
         &self,
         req: PowerRequest,
-        target: Option<usize>,
-    ) -> Pending<PowerReport> {
+    ) -> std::result::Result<Pending<PowerReport>, QueueFull<PowerRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
         let (rtx, rrx) = channel();
-        self.submit_job_at(Job::Power(req, rtx), target);
-        Pending::new(rrx)
+        match self.try_submit_job(Job::Power(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Power, outcome)),
+            Err(Job::Power(req, _, _)) => Err(QueueFull(req)),
+            Err(_) => unreachable!("submitted job variant"),
+        }
     }
 
     /// Submit one GEMM tile (blocks when the queue is full). The
     /// high-level [`DspServer::gemm`] row-shards large requests across
     /// the pool; this is the raw single-tile path.
     pub fn submit_gemm(&self, req: GemmRequest) -> Pending<GemmBlock> {
-        self.submit_gemm_placed(req, None)
+        self.submit_gemm_opts(req, SubmitOpts::default())
     }
 
     /// Submit one GEMM tile pinned to `worker`'s queue.
     pub fn submit_gemm_at(&self, worker: usize, req: GemmRequest) -> Pending<GemmBlock> {
-        self.submit_gemm_placed(req, Some(worker))
+        self.submit_gemm_opts(req, SubmitOpts::pinned(worker))
     }
 
-    fn submit_gemm_placed(&self, req: GemmRequest, target: Option<usize>) -> Pending<GemmBlock> {
+    /// Submit one GEMM tile with explicit options.
+    pub fn submit_gemm_opts(&self, req: GemmRequest, opts: SubmitOpts) -> Pending<GemmBlock> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        self.submit_job_at(Job::Gemm(req, rtx), target);
-        Pending::new(rrx)
+        let outcome = self.submit_job_at(Job::Gemm(req, deadline, rtx), opts.worker);
+        Pending::from_outcome(rrx, Workload::Gemm, outcome)
     }
 
     /// Non-blocking GEMM submission: `Err(QueueFull)` hands the request
@@ -606,21 +1015,40 @@ impl DspServer {
         &self,
         req: GemmRequest,
     ) -> std::result::Result<Pending<GemmBlock>, QueueFull<GemmRequest>> {
+        let deadline = self.resolve_deadline(SubmitOpts::default());
         let (rtx, rrx) = channel();
-        match self.shared.try_push(Job::Gemm(req, rtx), None) {
-            Ok(PushOutcome::Queued) => {
-                self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
-                Ok(Pending::new(rrx))
-            }
-            // Pool closed: the dead reply channel surfaces the
-            // termination at `wait`, like the blocking path.
-            Ok(PushOutcome::Closed) => Ok(Pending::new(rrx)),
-            Err(Job::Gemm(req, _)) => {
-                self.submit_metrics.backpressure_events.fetch_add(1, Ordering::Relaxed);
-                Err(QueueFull(req))
-            }
+        match self.try_submit_job(Job::Gemm(req, deadline, rtx)) {
+            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Gemm, outcome)),
+            Err(Job::Gemm(req, _, _)) => Err(QueueFull(req)),
             Err(_) => unreachable!("submitted job variant"),
         }
+    }
+
+    /// Non-blocking submission with bounded, deterministically-jittered
+    /// exponential backoff: retries [`QueueFull`] admission up to
+    /// `policy.attempts` times, sleeping `policy.backoff(attempt, ..)`
+    /// between attempts (a pure function of `policy.seed`, so the retry
+    /// schedule replays exactly). Uniform over all six workloads via
+    /// [`SubmitRequest`]; the final `Err(QueueFull)` hands the request
+    /// back intact.
+    pub fn submit_with_retry<R: SubmitRequest>(
+        &self,
+        req: R,
+        policy: RetryPolicy,
+    ) -> std::result::Result<Pending<R::Reply>, QueueFull<R>> {
+        let mut rng = Pcg64::new(policy.seed, R::WORKLOAD as u64 + 1);
+        let attempts = policy.attempts.max(1);
+        let mut req = req;
+        for attempt in 0..attempts {
+            req = match req.try_submit(self) {
+                Ok(pending) => return Ok(pending),
+                Err(QueueFull(r)) => r,
+            };
+            if attempt + 1 < attempts {
+                std::thread::sleep(policy.backoff(attempt, &mut rng));
+            }
+        }
+        Err(QueueFull(req))
     }
 
     // -- high-level request APIs -----------------------------------------
@@ -796,6 +1224,13 @@ impl DspServer {
     /// order: product/GEMM lanes concatenate, moment pieces merge with
     /// the same exact accumulators the sharded sweep uses. One reply
     /// per input request, bit-identical at any worker count.
+    ///
+    /// Failure semantics: if any sub-job fails (backend error, caught
+    /// panic, expired deadline) or its worker is lost, reassembly
+    /// returns that typed error instead of the batch — it never
+    /// deadlocks, because every sub-job's `Pending` is guaranteed to
+    /// resolve (a dying pool drops the reply senders, surfacing
+    /// [`ServeError::ExecutorGone`]).
     pub fn submit_mixed(&self, traffic: Vec<MixedRequest>) -> Result<Vec<MixedReply>> {
         self.submit_mixed_placed(traffic, None)
     }
@@ -824,14 +1259,15 @@ impl DspServer {
             Gemm(Pending<GemmBlock>),
         }
         let pieces = Batcher::cut_mixed(traffic, self.workers());
+        let opts = SubmitOpts { worker: target, deadline: None };
         // Pipeline: submit every piece, then collect in order.
         let mut pending = Vec::with_capacity(pieces.len());
         for piece in pieces {
             let sub = match piece.req {
-                MixedRequest::Multiply(r) => Sub::Multiply(self.submit_multiply_placed(r, target)),
-                MixedRequest::Moments(r) => Sub::Moments(self.submit_moments_placed(r, target)),
-                MixedRequest::Power(r) => Sub::Power(self.submit_power_placed(r, target)),
-                MixedRequest::Gemm(r) => Sub::Gemm(self.submit_gemm_placed(r, target)),
+                MixedRequest::Multiply(r) => Sub::Multiply(self.submit_multiply_opts(r, opts)),
+                MixedRequest::Moments(r) => Sub::Moments(self.submit_moments_opts(r, opts)),
+                MixedRequest::Power(r) => Sub::Power(self.submit_power_opts(r, opts)),
+                MixedRequest::Gemm(r) => Sub::Gemm(self.submit_gemm_opts(r, opts)),
             };
             pending.push((piece.index, sub));
         }
@@ -910,59 +1346,126 @@ fn merge_moments(a: ErrorMoments, b: ErrorMoments) -> ErrorMoments {
     }
 }
 
-/// One worker's drain loop: claim-first dequeue over the per-worker
-/// deques (own queue, then steal), until shutdown *and* drained.
-fn executor_loop(backend: Box<dyn Backend>, shared: &PoolShared, w: usize, metrics: &Metrics) {
+/// One worker's drain loop *and* its supervisor: claim-first dequeue
+/// over the per-worker deques (own queue, then steal) until shutdown
+/// and drained. A job whose backend call panicked got a typed
+/// [`BackendError::Panicked`] reply from [`serve_job`]; the instance
+/// is then considered poisoned and this loop rebuilds it from the pool
+/// factory — up to [`RESTART_BUDGET`] times, after which (or if the
+/// rebuild itself fails) the worker fail-stops and [`PoolShared::retire`]
+/// hands its remaining work to the siblings. Single-shot workers
+/// (`respawn` = `None`, the PJRT shape) have nothing to rebuild from
+/// and keep serving the same instance, best-effort.
+fn executor_loop(
+    mut backend: Box<dyn Backend>,
+    respawn: Option<Arc<SharedFactory>>,
+    shared: &PoolShared,
+    w: usize,
+    metrics: &Metrics,
+) {
+    let mut restarts_left = RESTART_BUDGET;
     while let Some(job) = shared.next_job(w, metrics) {
-        serve_job(backend.as_ref(), job, metrics);
+        if !serve_job(backend.as_ref(), job, w, metrics) {
+            continue;
+        }
+        let Some(factory) = &respawn else { continue };
+        if restarts_left == 0 {
+            break;
+        }
+        restarts_left -= 1;
+        // The factory is caller code too — guard the rebuild like the
+        // dispatch, so a panicking constructor fail-stops cleanly.
+        match catch_unwind(AssertUnwindSafe(|| factory())) {
+            Ok(Ok(fresh)) => {
+                backend = fresh;
+                metrics.respawns.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Err(_)) | Err(_) => break,
+        }
+    }
+    shared.retire();
+}
+
+/// Serve one job with panic isolation; returns whether the backend
+/// panicked (the supervisor in [`executor_loop`] reacts). An expired
+/// deadline sheds the job before it touches the backend.
+fn serve_job(backend: &dyn Backend, job: Job, w: usize, metrics: &Metrics) -> bool {
+    match job {
+        Job::Multiply(req, deadline, reply) => {
+            let n = req.x.len() as u64;
+            dispatch(w, Workload::Multiply, deadline, n, reply, metrics, || backend.multiply(&req))
+        }
+        Job::Moments(req, deadline, reply) => {
+            let n = req.x.len() as u64;
+            dispatch(w, Workload::Moments, deadline, n, reply, metrics, || backend.moments(&req))
+        }
+        Job::Fir(req, deadline, reply) => {
+            let n = req.x.len() as u64;
+            dispatch(w, Workload::Fir, deadline, n, reply, metrics, || backend.fir(&req))
+        }
+        Job::Snr(req, deadline, reply) => {
+            let n = req.reference.len() as u64;
+            dispatch(w, Workload::Snr, deadline, n, reply, metrics, || backend.snr(&req))
+        }
+        Job::Power(req, deadline, reply) => {
+            let n = req.nvec;
+            dispatch(w, Workload::Power, deadline, n, reply, metrics, || backend.power(&req))
+        }
+        Job::Gemm(req, deadline, reply) => {
+            // Item count = output elements of the tile.
+            let n = (req.m * req.n) as u64;
+            dispatch(w, Workload::Gemm, deadline, n, reply, metrics, || backend.gemm(&req))
+        }
     }
 }
 
-fn serve_job(backend: &dyn Backend, job: Job, metrics: &Metrics) {
+/// The guarded dispatch shared by every workload arm: shed expired
+/// jobs, run the backend call under `catch_unwind`, convert a panic
+/// into a typed [`BackendError::Panicked`] reply, and always send —
+/// the caller's [`Pending`] resolves on every path. Returns whether
+/// the call panicked.
+///
+/// `AssertUnwindSafe` is sound here: on a panic the backend instance
+/// is never called again (pool workers respawn it, single-shot workers
+/// accept best-effort state), and the request/reply values are plain
+/// data.
+fn dispatch<T>(
+    w: usize,
+    workload: Workload,
+    deadline: Option<Instant>,
+    n: u64,
+    reply: Sender<Result<T>>,
+    metrics: &Metrics,
+    call: impl FnOnce() -> BackendResult<T>,
+) -> bool {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        metrics.shed.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Err(BackendError::Expired { workload }.into()));
+        return false;
+    }
     let t0 = Instant::now();
-    match job {
-        Job::Multiply(req, reply) => {
-            let n = req.x.len() as u64;
-            let res = backend.multiply(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
+    let (res, panicked) = match catch_unwind(AssertUnwindSafe(call)) {
+        Ok(res) => (res.map_err(anyhow::Error::from), false),
+        Err(payload) => {
+            metrics.panics.fetch_add(1, Ordering::Relaxed);
+            let message = panic_text(payload.as_ref());
+            (Err(BackendError::Panicked { worker: w, workload, message }.into()), true)
         }
-        Job::Moments(req, reply) => {
-            let n = req.x.len() as u64;
-            let res = backend.moments(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
-        }
-        Job::Fir(req, reply) => {
-            let n = req.x.len() as u64;
-            let res = backend.fir(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
-        }
-        Job::Snr(req, reply) => {
-            let n = req.reference.len() as u64;
-            let res = backend.snr(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
-        }
-        Job::Power(req, reply) => {
-            let n = req.nvec;
-            let res = backend.power(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
-        }
-        Job::Gemm(req, reply) => {
-            // Item count = output elements of the tile.
-            let n = (req.m * req.n) as u64;
-            let res = backend.gemm(&req).map_err(anyhow::Error::from);
-            metrics.executions.fetch_add(1, Ordering::Relaxed);
-            metrics.record_job(t0.elapsed(), n);
-            let _ = reply.send(res);
-        }
+    };
+    metrics.executions.fetch_add(1, Ordering::Relaxed);
+    metrics.record_job(t0.elapsed(), n);
+    let _ = reply.send(res);
+    panicked
+}
+
+/// Best-effort text of a panic payload (`panic!` with a literal or a
+/// formatted string covers the overwhelming majority).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }

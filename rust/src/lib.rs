@@ -52,13 +52,18 @@
 //!   sharded sweep/SNR/GEMM and mixed-traffic fan-out with
 //!   bit-identical merging, overlap-save block planner, dynamic
 //!   micro-batcher with mixed-stream cutting, backpressure, per-worker
-//!   steal/queue-depth metrics).
+//!   steal/queue-depth metrics) with service-grade resilience:
+//!   panic-isolated dispatch, supervised backend respawn under a
+//!   bounded restart budget, request deadlines with dequeue-time
+//!   shedding, bounded caller waits and deterministic retry backoff
+//!   (panics/respawns/shed counters on the metrics snapshot).
 //! * [`repro`] — one driver per paper table/figure, with
 //!   `--backend native|simd|pjrt` selection.
 //! * [`util`] — self-contained PRNG, CLI, stats and report helpers.
 //! * [`testkit`] — minimal property-based testing engine plus the
-//!   instrumented [`testkit::MockBackend`] (offline stand-ins for
-//!   proptest/mock crates).
+//!   instrumented [`testkit::MockBackend`] and the deterministic
+//!   chaos-injection harness [`testkit::FaultBackend`] (offline
+//!   stand-ins for proptest/mock/fault-injection crates).
 //!
 //! Offline policy: the only dependencies are the vendored path crates
 //! under `rust/vendor/` (`anyhow` shim; `xla` stub pulled in by the

@@ -21,7 +21,10 @@ use crate::util::cli::Args;
 use crate::util::report::{Series, Table};
 
 /// Spin up the DSP server selected by `--backend`/`--threads` (and the
-/// legacy bare `--pjrt` flag) — the same ladder as `bbm dnn`.
+/// legacy bare `--pjrt` flag) — the same ladder as `bbm dnn`. A
+/// `--deadline-ms N` (N > 0) arms the server-wide default request
+/// deadline: queued jobs older than N ms are shed with a typed
+/// `BackendError::Expired` reply instead of executing late.
 fn server_from(args: &Args) -> anyhow::Result<DspServer> {
     let threads = args.get_or("threads", 0usize)?;
     let backend = if args.flag("pjrt") {
@@ -29,11 +32,16 @@ fn server_from(args: &Args) -> anyhow::Result<DspServer> {
     } else {
         args.get_or("backend", BackendKind::Native)?
     };
-    Ok(match backend {
+    let srv = match backend {
         BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
         BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
         kind => DspServer::start_kind(kind, 8)?,
-    })
+    };
+    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
+    if deadline_ms > 0 {
+        srv.set_default_deadline(Some(std::time::Duration::from_millis(deadline_ms)));
+    }
+    Ok(srv)
 }
 
 /// [`snr_out_db`] with the variance accumulations served through the

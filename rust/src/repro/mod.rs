@@ -9,8 +9,10 @@
 //! bbm fig3   [--wl 16 --vbl 15 --nvec 100000]
 //! bbm table2 / table3 [--wls 4,8,12,16 --nvec 50000]
 //! bbm fig5 / fig6 [--wl 8 --relaxed-ns 1.75 --nvec 50000]
-//! bbm fig7 / fig8a / fig8b [--samples N --backend native|simd|pjrt --threads N]
-//! bbm table4 [--samples 8192 --cycles 8192 --backend native|simd|pjrt --threads N]
+//! bbm fig7 / fig8a / fig8b [--samples N --backend native|simd|pjrt --threads N
+//!                           --deadline-ms N]
+//! bbm table4 [--samples 8192 --cycles 8192 --backend native|simd|pjrt --threads N
+//!             --deadline-ms N]
 //! bbm dnn    [--samples 512 --nvec 20000 --wls 8,12 --families type0,bam
 //!             --backend native --threads N]
 //! bbm verify [--seed 1 --backend native|simd|pjrt]
@@ -98,7 +100,10 @@ fn print_help() {
          \x20        --threads N sizes the native executor pool (table1/fig2 sweeps,\n\
          \x20        fig3/table2/table3/fig5/fig6 power serving, fig7/fig8a/fig8b/table4\n\
          \x20        filter serving, dnn inference); dnn --wls 8,12 --families type0,bam\n\
-         \x20        pick the matched-filter design points and multiplier families\n\
+         \x20        pick the matched-filter design points and multiplier families;\n\
+         \x20        --deadline-ms N arms a server-wide request deadline on the filter\n\
+         \x20        drivers (fig7/fig8a/fig8b/table4): queued jobs older than N ms are\n\
+         \x20        shed with a typed expired reply\n\
          see DESIGN.md §7 for the experiment index and options"
     );
 }

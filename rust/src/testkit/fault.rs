@@ -1,0 +1,261 @@
+//! Deterministic chaos injection: [`FaultBackend`] wraps any inner
+//! [`Backend`] and fires a scripted fault schedule — a typed error, a
+//! fixed delay, or a panic — on exact call numbers, per workload.
+//!
+//! The schedule lives in a shared [`FaultPlan`]: call counters are
+//! *global* across every backend instance holding the same `Arc`
+//! (all pool workers, and every respawned instance after a panic), so
+//! "panic on the 3rd multiply call" fires exactly once no matter how
+//! work-stealing distributes the calls or how often the supervisor
+//! rebuilds the backend. That makes the injected totals — and
+//! therefore the pool's `panics` / `respawns` counters — exact at any
+//! worker count; *which* request absorbs a given fault is only
+//! pinned down on a single worker.
+//!
+//! Used by `tests/chaos_conformance.rs` to prove the executor pool
+//! never hangs, never loses a reply, and keeps surviving results
+//! bit-identical to the fault-free baseline under injected failures.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::backend::{
+    Backend, BackendError, BackendResult, ErrorMoments, FirBlock, FirRequest, GemmBlock,
+    GemmRequest, MomentsRequest, MultiplyRequest, PowerReport, PowerRequest, ProductBlock,
+    SnrAccum, SnrRequest, Workload,
+};
+
+/// One injected failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Reply with a typed [`BackendError::Execution`] ("injected …").
+    Error,
+    /// Sleep this long, then serve normally (latency injection).
+    Delay(Duration),
+    /// Panic mid-call (exercises the pool's `catch_unwind` isolation
+    /// and supervised respawn).
+    Panic,
+}
+
+/// A deterministic fault schedule: rules keyed on `(workload, call
+/// number)`, where call numbers are 1-based and counted globally
+/// across every [`FaultBackend`] sharing this plan. `at` rules match
+/// one exact call and take precedence over `every` rules (which match
+/// every multiple of their period).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    at: Vec<(Workload, u64, Fault)>,
+    every: Vec<(Workload, u64, Fault)>,
+    calls: [AtomicU64; 6],
+    fired_errors: AtomicU64,
+    fired_delays: AtomicU64,
+    fired_panics: AtomicU64,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing until rules are added).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fire `fault` on exactly the `call`-th (1-based, global) call of
+    /// `workload`.
+    pub fn at(mut self, workload: Workload, call: u64, fault: Fault) -> Self {
+        assert!(call >= 1, "call numbers are 1-based");
+        self.at.push((workload, call, fault));
+        self
+    }
+
+    /// Fire `fault` on every `n`-th (global) call of `workload`,
+    /// unless an `at` rule claims that call first.
+    pub fn every(mut self, workload: Workload, n: u64, fault: Fault) -> Self {
+        assert!(n >= 1, "period must be at least 1");
+        self.every.push((workload, n, fault));
+        self
+    }
+
+    /// Finish building: wrap for sharing across backend instances.
+    pub fn share(self) -> Arc<FaultPlan> {
+        Arc::new(self)
+    }
+
+    /// Global calls seen so far for `workload` (faulted ones included).
+    pub fn calls(&self, workload: Workload) -> u64 {
+        self.calls[workload as usize].load(Ordering::SeqCst)
+    }
+
+    /// Injected typed errors fired so far.
+    pub fn errors_fired(&self) -> u64 {
+        self.fired_errors.load(Ordering::SeqCst)
+    }
+
+    /// Injected delays fired so far.
+    pub fn delays_fired(&self) -> u64 {
+        self.fired_delays.load(Ordering::SeqCst)
+    }
+
+    /// Injected panics fired so far.
+    pub fn panics_fired(&self) -> u64 {
+        self.fired_panics.load(Ordering::SeqCst)
+    }
+
+    /// Count one call of `workload` and look up the fault (if any)
+    /// scheduled for it.
+    fn next(&self, workload: Workload) -> Option<Fault> {
+        let k = self.calls[workload as usize].fetch_add(1, Ordering::SeqCst) + 1;
+        for &(w, call, fault) in &self.at {
+            if w == workload && call == k {
+                return Some(fault);
+            }
+        }
+        for &(w, n, fault) in &self.every {
+            if w == workload && k % n == 0 {
+                return Some(fault);
+            }
+        }
+        None
+    }
+}
+
+/// Chaos-injection wrapper: intercepts every workload call against the
+/// shared [`FaultPlan`] before delegating to the inner engine. `name`
+/// is deliberately *not* intercepted — it runs during the pool's init
+/// handshake and after every supervised respawn.
+pub struct FaultBackend {
+    inner: Box<dyn Backend>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultBackend {
+    /// Wrap `inner`, injecting faults from `plan`.
+    pub fn new(inner: Box<dyn Backend>, plan: Arc<FaultPlan>) -> FaultBackend {
+        FaultBackend { inner, plan }
+    }
+
+    /// Apply the scheduled fault for this call, if any: delays sleep
+    /// and fall through to the inner engine, errors return, panics
+    /// unwind (for the pool's dispatch guard to catch).
+    fn intercept(&self, workload: Workload) -> BackendResult<()> {
+        match self.plan.next(workload) {
+            None => Ok(()),
+            Some(Fault::Delay(d)) => {
+                self.plan.fired_delays.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(Fault::Error) => {
+                self.plan.fired_errors.fetch_add(1, Ordering::SeqCst);
+                Err(BackendError::Execution(format!("injected {workload} fault")))
+            }
+            Some(Fault::Panic) => {
+                self.plan.fired_panics.fetch_add(1, Ordering::SeqCst);
+                panic!("injected panic serving {workload}");
+            }
+        }
+    }
+}
+
+impl Backend for FaultBackend {
+    fn name(&self) -> String {
+        format!("fault({})", self.inner.name())
+    }
+
+    fn multiply(&self, req: &MultiplyRequest) -> BackendResult<ProductBlock> {
+        self.intercept(Workload::Multiply)?;
+        self.inner.multiply(req)
+    }
+
+    fn moments(&self, req: &MomentsRequest) -> BackendResult<ErrorMoments> {
+        self.intercept(Workload::Moments)?;
+        self.inner.moments(req)
+    }
+
+    fn fir(&self, req: &FirRequest) -> BackendResult<FirBlock> {
+        self.intercept(Workload::Fir)?;
+        self.inner.fir(req)
+    }
+
+    fn snr(&self, req: &SnrRequest) -> BackendResult<SnrAccum> {
+        self.intercept(Workload::Snr)?;
+        self.inner.snr(req)
+    }
+
+    fn power(&self, req: &PowerRequest) -> BackendResult<PowerReport> {
+        self.intercept(Workload::Power)?;
+        self.inner.power(req)
+    }
+
+    fn gemm(&self, req: &GemmRequest) -> BackendResult<GemmBlock> {
+        self.intercept(Workload::Gemm)?;
+        self.inner.gemm(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::MultKind;
+    use crate::testkit::{MockBackend, MockState};
+
+    fn tiny_multiply() -> MultiplyRequest {
+        MultiplyRequest { kind: MultKind::BbmType0, wl: 8, level: 0, x: vec![3], y: vec![5] }
+    }
+
+    #[test]
+    fn schedule_fires_on_exact_calls_and_counts() {
+        let plan = FaultPlan::new()
+            .at(Workload::Multiply, 2, Fault::Error)
+            .every(Workload::Multiply, 3, Fault::Delay(Duration::from_millis(1)))
+            .share();
+        let b = FaultBackend::new(Box::new(MockBackend::new(MockState::new())), Arc::clone(&plan));
+        let req = tiny_multiply();
+        assert!(b.multiply(&req).is_ok(), "call 1 is clean");
+        let err = b.multiply(&req).unwrap_err();
+        assert!(err.to_string().contains("injected multiply fault"), "{err}");
+        assert!(b.multiply(&req).is_ok(), "call 3 delays but succeeds");
+        assert_eq!(plan.calls(Workload::Multiply), 3);
+        assert_eq!(plan.errors_fired(), 1);
+        assert_eq!(plan.delays_fired(), 1);
+        assert_eq!(plan.panics_fired(), 0);
+    }
+
+    #[test]
+    fn at_rules_take_precedence_and_counters_are_global() {
+        // Call 2 matches both the `at` rule and `every(1)`: `at` wins.
+        let plan = FaultPlan::new()
+            .at(Workload::Gemm, 2, Fault::Error)
+            .every(Workload::Gemm, 1, Fault::Delay(Duration::from_millis(1)))
+            .share();
+        // Two instances share the plan — the global counter spans both.
+        let a = FaultBackend::new(Box::new(MockBackend::new(MockState::new())), Arc::clone(&plan));
+        let b = FaultBackend::new(Box::new(MockBackend::new(MockState::new())), Arc::clone(&plan));
+        let req = GemmRequest {
+            kind: MultKind::BbmType0,
+            wl: 8,
+            level: 0,
+            m: 1,
+            k: 1,
+            n: 1,
+            a: vec![2],
+            b: vec![3],
+        };
+        assert!(a.gemm(&req).is_ok(), "call 1 delays but succeeds");
+        assert!(b.gemm(&req).is_err(), "call 2 (second instance) hits the at-rule");
+        assert_eq!(plan.calls(Workload::Gemm), 2);
+        assert_eq!(plan.errors_fired(), 1);
+        assert_eq!(plan.delays_fired(), 1);
+    }
+
+    #[test]
+    fn panic_fault_unwinds_and_name_is_never_intercepted() {
+        let plan = FaultPlan::new().every(Workload::Multiply, 1, Fault::Panic).share();
+        let b = FaultBackend::new(Box::new(MockBackend::new(MockState::new())), Arc::clone(&plan));
+        assert_eq!(b.name(), "fault(mock)");
+        let req = tiny_multiply();
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.multiply(&req)));
+        assert!(unwound.is_err(), "panic fault must unwind");
+        assert_eq!(plan.panics_fired(), 1);
+        assert_eq!(b.name(), "fault(mock)", "name still clean after the panic");
+    }
+}

@@ -1,15 +1,19 @@
 //! Minimal property-based testing engine — the offline stand-in for
 //! `proptest`, used by the coordinator/arith invariant suites — plus
 //! the instrumented [`MockBackend`] execution engine for hermetic
-//! coordinator tests (see [`mock`]).
+//! coordinator tests (see [`mock`]) and the deterministic
+//! chaos-injection harness ([`FaultBackend`], see [`fault`]) behind
+//! the resilience conformance suite.
 //!
 //! A property is a closure over generated inputs; the runner executes it
 //! on `cases` seeded-random inputs and, on failure, performs greedy
 //! shrinking via the generator's `shrink` hook before reporting the
 //! minimal counterexample.
 
+pub mod fault;
 pub mod mock;
 
+pub use fault::{Fault, FaultBackend, FaultPlan};
 pub use mock::{Gate, MockBackend, MockState};
 
 use crate::arith::{MultKind, Multiplier};

@@ -1,0 +1,442 @@
+//! Chaos-injection conformance suite for the resilient executor pool.
+//!
+//! Drives the coordinator through `testkit::FaultBackend` with
+//! deterministic fault schedules (typed errors, latency injection,
+//! panics on exact call numbers) and proves the service-grade
+//! guarantees:
+//!
+//! 1. The pool never hangs and never loses a reply: every `Pending`
+//!    resolves — with bits or with a typed error — under injected
+//!    panics, delays and errors, at any worker count (CI's chaos job
+//!    re-runs this at `BBM_POOL_WORKERS` ∈ {1, 4}).
+//! 2. Surviving results are bit-identical to a fault-free
+//!    single-executor baseline; `panics` / `respawns` / `shed`
+//!    counters match the schedule exactly.
+//! 3. A worker whose backend cannot be rebuilt fail-stops the pool
+//!    *cleanly*: queued jobs resolve with typed executor-gone errors,
+//!    `submit_mixed` errors instead of deadlocking, and drain-first
+//!    shutdown still terminates.
+//! 4. Deadlines shed expired jobs with typed replies, caller-side
+//!    waits are bounded, and `submit_with_retry` is bounded with a
+//!    deterministic backoff schedule.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bbm::arith::{MultKind, Multiplier};
+use bbm::backend::{
+    Backend, BackendError, ErrorMoments, FirRequest, GemmBlock, GemmRequest, MomentsRequest,
+    MultiplyRequest, NativeBackend, PowerReport, PowerRequest, ProductBlock, SnrRequest, Workload,
+    FIR_BLOCK, FIR_TAPS,
+};
+use bbm::coordinator::{DspServer, MetricsSnapshot, MixedRequest, RetryPolicy, SubmitOpts};
+use bbm::testkit::{draw_operands, Fault, FaultBackend, FaultPlan, Gate, MockBackend, MockState};
+use bbm::util::Pcg64;
+
+/// Generous cap proving "resolves" without ever flaking: every wait in
+/// this suite is expected to return far sooner.
+const WAIT: Duration = Duration::from_secs(60);
+
+/// Worker counts under chaos: `BBM_POOL_WORKERS` (comma-separated)
+/// when set — CI's chaos job pins {1, 4} — else both shapes locally.
+fn pool_sizes() -> Vec<usize> {
+    match std::env::var("BBM_POOL_WORKERS") {
+        Ok(s) => s
+            .split(',')
+            .map(|v| v.trim().parse().expect("BBM_POOL_WORKERS: comma-separated worker counts"))
+            .collect(),
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn mult_req(tag: i32) -> MultiplyRequest {
+    MultiplyRequest {
+        kind: MultKind::ExactBooth,
+        wl: 8,
+        level: 0,
+        x: vec![tag, 2, -7],
+        y: vec![3, -4, 5],
+    }
+}
+
+fn oracle_products(req: &MultiplyRequest) -> Vec<i64> {
+    let model = req.kind.build(req.wl, req.level);
+    req.x.iter().zip(&req.y).map(|(&a, &b)| model.multiply(a as i64, b as i64)).collect()
+}
+
+fn moments_req(seed: u64) -> MomentsRequest {
+    let (x, y) = draw_operands(MultKind::BbmType0, 8, 32, seed);
+    MomentsRequest { kind: MultKind::BbmType0, wl: 8, level: 4, x, y }
+}
+
+fn gemm_req(tag: i32) -> GemmRequest {
+    GemmRequest {
+        kind: MultKind::ExactBooth,
+        wl: 8,
+        level: 0,
+        m: 2,
+        k: 3,
+        n: 2,
+        a: vec![tag, 2, 3, 4, 5, 6],
+        b: vec![7, 8, 9, 10, 11, 12],
+    }
+}
+
+fn power_req(seed: u64) -> PowerRequest {
+    let nvec = 64 * 4;
+    PowerRequest { kind: MultKind::BbmType0, wl: 8, level: 7, constraint_ps: 0.0, nvec, seed }
+}
+
+fn fir_req() -> FirRequest {
+    FirRequest { wl: 8, x: vec![1; FIR_BLOCK + FIR_TAPS - 1], h: vec![1; FIR_TAPS], vbl: 0 }
+}
+
+/// Poll the folded pool snapshot until `pred` holds (or `WAIT` runs
+/// out): `respawns` is incremented *after* the panicked job's reply is
+/// sent, so observing the reply alone does not order the counter.
+fn wait_until(srv: &DspServer, pred: impl Fn(&MetricsSnapshot) -> bool) -> MetricsSnapshot {
+    let deadline = Instant::now() + WAIT;
+    loop {
+        let snap = srv.metrics();
+        if pred(&snap) || Instant::now() > deadline {
+            return snap;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The acceptance bar: a mixed multiply/moments/power/GEMM stream
+/// under scheduled panics, delays and one injected error completes
+/// with zero hung `Pending`s, typed errors for exactly the faulted
+/// calls, surviving results bit-identical to the fault-free baseline,
+/// and `panics`/`respawns` counters matching the schedule exactly.
+#[test]
+fn chaos_mixed_stream_never_hangs_and_survivors_stay_bit_identical() {
+    // Fault-free single-executor baseline (the path the backend
+    // conformance suite grounds in the digit oracles).
+    let base = DspServer::native(64).unwrap();
+    let mult_base: Vec<ProductBlock> =
+        (0..12).map(|i| base.submit_multiply(mult_req(i + 1)).wait().unwrap()).collect();
+    let mom_base: Vec<ErrorMoments> =
+        (0..6).map(|i| base.submit_moments(moments_req(0xC0 + i)).wait().unwrap()).collect();
+    let gemm_base: Vec<GemmBlock> =
+        (0..5).map(|i| base.submit_gemm(gemm_req(i + 1)).wait().unwrap()).collect();
+    let pow_base: Vec<PowerReport> =
+        (0..2).map(|i| base.submit_power(power_req(9 + i)).wait().unwrap()).collect();
+    base.shutdown();
+
+    for w in pool_sizes() {
+        // Fresh schedule per pool size: a panic every 4th multiply
+        // call (3 over 12 jobs — exactly the per-worker restart
+        // budget, so even a single worker absorbs them all), a delay
+        // every 3rd moments call, one injected gemm error. The plan's
+        // call counters are global, so the totals are exact no matter
+        // how work-stealing spreads the calls.
+        let plan = FaultPlan::new()
+            .every(Workload::Multiply, 4, Fault::Panic)
+            .every(Workload::Moments, 3, Fault::Delay(Duration::from_millis(2)))
+            .at(Workload::Gemm, 2, Fault::Error)
+            .share();
+        let p2 = Arc::clone(&plan);
+        let srv = DspServer::start_pool(
+            move || {
+                Ok(Box::new(FaultBackend::new(Box::new(NativeBackend::new()), Arc::clone(&p2)))
+                    as Box<dyn Backend>)
+            },
+            w,
+            64,
+        )
+        .unwrap();
+
+        let mults: Vec<_> = (0..12).map(|i| srv.submit_multiply(mult_req(i + 1))).collect();
+        let moms: Vec<_> = (0..6).map(|i| srv.submit_moments(moments_req(0xC0 + i))).collect();
+        let gemms: Vec<_> = (0..5).map(|i| srv.submit_gemm(gemm_req(i + 1))).collect();
+        let pows: Vec<_> = (0..2).map(|i| srv.submit_power(power_req(9 + i))).collect();
+
+        let mut panicked = 0;
+        for (i, p) in mults.into_iter().enumerate() {
+            match p.wait_timeout(WAIT) {
+                Ok(blk) => assert_eq!(blk.p, mult_base[i].p, "w={w} multiply {i}"),
+                Err(e) => {
+                    let text = e.to_string();
+                    assert!(
+                        text.contains("panicked") && text.contains("multiply"),
+                        "w={w} multiply {i}: {text}"
+                    );
+                    panicked += 1;
+                }
+            }
+        }
+        assert_eq!(panicked, 3, "w={w}: exactly the scheduled multiply calls panic");
+
+        for (i, p) in moms.into_iter().enumerate() {
+            let got = p.wait_timeout(WAIT).unwrap();
+            assert_eq!(got, mom_base[i], "w={w} moments {i}: delays must not move bits");
+        }
+
+        let mut injected = 0;
+        for (i, p) in gemms.into_iter().enumerate() {
+            match p.wait_timeout(WAIT) {
+                Ok(blk) => assert_eq!(blk.c, gemm_base[i].c, "w={w} gemm {i}"),
+                Err(e) => {
+                    let text = e.to_string();
+                    assert!(text.contains("injected gemm fault"), "w={w} gemm {i}: {text}");
+                    injected += 1;
+                }
+            }
+        }
+        assert_eq!(injected, 1, "w={w}: exactly one gemm absorbs the injected error");
+
+        for (i, p) in pows.into_iter().enumerate() {
+            assert_eq!(p.wait_timeout(WAIT).unwrap(), pow_base[i], "w={w} power {i}");
+        }
+
+        // Injected totals and pool counters match the schedule exactly.
+        assert_eq!(plan.calls(Workload::Multiply), 12, "w={w}");
+        assert_eq!(plan.panics_fired(), 3, "w={w}");
+        assert_eq!(plan.delays_fired(), 2, "w={w}");
+        assert_eq!(plan.errors_fired(), 1, "w={w}");
+        let snap = wait_until(&srv, |s| s.respawns >= 3);
+        assert_eq!(snap.panics, 3, "w={w}: every injected panic was caught");
+        assert_eq!(snap.respawns, 3, "w={w}: every caught panic respawned the backend");
+        assert_eq!(snap.shed, 0, "w={w}");
+        assert_eq!(snap.completed, 25, "w={w}: no reply lost");
+
+        // The pool is still alive after the chaos.
+        let live = srv.submit_multiply(mult_req(99)).wait_timeout(WAIT).unwrap();
+        assert_eq!(live.p, oracle_products(&mult_req(99)), "w={w}: pool serves after respawns");
+        srv.shutdown();
+    }
+}
+
+/// Focused respawn check at a fixed pool size: panics on exact multiply
+/// calls become typed replies, the rebuilt backends keep producing
+/// bit-exact results, and the counters land on the schedule.
+#[test]
+fn respawned_workers_keep_serving_bit_exact_results() {
+    let plan = FaultPlan::new()
+        .at(Workload::Multiply, 2, Fault::Panic)
+        .at(Workload::Multiply, 5, Fault::Panic)
+        .share();
+    let p2 = Arc::clone(&plan);
+    let srv = DspServer::start_pool(
+        move || {
+            Ok(Box::new(FaultBackend::new(Box::new(NativeBackend::new()), Arc::clone(&p2)))
+                as Box<dyn Backend>)
+        },
+        2,
+        32,
+    )
+    .unwrap();
+    let pends: Vec<_> = (0..10).map(|i| srv.submit_multiply(mult_req(i + 1))).collect();
+    let (mut ok, mut panicked) = (0, 0);
+    for (i, p) in pends.into_iter().enumerate() {
+        match p.wait_timeout(WAIT) {
+            Ok(blk) => {
+                assert_eq!(blk.p, oracle_products(&mult_req(i as i32 + 1)), "multiply {i}");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("panicked"), "multiply {i}: {e}");
+                panicked += 1;
+            }
+        }
+    }
+    assert_eq!((ok, panicked), (8, 2), "two scheduled panics, eight bit-exact survivors");
+    let snap = wait_until(&srv, |s| s.respawns >= 2);
+    assert_eq!((snap.panics, snap.respawns), (2, 2));
+    srv.shutdown();
+}
+
+/// A factory that serves one real (fault-wrapped) mock backend and
+/// refuses every rebuild — the fail-stop half of the supervisor.
+fn dying_factory(
+    builds: Arc<AtomicU64>,
+    plan: Arc<FaultPlan>,
+) -> impl Fn() -> bbm::Result<Box<dyn Backend>> + Send + Sync + 'static {
+    move || {
+        if builds.fetch_add(1, Ordering::SeqCst) == 0 {
+            let mock = MockBackend::new(MockState::new());
+            Ok(Box::new(FaultBackend::new(Box::new(mock), Arc::clone(&plan))) as Box<dyn Backend>)
+        } else {
+            Err(BackendError::Execution("chaos: factory refuses to rebuild".into()).into())
+        }
+    }
+}
+
+/// Satellite: when the last worker dies mid-drain (panic + failed
+/// rebuild), the faulted job gets a typed panic reply, every queued
+/// job resolves with a typed executor-gone error — never a hang — and
+/// drain-first shutdown still terminates.
+#[test]
+fn dead_worker_fails_pool_cleanly_and_shutdown_terminates() {
+    let plan = FaultPlan::new().at(Workload::Multiply, 1, Fault::Panic).share();
+    let builds = Arc::new(AtomicU64::new(0));
+    let factory = dying_factory(Arc::clone(&builds), Arc::clone(&plan));
+    let srv = DspServer::start_pool(factory, 1, 8).unwrap();
+    let pends: Vec<_> = (0..5).map(|i| srv.submit_multiply(mult_req(i + 1))).collect();
+    let errors: Vec<String> =
+        pends.into_iter().map(|p| p.wait_timeout(WAIT).unwrap_err().to_string()).collect();
+    assert!(errors[0].contains("panicked"), "the first job absorbed the panic: {}", errors[0]);
+    let gone = errors.iter().filter(|e| e.contains("executor terminated")).count();
+    assert_eq!(gone, 4, "{errors:?}");
+    let snap = srv.metrics();
+    assert_eq!((snap.panics, snap.respawns), (1, 0));
+    assert_eq!(builds.load(Ordering::SeqCst), 2, "initial build + one refused rebuild");
+    // Submissions after the pool died reject rather than hang.
+    let late = srv.submit_multiply(mult_req(9)).wait_timeout(WAIT).unwrap_err();
+    assert!(late.to_string().contains("executor terminated"), "{late}");
+    srv.shutdown();
+}
+
+/// Satellite: `submit_mixed` returns a typed error — instead of
+/// deadlocking on lost sub-jobs — when a worker dies under it.
+#[test]
+fn submit_mixed_errors_cleanly_when_a_sub_jobs_worker_is_lost() {
+    let plan = FaultPlan::new().at(Workload::Multiply, 1, Fault::Panic).share();
+    let factory = dying_factory(Arc::new(AtomicU64::new(0)), Arc::clone(&plan));
+    let srv = DspServer::start_pool(factory, 1, 8).unwrap();
+    let traffic = vec![
+        MixedRequest::Multiply(mult_req(7)),
+        MixedRequest::Gemm(gemm_req(1)),
+        MixedRequest::Power(power_req(1)),
+    ];
+    let err = srv.submit_mixed(traffic).unwrap_err().to_string();
+    assert!(
+        err.contains("panicked") || err.contains("executor terminated"),
+        "typed error, not a hang: {err}"
+    );
+    srv.shutdown();
+}
+
+/// Deadlines shed expired jobs at dequeue with typed replies (explicit
+/// per-request deadline and the server-wide default), and caller-side
+/// waits are bounded by `wait_timeout`.
+#[test]
+fn expired_deadlines_shed_with_typed_replies_and_waits_are_bounded() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (Arc::clone(&state), gate.clone());
+    let srv =
+        DspServer::start(move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>), 4)
+            .unwrap();
+
+    // A wedges the worker behind the closed gate; B's deadline expires
+    // while it waits behind A, so the worker sheds it at dequeue.
+    let a = srv.submit_multiply(mult_req(1));
+    let opts = SubmitOpts::deadline_in(Duration::from_millis(1));
+    let b = srv.submit_multiply_opts(mult_req(2), opts);
+    // The reply cannot arrive while the gate is closed: wait_timeout
+    // gives up with a typed ServeError instead of blocking forever.
+    let c = srv.submit_multiply(mult_req(3));
+    let bounded = c.wait_timeout(Duration::from_millis(10)).unwrap_err();
+    assert!(bounded.to_string().contains("gave up waiting"), "{bounded}");
+
+    std::thread::sleep(Duration::from_millis(20));
+    gate.open();
+    assert!(a.wait_timeout(WAIT).is_ok());
+    let expired = b.wait_deadline(Instant::now() + WAIT).unwrap_err().to_string();
+    assert!(expired.contains("deadline expired") && expired.contains("multiply"), "{expired}");
+
+    // Same shedding through the server-default deadline: the wedge job
+    // predates the default, E inherits it and expires in the queue.
+    gate.close();
+    let wedge = srv.submit_multiply(mult_req(4));
+    srv.set_default_deadline(Some(Duration::from_millis(1)));
+    let e = srv.submit_multiply(mult_req(5));
+    std::thread::sleep(Duration::from_millis(20));
+    gate.open();
+    assert!(wedge.wait_timeout(WAIT).is_ok());
+    let expired = e.wait_timeout(WAIT).unwrap_err().to_string();
+    assert!(expired.contains("deadline expired"), "{expired}");
+    srv.set_default_deadline(None);
+
+    let snap = srv.metrics();
+    assert_eq!(snap.shed, 2, "exactly the two expired jobs were shed");
+    srv.shutdown();
+}
+
+/// `submit_with_retry` is bounded (hands the request back after the
+/// configured attempts), admits once the pool drains, and its jittered
+/// backoff schedule is a pure function of the policy seed.
+#[test]
+fn submit_with_retry_is_bounded_and_backoff_is_deterministic() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (Arc::clone(&state), gate.clone());
+    let srv =
+        DspServer::start(move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>), 1)
+            .unwrap();
+    // Depth-1 queue: A is claimed by the (wedged) worker, B fills the
+    // single slot — the pool stays saturated until the gate opens.
+    let a = srv.submit_multiply(mult_req(1));
+    let b = srv.submit_multiply(mult_req(2));
+
+    let fast = RetryPolicy {
+        attempts: 4,
+        base: Duration::from_micros(10),
+        max_backoff: Duration::from_micros(80),
+        seed: 7,
+    };
+    let Err(handed_back) = srv.submit_with_retry(mult_req(3), fast) else {
+        panic!("pool is saturated; the bounded retry must exhaust")
+    };
+    assert_eq!(handed_back.0.x[0], 3, "QueueFull hands the request back intact");
+
+    gate.open();
+    assert!(a.wait_timeout(WAIT).is_ok() && b.wait_timeout(WAIT).is_ok());
+
+    // With the gate open the pool drains, so the retried admission
+    // lands and the job serves end to end.
+    let c = srv.submit_with_retry(handed_back.0, RetryPolicy::default()).expect("admitted");
+    assert!(c.wait_timeout(WAIT).is_ok());
+
+    // The backoff schedule replays exactly from the seed and stays
+    // inside [step/2, step] with the exponential step capped.
+    let mut r1 = Pcg64::new(fast.seed, 1);
+    let mut r2 = Pcg64::new(fast.seed, 1);
+    for attempt in 0..6 {
+        let d = fast.backoff(attempt, &mut r1);
+        assert_eq!(d, fast.backoff(attempt, &mut r2), "attempt {attempt}");
+        let step = fast.base.saturating_mul(1 << attempt).min(fast.max_backoff);
+        assert!(d >= step / 2 && d <= step, "attempt {attempt}: {d:?} outside {step:?}");
+    }
+    srv.shutdown();
+}
+
+/// Satellite: every workload has a non-blocking admission path —
+/// `try_submit_*` rejects with the request handed back intact while
+/// the queue is full, and serves end to end once it drains.
+#[test]
+fn try_submit_rejects_every_workload_with_intact_handback_when_full() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (Arc::clone(&state), gate.clone());
+    let srv =
+        DspServer::start(move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>), 1)
+            .unwrap();
+    let a = srv.submit_multiply(mult_req(1));
+    assert_eq!(a.workload(), Workload::Multiply);
+    let b = srv.submit_multiply(mult_req(2));
+
+    let Err(m) = srv.try_submit_multiply(mult_req(9)) else { panic!("multiply must reject") };
+    assert_eq!(m.0.x[0], 9);
+    let Err(mo) = srv.try_submit_moments(moments_req(1)) else { panic!("moments must reject") };
+    assert_eq!(mo.0.x.len(), 32);
+    let Err(f) = srv.try_submit_fir(fir_req()) else { panic!("fir must reject") };
+    assert_eq!(f.0.h.len(), FIR_TAPS);
+    let snr = SnrRequest { reference: vec![1.0], signal: vec![0.5] };
+    let Err(sr) = srv.try_submit_snr(snr) else { panic!("snr must reject") };
+    assert_eq!(sr.0.reference, vec![1.0]);
+    let Err(pw) = srv.try_submit_power(power_req(3)) else { panic!("power must reject") };
+    assert_eq!(pw.0.seed, 3);
+    let Err(g) = srv.try_submit_gemm(gemm_req(4)) else { panic!("gemm must reject") };
+    assert_eq!(g.0.a[0], 4);
+
+    gate.open();
+    assert!(a.wait_timeout(WAIT).is_ok() && b.wait_timeout(WAIT).is_ok());
+    let ok = srv.try_submit_moments(moments_req(2)).expect("queue drained");
+    assert!(ok.wait_timeout(WAIT).is_ok());
+    srv.shutdown();
+}
