@@ -1,8 +1,9 @@
 //! Machine-readable perf trajectory: a smoke-scale run of the headline
 //! benchmarks (PR-5 kernels, the PR-6 GEMM workload, the PR-7 WL=12/16
 //! compiled quadrant/row-table kernels, the PR-8 SIMD backend +
-//! work-stealing scheduler, and the PR-9 `catch_unwind` dispatch-guard
-//! overhead probe), written as JSON to the PR-agnostic
+//! work-stealing scheduler, the PR-9 `catch_unwind` dispatch-guard
+//! overhead probe, and the PR-10 admission-control / integrity-audit
+//! overhead probes), written as JSON to the PR-agnostic
 //! `BENCH.json` at the repo root (override with `BENCH_OUT=/path`; the
 //! embedded `"pr"` field still records which PR produced it). Runs in
 //! seconds so CI can execute it on every PR — set `BENCH_FULL=1` for
@@ -21,7 +22,7 @@ use bbm::backend::{
     Backend, FirRequest, GemmRequest, MomentsRequest, MultiplyRequest, NativeBackend,
     SimdBackend, FIR_BLOCK, FIR_TAPS, SWEEP_BATCH,
 };
-use bbm::coordinator::{DspServer, MixedRequest};
+use bbm::coordinator::{DegradePolicy, DspServer, MixedRequest, Priority, SubmitOpts};
 use bbm::error::{exhaustive_stats, SweepConfig};
 use bbm::gate::builders::build_broken_booth;
 use bbm::gate::ir::Levelized;
@@ -405,11 +406,51 @@ fn main() {
     });
     ratios.push(("catch_unwind_vs_raw_multiply_wl8".into(), guarded / raw));
 
+    // 9. Overload protection (PR 10), on the same WL=8 served multiply
+    // round trip. Admission: priority classes + an armed (but inactive,
+    // governor off) degrade policy vs the plain submit path — the
+    // watermark check and governor sample per submission should stay in
+    // the noise. Audit: 1-in-64 sampled oracle re-execution of served
+    // jobs vs audits off — the steady-state integrity-checking cost.
+    let srv = DspServer::native(16).unwrap();
+    let served_iters = if full { 20 } else { 5 };
+    let plain = time_min(served_iters, || {
+        std::hint::black_box(srv.submit_multiply(preq.clone()).wait().unwrap().p[0]);
+    });
+    srv.set_degrade_default(Some(DegradePolicy::table1()));
+    let hi = SubmitOpts::default().with_priority(Priority::High);
+    let admission = time_min(served_iters, || {
+        let p = srv.submit_multiply_opts(preq.clone(), hi);
+        std::hint::black_box(p.wait().unwrap().p[0]);
+    });
+    srv.set_audit_every(64);
+    let audited = time_min(served_iters, || {
+        std::hint::black_box(srv.submit_multiply(preq.clone()).wait().unwrap().p[0]);
+    });
+    srv.shutdown();
+    entries.push(Entry {
+        name: "multiply_wl8_served_plain".into(),
+        secs: plain,
+        items: lanes as f64,
+    });
+    entries.push(Entry {
+        name: "multiply_wl8_served_admission".into(),
+        secs: admission,
+        items: lanes as f64,
+    });
+    entries.push(Entry {
+        name: "multiply_wl8_served_audit_1in64".into(),
+        secs: audited,
+        items: lanes as f64,
+    });
+    ratios.push(("admission_overhead_multiply_wl8".into(), admission / plain));
+    ratios.push(("audit_1in64_vs_off_multiply_wl8".into(), audited / plain));
+
     // Emit JSON (no serde offline; the shape is flat enough to format
     // by hand).
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 9,\n");
+    json.push_str("  \"pr\": 10,\n");
     json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
     json.push_str("  \"benches\": [\n");
     for (i, e) in entries.iter().enumerate() {

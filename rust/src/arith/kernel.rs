@@ -61,7 +61,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bbm::{BbmType, BrokenBooth};
-use super::table::{product_table, ProductTable, MAX_TABLE_WL};
+use super::table::{fnv1a64, product_table, ProductTable, MAX_TABLE_WL};
 use super::{MultKind, Multiplier};
 
 /// Largest word length served by a compiled kernel; above this the
@@ -117,6 +117,7 @@ impl QuadrantKernel {
 
 /// Per-Booth-digit row-table kernel for the signed Booth families
 /// (exact, Broken-Booth Type0/Type1) at `8 < WL ≤ 16`.
+#[derive(Clone)]
 pub struct BoothRowKernel {
     kind: MultKind,
     wl: u32,
@@ -127,6 +128,8 @@ pub struct BoothRowKernel {
     /// `P = 2·WL ≤ 32`) for Booth triple `t` and the wl-bit unsigned
     /// image `xu` of the multiplicand.
     rows: Vec<Vec<u32>>,
+    /// FNV-1a digest of the row tables, taken at compile time.
+    checksum: u64,
 }
 
 impl BoothRowKernel {
@@ -137,7 +140,7 @@ impl BoothRowKernel {
         let side = 1usize << wl;
         let half = (side >> 1) as i64;
         let pmask = (1u64 << (2 * wl)) - 1;
-        let rows = (0..(wl / 2) as usize)
+        let rows: Vec<Vec<u32>> = (0..(wl / 2) as usize)
             .map(|i| {
                 let mut row = vec![0u32; 8 * side];
                 for (t, chunk) in row.chunks_exact_mut(side).enumerate() {
@@ -149,18 +152,37 @@ impl BoothRowKernel {
                 row
             })
             .collect();
+        let checksum = fnv1a64(rows.iter().flatten().map(|&e| e as i64));
         BoothRowKernel {
             kind,
             wl,
             level,
             name: format!("{}+rows", kind.build(wl, level).name()),
             rows,
+            checksum,
         }
     }
 
     /// Table bytes held by this kernel (cache accounting).
     fn bytes(&self) -> usize {
         self.rows.iter().map(|r| r.len() * std::mem::size_of::<u32>()).sum()
+    }
+
+    /// Re-hash the live row tables against the compile-time digest —
+    /// `false` means the entries were corrupted after build.
+    pub fn verify_checksum(&self) -> bool {
+        fnv1a64(self.rows.iter().flatten().map(|&e| e as i64)) == self.checksum
+    }
+
+    /// Flip the LSB of every row-0 entry, keeping the stale
+    /// compile-time checksum — a deliberately corrupted kernel for
+    /// auditor tests (bit 0 is inside the `2·WL`-bit product field, so
+    /// every poisoned product moves by ±1).
+    #[doc(hidden)]
+    pub fn poison_for_test(&mut self) {
+        for e in &mut self.rows[0] {
+            *e ^= 1;
+        }
     }
 
     /// The recoded product: one gather per row, exact u64 reduction,
@@ -308,6 +330,17 @@ impl CompiledKernel {
             }
             CompiledKernel::Quadrant(q) => (q.kind, q.wl, q.level),
             CompiledKernel::BoothRows(r) => (r.kind, r.wl, r.level),
+        }
+    }
+
+    /// Re-hash the kernel's tables against their compile-time digests
+    /// (a quadrant kernel verifies all three sub-tables) — `false`
+    /// means some entry was corrupted after build.
+    pub fn verify_checksum(&self) -> bool {
+        match self {
+            CompiledKernel::Table(t) => t.verify_checksum(),
+            CompiledKernel::Quadrant(q) => q.subs.iter().all(|s| s.verify_checksum()),
+            CompiledKernel::BoothRows(r) => r.verify_checksum(),
         }
     }
 }
@@ -491,6 +524,18 @@ impl KernelCache {
         }
     }
 
+    /// Drop one entry by key (integrity-audit eviction, not LRU
+    /// pressure — the `evictions` counter stays budget-only).
+    fn remove(&mut self, key: &KernelKey) -> bool {
+        match self.map.remove(key) {
+            Some((_, v)) => {
+                self.bytes -= v.bytes();
+                true
+            }
+            None => false,
+        }
+    }
+
     fn set_budget(&mut self, budget: usize) {
         self.budget = budget;
         while self.bytes > self.budget && !self.map.is_empty() {
@@ -524,6 +569,61 @@ pub fn set_kernel_cache_budget(bytes: usize) {
 /// Snapshot the process-wide kernel-cache counters.
 pub fn kernel_cache_stats() -> KernelCacheStats {
     global().lock().expect("kernel cache poisoned").stats()
+}
+
+/// Evict one design point's compiled tables from the process-wide
+/// cache (the integrity auditor's response to a lane mismatch): the
+/// next fetch recompiles from the digit oracle. Quadrant design points
+/// have no resident entry of their own, so their three WL = 8
+/// sub-tables are dropped instead. Returns whether anything was
+/// resident.
+pub fn evict_kernel(kind: MultKind, wl: u32, level: u32) -> bool {
+    // Canonicalize as the fetch paths do, so the eviction hits the
+    // same key the poisoned fetch was served from.
+    let level = if kind == MultKind::ExactBooth { 0 } else { level };
+    let mut cache = global().lock().expect("kernel cache poisoned");
+    if wl > MAX_TABLE_WL && matches!(kind, MultKind::Bam | MultKind::Kulkarni) {
+        let mut any = false;
+        for s in 0..3u32 {
+            let sub_level = level.saturating_sub(MAX_TABLE_WL * s).min(2 * MAX_TABLE_WL);
+            any |= cache.remove(&(kind, MAX_TABLE_WL, sub_level));
+        }
+        any
+    } else {
+        cache.remove(&(kind, wl, level))
+    }
+}
+
+/// Corrupt the cached tables of one design point in place (LSB flip,
+/// stale checksum) so auditor tests can prove detection + eviction +
+/// heal. Returns `false` when the design point is not resident —
+/// fetch it once first. Test-only; never called by serving paths.
+#[doc(hidden)]
+pub fn poison_kernel_for_test(kind: MultKind, wl: u32, level: u32) -> bool {
+    let level = if kind == MultKind::ExactBooth { 0 } else { level };
+    let key = if wl > MAX_TABLE_WL && matches!(kind, MultKind::Bam | MultKind::Kulkarni) {
+        // Quadrant kernels are facades over their s = 0 sub-table;
+        // poisoning it corrupts the composed low quadrant.
+        (kind, MAX_TABLE_WL, level.min(2 * MAX_TABLE_WL))
+    } else {
+        (kind, wl, level)
+    };
+    let mut cache = global().lock().expect("kernel cache poisoned");
+    match cache.map.get_mut(&key) {
+        Some((_, Cached::Table(t))) => {
+            let mut poisoned = (**t).clone();
+            poisoned.poison_for_test();
+            *t = Arc::new(poisoned);
+            true
+        }
+        Some((_, Cached::Rows(r))) => {
+            let mut poisoned = (**r).clone();
+            poisoned.poison_for_test();
+            *r = Arc::new(poisoned);
+            true
+        }
+        None => false,
+    }
 }
 
 /// Memoized WL ≤ 8 product LUT — the backing store of
@@ -805,6 +905,46 @@ mod tests {
             _ => panic!("table entries expected"),
         }
         assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn poison_then_evict_heals_the_design_point() {
+        // A design point no other test touches, so the global cache
+        // round-trip stays deterministic under parallel test threads.
+        let (kind, wl, level) = (MultKind::BbmType1, 10, 4);
+        let m = kind.build(wl, level);
+        let fresh = compiled_kernel(kind, wl, level).unwrap();
+        assert!(fresh.verify_checksum());
+        assert!(poison_kernel_for_test(kind, wl, level), "kernel must be resident");
+        let bad = compiled_kernel(kind, wl, level).unwrap();
+        assert!(!bad.verify_checksum(), "poisoned tables must fail the digest");
+        assert_ne!(bad.lookup(100, -100), m.multiply(100, -100), "poison must flip bits");
+        assert!(evict_kernel(kind, wl, level), "poisoned entry must be resident");
+        assert!(!evict_kernel(kind, wl, level), "second evict finds nothing");
+        let healed = compiled_kernel(kind, wl, level).unwrap();
+        assert!(healed.verify_checksum());
+        for (x, y) in [(100i64, -100i64), (-512, 511), (0, -1)] {
+            assert_eq!(healed.lookup(x, y), m.multiply(x, y), "recompile must heal");
+        }
+    }
+
+    #[test]
+    fn quadrant_poison_and_evict_target_the_sub_tables() {
+        let (kind, wl, level) = (MultKind::Kulkarni, 12, 11);
+        let m = kind.build(wl, level);
+        let fresh = compiled_kernel(kind, wl, level).unwrap();
+        assert!(fresh.verify_checksum());
+        assert!(poison_kernel_for_test(kind, wl, level));
+        // Quadrant kernels rebuild from the cache on every fetch, so
+        // the next fetch composes the poisoned s = 0 sub-table.
+        let bad = compiled_kernel(kind, wl, level).unwrap();
+        assert!(!bad.verify_checksum());
+        assert!(evict_kernel(kind, wl, level));
+        let healed = compiled_kernel(kind, wl, level).unwrap();
+        assert!(healed.verify_checksum());
+        for x in [0i64, 77, 4095] {
+            assert_eq!(healed.lookup(x, 4095 - x), m.multiply(x, 4095 - x));
+        }
     }
 
     #[test]

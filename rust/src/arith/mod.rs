@@ -42,8 +42,8 @@ pub use bbm::{BrokenBooth, BbmType};
 pub use booth::{booth_digits, exact_booth, ExactBooth};
 pub use etm::Etm;
 pub use kernel::{
-    compiled_kernel, kernel_cache_stats, kernel_for, set_kernel_cache_budget, CompiledKernel,
-    KernelCacheStats, MAX_KERNEL_WL,
+    compiled_kernel, evict_kernel, kernel_cache_stats, kernel_for, poison_kernel_for_test,
+    set_kernel_cache_budget, CompiledKernel, KernelCacheStats, MAX_KERNEL_WL,
 };
 pub use kulkarni::Kulkarni;
 pub use table::{product_table, table_for, ProductTable, MAX_TABLE_WL};

@@ -47,6 +47,7 @@ pub struct ProductTable {
     lo: i64,
     mask: usize,
     table: Vec<i32>,
+    checksum: u64,
 }
 
 impl ProductTable {
@@ -69,6 +70,7 @@ impl ProductTable {
                 table.push(model.multiply(x, y) as i32);
             }
         }
+        let checksum = fnv1a64(table.iter().map(|&p| p as i64));
         Some(ProductTable {
             kind,
             wl,
@@ -78,7 +80,29 @@ impl ProductTable {
             lo,
             mask: side - 1,
             table,
+            checksum,
         })
+    }
+
+    /// FNV-1a digest of the table contents, taken once at compile time
+    /// (the integrity auditor's build-time reference).
+    pub fn checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    /// Re-hash the live table and compare against the compile-time
+    /// digest — `false` means the entries were corrupted after build.
+    pub fn verify_checksum(&self) -> bool {
+        fnv1a64(self.table.iter().map(|&p| p as i64)) == self.checksum
+    }
+
+    /// Flip the LSB of every entry, keeping the stale compile-time
+    /// checksum — a deliberately corrupted kernel for auditor tests.
+    #[doc(hidden)]
+    pub fn poison_for_test(&mut self) {
+        for p in &mut self.table {
+            *p ^= 1;
+        }
     }
 
     /// Design-point family.
@@ -170,6 +194,22 @@ pub fn table_for<M: Multiplier + ?Sized>(model: &M) -> Option<Arc<ProductTable>>
     product_table(kind, wl, level)
 }
 
+/// FNV-1a over a stream of `i64` words (little-endian bytes) — the
+/// compile-time digest shared by the flat LUTs here and the composed
+/// row kernels in `arith::kernel`.
+pub(crate) fn fnv1a64(words: impl Iterator<Item = i64>) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +292,19 @@ mod tests {
         assert!(product_table(MultKind::Bam, 9, 5).is_none(), "wl > 8 has no LUT");
         assert!(product_table(MultKind::BbmType0, 8, 17).is_none(), "invalid level");
         assert!(product_table(MultKind::BbmType0, 7, 0).is_none(), "odd wl for booth");
+    }
+
+    #[test]
+    fn checksum_detects_post_build_corruption() {
+        let mut t = ProductTable::compile(MultKind::BbmType0, 6, 4).unwrap();
+        assert!(t.verify_checksum(), "fresh table must verify");
+        let before = t.checksum();
+        t.poison_for_test();
+        assert_eq!(t.checksum(), before, "poisoning must keep the stale digest");
+        assert!(!t.verify_checksum(), "flipped entries must fail verification");
+        // Distinct design points hash to distinct digests.
+        let u = ProductTable::compile(MultKind::BbmType0, 6, 5).unwrap();
+        assert_ne!(before, u.checksum());
     }
 
     #[test]

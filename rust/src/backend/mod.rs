@@ -146,6 +146,25 @@ pub enum BackendError {
         /// Workload the shed request carried.
         workload: Workload,
     },
+    /// The worker's circuit breaker was open (K consecutive
+    /// `Execution` failures), so the job fast-failed without touching
+    /// the backend. Retry later — the breaker half-opens after a
+    /// cooldown and probes with one real call.
+    BreakerOpen {
+        /// Executor worker index whose breaker rejected the job.
+        worker: usize,
+        /// Workload the rejected request carried.
+        workload: Workload,
+    },
+    /// The integrity auditor re-executed a sampled lane of this reply
+    /// on the digit oracle and got different bits; the offending
+    /// compiled kernel has been evicted so the next fetch recompiles.
+    AuditMismatch {
+        /// Workload whose reply failed the audit.
+        workload: Workload,
+        /// First divergent output lane (flat index).
+        lane: usize,
+    },
 }
 
 impl std::fmt::Display for BackendError {
@@ -161,6 +180,20 @@ impl std::fmt::Display for BackendError {
             }
             BackendError::Expired { workload } => {
                 write!(f, "deadline expired before the {workload} request started executing")
+            }
+            BackendError::BreakerOpen { worker, workload } => {
+                write!(
+                    f,
+                    "worker {worker} circuit breaker is open: {workload} request fast-failed \
+                     without touching the backend"
+                )
+            }
+            BackendError::AuditMismatch { workload, lane } => {
+                write!(
+                    f,
+                    "integrity audit failed: {workload} reply diverged from the digit oracle \
+                     at lane {lane} (kernel evicted)"
+                )
             }
         }
     }
@@ -817,6 +850,12 @@ mod tests {
         assert!(s.contains("worker 3") && s.contains("gemm") && s.contains("boom"), "{s}");
         let e = BackendError::Expired { workload: Workload::Power };
         assert!(e.to_string().contains("deadline") && e.to_string().contains("power"));
+        let e = BackendError::BreakerOpen { worker: 1, workload: Workload::Fir };
+        let s = e.to_string();
+        assert!(s.contains("worker 1") && s.contains("breaker") && s.contains("fir"), "{s}");
+        let e = BackendError::AuditMismatch { workload: Workload::Multiply, lane: 7 };
+        let s = e.to_string();
+        assert!(s.contains("audit") && s.contains("multiply") && s.contains("lane 7"), "{s}");
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //! worker resolves with a typed error (its reply sender is dropped by
 //! the pool), so the merge loop surfaces a typed failure for the batch
 //! instead of deadlocking on a reply that will never arrive.
+//!
+//! Overload degradation is snapshotted *before* cutting: when a mixed
+//! submission opts into a [`crate::coordinator::DegradePolicy`], the
+//! server rewrites each request once at admission and submits the cut
+//! pieces with degradation disabled — every sub-job of one request is
+//! served at the same level even if the governor flips mid-stream, so
+//! reassembled replies are never a mix of exact and degraded chunks.
 
 use std::time::{Duration, Instant};
 

@@ -38,6 +38,22 @@ pub struct Metrics {
     /// Jobs shed at dequeue because their deadline had already expired
     /// (replied `BackendError::Expired` without touching the backend).
     pub shed: AtomicU64,
+    /// Low-priority submissions shed at admission because the queue was
+    /// over that class's watermark (replied `ServeError::Overloaded`
+    /// with a retry-after hint; never counted as `submitted`).
+    pub overloaded: AtomicU64,
+    /// Requests the load governor rewrote to a coarser approximation
+    /// level under a caller-supplied `DegradePolicy`.
+    pub degraded: AtomicU64,
+    /// Circuit-breaker transitions to open (K consecutive
+    /// `BackendError::Execution` results on one worker).
+    pub breaker_trips: AtomicU64,
+    /// Jobs fast-failed with `BackendError::BreakerOpen` while this
+    /// worker's breaker cooled down (backend never touched).
+    pub breaker_fastfails: AtomicU64,
+    /// Integrity-audit samples whose served lanes disagreed with the
+    /// digit oracle (the offending compiled kernel is evicted).
+    pub audit_mismatches: AtomicU64,
 }
 
 impl Metrics {
@@ -69,6 +85,11 @@ impl Metrics {
             panics: self.panics.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            breaker_fastfails: self.breaker_fastfails.load(Ordering::Relaxed),
+            audit_mismatches: self.audit_mismatches.load(Ordering::Relaxed),
             // The hub cannot see its queue; `DspServer::metrics` /
             // `worker_metrics` fill the live depth in per worker.
             queue_depth: 0,
@@ -101,6 +122,16 @@ pub struct MetricsSnapshot {
     pub respawns: u64,
     /// Deadline-expired jobs shed at dequeue.
     pub shed: u64,
+    /// Low-priority submissions shed at admission (`Overloaded`).
+    pub overloaded: u64,
+    /// Requests rewritten to a coarser level by the load governor.
+    pub degraded: u64,
+    /// Circuit-breaker open transitions.
+    pub breaker_trips: u64,
+    /// Jobs fast-failed while a worker's breaker was open.
+    pub breaker_fastfails: u64,
+    /// Audit samples that disagreed with the digit oracle.
+    pub audit_mismatches: u64,
     /// Jobs waiting in this worker's queue at snapshot time (summed
     /// across workers in the folded pool snapshot).
     pub queue_depth: u64,
@@ -125,6 +156,11 @@ impl MetricsSnapshot {
         self.panics += other.panics;
         self.respawns += other.respawns;
         self.shed += other.shed;
+        self.overloaded += other.overloaded;
+        self.degraded += other.degraded;
+        self.breaker_trips += other.breaker_trips;
+        self.breaker_fastfails += other.breaker_fastfails;
+        self.audit_mismatches += other.audit_mismatches;
         self.queue_depth += other.queue_depth;
     }
 
@@ -153,7 +189,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "jobs {}/{} | execs {} | items {} | {:.1} items/s | mean {:?} max {:?} | \
-             stalls {} | steals {} | panics {} | respawns {} | shed {} | queued {}",
+             stalls {} | steals {} | panics {} | respawns {} | shed {} | overload {} | \
+             degraded {} | trips {} | fastfail {} | audit {} | queued {}",
             self.completed,
             self.submitted,
             self.executions,
@@ -166,6 +203,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.panics,
             self.respawns,
             self.shed,
+            self.overloaded,
+            self.degraded,
+            self.breaker_trips,
+            self.breaker_fastfails,
+            self.audit_mismatches,
             self.queue_depth,
         )
     }
@@ -238,6 +280,34 @@ mod tests {
         let text = snap.to_string();
         assert!(
             text.contains("panics 3") && text.contains("respawns 1") && text.contains("shed 4"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn overload_counters_snapshot_and_merge() {
+        let a = Metrics::new();
+        a.overloaded.fetch_add(5, Ordering::Relaxed);
+        a.degraded.fetch_add(2, Ordering::Relaxed);
+        a.breaker_trips.fetch_add(1, Ordering::Relaxed);
+        let b = Metrics::new();
+        b.degraded.fetch_add(3, Ordering::Relaxed);
+        b.breaker_fastfails.fetch_add(8, Ordering::Relaxed);
+        b.audit_mismatches.fetch_add(1, Ordering::Relaxed);
+        let mut snap = a.snapshot();
+        snap.merge(&b.snapshot());
+        assert_eq!(snap.overloaded, 5);
+        assert_eq!(snap.degraded, 5);
+        assert_eq!(snap.breaker_trips, 1);
+        assert_eq!(snap.breaker_fastfails, 8);
+        assert_eq!(snap.audit_mismatches, 1);
+        let text = snap.to_string();
+        assert!(
+            text.contains("overload 5")
+                && text.contains("degraded 5")
+                && text.contains("trips 1")
+                && text.contains("fastfail 8")
+                && text.contains("audit 1"),
             "{text}"
         );
     }

@@ -33,10 +33,23 @@
 //! ([`server::RetryPolicy`]). `panics` / `respawns` / `shed` counters
 //! surface on [`MetricsSnapshot`]; `testkit::FaultBackend` drives the
 //! chaos conformance suite over all of it.
+//!
+//! Overload is handled the way the paper's knob suggests: admission
+//! control with [`overload::Priority`] classes (low-priority traffic
+//! sheds first with a typed `Overloaded` + retry-after reply), a
+//! windowed load [`overload::Governor`] that — with hysteresis — trades
+//! accuracy for headroom by rewriting opted-in requests
+//! ([`overload::DegradePolicy`], caps from the paper's Table I bounds)
+//! to a coarser approximation level, a per-worker circuit
+//! [`overload::Breaker`] that fast-fails after K consecutive execution
+//! errors, and a 1-in-N integrity auditor that re-executes served
+//! multiply/GEMM lanes on the digit oracle and evicts a corrupted
+//! compiled kernel from the cache on mismatch.
 
 pub mod batcher;
 pub mod blocks;
 pub mod metrics;
+pub mod overload;
 pub mod server;
 
 pub use batcher::{
@@ -44,6 +57,9 @@ pub use batcher::{
 };
 pub use blocks::{block_input, pad_signal, plan_blocks, BlockPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use overload::{
+    Breaker, DegradePolicy, Governor, Priority, BREAKER_COOLDOWN, BREAKER_K, GOVERNOR_WINDOW,
+};
 pub use server::{
     DspServer, Pending, QueueFull, RetryPolicy, ServeError, SubmitOpts, SubmitRequest,
     RESTART_BUDGET,

@@ -1,0 +1,487 @@
+//! Overload protection for the executor pool: priority-class admission
+//! control, the load governor that trades accuracy for queue headroom,
+//! and the per-worker circuit breaker.
+//!
+//! The paper's core contribution is a tunable accuracy knob (the
+//! breaking level of a Broken-Booth multiplier), which gives the
+//! serving layer a degree of freedom ordinary services lack: under
+//! sustained overload it can *coarsen* requests instead of dropping
+//! them. [`DegradePolicy`] bounds how far a caller is willing to let
+//! each family degrade (defaults derived from the paper's Table I
+//! error moments), and the [`Governor`] decides *when* the trade is
+//! active, with hysteresis so the pool does not flap between exact and
+//! degraded mode at the watermark boundary.
+//!
+//! All three pieces are plain deterministic state machines — no
+//! timers, no randomness — so chaos tests can drive every transition
+//! exactly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicI8, Ordering};
+use std::sync::Mutex;
+
+use crate::arith::MultKind;
+
+/// Admission-priority class of one submission.
+///
+/// The pool keeps one queue-depth watermark per class: `Low` traffic
+/// is shed (typed [`ServeError::Overloaded`]) once the queue reaches
+/// half the configured depth, `Normal` keeps the pre-existing
+/// block/reject-at-depth semantics, and `High` is admitted into a
+/// reserved headroom band above the nominal depth so control-plane
+/// traffic still lands while bulk producers are being throttled.
+///
+/// [`ServeError::Overloaded`]: super::ServeError::Overloaded
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Admitted up to `depth + max(depth/4, 1)` queued jobs.
+    High,
+    /// Admitted up to `depth` queued jobs (the default; identical to
+    /// the pre-priority admission behavior).
+    #[default]
+    Normal,
+    /// Shed with `Overloaded` once `max(depth/2, 1)` jobs are queued.
+    Low,
+}
+
+impl Priority {
+    /// Human-readable class name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Per-family cap on how coarse the governor may rewrite a request's
+/// breaking level while the pool is overloaded.
+///
+/// A cap of `0` means "never degrade this family" (always true for
+/// `ExactBooth`, whose level knob is inert). Degradation only ever
+/// *raises* a request's level toward the cap — a request already at or
+/// beyond its cap is forwarded untouched, so replies stay within the
+/// error bound the caller signed up for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradePolicy {
+    /// Max acceptable level per family, indexed in [`MultKind::ALL`]
+    /// order.
+    caps: [u32; MultKind::ALL.len()],
+}
+
+impl DegradePolicy {
+    /// No family may be degraded (equivalent to not opting in).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Caps derived from the paper's Table I error moments at WL = 12:
+    /// VBL = 6 keeps the error-distance probability at 0.9375 with an
+    /// MSE of 5.05e3, while VBL = 9 blows the MSE up three orders of
+    /// magnitude (7.52e5). Level 6 is therefore the coarsest
+    /// operating point that still tracks the exact product, and the
+    /// ETM split knob (bounded by WL, not 2·WL) gets the analogous
+    /// halfway cap of 3.
+    pub fn table1() -> Self {
+        Self::none()
+            .with(MultKind::BbmType0, 6)
+            .with(MultKind::BbmType1, 6)
+            .with(MultKind::Bam, 6)
+            .with(MultKind::Kulkarni, 6)
+            .with(MultKind::Etm, 3)
+    }
+
+    /// Set one family's cap (builder style). Caps on `ExactBooth` are
+    /// accepted but never acted on: its level knob does not change the
+    /// produced bits.
+    pub fn with(mut self, kind: MultKind, cap: u32) -> Self {
+        self.caps[kind as usize] = cap;
+        self
+    }
+
+    /// The configured cap for one family (`0` = not degradable).
+    pub fn cap(&self, kind: MultKind) -> u32 {
+        self.caps[kind as usize]
+    }
+
+    /// The level an overloaded request should be rewritten to, or
+    /// `None` when this request must pass through untouched (family
+    /// not degradable, cap invalid for this word length, or the
+    /// request is already at least as coarse as the cap allows).
+    pub fn degraded_level(&self, kind: MultKind, wl: u32, level: u32) -> Option<u32> {
+        if kind == MultKind::ExactBooth {
+            return None;
+        }
+        let cap = self.caps[kind as usize];
+        if cap == 0 {
+            return None;
+        }
+        let target = cap.min(max_level(kind, wl));
+        (target > level).then_some(target)
+    }
+}
+
+/// The coarsest valid breaking level for one `(family, wl)` point
+/// (mirrors `MultKind::valid_params` upper bounds).
+fn max_level(kind: MultKind, wl: u32) -> u32 {
+    match kind {
+        MultKind::ExactBooth => 0,
+        MultKind::BbmType0 | MultKind::BbmType1 | MultKind::Bam => 2 * wl,
+        MultKind::Kulkarni => 2 * wl + 2,
+        MultKind::Etm => wl,
+    }
+}
+
+/// Samples of pre-enqueue queue depth the governor averages over.
+pub const GOVERNOR_WINDOW: usize = 16;
+
+/// Windowed queue-depth signal deciding when degradation is active.
+///
+/// Every admission attempt (blocking or `try_`) records the queue
+/// depth it observed under the admission lock. Once the window holds
+/// [`GOVERNOR_WINDOW`] samples, the governor enters degraded mode when
+/// the windowed mean reaches the enter watermark (¾ of the queue
+/// depth) and leaves it only when the mean falls to the exit watermark
+/// (¼ of the depth). The gap between the two watermarks is the
+/// hysteresis band: a half-refreshed window keeps the current mode.
+///
+/// [`Governor::set_override`] pins the mode for tests and operational
+/// overrides; samples keep accumulating so releasing the override
+/// resumes auto mode with a warm window.
+#[derive(Debug)]
+pub struct Governor {
+    window: Mutex<Window>,
+    degraded: AtomicBool,
+    /// `-1` auto, `0` forced exact, `1` forced degraded.
+    override_state: AtomicI8,
+    /// Enter degraded mode at windowed mean ≥ this depth.
+    enter: usize,
+    /// Leave degraded mode at windowed mean ≤ this depth.
+    exit: usize,
+}
+
+#[derive(Debug, Default)]
+struct Window {
+    samples: VecDeque<usize>,
+    sum: usize,
+}
+
+impl Governor {
+    /// Governor for a pool whose per-admission queue bound is `depth`.
+    pub fn new(depth: usize) -> Self {
+        Governor {
+            window: Mutex::new(Window::default()),
+            degraded: AtomicBool::new(false),
+            override_state: AtomicI8::new(-1),
+            enter: ((3 * depth) / 4).max(1),
+            exit: depth / 4,
+        }
+    }
+
+    /// Record one pre-enqueue queue-depth sample and re-evaluate the
+    /// mode. Called under the pool's admission lock, so samples are
+    /// totally ordered.
+    pub fn observe(&self, queued: usize) {
+        let Ok(mut w) = self.window.lock() else {
+            return;
+        };
+        w.samples.push_back(queued);
+        w.sum += queued;
+        if w.samples.len() > GOVERNOR_WINDOW {
+            let old = w.samples.pop_front().unwrap_or(0);
+            w.sum -= old;
+        }
+        let forced = self.override_state.load(Ordering::Relaxed);
+        if forced >= 0 {
+            self.degraded.store(forced == 1, Ordering::Relaxed);
+            return;
+        }
+        if w.samples.len() < GOVERNOR_WINDOW {
+            return;
+        }
+        if !self.degraded.load(Ordering::Relaxed) {
+            if w.sum >= self.enter * GOVERNOR_WINDOW {
+                self.degraded.store(true, Ordering::Relaxed);
+            }
+        } else if w.sum <= self.exit * GOVERNOR_WINDOW {
+            self.degraded.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether degraded mode is currently active.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Pin the mode (`Some(true)` forced degraded, `Some(false)`
+    /// forced exact) or return to automatic watermark control
+    /// (`None`). Takes effect immediately.
+    pub fn set_override(&self, forced: Option<bool>) {
+        match forced {
+            Some(on) => {
+                self.override_state.store(i8::from(on), Ordering::Relaxed);
+                self.degraded.store(on, Ordering::Relaxed);
+            }
+            None => self.override_state.store(-1, Ordering::Relaxed),
+        }
+    }
+}
+
+/// Consecutive `BackendError::Execution` results that open a breaker.
+pub const BREAKER_K: u32 = 4;
+
+/// Jobs fast-failed while open before the half-open probe is admitted.
+pub const BREAKER_COOLDOWN: u32 = 8;
+
+/// Per-worker circuit breaker around backend dispatch.
+///
+/// Complements the panic/respawn supervisor: panics mean the backend
+/// *crashed* (and the factory rebuilds it), while a run of
+/// [`BREAKER_K`] consecutive `Execution` errors means the backend is
+/// *up but failing* — e.g. a wedged device — where hammering it with
+/// more traffic only burns queue time. While open, [`BREAKER_COOLDOWN`]
+/// jobs fast-fail with a typed `BreakerOpen` reply without touching
+/// the backend; the next job is the half-open probe, whose outcome
+/// closes or re-opens the circuit. Only `Execution` errors count:
+/// shape/unsupported replies and audit mismatches are request- or
+/// data-level verdicts from a healthy backend, and panics are the
+/// supervisor's jurisdiction.
+#[derive(Debug, Default)]
+pub struct Breaker {
+    state: BreakerState,
+    consecutive: u32,
+    cooldown_left: u32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum BreakerState {
+    #[default]
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl Breaker {
+    /// Fresh (closed) breaker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether the next backend call may proceed. `false` means the
+    /// caller must fast-fail the job; each refusal consumes one
+    /// cooldown slot, and after [`BREAKER_COOLDOWN`] refusals the
+    /// breaker goes half-open and admits a probe.
+    pub fn admit(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if self.cooldown_left > 0 {
+                    self.cooldown_left -= 1;
+                    false
+                } else {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                }
+            }
+        }
+    }
+
+    /// Record a non-`Execution` outcome of an admitted call (success,
+    /// or a request-level error from a responsive backend): resets the
+    /// failure run and closes a half-open circuit.
+    pub fn record_ok(&mut self) {
+        self.consecutive = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// Record an `Execution` error on an admitted call. Returns `true`
+    /// when this error tripped the breaker open (either the K-th
+    /// consecutive failure while closed, or a failed half-open probe).
+    pub fn record_execution_error(&mut self) -> bool {
+        match self.state {
+            BreakerState::HalfOpen => {
+                self.trip();
+                true
+            }
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= BREAKER_K {
+                    self.trip();
+                    true
+                } else {
+                    false
+                }
+            }
+            // Not reachable through dispatch (open jobs are never
+            // admitted), but harmless: stay open.
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Whether the breaker is currently refusing traffic.
+    pub fn is_open(&self) -> bool {
+        self.state == BreakerState::Open
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.consecutive = 0;
+        self.cooldown_left = BREAKER_COOLDOWN;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_default_is_normal() {
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::Low.name(), "low");
+    }
+
+    #[test]
+    fn table1_policy_caps_follow_the_paper() {
+        let p = DegradePolicy::table1();
+        assert_eq!(p.cap(MultKind::ExactBooth), 0);
+        assert_eq!(p.cap(MultKind::BbmType0), 6);
+        assert_eq!(p.cap(MultKind::BbmType1), 6);
+        assert_eq!(p.cap(MultKind::Bam), 6);
+        assert_eq!(p.cap(MultKind::Kulkarni), 6);
+        assert_eq!(p.cap(MultKind::Etm), 3);
+    }
+
+    #[test]
+    fn degraded_level_only_coarsens_within_family_bounds() {
+        let p = DegradePolicy::table1();
+        // Finer than the cap → raise to the cap.
+        assert_eq!(p.degraded_level(MultKind::BbmType0, 8, 2), Some(6));
+        assert_eq!(p.degraded_level(MultKind::Etm, 8, 1), Some(3));
+        // At or beyond the cap → untouched.
+        assert_eq!(p.degraded_level(MultKind::BbmType0, 8, 6), None);
+        assert_eq!(p.degraded_level(MultKind::BbmType0, 8, 9), None);
+        // Exact multiplier never degrades.
+        assert_eq!(p.degraded_level(MultKind::ExactBooth, 8, 0), None);
+        // Cap clamped to the family's valid range at small WL.
+        let wide = DegradePolicy::none().with(MultKind::Etm, 100);
+        assert_eq!(wide.degraded_level(MultKind::Etm, 4, 0), Some(4));
+        // Unconfigured family → not degradable.
+        assert_eq!(DegradePolicy::none().degraded_level(MultKind::Bam, 8, 0), None);
+    }
+
+    #[test]
+    fn governor_enters_and_exits_with_hysteresis() {
+        let g = Governor::new(4); // enter at mean ≥ 3, exit at mean ≤ 1
+        for _ in 0..GOVERNOR_WINDOW {
+            g.observe(3);
+        }
+        assert!(g.degraded(), "full window at the enter watermark");
+        // A partially refreshed window sits in the hysteresis band.
+        for _ in 0..4 {
+            g.observe(0);
+        }
+        assert!(g.degraded(), "hysteresis holds mid-refresh");
+        for _ in 0..GOVERNOR_WINDOW {
+            g.observe(0);
+        }
+        assert!(!g.degraded(), "drained window exits");
+        // Sustained saturation re-enters once the window mean climbs
+        // back over the enter watermark.
+        for _ in 0..GOVERNOR_WINDOW {
+            g.observe(4);
+        }
+        assert!(g.degraded(), "sustained saturation re-enters");
+    }
+
+    #[test]
+    fn governor_partial_window_never_transitions() {
+        let g = Governor::new(4);
+        for _ in 0..GOVERNOR_WINDOW - 1 {
+            g.observe(100);
+        }
+        assert!(!g.degraded(), "no transition before the window fills");
+    }
+
+    #[test]
+    fn governor_override_pins_and_releases() {
+        let g = Governor::new(4);
+        g.set_override(Some(true));
+        assert!(g.degraded());
+        g.observe(0);
+        assert!(g.degraded(), "observations cannot unpin an override");
+        g.set_override(Some(false));
+        assert!(!g.degraded());
+        for _ in 0..GOVERNOR_WINDOW {
+            g.observe(100);
+        }
+        assert!(!g.degraded(), "forced exact ignores saturation");
+        g.set_override(None);
+        for _ in 0..GOVERNOR_WINDOW {
+            g.observe(100);
+        }
+        assert!(g.degraded(), "auto control resumes after release");
+    }
+
+    #[test]
+    fn breaker_trips_after_k_consecutive_execution_errors() {
+        let mut b = Breaker::new();
+        for i in 0..BREAKER_K - 1 {
+            assert!(b.admit());
+            assert!(!b.record_execution_error(), "error {i} must not trip");
+        }
+        assert!(b.admit());
+        assert!(b.record_execution_error(), "K-th consecutive error trips");
+        assert!(b.is_open());
+    }
+
+    #[test]
+    fn breaker_success_resets_the_run() {
+        let mut b = Breaker::new();
+        for _ in 0..BREAKER_K - 1 {
+            assert!(b.admit());
+            b.record_execution_error();
+        }
+        assert!(b.admit());
+        b.record_ok();
+        for i in 0..BREAKER_K - 1 {
+            assert!(b.admit());
+            assert!(!b.record_execution_error(), "run restarted, error {i}");
+        }
+    }
+
+    #[test]
+    fn breaker_cooldown_then_half_open_probe() {
+        let mut b = Breaker::new();
+        for _ in 0..BREAKER_K {
+            b.admit();
+            b.record_execution_error();
+        }
+        assert!(b.is_open());
+        for i in 0..BREAKER_COOLDOWN {
+            assert!(!b.admit(), "cooldown job {i} fast-fails");
+        }
+        assert!(b.admit(), "half-open probe admitted");
+        b.record_ok();
+        assert!(!b.is_open());
+        assert!(b.admit(), "closed again after a good probe");
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_a_fresh_cooldown() {
+        let mut b = Breaker::new();
+        for _ in 0..BREAKER_K {
+            b.admit();
+            b.record_execution_error();
+        }
+        for _ in 0..BREAKER_COOLDOWN {
+            b.admit();
+        }
+        assert!(b.admit(), "probe admitted");
+        assert!(b.record_execution_error(), "failed probe re-trips");
+        for i in 0..BREAKER_COOLDOWN {
+            assert!(!b.admit(), "second cooldown job {i} fast-fails");
+        }
+        assert!(b.admit(), "second probe admitted");
+    }
+}

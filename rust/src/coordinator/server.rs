@@ -65,7 +65,29 @@
 //! [`Pending::wait_timeout`] / [`Pending::wait_deadline`] bound the
 //! wait and [`DspServer::submit_with_retry`] retries [`QueueFull`]
 //! admission with bounded, deterministically-jittered (Pcg64-seeded)
-//! exponential backoff.
+//! exponential backoff that stops once another sleep would outlive the
+//! request's own deadline.
+//!
+//! **Overload.** Admission is priority-classed ([`SubmitOpts::priority`]):
+//! low-priority traffic is shed with a typed [`ServeError::Overloaded`]
+//! (plus a retry-after hint) once the queue reaches half its depth,
+//! normal traffic keeps the block/reject-at-depth semantics, and
+//! high-priority traffic rides a reserved headroom band. A windowed
+//! load [`Governor`] watches the queue depth every admission takes
+//! under the lock; when it crosses the enter watermark, submissions
+//! that opted in via [`DegradePolicy`] are rewritten to a coarser
+//! approximation level (the paper's accuracy-for-power knob, repurposed
+//! as accuracy-for-headroom), every such reply tagged via
+//! [`Pending::degraded`]. Hysteresis (enter ¾·depth, exit ¼·depth)
+//! keeps the mode from flapping, and a manual override makes every
+//! transition chaos-testable. Around backend dispatch each worker runs
+//! a circuit [`Breaker`] — consecutive `Execution` errors trip it open
+//! and jobs fast-fail with [`BackendError::BreakerOpen`] until a
+//! half-open probe succeeds — and a deterministic 1-in-N integrity
+//! auditor ([`DspServer::set_audit_every`]) re-executes served
+//! multiply/GEMM lanes on the digit oracle, converting a corrupt reply
+//! into a typed [`BackendError::AuditMismatch`] and evicting the
+//! offending compiled kernel from the LRU cache.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -89,6 +111,7 @@ use crate::util::stats::ErrorStats;
 use super::batcher::{Batcher, MixedReply, MixedRequest};
 use super::blocks::{block_input, pad_signal, plan_blocks};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::overload::{Breaker, DegradePolicy, Governor, Priority};
 
 /// Backend rebuilds a pool worker may perform after backend panics
 /// before it fail-stops (its queue then drains to surviving siblings).
@@ -133,6 +156,18 @@ pub enum ServeError {
         /// How long the caller waited.
         waited: Duration,
     },
+    /// The queue was over this submission's priority-class watermark,
+    /// so the request was shed at admission (low-priority traffic
+    /// sheds first under overload). The request never queued; resubmit
+    /// no sooner than `retry_after`, at a higher priority, or with a
+    /// [`DegradePolicy`] opt-in so the governor can shed load by
+    /// coarsening instead.
+    Overloaded {
+        /// Workload the shed request carried.
+        workload: Workload,
+        /// Server's backoff hint, proportional to the queue excess.
+        retry_after: Duration,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -147,6 +182,13 @@ impl std::fmt::Display for ServeError {
             ServeError::WaitTimeout { workload, waited } => {
                 write!(f, "gave up waiting for the {workload} reply after {waited:?}")
             }
+            ServeError::Overloaded { workload, retry_after } => {
+                write!(
+                    f,
+                    "{workload} request shed at admission: coordinator overloaded \
+                     (retry after {retry_after:?})"
+                )
+            }
         }
     }
 }
@@ -158,8 +200,12 @@ pub struct Pending<T> {
     rx: Receiver<Result<T>>,
     workload: Workload,
     /// A submission-time failure to report instead of waiting (the
-    /// admission lock was poisoned and the job never queued).
+    /// admission lock was poisoned and the job never queued, or the
+    /// submission was shed as overloaded).
     early: Option<ServeError>,
+    /// The coarser level the load governor rewrote this request to
+    /// (`None` = submitted exactly as requested).
+    degraded: Option<u32>,
 }
 
 impl<T> Pending<T> {
@@ -169,14 +215,32 @@ impl<T> Pending<T> {
     fn from_outcome(rx: Receiver<Result<T>>, workload: Workload, outcome: PushOutcome) -> Self {
         let early = match outcome {
             PushOutcome::Poisoned => Some(ServeError::LockPoisoned { workload }),
+            PushOutcome::Overloaded(retry_after) => {
+                Some(ServeError::Overloaded { workload, retry_after })
+            }
             PushOutcome::Queued | PushOutcome::Closed => None,
         };
-        Pending { rx, workload, early }
+        Pending { rx, workload, early, degraded: None }
+    }
+
+    /// Stamp the degraded-reply tag (submission paths only).
+    fn tag_degraded(mut self, degraded: Option<u32>) -> Self {
+        self.degraded = degraded;
+        self
     }
 
     /// Workload this reply is for.
     pub fn workload(&self) -> Workload {
         self.workload
+    }
+
+    /// The coarser approximation level the load governor rewrote this
+    /// request to under its [`DegradePolicy`], or `None` when it was
+    /// served exactly as submitted — the per-reply tag that makes
+    /// degraded mode visible to callers (metrics count the same events
+    /// in `degraded`).
+    pub fn degraded(&self) -> Option<u32> {
+        self.degraded
     }
 
     /// Block until the executor answers (or terminates).
@@ -227,7 +291,8 @@ impl<T> std::fmt::Display for QueueFull<T> {
 
 impl<T: std::fmt::Debug> std::error::Error for QueueFull<T> {}
 
-/// Per-submission options: queue affinity and a request deadline.
+/// Per-submission options: queue affinity, a request deadline, the
+/// admission-priority class, and the overload-degradation opt-in.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SubmitOpts {
     /// Pin to this worker's queue (idle siblings may still steal);
@@ -237,17 +302,39 @@ pub struct SubmitOpts {
     /// still queued past this instant; `None` falls back to the
     /// server's default deadline.
     pub deadline: Option<Instant>,
+    /// Admission-priority class: per-class queue watermarks shed
+    /// low-priority traffic first ([`ServeError::Overloaded`]) while
+    /// high-priority traffic rides a reserved headroom band.
+    pub priority: Priority,
+    /// Per-request degradation opt-in: how coarse the load governor
+    /// may rewrite this request while the pool is overloaded. `None`
+    /// falls back to the server default
+    /// ([`DspServer::set_degrade_default`]);
+    /// `Some(DegradePolicy::none())` explicitly opts out.
+    pub degrade: Option<DegradePolicy>,
 }
 
 impl SubmitOpts {
     /// Pin to `worker`'s queue.
     pub fn pinned(worker: usize) -> Self {
-        SubmitOpts { worker: Some(worker), deadline: None }
+        SubmitOpts { worker: Some(worker), ..SubmitOpts::default() }
     }
 
     /// Deadline `timeout` from now.
     pub fn deadline_in(timeout: Duration) -> Self {
-        SubmitOpts { worker: None, deadline: Some(Instant::now() + timeout) }
+        SubmitOpts { deadline: Some(Instant::now() + timeout), ..SubmitOpts::default() }
+    }
+
+    /// This submission's admission-priority class (builder style).
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Opt this submission into overload degradation (builder style).
+    pub fn with_degrade(mut self, policy: DegradePolicy) -> Self {
+        self.degrade = Some(policy);
+        self
     }
 }
 
@@ -304,6 +391,16 @@ pub trait SubmitRequest: Sized {
     fn try_submit(
         self,
         srv: &DspServer,
+    ) -> std::result::Result<Pending<Self::Reply>, QueueFull<Self>> {
+        self.try_submit_opts(srv, SubmitOpts::default())
+    }
+
+    /// Non-blocking submission with explicit placement / deadline /
+    /// priority / degradation options.
+    fn try_submit_opts(
+        self,
+        srv: &DspServer,
+        opts: SubmitOpts,
     ) -> std::result::Result<Pending<Self::Reply>, QueueFull<Self>>;
 }
 
@@ -313,22 +410,23 @@ macro_rules! impl_submit_request {
             type Reply = $reply;
             const WORKLOAD: Workload = $workload;
 
-            fn try_submit(
+            fn try_submit_opts(
                 self,
                 srv: &DspServer,
+                opts: SubmitOpts,
             ) -> std::result::Result<Pending<Self::Reply>, QueueFull<Self>> {
-                srv.$method(self)
+                srv.$method(self, opts)
             }
         }
     };
 }
 
-impl_submit_request!(MultiplyRequest, ProductBlock, Workload::Multiply, try_submit_multiply);
-impl_submit_request!(MomentsRequest, ErrorMoments, Workload::Moments, try_submit_moments);
-impl_submit_request!(FirRequest, FirBlock, Workload::Fir, try_submit_fir);
-impl_submit_request!(SnrRequest, SnrAccum, Workload::Snr, try_submit_snr);
-impl_submit_request!(PowerRequest, PowerReport, Workload::Power, try_submit_power);
-impl_submit_request!(GemmRequest, GemmBlock, Workload::Gemm, try_submit_gemm);
+impl_submit_request!(MultiplyRequest, ProductBlock, Workload::Multiply, try_submit_multiply_opts);
+impl_submit_request!(MomentsRequest, ErrorMoments, Workload::Moments, try_submit_moments_opts);
+impl_submit_request!(FirRequest, FirBlock, Workload::Fir, try_submit_fir_opts);
+impl_submit_request!(SnrRequest, SnrAccum, Workload::Snr, try_submit_snr_opts);
+impl_submit_request!(PowerRequest, PowerReport, Workload::Power, try_submit_power_opts);
+impl_submit_request!(GemmRequest, GemmBlock, Workload::Gemm, try_submit_gemm_opts);
 
 /// What happened to a job handed to [`PoolShared::push`].
 enum PushOutcome {
@@ -340,6 +438,10 @@ enum PushOutcome {
     /// A coordinator lock was poisoned; the job was dropped and the
     /// caller gets a typed [`ServeError::LockPoisoned`].
     Poisoned,
+    /// The queue was over this submission's priority-class watermark;
+    /// the job was shed at admission and the caller gets a typed
+    /// [`ServeError::Overloaded`] carrying this retry-after hint.
+    Overloaded(Duration),
 }
 
 /// Admission state shared by every producer and worker: one global
@@ -379,6 +481,12 @@ struct PoolShared {
     depth: usize,
     /// Round-robin placement cursor for unpinned submissions.
     cursor: AtomicUsize,
+    /// Windowed queue-depth governor deciding when degradation is
+    /// active; fed one sample per admission, under the admission lock.
+    governor: Governor,
+    /// Audit one in every `audit_every` served multiply/GEMM jobs
+    /// against the digit oracle (0 = off).
+    audit_every: AtomicU64,
 }
 
 impl PoolShared {
@@ -390,7 +498,40 @@ impl PoolShared {
             space: Condvar::new(),
             depth,
             cursor: AtomicUsize::new(0),
+            governor: Governor::new(depth),
+            audit_every: AtomicU64::new(0),
         }
+    }
+
+    /// Admission watermark for one priority class: `Low` sheds at half
+    /// the depth, `Normal` keeps the depth bound (the pre-priority
+    /// semantics, bit-for-bit), `High` rides a reserved headroom band
+    /// above it.
+    fn limit(&self, priority: Priority) -> usize {
+        match priority {
+            Priority::High => self.depth + (self.depth / 4).max(1),
+            Priority::Normal => self.depth,
+            Priority::Low => (self.depth / 2).max(1),
+        }
+    }
+
+    /// Retry-after hint for a shed submission, proportional to how far
+    /// the queue is over the class watermark (capped at 5 ms).
+    fn retry_after(queued: usize, limit: usize) -> Duration {
+        let excess = queued.saturating_sub(limit) as u64;
+        Duration::from_micros((50 * (excess + 1)).min(5_000))
+    }
+
+    /// Deterministic 1-in-N audit sampler for one worker's served
+    /// multiply/GEMM jobs (`clock` is that worker's private counter,
+    /// so the sample schedule is exact at any worker count).
+    fn audit_due(&self, clock: &mut u64) -> bool {
+        let every = self.audit_every.load(Ordering::Relaxed);
+        if every == 0 {
+            return false;
+        }
+        *clock += 1;
+        *clock % every == 0
     }
 
     /// Home queue for a submission: pinned target (wrapped into range)
@@ -422,16 +563,31 @@ impl PoolShared {
         PushOutcome::Queued
     }
 
-    /// Blocking admission: waits on `space` while the pool is at depth,
-    /// counting one backpressure event for the stall.
-    fn push(&self, job: Job, target: Option<usize>, submit: &Metrics) -> PushOutcome {
+    /// Blocking admission: low-priority submissions over their
+    /// watermark shed immediately with [`PushOutcome::Overloaded`];
+    /// normal/high priorities wait on `space` while over theirs,
+    /// counting one backpressure event for the stall. Every attempt
+    /// feeds the governor one queue-depth sample.
+    fn push(
+        &self,
+        job: Job,
+        target: Option<usize>,
+        priority: Priority,
+        submit: &Metrics,
+    ) -> PushOutcome {
         let Ok(mut g) = self.inner.lock() else { return PushOutcome::Poisoned };
         if g.shutdown {
             return PushOutcome::Closed;
         }
-        if g.queued >= self.depth {
+        self.governor.observe(g.queued);
+        let limit = self.limit(priority);
+        if priority == Priority::Low && g.queued >= limit {
+            submit.overloaded.fetch_add(1, Ordering::Relaxed);
+            return PushOutcome::Overloaded(Self::retry_after(g.queued, limit));
+        }
+        if g.queued >= limit {
             submit.backpressure_events.fetch_add(1, Ordering::Relaxed);
-            while g.queued >= self.depth && !g.shutdown {
+            while g.queued >= limit && !g.shutdown {
                 g = match self.space.wait(g) {
                     Ok(g) => g,
                     Err(_) => return PushOutcome::Poisoned,
@@ -445,13 +601,27 @@ impl PoolShared {
     }
 
     /// Non-blocking admission: `Err(job)` hands the job back when the
-    /// pool is at depth.
-    fn try_push(&self, job: Job, target: Option<usize>) -> std::result::Result<PushOutcome, Job> {
+    /// pool is over the class watermark — except low priority, which
+    /// sheds with a typed [`PushOutcome::Overloaded`] instead of a
+    /// handback (overload is an explicit verdict, not backpressure).
+    fn try_push(
+        &self,
+        job: Job,
+        target: Option<usize>,
+        priority: Priority,
+        submit: &Metrics,
+    ) -> std::result::Result<PushOutcome, Job> {
         let Ok(g) = self.inner.lock() else { return Ok(PushOutcome::Poisoned) };
         if g.shutdown {
             return Ok(PushOutcome::Closed);
         }
-        if g.queued >= self.depth {
+        self.governor.observe(g.queued);
+        let limit = self.limit(priority);
+        if g.queued >= limit {
+            if priority == Priority::Low {
+                submit.overloaded.fetch_add(1, Ordering::Relaxed);
+                return Ok(PushOutcome::Overloaded(Self::retry_after(g.queued, limit)));
+            }
             return Err(job);
         }
         Ok(self.enqueue(g, job, target))
@@ -599,6 +769,10 @@ pub struct DspServer {
     /// Default request deadline in milliseconds (0 = none), applied to
     /// submissions that don't carry their own [`SubmitOpts::deadline`].
     default_deadline_ms: AtomicU64,
+    /// Server-wide default [`DegradePolicy`], applied to submissions
+    /// that don't carry their own [`SubmitOpts::degrade`] while the
+    /// governor is in degraded mode (`None` = degradation off).
+    default_degrade: Mutex<Option<DegradePolicy>>,
 }
 
 impl DspServer {
@@ -694,6 +868,7 @@ impl DspServer {
             join,
             backend_name,
             default_deadline_ms: AtomicU64::new(0),
+            default_degrade: Mutex::new(None),
         })
     }
 
@@ -765,6 +940,73 @@ impl DspServer {
         })
     }
 
+    /// Set (or clear, with `None`) the server-wide default
+    /// [`DegradePolicy`]: while the load governor is in degraded mode,
+    /// submissions that don't carry their own [`SubmitOpts::degrade`]
+    /// are rewritten to at most these per-family levels. The exact
+    /// path is untouched whenever the governor is below its exit
+    /// watermark.
+    pub fn set_degrade_default(&self, policy: Option<DegradePolicy>) {
+        if let Ok(mut g) = self.default_degrade.lock() {
+            *g = policy;
+        }
+    }
+
+    /// Whether the load governor is currently in degraded mode
+    /// (opted-in traffic is being rewritten to coarser levels).
+    pub fn degraded(&self) -> bool {
+        self.shared.governor.degraded()
+    }
+
+    /// Pin the load governor: `Some(true)` forces degraded mode,
+    /// `Some(false)` forces exact mode, `None` returns to automatic
+    /// watermark control. The deterministic override chaos tests and
+    /// operators use; takes effect immediately.
+    pub fn set_governor_override(&self, forced: Option<bool>) {
+        self.shared.governor.set_override(forced);
+    }
+
+    /// Audit one in every `every` served multiply/GEMM jobs against
+    /// the digit oracle (0 disables — the default). A divergent lane
+    /// becomes a typed [`BackendError::AuditMismatch`] reply instead
+    /// of silently corrupt bits, counts into `audit_mismatches`, and
+    /// evicts the offending compiled kernel from the LRU cache so the
+    /// next fetch recompiles it.
+    pub fn set_audit_every(&self, every: u64) {
+        self.shared.audit_every.store(every, Ordering::Relaxed);
+    }
+
+    /// The degrade policy in force for one submission: the per-request
+    /// opt-in wins (`DegradePolicy::none()` is an explicit opt-out),
+    /// else the server-wide default.
+    fn degrade_policy(&self, opts: &SubmitOpts) -> Option<DegradePolicy> {
+        opts.degrade.or_else(|| self.default_degrade.lock().ok().and_then(|g| *g))
+    }
+
+    /// The coarser level this submission should run at, or `None` to
+    /// pass through exact: requires the governor to be in degraded
+    /// mode *and* a policy that allows coarsening this
+    /// `(family, wl, level)` point.
+    fn degrade_level_for(
+        &self,
+        opts: &SubmitOpts,
+        kind: MultKind,
+        wl: u32,
+        level: u32,
+    ) -> Option<u32> {
+        if !self.shared.governor.degraded() {
+            return None;
+        }
+        self.degrade_policy(opts)?.degraded_level(kind, wl, level)
+    }
+
+    /// Count a degraded rewrite once its job is actually queued.
+    fn count_degraded(&self, degraded: Option<u32>, outcome: &PushOutcome) {
+        if degraded.is_some() && matches!(outcome, PushOutcome::Queued) {
+            self.submit_metrics.degraded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Current metrics: the submit-side hub folded together with every
     /// worker's execution hub (including live queue depths).
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -797,18 +1039,27 @@ impl DspServer {
     /// Blocking admission. On a closed pool the job (and its reply
     /// sender) is dropped inside `push`, so the caller's
     /// [`Pending::wait`] reports the termination; a poisoned admission
-    /// lock surfaces as a typed early error on the `Pending`.
-    fn submit_job_at(&self, job: Job, target: Option<usize>) -> PushOutcome {
-        self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.shared.push(job, target, &self.submit_metrics)
+    /// lock or an over-watermark shed surfaces as a typed early error
+    /// on the `Pending`. Only actually-queued jobs count `submitted`.
+    fn submit_job_at(&self, job: Job, target: Option<usize>, priority: Priority) -> PushOutcome {
+        let outcome = self.shared.push(job, target, priority, &self.submit_metrics);
+        if matches!(outcome, PushOutcome::Queued) {
+            self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+        outcome
     }
 
     /// Non-blocking admission shared by the `try_submit_*` fronts:
     /// counts `submitted` on success and `backpressure_events` on a
     /// full queue; the caller destructures its own job variant back out
     /// of `Err`.
-    fn try_submit_job(&self, job: Job) -> std::result::Result<PushOutcome, Job> {
-        match self.shared.try_push(job, None) {
+    fn try_submit_job(
+        &self,
+        job: Job,
+        target: Option<usize>,
+        priority: Priority,
+    ) -> std::result::Result<PushOutcome, Job> {
+        match self.shared.try_push(job, target, priority, &self.submit_metrics) {
             Ok(outcome) => {
                 if matches!(outcome, PushOutcome::Queued) {
                     self.submit_metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -833,17 +1084,25 @@ impl DspServer {
         self.submit_multiply_opts(req, SubmitOpts::pinned(worker))
     }
 
-    /// Submit a batched multiply with explicit placement/deadline
-    /// options (blocks when the queue is full).
+    /// Submit a batched multiply with explicit placement / deadline /
+    /// priority / degradation options (blocks when the queue is full).
+    /// A governor rewrite to a coarser level is tagged on the returned
+    /// [`Pending::degraded`].
     pub fn submit_multiply_opts(
         &self,
-        req: MultiplyRequest,
+        mut req: MultiplyRequest,
         opts: SubmitOpts,
     ) -> Pending<ProductBlock> {
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Multiply(req, deadline, rtx), opts.worker);
-        Pending::from_outcome(rrx, Workload::Multiply, outcome)
+        let outcome =
+            self.submit_job_at(Job::Multiply(req, deadline, rtx), opts.worker, opts.priority);
+        self.count_degraded(degraded, &outcome);
+        Pending::from_outcome(rrx, Workload::Multiply, outcome).tag_degraded(degraded)
     }
 
     /// Non-blocking multiply submission: `Err(QueueFull)` hands the
@@ -852,11 +1111,32 @@ impl DspServer {
         &self,
         req: MultiplyRequest,
     ) -> std::result::Result<Pending<ProductBlock>, QueueFull<MultiplyRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_multiply_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking multiply submission with explicit options. A
+    /// rejected request is handed back *undegraded*.
+    pub fn try_submit_multiply_opts(
+        &self,
+        mut req: MultiplyRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<ProductBlock>, QueueFull<MultiplyRequest>> {
+        let exact_level = req.level;
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Multiply(req, deadline, rtx)) {
-            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Multiply, outcome)),
-            Err(Job::Multiply(req, _, _)) => Err(QueueFull(req)),
+        match self.try_submit_job(Job::Multiply(req, deadline, rtx), opts.worker, opts.priority) {
+            Ok(outcome) => {
+                self.count_degraded(degraded, &outcome);
+                Ok(Pending::from_outcome(rrx, Workload::Multiply, outcome).tag_degraded(degraded))
+            }
+            Err(Job::Multiply(mut req, _, _)) => {
+                req.level = exact_level;
+                Err(QueueFull(req))
+            }
             Err(_) => unreachable!("submitted job variant"),
         }
     }
@@ -871,16 +1151,24 @@ impl DspServer {
         self.submit_moments_opts(req, SubmitOpts::pinned(worker))
     }
 
-    /// Submit an error-moment reduction with explicit options.
+    /// Submit an error-moment reduction with explicit options. A
+    /// governor rewrite to a coarser level is tagged on the returned
+    /// [`Pending::degraded`].
     pub fn submit_moments_opts(
         &self,
-        req: MomentsRequest,
+        mut req: MomentsRequest,
         opts: SubmitOpts,
     ) -> Pending<ErrorMoments> {
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Moments(req, deadline, rtx), opts.worker);
-        Pending::from_outcome(rrx, Workload::Moments, outcome)
+        let outcome =
+            self.submit_job_at(Job::Moments(req, deadline, rtx), opts.worker, opts.priority);
+        self.count_degraded(degraded, &outcome);
+        Pending::from_outcome(rrx, Workload::Moments, outcome).tag_degraded(degraded)
     }
 
     /// Non-blocking moments submission: `Err(QueueFull)` hands the
@@ -889,11 +1177,32 @@ impl DspServer {
         &self,
         req: MomentsRequest,
     ) -> std::result::Result<Pending<ErrorMoments>, QueueFull<MomentsRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_moments_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking moments submission with explicit options. A
+    /// rejected request is handed back *undegraded*.
+    pub fn try_submit_moments_opts(
+        &self,
+        mut req: MomentsRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<ErrorMoments>, QueueFull<MomentsRequest>> {
+        let exact_level = req.level;
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Moments(req, deadline, rtx)) {
-            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Moments, outcome)),
-            Err(Job::Moments(req, _, _)) => Err(QueueFull(req)),
+        match self.try_submit_job(Job::Moments(req, deadline, rtx), opts.worker, opts.priority) {
+            Ok(outcome) => {
+                self.count_degraded(degraded, &outcome);
+                Ok(Pending::from_outcome(rrx, Workload::Moments, outcome).tag_degraded(degraded))
+            }
+            Err(Job::Moments(mut req, _, _)) => {
+                req.level = exact_level;
+                Err(QueueFull(req))
+            }
             Err(_) => unreachable!("submitted job variant"),
         }
     }
@@ -903,12 +1212,20 @@ impl DspServer {
         self.submit_fir_opts(req, SubmitOpts::default())
     }
 
-    /// Submit one FIR block with explicit options.
-    pub fn submit_fir_opts(&self, req: FirRequest, opts: SubmitOpts) -> Pending<FirBlock> {
+    /// Submit one FIR block with explicit options. The FIR datapath's
+    /// breaking knob is the Type0 VBL, so degradation is governed by
+    /// the policy's `BbmType0` cap and tagged on
+    /// [`Pending::degraded`].
+    pub fn submit_fir_opts(&self, mut req: FirRequest, opts: SubmitOpts) -> Pending<FirBlock> {
+        let degraded = self.degrade_level_for(&opts, MultKind::BbmType0, req.wl, req.vbl);
+        if let Some(vbl) = degraded {
+            req.vbl = vbl;
+        }
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Fir(req, deadline, rtx), opts.worker);
-        Pending::from_outcome(rrx, Workload::Fir, outcome)
+        let outcome = self.submit_job_at(Job::Fir(req, deadline, rtx), opts.worker, opts.priority);
+        self.count_degraded(degraded, &outcome);
+        Pending::from_outcome(rrx, Workload::Fir, outcome).tag_degraded(degraded)
     }
 
     /// Non-blocking FIR submission: `Err(QueueFull)` hands the request
@@ -917,11 +1234,32 @@ impl DspServer {
         &self,
         req: FirRequest,
     ) -> std::result::Result<Pending<FirBlock>, QueueFull<FirRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_fir_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking FIR submission with explicit options. A rejected
+    /// request is handed back *undegraded*.
+    pub fn try_submit_fir_opts(
+        &self,
+        mut req: FirRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<FirBlock>, QueueFull<FirRequest>> {
+        let exact_vbl = req.vbl;
+        let degraded = self.degrade_level_for(&opts, MultKind::BbmType0, req.wl, req.vbl);
+        if let Some(vbl) = degraded {
+            req.vbl = vbl;
+        }
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Fir(req, deadline, rtx)) {
-            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Fir, outcome)),
-            Err(Job::Fir(req, _, _)) => Err(QueueFull(req)),
+        match self.try_submit_job(Job::Fir(req, deadline, rtx), opts.worker, opts.priority) {
+            Ok(outcome) => {
+                self.count_degraded(degraded, &outcome);
+                Ok(Pending::from_outcome(rrx, Workload::Fir, outcome).tag_degraded(degraded))
+            }
+            Err(Job::Fir(mut req, _, _)) => {
+                req.vbl = exact_vbl;
+                Err(QueueFull(req))
+            }
             Err(_) => unreachable!("submitted job variant"),
         }
     }
@@ -931,11 +1269,13 @@ impl DspServer {
         self.submit_snr_opts(req, SubmitOpts::default())
     }
 
-    /// Submit an SNR accumulation with explicit options.
+    /// Submit an SNR accumulation with explicit options. SNR blocks
+    /// carry no approximation knob, so only placement / deadline /
+    /// priority apply.
     pub fn submit_snr_opts(&self, req: SnrRequest, opts: SubmitOpts) -> Pending<SnrAccum> {
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Snr(req, deadline, rtx), opts.worker);
+        let outcome = self.submit_job_at(Job::Snr(req, deadline, rtx), opts.worker, opts.priority);
         Pending::from_outcome(rrx, Workload::Snr, outcome)
     }
 
@@ -945,9 +1285,18 @@ impl DspServer {
         &self,
         req: SnrRequest,
     ) -> std::result::Result<Pending<SnrAccum>, QueueFull<SnrRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_snr_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking SNR submission with explicit options.
+    pub fn try_submit_snr_opts(
+        &self,
+        req: SnrRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<SnrAccum>, QueueFull<SnrRequest>> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Snr(req, deadline, rtx)) {
+        match self.try_submit_job(Job::Snr(req, deadline, rtx), opts.worker, opts.priority) {
             Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Snr, outcome)),
             Err(Job::Snr(req, _, _)) => Err(QueueFull(req)),
             Err(_) => unreachable!("submitted job variant"),
@@ -966,11 +1315,15 @@ impl DspServer {
         self.submit_power_opts(req, SubmitOpts::pinned(worker))
     }
 
-    /// Submit a power characterization with explicit options.
+    /// Submit a power characterization with explicit options. Power
+    /// jobs *characterize* a design point, so the governor never
+    /// rewrites them — degrading the measurement would change the
+    /// answer, not the cost.
     pub fn submit_power_opts(&self, req: PowerRequest, opts: SubmitOpts) -> Pending<PowerReport> {
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Power(req, deadline, rtx), opts.worker);
+        let outcome =
+            self.submit_job_at(Job::Power(req, deadline, rtx), opts.worker, opts.priority);
         Pending::from_outcome(rrx, Workload::Power, outcome)
     }
 
@@ -980,9 +1333,18 @@ impl DspServer {
         &self,
         req: PowerRequest,
     ) -> std::result::Result<Pending<PowerReport>, QueueFull<PowerRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_power_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking power submission with explicit options.
+    pub fn try_submit_power_opts(
+        &self,
+        req: PowerRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<PowerReport>, QueueFull<PowerRequest>> {
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Power(req, deadline, rtx)) {
+        match self.try_submit_job(Job::Power(req, deadline, rtx), opts.worker, opts.priority) {
             Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Power, outcome)),
             Err(Job::Power(req, _, _)) => Err(QueueFull(req)),
             Err(_) => unreachable!("submitted job variant"),
@@ -1001,12 +1363,19 @@ impl DspServer {
         self.submit_gemm_opts(req, SubmitOpts::pinned(worker))
     }
 
-    /// Submit one GEMM tile with explicit options.
-    pub fn submit_gemm_opts(&self, req: GemmRequest, opts: SubmitOpts) -> Pending<GemmBlock> {
+    /// Submit one GEMM tile with explicit options. A governor rewrite
+    /// to a coarser level is tagged on the returned
+    /// [`Pending::degraded`].
+    pub fn submit_gemm_opts(&self, mut req: GemmRequest, opts: SubmitOpts) -> Pending<GemmBlock> {
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
         let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        let outcome = self.submit_job_at(Job::Gemm(req, deadline, rtx), opts.worker);
-        Pending::from_outcome(rrx, Workload::Gemm, outcome)
+        let outcome = self.submit_job_at(Job::Gemm(req, deadline, rtx), opts.worker, opts.priority);
+        self.count_degraded(degraded, &outcome);
+        Pending::from_outcome(rrx, Workload::Gemm, outcome).tag_degraded(degraded)
     }
 
     /// Non-blocking GEMM submission: `Err(QueueFull)` hands the request
@@ -1015,11 +1384,32 @@ impl DspServer {
         &self,
         req: GemmRequest,
     ) -> std::result::Result<Pending<GemmBlock>, QueueFull<GemmRequest>> {
-        let deadline = self.resolve_deadline(SubmitOpts::default());
+        self.try_submit_gemm_opts(req, SubmitOpts::default())
+    }
+
+    /// Non-blocking GEMM submission with explicit options. A rejected
+    /// request is handed back *undegraded*.
+    pub fn try_submit_gemm_opts(
+        &self,
+        mut req: GemmRequest,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<GemmBlock>, QueueFull<GemmRequest>> {
+        let exact_level = req.level;
+        let degraded = self.degrade_level_for(&opts, req.kind, req.wl, req.level);
+        if let Some(level) = degraded {
+            req.level = level;
+        }
+        let deadline = self.resolve_deadline(opts);
         let (rtx, rrx) = channel();
-        match self.try_submit_job(Job::Gemm(req, deadline, rtx)) {
-            Ok(outcome) => Ok(Pending::from_outcome(rrx, Workload::Gemm, outcome)),
-            Err(Job::Gemm(req, _, _)) => Err(QueueFull(req)),
+        match self.try_submit_job(Job::Gemm(req, deadline, rtx), opts.worker, opts.priority) {
+            Ok(outcome) => {
+                self.count_degraded(degraded, &outcome);
+                Ok(Pending::from_outcome(rrx, Workload::Gemm, outcome).tag_degraded(degraded))
+            }
+            Err(Job::Gemm(mut req, _, _)) => {
+                req.level = exact_level;
+                Err(QueueFull(req))
+            }
             Err(_) => unreachable!("submitted job variant"),
         }
     }
@@ -1036,16 +1426,38 @@ impl DspServer {
         req: R,
         policy: RetryPolicy,
     ) -> std::result::Result<Pending<R::Reply>, QueueFull<R>> {
+        self.submit_with_retry_opts(req, policy, SubmitOpts::default())
+    }
+
+    /// [`DspServer::submit_with_retry`] with explicit submission
+    /// options. The request's deadline (explicit or server default) is
+    /// resolved *once*, so every attempt shares one bound — and the
+    /// backoff loop is deadline-aware: if the next sleep would outlive
+    /// the deadline, the request is handed back immediately instead of
+    /// sleeping into a guaranteed shed at dequeue.
+    pub fn submit_with_retry_opts<R: SubmitRequest>(
+        &self,
+        req: R,
+        policy: RetryPolicy,
+        opts: SubmitOpts,
+    ) -> std::result::Result<Pending<R::Reply>, QueueFull<R>> {
         let mut rng = Pcg64::new(policy.seed, R::WORKLOAD as u64 + 1);
         let attempts = policy.attempts.max(1);
+        let opts = SubmitOpts { deadline: self.resolve_deadline(opts), ..opts };
         let mut req = req;
         for attempt in 0..attempts {
-            req = match req.try_submit(self) {
+            req = match req.try_submit_opts(self, opts) {
                 Ok(pending) => return Ok(pending),
                 Err(QueueFull(r)) => r,
             };
             if attempt + 1 < attempts {
-                std::thread::sleep(policy.backoff(attempt, &mut rng));
+                let delay = policy.backoff(attempt, &mut rng);
+                if let Some(d) = opts.deadline {
+                    if d.saturating_duration_since(Instant::now()) <= delay {
+                        return Err(QueueFull(req));
+                    }
+                }
+                std::thread::sleep(delay);
             }
         }
         Err(QueueFull(req))
@@ -1249,7 +1661,7 @@ impl DspServer {
 
     fn submit_mixed_placed(
         &self,
-        traffic: Vec<MixedRequest>,
+        mut traffic: Vec<MixedRequest>,
         target: Option<usize>,
     ) -> Result<Vec<MixedReply>> {
         enum Sub {
@@ -1258,8 +1670,50 @@ impl DspServer {
             Power(Pending<PowerReport>),
             Gemm(Pending<GemmBlock>),
         }
+        // One governor decision for the whole batch, applied *before*
+        // cutting: pieces of one request must never straddle a
+        // degraded/exact flip, or reassembly would splice levels. The
+        // per-piece opts then opt out explicitly so a mid-stream flip
+        // cannot rewrite later pieces.
+        if self.shared.governor.degraded() {
+            if let Some(policy) = self.degrade_policy(&SubmitOpts::default()) {
+                let mut rewrites = 0u64;
+                for req in &mut traffic {
+                    match req {
+                        MixedRequest::Multiply(r) => {
+                            if let Some(l) = policy.degraded_level(r.kind, r.wl, r.level) {
+                                r.level = l;
+                                rewrites += 1;
+                            }
+                        }
+                        MixedRequest::Moments(r) => {
+                            if let Some(l) = policy.degraded_level(r.kind, r.wl, r.level) {
+                                r.level = l;
+                                rewrites += 1;
+                            }
+                        }
+                        MixedRequest::Gemm(r) => {
+                            if let Some(l) = policy.degraded_level(r.kind, r.wl, r.level) {
+                                r.level = l;
+                                rewrites += 1;
+                            }
+                        }
+                        // Power characterizes a design point; never
+                        // rewritten (see `submit_power_opts`).
+                        MixedRequest::Power(_) => {}
+                    }
+                }
+                if rewrites > 0 {
+                    self.submit_metrics.degraded.fetch_add(rewrites, Ordering::Relaxed);
+                }
+            }
+        }
         let pieces = Batcher::cut_mixed(traffic, self.workers());
-        let opts = SubmitOpts { worker: target, deadline: None };
+        let opts = SubmitOpts {
+            worker: target,
+            degrade: Some(DegradePolicy::none()),
+            ..SubmitOpts::default()
+        };
         // Pipeline: submit every piece, then collect in order.
         let mut pending = Vec::with_capacity(pieces.len());
         for piece in pieces {
@@ -1364,8 +1818,12 @@ fn executor_loop(
     metrics: &Metrics,
 ) {
     let mut restarts_left = RESTART_BUDGET;
+    // Per-worker overload state: the circuit breaker around backend
+    // dispatch and the private clock of the 1-in-N integrity auditor.
+    let mut breaker = Breaker::new();
+    let mut audit_clock = 0u64;
     while let Some(job) = shared.next_job(w, metrics) {
-        if !serve_job(backend.as_ref(), job, w, metrics) {
+        if !serve_job(backend.as_ref(), job, w, metrics, shared, &mut breaker, &mut audit_clock) {
             continue;
         }
         let Some(factory) = &respawn else { continue };
@@ -1378,6 +1836,8 @@ fn executor_loop(
         match catch_unwind(AssertUnwindSafe(|| factory())) {
             Ok(Ok(fresh)) => {
                 backend = fresh;
+                // A fresh backend instance starts with a clean record.
+                breaker = Breaker::new();
                 metrics.respawns.fetch_add(1, Ordering::Relaxed);
             }
             Ok(Err(_)) | Err(_) => break,
@@ -1388,47 +1848,146 @@ fn executor_loop(
 
 /// Serve one job with panic isolation; returns whether the backend
 /// panicked (the supervisor in [`executor_loop`] reacts). An expired
-/// deadline sheds the job before it touches the backend.
-fn serve_job(backend: &dyn Backend, job: Job, w: usize, metrics: &Metrics) -> bool {
+/// deadline sheds the job before it touches the backend, an open
+/// breaker fast-fails it, and sampled multiply/GEMM jobs are
+/// re-executed on the digit oracle by the integrity auditor.
+fn serve_job(
+    backend: &dyn Backend,
+    job: Job,
+    w: usize,
+    metrics: &Metrics,
+    shared: &PoolShared,
+    breaker: &mut Breaker,
+    audit_clock: &mut u64,
+) -> bool {
     match job {
         Job::Multiply(req, deadline, reply) => {
             let n = req.x.len() as u64;
-            dispatch(w, Workload::Multiply, deadline, n, reply, metrics, || backend.multiply(&req))
+            let audit = shared.audit_due(audit_clock);
+            dispatch(w, Workload::Multiply, deadline, n, reply, metrics, breaker, || {
+                let block = backend.multiply(&req)?;
+                if audit {
+                    audit_multiply(&req, &block, metrics)?;
+                }
+                Ok(block)
+            })
         }
         Job::Moments(req, deadline, reply) => {
             let n = req.x.len() as u64;
-            dispatch(w, Workload::Moments, deadline, n, reply, metrics, || backend.moments(&req))
+            dispatch(w, Workload::Moments, deadline, n, reply, metrics, breaker, || {
+                backend.moments(&req)
+            })
         }
         Job::Fir(req, deadline, reply) => {
             let n = req.x.len() as u64;
-            dispatch(w, Workload::Fir, deadline, n, reply, metrics, || backend.fir(&req))
+            dispatch(w, Workload::Fir, deadline, n, reply, metrics, breaker, || backend.fir(&req))
         }
         Job::Snr(req, deadline, reply) => {
             let n = req.reference.len() as u64;
-            dispatch(w, Workload::Snr, deadline, n, reply, metrics, || backend.snr(&req))
+            dispatch(w, Workload::Snr, deadline, n, reply, metrics, breaker, || backend.snr(&req))
         }
         Job::Power(req, deadline, reply) => {
             let n = req.nvec;
-            dispatch(w, Workload::Power, deadline, n, reply, metrics, || backend.power(&req))
+            dispatch(w, Workload::Power, deadline, n, reply, metrics, breaker, || {
+                backend.power(&req)
+            })
         }
         Job::Gemm(req, deadline, reply) => {
             // Item count = output elements of the tile.
             let n = (req.m * req.n) as u64;
-            dispatch(w, Workload::Gemm, deadline, n, reply, metrics, || backend.gemm(&req))
+            let audit = shared.audit_due(audit_clock).then_some(*audit_clock);
+            dispatch(w, Workload::Gemm, deadline, n, reply, metrics, breaker, || {
+                let block = backend.gemm(&req)?;
+                if let Some(seq) = audit {
+                    audit_gemm(&req, &block, seq, metrics)?;
+                }
+                Ok(block)
+            })
         }
     }
 }
 
+/// Sampled multiply lanes the auditor re-executes per audited job.
+const AUDIT_LANES: usize = 8;
+
+/// Re-execute up to [`AUDIT_LANES`] strided lanes of a served multiply
+/// on the digit oracle. A divergent lane means the serving path (a
+/// compiled kernel, almost always) returned corrupt bits: count it,
+/// evict the kernel so the next fetch recompiles from the digit model,
+/// and turn the reply into a typed [`BackendError::AuditMismatch`].
+fn audit_multiply(
+    req: &MultiplyRequest,
+    block: &ProductBlock,
+    metrics: &Metrics,
+) -> BackendResult<()> {
+    let lanes = block.p.len().min(req.x.len()).min(req.y.len());
+    if lanes == 0 {
+        return Ok(());
+    }
+    let model = req.kind.build(req.wl, req.level);
+    let stride = lanes.div_ceil(AUDIT_LANES).max(1);
+    let mut lane = 0;
+    while lane < lanes {
+        let expect = model.multiply(req.x[lane] as i64, req.y[lane] as i64);
+        if block.p[lane] != expect {
+            metrics.audit_mismatches.fetch_add(1, Ordering::Relaxed);
+            crate::arith::evict_kernel(req.kind, req.wl, req.level);
+            return Err(BackendError::AuditMismatch { workload: Workload::Multiply, lane });
+        }
+        lane += stride;
+    }
+    Ok(())
+}
+
+/// Re-execute one sampled row of a served GEMM tile on the digit
+/// oracle (`seq` picks the row, so successive audits walk the tile).
+/// Mismatch handling matches [`audit_multiply`].
+fn audit_gemm(
+    req: &GemmRequest,
+    block: &GemmBlock,
+    seq: u64,
+    metrics: &Metrics,
+) -> BackendResult<()> {
+    let shapes_ok = req.m > 0
+        && req.a.len() == req.m * req.k
+        && req.b.len() == req.k * req.n
+        && block.c.len() == req.m * req.n;
+    if !shapes_ok {
+        return Ok(());
+    }
+    let row = (seq as usize) % req.m;
+    let dims = crate::nn::gemm::GemmDims { m: 1, k: req.k, n: req.n };
+    let a_row = &req.a[row * req.k..(row + 1) * req.k];
+    let expect = crate::nn::gemm::gemm_digit(req.kind, req.wl, req.level, dims, a_row, &req.b);
+    let served = &block.c[row * req.n..(row + 1) * req.n];
+    for (j, (&got, &want)) in served.iter().zip(&expect).enumerate() {
+        if got != want {
+            metrics.audit_mismatches.fetch_add(1, Ordering::Relaxed);
+            crate::arith::evict_kernel(req.kind, req.wl, req.level);
+            let lane = row * req.n + j;
+            return Err(BackendError::AuditMismatch { workload: Workload::Gemm, lane });
+        }
+    }
+    Ok(())
+}
+
 /// The guarded dispatch shared by every workload arm: shed expired
-/// jobs, run the backend call under `catch_unwind`, convert a panic
-/// into a typed [`BackendError::Panicked`] reply, and always send —
-/// the caller's [`Pending`] resolves on every path. Returns whether
-/// the call panicked.
+/// jobs, fast-fail while the worker's circuit breaker is open, run the
+/// backend call under `catch_unwind`, convert a panic into a typed
+/// [`BackendError::Panicked`] reply, and always send — the caller's
+/// [`Pending`] resolves on every path. Returns whether the call
+/// panicked.
+///
+/// Breaker accounting: only [`BackendError::Execution`] results count
+/// as failures (shape/unsupported errors are the caller's fault and
+/// panics already have the respawn supervisor); any non-Execution
+/// outcome closes the run.
 ///
 /// `AssertUnwindSafe` is sound here: on a panic the backend instance
 /// is never called again (pool workers respawn it, single-shot workers
 /// accept best-effort state), and the request/reply values are plain
 /// data.
+#[allow(clippy::too_many_arguments)]
 fn dispatch<T>(
     w: usize,
     workload: Workload,
@@ -1436,6 +1995,7 @@ fn dispatch<T>(
     n: u64,
     reply: Sender<Result<T>>,
     metrics: &Metrics,
+    breaker: &mut Breaker,
     call: impl FnOnce() -> BackendResult<T>,
 ) -> bool {
     if deadline.is_some_and(|d| Instant::now() > d) {
@@ -1443,9 +2003,24 @@ fn dispatch<T>(
         let _ = reply.send(Err(BackendError::Expired { workload }.into()));
         return false;
     }
+    if !breaker.admit() {
+        metrics.breaker_fastfails.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Err(BackendError::BreakerOpen { worker: w, workload }.into()));
+        return false;
+    }
     let t0 = Instant::now();
     let (res, panicked) = match catch_unwind(AssertUnwindSafe(call)) {
-        Ok(res) => (res.map_err(anyhow::Error::from), false),
+        Ok(res) => {
+            match &res {
+                Err(BackendError::Execution(_)) => {
+                    if breaker.record_execution_error() {
+                        metrics.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                _ => breaker.record_ok(),
+            }
+            (res.map_err(anyhow::Error::from), false)
+        }
         Err(payload) => {
             metrics.panics.fetch_add(1, Ordering::Relaxed);
             let message = panic_text(payload.as_ref());

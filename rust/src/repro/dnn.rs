@@ -97,6 +97,7 @@ pub fn dnn(args: &Args) -> anyhow::Result<()> {
         BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
         kind => DspServer::start_kind(kind, 8)?,
     };
+    super::arm_service_opts(&srv, args)?;
     println!(
         "dnn inference served by backend `{}` ({} workers)",
         srv.backend_name(),

@@ -16,7 +16,9 @@ use crate::util::report::{sci, Series, Table};
 /// serving path). `--pjrt` is a back-compat alias for `--backend pjrt`.
 /// `--threads N` controls sweep parallelism: the in-process engine's
 /// worker threads, or — with `--backend native` — the size of the
-/// coordinator's executor pool (PJRT stays single-executor).
+/// coordinator's executor pool (PJRT stays single-executor). Served
+/// sweeps take the shared `--deadline-ms`/`--degrade` service opt-ins
+/// ([`super::arm_service_opts`]).
 pub fn table1(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 12u32)?;
     let vbls = args.list_or("vbls", &[3u32, 6, 9, 12])?;
@@ -46,6 +48,7 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
         None => None,
     };
     if let Some(srv) = &server {
+        super::arm_service_opts(srv, args)?;
         println!("served by backend `{}` ({} workers)", srv.backend_name(), srv.workers());
     }
     let kind = if ty == BbmType::Type0 { MultKind::BbmType0 } else { MultKind::BbmType1 };
@@ -76,7 +79,9 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
 
 /// Fig. 2: percentage distribution of the normalized error for WL = 10,
 /// VBL = 9 (error normalized to 2^19, the maximum 10×10 signed output).
-/// `--threads N` sets the sweep engine's worker-thread count.
+/// `--threads N` sets the sweep engine's worker-thread count. This
+/// driver is fully in-process (no coordinator), so the shared
+/// `--deadline-ms`/`--degrade` service opt-ins do not apply here.
 pub fn fig2(args: &Args) -> anyhow::Result<()> {
     let wl = args.get_or("wl", 10u32)?;
     let vbl = args.get_or("vbl", 9u32)?;

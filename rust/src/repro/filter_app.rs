@@ -21,10 +21,9 @@ use crate::util::cli::Args;
 use crate::util::report::{Series, Table};
 
 /// Spin up the DSP server selected by `--backend`/`--threads` (and the
-/// legacy bare `--pjrt` flag) — the same ladder as `bbm dnn`. A
-/// `--deadline-ms N` (N > 0) arms the server-wide default request
-/// deadline: queued jobs older than N ms are shed with a typed
-/// `BackendError::Expired` reply instead of executing late.
+/// legacy bare `--pjrt` flag) — the same ladder as `bbm dnn` — then
+/// apply the shared `--deadline-ms`/`--degrade` service opt-ins
+/// ([`super::arm_service_opts`]).
 fn server_from(args: &Args) -> anyhow::Result<DspServer> {
     let threads = args.get_or("threads", 0usize)?;
     let backend = if args.flag("pjrt") {
@@ -37,10 +36,7 @@ fn server_from(args: &Args) -> anyhow::Result<DspServer> {
         BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
         kind => DspServer::start_kind(kind, 8)?,
     };
-    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
-    if deadline_ms > 0 {
-        srv.set_default_deadline(Some(std::time::Duration::from_millis(deadline_ms)));
-    }
+    super::arm_service_opts(&srv, args)?;
     Ok(srv)
 }
 

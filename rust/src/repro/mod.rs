@@ -24,6 +24,12 @@
 //! (see `crate::backend`): `native` is the offline default; `pjrt`
 //! needs `--features pjrt` plus built artifacts. The bare `--pjrt`
 //! flag is kept as a back-compat alias for `--backend pjrt`.
+//!
+//! Every driver that serves through the coordinator also accepts
+//! `--deadline-ms N` (server-wide request deadline) and `--degrade`
+//! (opt into Table-I-bounded accuracy degradation under overload) —
+//! see [`arm_service_opts`]. `fig2` is fully in-process (exhaustive
+//! histogram on the sweep engine, no server) and takes neither.
 
 pub mod ablation;
 pub mod dnn;
@@ -35,7 +41,28 @@ pub mod verify;
 
 use crate::util::cli::Args;
 
-const FLAGS: [&str; 1] = ["pjrt"];
+const FLAGS: [&str; 2] = ["pjrt", "degrade"];
+
+/// Apply the service-level opt-ins every pooled driver shares:
+/// `--deadline-ms N` (N > 0) arms the server-wide default request
+/// deadline (queued jobs older than N ms are shed with a typed
+/// expired reply), and `--degrade` installs the Table-I
+/// [`crate::coordinator::DegradePolicy`] as the server default so the
+/// load governor may rewrite requests to a coarser approximation
+/// level under sustained overload (degraded replies are tagged).
+pub(crate) fn arm_service_opts(
+    srv: &crate::coordinator::DspServer,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let deadline_ms = args.get_or("deadline-ms", 0u64)?;
+    if deadline_ms > 0 {
+        srv.set_default_deadline(Some(std::time::Duration::from_millis(deadline_ms)));
+    }
+    if args.flag("degrade") {
+        srv.set_degrade_default(Some(crate::coordinator::DegradePolicy::table1()));
+    }
+    Ok(())
+}
 
 /// CLI dispatcher for the `bbm` binary.
 pub fn run_cli() -> anyhow::Result<()> {
@@ -101,9 +128,12 @@ fn print_help() {
          \x20        fig3/table2/table3/fig5/fig6 power serving, fig7/fig8a/fig8b/table4\n\
          \x20        filter serving, dnn inference); dnn --wls 8,12 --families type0,bam\n\
          \x20        pick the matched-filter design points and multiplier families;\n\
-         \x20        --deadline-ms N arms a server-wide request deadline on the filter\n\
-         \x20        drivers (fig7/fig8a/fig8b/table4): queued jobs older than N ms are\n\
-         \x20        shed with a typed expired reply\n\
+         \x20        --deadline-ms N arms a server-wide request deadline on every pooled\n\
+         \x20        driver (table1 sweeps, fig3/table2/table3/fig5/fig6 power serving,\n\
+         \x20        fig7/fig8a/fig8b/table4 filters, dnn): queued jobs older than N ms\n\
+         \x20        are shed with a typed expired reply; --degrade opts those drivers\n\
+         \x20        into Table-I-bounded accuracy degradation under sustained overload\n\
+         \x20        (fig2 runs in-process and takes neither)\n\
          see DESIGN.md §7 for the experiment index and options"
     );
 }

@@ -119,15 +119,20 @@ const FAMILIES: [MultKind; 4] =
 /// picks the engine, `--threads N` (with a poolable backend — native
 /// or simd) sizes an executor pool so the pipelined [`PowerRequest`]s
 /// characterize concurrently — the same routing `table1` gives its
-/// sweeps.
+/// sweeps. The shared `--deadline-ms`/`--degrade` service opt-ins
+/// ([`super::arm_service_opts`]) apply; note power requests
+/// characterize a fixed design point, so the governor never rewrites
+/// them — `--degrade` only affects co-served degradable traffic.
 pub(super) fn power_server(args: &Args) -> anyhow::Result<DspServer> {
     let kind = args.get_or("backend", BackendKind::Native)?;
     let threads = args.get_or("threads", 0usize)?;
-    match kind {
-        BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16),
-        BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16),
-        kind => DspServer::start_kind(kind, 8),
-    }
+    let srv = match kind {
+        BackendKind::Native if threads > 1 => DspServer::native_pool(threads, 16)?,
+        BackendKind::Simd if threads > 1 => DspServer::simd_pool(threads, 16)?,
+        kind => DspServer::start_kind(kind, 8)?,
+    };
+    super::arm_service_opts(&srv, args)?;
+    Ok(srv)
 }
 
 /// Fig. 5: per-family PDP (min-delay and relaxed) vs log10 MSE.

@@ -19,18 +19,32 @@
 //! 4. Deadlines shed expired jobs with typed replies, caller-side
 //!    waits are bounded, and `submit_with_retry` is bounded with a
 //!    deterministic backoff schedule.
+//! 5. Overload protection: admission control sheds low-priority
+//!    traffic first with typed `Overloaded` + retry-after replies, the
+//!    load governor degrades opted-in requests to Table-I-bounded
+//!    coarser levels with hysteresis (and returns bit-exact once calm),
+//!    the per-worker circuit breaker fast-fails after K consecutive
+//!    execution errors and recloses through a half-open probe, and the
+//!    integrity auditor catches a deliberately poisoned kernel table,
+//!    evicts it, and heals (CI's overload job re-runs the soak at
+//!    `BBM_POOL_WORKERS` ∈ {1, 4}).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bbm::arith::{MultKind, Multiplier};
+use bbm::arith::{compiled_kernel, poison_kernel_for_test, MultKind, Multiplier};
 use bbm::backend::{
     Backend, BackendError, ErrorMoments, FirRequest, GemmBlock, GemmRequest, MomentsRequest,
     MultiplyRequest, NativeBackend, PowerReport, PowerRequest, ProductBlock, SnrRequest, Workload,
     FIR_BLOCK, FIR_TAPS,
 };
-use bbm::coordinator::{DspServer, MetricsSnapshot, MixedRequest, RetryPolicy, SubmitOpts};
+use bbm::coordinator::{
+    DegradePolicy, DspServer, MetricsSnapshot, MixedRequest, Priority, RetryPolicy, SubmitOpts,
+    BREAKER_COOLDOWN, BREAKER_K, GOVERNOR_WINDOW,
+};
+use bbm::nn::gemm::gemm_digit;
+use bbm::nn::GemmDims;
 use bbm::testkit::{draw_operands, Fault, FaultBackend, FaultPlan, Gate, MockBackend, MockState};
 use bbm::util::Pcg64;
 
@@ -438,5 +452,447 @@ fn try_submit_rejects_every_workload_with_intact_handback_when_full() {
     assert!(a.wait_timeout(WAIT).is_ok() && b.wait_timeout(WAIT).is_ok());
     let ok = srv.try_submit_moments(moments_req(2)).expect("queue drained");
     assert!(ok.wait_timeout(WAIT).is_ok());
+    srv.shutdown();
+}
+
+/// Admission control: at a wedged depth-4 queue, low priority sheds
+/// with a typed `Overloaded` + retry-after verdict (never queued),
+/// normal keeps the pre-existing reject-at-depth contract, and high
+/// still lands in its reserved headroom band above the nominal depth.
+#[test]
+fn overload_sheds_low_priority_first_with_typed_retry_hint() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (Arc::clone(&state), gate.clone());
+    let srv =
+        DspServer::start(move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>), 4)
+            .unwrap();
+    // Blocking submits return only once queued, so after the fourth
+    // fill the wedge job is claimed and exactly four jobs wait —
+    // watermarks: low max(4/2,1)=2, normal 4, high 4+max(4/4,1)=5.
+    let wedge = srv.submit_multiply(mult_req(1));
+    let fills: Vec<_> = (0..4).map(|i| srv.submit_multiply(mult_req(i + 2))).collect();
+
+    let low = srv
+        .submit_multiply_opts(mult_req(50), SubmitOpts::default().with_priority(Priority::Low));
+    assert_eq!(low.degraded(), None, "no degrade policy is armed on this server");
+    let text = low.wait_timeout(WAIT).unwrap_err().to_string();
+    assert!(text.contains("overloaded") && text.contains("retry after"), "{text}");
+
+    assert!(srv.try_submit_multiply(mult_req(60)).is_err(), "normal queue is full at depth");
+    let high = srv
+        .try_submit_multiply_opts(mult_req(70), SubmitOpts::default().with_priority(Priority::High))
+        .expect("high headroom admits above the nominal depth");
+    let opts = SubmitOpts::default().with_priority(Priority::High);
+    assert!(srv.try_submit_multiply_opts(mult_req(71), opts).is_err(), "headroom is bounded");
+    let low2 = srv
+        .submit_multiply_opts(mult_req(51), SubmitOpts::default().with_priority(Priority::Low));
+    assert!(low2.wait_timeout(WAIT).unwrap_err().to_string().contains("overloaded"));
+
+    gate.open();
+    assert!(wedge.wait_timeout(WAIT).is_ok());
+    for f in fills {
+        assert!(f.wait_timeout(WAIT).is_ok());
+    }
+    assert_eq!(high.wait_timeout(WAIT).unwrap().p, oracle_products(&mult_req(70)));
+    let snap = srv.metrics();
+    assert_eq!(snap.overloaded, 2, "exactly the two low-priority submissions shed");
+    assert_eq!(snap.submitted, 6, "shed submissions never count as submitted");
+    assert_eq!(snap.completed, 6, "every admitted job completed");
+    srv.shutdown();
+}
+
+/// Load governor (forced): with the override pinned degraded, every
+/// opted-in family rewrites to its Table-I cap, replies carry the
+/// `Pending::degraded` tag and the *cap level's* exact oracle bits;
+/// capped-out, exact-family and opted-out requests pass untouched, and
+/// the forced-exact override pins the governor off again.
+#[test]
+fn overload_governor_rewrites_within_policy_and_tags_replies() {
+    let srv = DspServer::native(16).unwrap();
+    srv.set_degrade_default(Some(DegradePolicy::table1()));
+    srv.set_governor_override(Some(true));
+    assert!(srv.degraded());
+
+    let (x, y) = draw_operands(MultKind::BbmType0, 8, 64, 0xD15);
+    let fine =
+        MultiplyRequest { kind: MultKind::BbmType0, wl: 8, level: 2, x: x.clone(), y: y.clone() };
+    let m6 = MultKind::BbmType0.build(8, 6);
+    let want6: Vec<i64> =
+        x.iter().zip(&y).map(|(&a, &b)| m6.multiply(a as i64, b as i64)).collect();
+
+    let p = srv.submit_multiply(fine.clone());
+    assert_eq!(p.degraded(), Some(6), "Table I caps Type0 at VBL 6");
+    assert_eq!(p.wait_timeout(WAIT).unwrap().p, want6, "degraded bits are the cap oracle's");
+
+    let mo = srv.submit_moments(MomentsRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 2,
+        x: x.clone(),
+        y: y.clone(),
+    });
+    assert_eq!(mo.degraded(), Some(6));
+    assert!(mo.wait_timeout(WAIT).is_ok());
+    let fr = srv.submit_fir(fir_req());
+    assert_eq!(fr.degraded(), Some(6), "the FIR VBL knob degrades under the Type0 cap");
+    assert!(fr.wait_timeout(WAIT).is_ok());
+    let gq = GemmRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 2,
+        m: 2,
+        k: 3,
+        n: 2,
+        a: vec![1, -2, 3, -4, 5, -6],
+        b: vec![7, -8, 9, 10, -11, 12],
+    };
+    let gp = srv.submit_gemm(gq.clone());
+    assert_eq!(gp.degraded(), Some(6));
+    let dims = GemmDims { m: 2, k: 3, n: 2 };
+    let want_c = gemm_digit(MultKind::BbmType0, 8, 6, dims, &gq.a, &gq.b);
+    assert_eq!(gp.wait_timeout(WAIT).unwrap().c, want_c);
+
+    let coarse = srv.submit_multiply(MultiplyRequest { level: 9, ..fine.clone() });
+    assert_eq!(coarse.degraded(), None, "levels at/above the cap never rewrite");
+    assert!(coarse.wait_timeout(WAIT).is_ok());
+    let exact_fam = srv.submit_multiply(mult_req(1));
+    assert_eq!(exact_fam.degraded(), None, "the exact family has no knob");
+    assert!(exact_fam.wait_timeout(WAIT).is_ok());
+    let opt_out = SubmitOpts::default().with_degrade(DegradePolicy::none());
+    let opted_out = srv.submit_multiply_opts(fine.clone(), opt_out);
+    assert_eq!(opted_out.degraded(), None, "per-request opt-out beats the server default");
+    let m2 = MultKind::BbmType0.build(8, 2);
+    let want2: Vec<i64> =
+        x.iter().zip(&y).map(|(&a, &b)| m2.multiply(a as i64, b as i64)).collect();
+    assert_eq!(opted_out.wait_timeout(WAIT).unwrap().p, want2);
+
+    srv.set_governor_override(Some(false));
+    assert!(!srv.degraded());
+    let forced_exact = srv.submit_multiply(fine);
+    assert_eq!(forced_exact.degraded(), None);
+    assert_eq!(forced_exact.wait_timeout(WAIT).unwrap().p, want2);
+
+    let snap = srv.metrics();
+    assert_eq!(snap.degraded, 4, "multiply + moments + fir + gemm were rewritten");
+    assert_eq!(snap.completed, 8);
+    srv.shutdown();
+}
+
+/// Load governor (auto): the real windowed queue-depth signal enters
+/// degraded mode only after a full window at the enter watermark, and
+/// hysteresis holds it there until a full calm window drains past the
+/// lower exit watermark — no flapping at the boundary.
+#[test]
+fn overload_governor_enters_and_exits_on_the_windowed_queue_signal() {
+    let state = MockState::new();
+    let gate = Gate::closed();
+    let (s2, g2) = (Arc::clone(&state), gate.clone());
+    let srv =
+        DspServer::start(move || Ok(Box::new(MockBackend::gated(s2, g2)) as Box<dyn Backend>), 4)
+            .unwrap();
+    srv.set_degrade_default(Some(DegradePolicy::table1()));
+
+    // Wedge + three queued jobs pin the depth-4 queue exactly at the
+    // 3/4 enter watermark (the wedge itself is claimed, not queued).
+    let wedge = srv.submit_multiply(mult_req(1));
+    let fills: Vec<_> = (0..3).map(|i| srv.submit_multiply(mult_req(i + 2))).collect();
+    assert!(!srv.degraded(), "a partial window never transitions");
+
+    // GOVERNOR_WINDOW shed low-priority probes fill the window with
+    // at-watermark samples without touching the queue.
+    for i in 0..GOVERNOR_WINDOW {
+        let opts = SubmitOpts::default().with_priority(Priority::Low);
+        let probe = srv.submit_multiply_opts(mult_req(80 + i as i32), opts);
+        let text = probe.wait_timeout(WAIT).unwrap_err().to_string();
+        assert!(text.contains("overloaded"), "probe {i}: {text}");
+    }
+    assert!(srv.degraded(), "a full window at the enter watermark degrades");
+
+    let tagged = srv.submit_multiply(MultiplyRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 2,
+        x: vec![1, 2, 3],
+        y: vec![4, -5, 6],
+    });
+    assert_eq!(tagged.degraded(), Some(6), "opted-in traffic degrades while wedged");
+
+    gate.open();
+    assert!(wedge.wait_timeout(WAIT).is_ok());
+    for f in fills {
+        assert!(f.wait_timeout(WAIT).is_ok());
+    }
+    assert!(tagged.wait_timeout(WAIT).is_ok());
+
+    // Hysteresis: a few calm samples are not enough to exit...
+    for i in 0..4 {
+        assert!(srv.submit_multiply(mult_req(20 + i)).wait_timeout(WAIT).is_ok());
+    }
+    assert!(srv.degraded(), "the window still remembers the overload");
+    // ...but a full calm window is, and service is exact again.
+    for i in 0..GOVERNOR_WINDOW {
+        assert!(srv.submit_multiply(mult_req(30 + i as i32)).wait_timeout(WAIT).is_ok());
+    }
+    assert!(!srv.degraded(), "a calm window exits degraded mode");
+    let after = srv.submit_multiply(MultiplyRequest {
+        kind: MultKind::BbmType0,
+        wl: 8,
+        level: 2,
+        x: vec![1, 2, 3],
+        y: vec![4, -5, 6],
+    });
+    assert_eq!(after.degraded(), None, "no rewrite once the governor has exited");
+    assert!(after.wait_timeout(WAIT).is_ok());
+
+    let snap = srv.metrics();
+    assert_eq!(snap.overloaded, GOVERNOR_WINDOW as u64, "one shed per probe");
+    assert_eq!(snap.degraded, 1, "only the wedged-phase opted-in submit rewrote");
+    srv.shutdown();
+}
+
+/// Tentpole acceptance soak: sustained synthetic overload against the
+/// `BBM_POOL_WORKERS` grid never hangs, sheds only low-priority
+/// traffic, serves every degraded reply tagged with the cap oracle's
+/// bits inside the Table-I policy bound, keeps the 1-in-64 auditor
+/// clean, reconciles every counter, and returns to bit-exact untagged
+/// service once the burst drains past the exit watermark.
+#[test]
+fn sustained_overload_soak_sheds_low_only_and_recovers_bit_exact() {
+    // Worst-case |error| of the operating point the policy degrades to
+    // (Type0 WL=8 VBL=6), scanned exhaustively on the digit oracle.
+    let m6 = MultKind::BbmType0.build(8, 6);
+    let mut bound = 0i64;
+    for x in -128i64..128 {
+        for y in -128i64..128 {
+            bound = bound.max(m6.error(x, y).abs());
+        }
+    }
+
+    for w in pool_sizes() {
+        // Every backend call costs 1 ms, so the generator outruns the
+        // drain rate by construction and the depth-8 queue saturates.
+        let plan = FaultPlan::new()
+            .every(Workload::Multiply, 1, Fault::Delay(Duration::from_millis(1)))
+            .every(Workload::Gemm, 1, Fault::Delay(Duration::from_millis(1)))
+            .share();
+        let p2 = Arc::clone(&plan);
+        let srv = DspServer::start_pool(
+            move || {
+                Ok(Box::new(FaultBackend::new(Box::new(NativeBackend::new()), Arc::clone(&p2)))
+                    as Box<dyn Backend>)
+            },
+            w,
+            8,
+        )
+        .unwrap();
+        srv.set_degrade_default(Some(DegradePolicy::table1()));
+        srv.set_audit_every(64);
+        // Pin the governor degraded for the burst so every opted-in
+        // admit rewrites deterministically; the calm phase below hands
+        // control back to the real windowed signal.
+        srv.set_governor_override(Some(true));
+
+        let mut mults = Vec::new();
+        let mut gemms = Vec::new();
+        for i in 0..240u64 {
+            let priority = match i % 3 {
+                0 => Priority::High,
+                1 => Priority::Normal,
+                _ => Priority::Low,
+            };
+            let opts = SubmitOpts::default().with_priority(priority);
+            if i % 10 == 9 {
+                let (a, b) = draw_operands(MultKind::BbmType0, 8, 12, 0xA0 + i);
+                let req = GemmRequest {
+                    kind: MultKind::BbmType0,
+                    wl: 8,
+                    level: 2,
+                    m: 2,
+                    k: 3,
+                    n: 2,
+                    a: a[..6].to_vec(),
+                    b: b[..6].to_vec(),
+                };
+                gemms.push((priority, req.clone(), srv.submit_gemm_opts(req, opts)));
+            } else {
+                let (x, y) = draw_operands(MultKind::BbmType0, 8, 8, i);
+                let req = MultiplyRequest { kind: MultKind::BbmType0, wl: 8, level: 2, x, y };
+                mults.push((priority, req.clone(), srv.submit_multiply_opts(req, opts)));
+            }
+        }
+
+        let (mut shed, mut tagged_ok) = (0u64, 0u64);
+        for (priority, req, p) in mults {
+            let tag = p.degraded();
+            match p.wait_timeout(WAIT) {
+                Ok(blk) => {
+                    assert_eq!(tag, Some(6), "w={w}: every admitted fine request rewrites");
+                    tagged_ok += 1;
+                    for (j, &got) in blk.p.iter().enumerate() {
+                        let (a, b) = (req.x[j] as i64, req.y[j] as i64);
+                        assert_eq!(got, m6.multiply(a, b), "w={w}: served bits == cap oracle");
+                        assert!((got - a * b).abs() <= bound, "w={w}: outside the policy bound");
+                    }
+                }
+                Err(e) => {
+                    let text = e.to_string();
+                    assert!(text.contains("overloaded"), "w={w}: only shed may fail: {text}");
+                    assert_eq!(priority, Priority::Low, "w={w}: only low priority sheds");
+                    shed += 1;
+                }
+            }
+        }
+        for (priority, req, p) in gemms {
+            let tag = p.degraded();
+            match p.wait_timeout(WAIT) {
+                Ok(blk) => {
+                    assert_eq!(tag, Some(6), "w={w}: admitted gemms rewrite too");
+                    tagged_ok += 1;
+                    let dims = GemmDims { m: 2, k: 3, n: 2 };
+                    let want = gemm_digit(MultKind::BbmType0, 8, 6, dims, &req.a, &req.b);
+                    assert_eq!(blk.c, want, "w={w}: degraded gemm == cap oracle");
+                }
+                Err(e) => {
+                    let text = e.to_string();
+                    assert!(text.contains("overloaded"), "w={w}: only shed may fail: {text}");
+                    assert_eq!(priority, Priority::Low, "w={w}: only low priority sheds");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "w={w}: the burst must overload the depth-8 queue");
+        assert!(tagged_ok > 0, "w={w}: high/normal traffic keeps landing");
+
+        let snap = srv.metrics();
+        assert_eq!(snap.submitted, snap.completed, "w={w}: zero hung or lost jobs");
+        assert_eq!(snap.overloaded, shed, "w={w}: overload verdicts reconcile");
+        assert_eq!(snap.degraded, tagged_ok, "w={w}: degraded-reply count reconciles");
+        assert_eq!(snap.audit_mismatches, 0, "w={w}: sampled audits stay clean");
+        assert_eq!(snap.panics, 0, "w={w}: delays are not failures");
+        assert_eq!(snap.shed, 0, "w={w}: no deadlines in play");
+
+        // Calm phase: hand control back to the windowed signal. The
+        // burst-era window holds degraded mode for a while (hysteresis),
+        // then a calm window exits and level-2 requests serve bit-exact
+        // and untagged again.
+        srv.set_governor_override(None);
+        let m2 = MultKind::BbmType0.build(8, 2);
+        let mut exited = false;
+        for i in 0..(2 * GOVERNOR_WINDOW) {
+            let (x, y) = draw_operands(MultKind::BbmType0, 8, 4, 0xCA1A + i as u64);
+            let req = MultiplyRequest {
+                kind: MultKind::BbmType0,
+                wl: 8,
+                level: 2,
+                x: x.clone(),
+                y: y.clone(),
+            };
+            let p = srv.submit_multiply(req);
+            let tag = p.degraded();
+            let blk = p.wait_timeout(WAIT).unwrap();
+            match tag {
+                Some(6) => assert!(!exited, "w={w}: the governor must not re-enter while calm"),
+                None => {
+                    exited = true;
+                    let want: Vec<i64> =
+                        x.iter().zip(&y).map(|(&a, &b)| m2.multiply(a as i64, b as i64)).collect();
+                    assert_eq!(blk.p, want, "w={w}: bit-exact service resumes after exit");
+                }
+                other => panic!("w={w}: unexpected degrade tag {other:?}"),
+            }
+        }
+        assert!(exited && !srv.degraded(), "w={w}: a calm window must exit degraded mode");
+        srv.shutdown();
+    }
+}
+
+/// Circuit breaker: K consecutive execution errors open the worker's
+/// breaker, the cooldown's worth of jobs fast-fail with a typed reply
+/// while the backend is never called, and the half-open probe's
+/// success recloses it — service resumes bit-exact.
+#[test]
+fn overload_breaker_trips_fast_fails_and_probe_recloses() {
+    let plan = FaultPlan::new()
+        .at(Workload::Multiply, 1, Fault::Error)
+        .at(Workload::Multiply, 2, Fault::Error)
+        .at(Workload::Multiply, 3, Fault::Error)
+        .at(Workload::Multiply, 4, Fault::Error)
+        .share();
+    let p2 = Arc::clone(&plan);
+    let srv = DspServer::start_pool(
+        move || {
+            Ok(Box::new(FaultBackend::new(Box::new(NativeBackend::new()), Arc::clone(&p2)))
+                as Box<dyn Backend>)
+        },
+        1,
+        32,
+    )
+    .unwrap();
+
+    for i in 0..BREAKER_K {
+        let e = srv.submit_multiply(mult_req(i as i32 + 1)).wait_timeout(WAIT).unwrap_err();
+        assert!(e.to_string().contains("injected multiply fault"), "call {i}: {e}");
+    }
+    assert_eq!(srv.metrics().breaker_trips, 1, "the K-th consecutive error trips");
+
+    for i in 0..BREAKER_COOLDOWN {
+        let e = srv.submit_multiply(mult_req(10 + i as i32)).wait_timeout(WAIT).unwrap_err();
+        let text = e.to_string();
+        assert!(text.contains("breaker") && text.contains("multiply"), "fast-fail {i}: {text}");
+    }
+    assert_eq!(
+        plan.calls(Workload::Multiply),
+        BREAKER_K as u64,
+        "an open breaker never calls the backend"
+    );
+
+    // Cooldown spent: the next job is the half-open probe. The fault
+    // schedule is exhausted, so it succeeds and recloses the breaker.
+    let probe = srv.submit_multiply(mult_req(42)).wait_timeout(WAIT).unwrap();
+    assert_eq!(probe.p, oracle_products(&mult_req(42)), "the probe executes for real");
+    let after = srv.submit_multiply(mult_req(43)).wait_timeout(WAIT).unwrap();
+    assert_eq!(after.p, oracle_products(&mult_req(43)), "reclosed service is bit-exact");
+
+    let snap = srv.metrics();
+    assert_eq!(snap.breaker_trips, 1);
+    assert_eq!(snap.breaker_fastfails, BREAKER_COOLDOWN as u64);
+    assert_eq!(plan.errors_fired(), BREAKER_K as u64);
+    srv.shutdown();
+}
+
+/// Integrity auditor: with 1-in-1 sampling, a deliberately poisoned
+/// compiled-kernel table is caught as a typed audit mismatch instead of
+/// silent wrong bits, the kernel is evicted from the cache, and the
+/// next fetch recompiles from the digit oracle — service heals.
+#[test]
+fn overload_auditor_catches_poisoned_kernel_evicts_and_heals() {
+    let srv = DspServer::native(16).unwrap();
+    srv.set_audit_every(1);
+    let (kind, wl, level) = (MultKind::BbmType1, 10, 4);
+    let (x, y) = draw_operands(kind, wl, 64, 0xFEED);
+    let req = MultiplyRequest { kind, wl, level, x: x.clone(), y: y.clone() };
+    let model = kind.build(wl, level);
+    let want: Vec<i64> =
+        x.iter().zip(&y).map(|(&a, &b)| model.multiply(a as i64, b as i64)).collect();
+
+    // Warm + clean: the audited reply is bit-exact and the compiled
+    // kernel passes its build-time digest.
+    assert_eq!(srv.submit_multiply(req.clone()).wait_timeout(WAIT).unwrap().p, want);
+    assert!(compiled_kernel(kind, wl, level).unwrap().verify_checksum());
+
+    // Corrupt the cached tables in place: the digest fails and the
+    // very next audited reply is a typed mismatch.
+    assert!(poison_kernel_for_test(kind, wl, level), "the kernel must be resident to poison");
+    assert!(!compiled_kernel(kind, wl, level).unwrap().verify_checksum());
+    let text = srv.submit_multiply(req.clone()).wait_timeout(WAIT).unwrap_err().to_string();
+    assert!(text.contains("audit") && text.contains("lane"), "{text}");
+    assert_eq!(srv.metrics().audit_mismatches, 1);
+
+    // The mismatch evicted the poisoned kernel: the next fetch
+    // recompiles, the digest passes, and serving heals bit-exact.
+    assert!(compiled_kernel(kind, wl, level).unwrap().verify_checksum());
+    assert_eq!(srv.submit_multiply(req).wait_timeout(WAIT).unwrap().p, want);
+    assert_eq!(srv.metrics().audit_mismatches, 1, "the healed path audits clean");
     srv.shutdown();
 }
